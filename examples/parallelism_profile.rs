@@ -1,0 +1,64 @@
+//! Parallelism anatomy of a factorization (the Fig. 10 analysis as a
+//! reusable tool): prints the per-level column/subcolumn profile, the
+//! kernel mode each level gets, and what-if timings under each policy.
+//!
+//! ```text
+//! cargo run --release --example parallelism_profile [suite-name]
+//! ```
+
+use glu3::glu::profile::{parallelism_profile, size_subcol_correlation};
+use glu3::glu::{GluOptions, GluSolver};
+use glu3::gpusim::{DeviceConfig, Policy};
+use glu3::sparse::gen::{self, SuiteMatrix};
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "rajat27".into());
+    let m = SuiteMatrix::ALL
+        .iter()
+        .find(|m| m.ufl_name().eq_ignore_ascii_case(&name))
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("unknown suite matrix {name}"))?;
+    let a = gen::generate(&m.spec());
+    let solver = GluSolver::factor(&a, &GluOptions::default())?;
+    let prof = parallelism_profile(solver.symbolic(), solver.levels());
+    let dev = DeviceConfig::titan_x();
+
+    println!("# {} — {} levels", m.ufl_name(), prof.len());
+    println!("{:>6} {:>8} {:>12} {:>10} {:>6}", "level", "size", "max_subcols", "mean_Llen", "mode");
+    let stride = (prof.len() / 40).max(1);
+    for (i, p) in prof.iter().enumerate() {
+        if i > 10 && i % stride != 0 && i + 1 != prof.len() {
+            continue;
+        }
+        let mode = glu3::gpusim::exec::select_mode(p.size, 16, &dev);
+        println!(
+            "{:>6} {:>8} {:>12} {:>10.1} {:>6}",
+            p.level,
+            p.size,
+            p.max_subcols,
+            p.mean_l_len,
+            mode.label()
+        );
+    }
+    println!(
+        "size/max-subcol correlation: {:.3} (paper: inversely correlated)",
+        size_subcol_correlation(&prof)
+    );
+
+    println!("\nwhat-if kernel timings on this schedule:");
+    for policy in [
+        Policy::glu3(),
+        Policy::glu3_no_small(),
+        Policy::glu3_no_stream(),
+        Policy::glu2_fixed(),
+        Policy::lee_enhanced(),
+    ] {
+        let opts = GluOptions {
+            policy: policy.clone(),
+            ..Default::default()
+        };
+        let s = GluSolver::factor(&a, &opts)?;
+        println!("  {:24} {:>10.3} ms", policy.name, s.stats().numeric_ms);
+    }
+    Ok(())
+}

@@ -1,0 +1,115 @@
+"""AOT lowering: JAX graphs -> HLO text artifacts for the Rust runtime.
+
+HLO *text* (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that xla_extension
+0.5.1 (what the published xla 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage::
+
+    python -m compile.aot --outdir ../artifacts
+
+Incremental: a manifest of source hashes makes re-runs no-ops when nothing
+changed (the Makefile relies on this).
+
+Artifact ladder (static shapes; the Rust side pads into the next size up):
+
+- ``level_update_{B}x{N}``   B in {64, 256}, N in {256, 2048}
+- ``dense_tail_{T}``         T in {64, 256}: LU factor + solve, one RHS
+- ``quickstart``             2x2 matmul smoke graph
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, builder, example-arg factory)
+LEVEL_SIZES = [(64, 256), (256, 2048)]
+TAIL_SIZES = [64, 256]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifacts():
+    """Yield (name, lowered) for every artifact in the ladder."""
+    f32 = jnp.float32
+    for b, n in LEVEL_SIZES:
+        spec_x = jax.ShapeDtypeStruct((b, n), f32)
+        spec_u = jax.ShapeDtypeStruct((n,), f32)
+        spec_s = jax.ShapeDtypeStruct((b,), f32)
+        yield (
+            f"level_update_{b}x{n}",
+            jax.jit(model.level_update_graph).lower(spec_x, spec_u, spec_s),
+        )
+    for t in TAIL_SIZES:
+        spec_a = jax.ShapeDtypeStruct((t, t), f32)
+        spec_b = jax.ShapeDtypeStruct((t,), f32)
+        yield (
+            f"dense_tail_{t}",
+            jax.jit(model.dense_tail_solve_graph).lower(spec_a, spec_b),
+        )
+    spec2 = jax.ShapeDtypeStruct((2, 2), f32)
+    yield ("quickstart", jax.jit(model.quickstart_graph).lower(spec2, spec2))
+
+
+def source_digest() -> str:
+    """Hash of every .py under compile/ — the staleness key."""
+    root = pathlib.Path(__file__).parent
+    h = hashlib.sha256()
+    for p in sorted(root.rglob("*.py")):
+        h.update(p.read_bytes())
+    return h.hexdigest()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+    manifest_path = outdir / "manifest.json"
+    digest = source_digest()
+
+    if not args.force and manifest_path.exists():
+        try:
+            manifest = json.loads(manifest_path.read_text())
+            if manifest.get("digest") == digest and all(
+                (outdir / f"{name}.hlo.txt").exists() for name in manifest.get("names", [])
+            ):
+                print(f"artifacts up to date in {outdir} (digest {digest[:12]})")
+                return 0
+        except (json.JSONDecodeError, OSError):
+            pass
+
+    names = []
+    for name, lowered in artifacts():
+        text = to_hlo_text(lowered)
+        path = outdir / f"{name}.hlo.txt"
+        path.write_text(text)
+        names.append(name)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest_path.write_text(json.dumps({"digest": digest, "names": names}, indent=1))
+    print(f"manifest: {len(names)} artifacts, digest {digest[:12]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

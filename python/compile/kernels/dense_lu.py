@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: blocked dense LU (no pivoting) for the dense tail.
+
+Sparse circuit factorizations end in a (nearly) dense trailing submatrix —
+the type-C levels where every column touches every later column. GLU keeps
+grinding through them with sparse subcolumn updates; a classic alternative
+(SuperLU-style) is to switch to a dense kernel once the tail densifies.
+This kernel is that dense tail on the TPU mapping: a right-looking panel
+LU whose trailing Schur update is an (n-k)×(n-k)×1 outer product per step —
+the MXU-friendly part that dominates the FLOPs for T ≥ 128.
+
+Single-program kernel (grid=()): the whole T×T tile lives in VMEM
+(T ≤ 512 ⇒ ≤ 1 MiB f32), and `lax.fori_loop` walks the pivots with masked
+updates — the Pallas analogue of the paper's in-kernel column loop.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, o_ref):
+    a = a_ref[...]
+    n = a.shape[0]
+    rows = lax.broadcasted_iota(jnp.int32, (n,), 0)
+
+    def step(k, a):
+        pivot = a[k, k]
+        m = jnp.where(rows > k, a[:, k] / pivot, 0.0)
+        urow = jnp.where(rows > k, a[k, :], 0.0)
+        a = a - m[:, None] * urow[None, :]
+        a = a.at[:, k].set(jnp.where(rows > k, m, a[:, k]))
+        return a
+
+    o_ref[...] = lax.fori_loop(0, n, step, a)
+
+
+@jax.jit
+def dense_lu(a):
+    """Compact LU (unit-L implicit) of a dense square tile, no pivoting."""
+    n = a.shape[0]
+    assert a.shape == (n, n)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((n, n), a.dtype),
+        interpret=True,
+    )(a)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def dense_lu_batched(a):
+    """vmapped dense LU over a batch of tiles (B, T, T)."""
+    return jax.vmap(dense_lu)(a)
+
+
+def flops(t):
+    """~(2/3)T³ MACs; the share in rank-k Schur updates (MXU-eligible)
+    approaches 100% as T grows — reported in DESIGN.md §Perf."""
+    return 2 * t**3 // 3

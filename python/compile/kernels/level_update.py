@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: the batched subcolumn MAC update (paper Eq. 2/3).
+
+The GLU submatrix update for one pivot column ``j`` is a masked rank-1
+update (Eq. 2). The Rust coordinator gathers the level's subcolumn targets
+into a dense ``(B, N)`` buffer (one row per subcolumn, padded), the pivot
+column's L entries into ``u (N,)``, and the per-subcolumn multipliers into
+``s (B,)``; this kernel then computes ``X -= s ⊗ u`` tile by tile.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper parallelizes this
+with one CUDA warp (or block) per subcolumn; here BlockSpec tiles of
+``(TB, TN)`` express the HBM↔VMEM schedule instead — the grid dimension
+over B is the analogue of the warp/block-per-subcolumn axis, the N tiling
+replaces the per-warp strided loop. Elementwise MAC ⇒ VPU-bound; tiles are
+sized to keep the working set ≤ ~0.5 MiB of VMEM per program.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls (see /opt/xla-example/README.md); numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM tile: 128 x 512 f32 = 256 KiB (fits comfortably with double
+# buffering in 16 MiB VMEM per core).
+TILE_B = 128
+TILE_N = 512
+
+
+def _kernel(x_ref, u_ref, s_ref, o_ref):
+    # One (TB, TN) tile: o = x - s ⊗ u.
+    o_ref[...] = x_ref[...] - s_ref[...][:, None] * u_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "tile_n"))
+def level_update(x, u, s, *, tile_b=TILE_B, tile_n=TILE_N):
+    """``x - s[:, None] * u[None, :]`` via a tiled Pallas kernel.
+
+    ``x``: (B, N); ``u``: (N,); ``s``: (B,). B and N need not be multiples
+    of the tile sizes (Pallas pads the edge programs).
+    """
+    b, n = x.shape
+    tb = min(tile_b, b)
+    tn = min(tile_n, n)
+    grid = (pl.cdiv(b, tb), pl.cdiv(n, tn))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, tn), lambda i, j: (i, j)),
+            pl.BlockSpec((tn,), lambda i, j: (j,)),
+            pl.BlockSpec((tb,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tb, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+        interpret=True,
+    )(x, u, s)
+
+
+def vmem_bytes(tile_b=TILE_B, tile_n=TILE_N, dtype_bytes=4):
+    """Estimated VMEM working set per program (x tile in+out, u, s)."""
+    return dtype_bytes * (2 * tile_b * tile_n + tile_n + tile_b)

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package is validated against these references by
+``python/tests`` (pytest + hypothesis). The references are deliberately
+written in the most obvious jnp form — no tiling, no tricks — so a mismatch
+always indicts the kernel.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def ref_level_update(x, u, s):
+    """Batched subcolumn MAC update (paper Eq. 3).
+
+    ``x``: (B, N) gathered subcolumn targets, one row per subcolumn;
+    ``u``: (N,) the pivot column's L entries (dense-gathered);
+    ``s``: (B,) the multipliers ``As(j, k)`` per subcolumn.
+
+    Returns ``x - s[:, None] * u[None, :]`` — one rank-1 MAC.
+    """
+    return x - s[:, None] * u[None, :]
+
+
+def ref_dense_lu(a):
+    """Dense LU without pivoting, compact storage (unit L implicit).
+
+    Equivalent to ``rust/src/numeric/dense.rs::lu_nopivot_inplace``.
+    """
+    n = a.shape[0]
+    rows = jnp.arange(n)
+
+    def step(k, a):
+        pivot = a[k, k]
+        m = jnp.where(rows > k, a[:, k] / pivot, 0.0)
+        urow = jnp.where(rows > k, a[k, :], 0.0)
+        a = a - m[:, None] * urow[None, :]
+        a = a.at[:, k].set(jnp.where(rows > k, m, a[:, k]))
+        return a
+
+    return lax.fori_loop(0, n, step, a)
+
+
+def ref_lower_unit_solve(lu, b):
+    """Forward substitution with the unit-lower factor of compact ``lu``."""
+    n = lu.shape[0]
+    rows = jnp.arange(n)
+
+    def step(j, x):
+        lcol = jnp.where(rows > j, lu[:, j], 0.0)
+        return x - lcol * x[j]
+
+    return lax.fori_loop(0, n, step, b)
+
+
+def ref_upper_solve(lu, b):
+    """Backward substitution with the upper factor of compact ``lu``."""
+    n = lu.shape[0]
+    rows = jnp.arange(n)
+
+    def step(i, x):
+        j = n - 1 - i
+        xj = x[j] / lu[j, j]
+        x = x.at[j].set(xj)
+        ucol = jnp.where(rows < j, lu[:, j], 0.0)
+        return x - ucol * xj
+
+    return lax.fori_loop(0, n, step, b)
+
+
+def ref_dense_solve(a, b):
+    """Full dense solve through the compact-LU path (factor + 2 solves)."""
+    lu = ref_dense_lu(a)
+    y = ref_lower_unit_solve(lu, b)
+    return ref_upper_solve(lu, y)

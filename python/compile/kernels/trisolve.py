@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: dense triangular solves over a compact LU tile.
+
+Completes the dense-tail path: after ``dense_lu`` factors the trailing
+block, these kernels run the forward (unit-lower) and backward (upper)
+substitutions. Single-program kernels with `fori_loop` + masking, same
+VMEM-resident regime as ``dense_lu``.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _lower_kernel(lu_ref, b_ref, o_ref):
+    lu = lu_ref[...]
+    x = b_ref[...]
+    n = lu.shape[0]
+    rows = lax.broadcasted_iota(jnp.int32, (n,), 0)
+
+    def step(j, x):
+        lcol = jnp.where(rows > j, lu[:, j], 0.0)
+        return x - lcol * x[j]
+
+    o_ref[...] = lax.fori_loop(0, n, step, x)
+
+
+def _upper_kernel(lu_ref, b_ref, o_ref):
+    lu = lu_ref[...]
+    x = b_ref[...]
+    n = lu.shape[0]
+    rows = lax.broadcasted_iota(jnp.int32, (n,), 0)
+
+    def step(i, x):
+        j = n - 1 - i
+        xj = x[j] / lu[j, j]
+        x = x.at[j].set(xj)
+        ucol = jnp.where(rows < j, lu[:, j], 0.0)
+        return x - ucol * xj
+
+    o_ref[...] = lax.fori_loop(0, n, step, x)
+
+
+@jax.jit
+def lower_unit_solve(lu, b):
+    """Solve ``L x = b`` with the unit-lower factor of compact ``lu``."""
+    n = lu.shape[0]
+    return pl.pallas_call(
+        _lower_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), b.dtype),
+        interpret=True,
+    )(lu, b)
+
+
+@jax.jit
+def upper_solve(lu, b):
+    """Solve ``U x = b`` with the upper factor of compact ``lu``."""
+    n = lu.shape[0]
+    return pl.pallas_call(
+        _upper_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), b.dtype),
+        interpret=True,
+    )(lu, b)

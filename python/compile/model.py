@@ -1,0 +1,44 @@
+"""L2: the JAX compute graphs the Rust coordinator calls through PJRT.
+
+Two graphs, both built on the L1 Pallas kernels:
+
+- :func:`level_update_graph` — the paper's submatrix update (Eq. 2/3) over a
+  gathered dense batch: the per-level numeric workhorse.
+- :func:`dense_tail_solve_graph` — factor the trailing dense block and solve
+  it against one RHS: the dense-tail alternative the ablation benches
+  compare against pure-sparse grinding.
+
+Each graph is lowered once by :mod:`compile.aot` to HLO *text* (the
+interchange the xla 0.1.6 crate can parse — see /opt/xla-example/README.md)
+and executed from ``rust/src/runtime/`` at request time. Python never runs
+on the request path.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.dense_lu import dense_lu
+from .kernels.level_update import level_update
+from .kernels.trisolve import lower_unit_solve, upper_solve
+
+
+def level_update_graph(x, u, s):
+    """(B, N), (N,), (B,) -> (B, N): the Eq. 3 batched MAC."""
+    return (level_update(x, u, s),)
+
+
+def dense_tail_solve_graph(a, b):
+    """(T, T), (T,) -> (lu, x): factor the tail tile and solve one RHS."""
+    lu = dense_lu(a)
+    y = lower_unit_solve(lu, b)
+    x = upper_solve(lu, y)
+    return (lu, x)
+
+
+def dense_tail_factor_graph(a):
+    """(T, T) -> (T, T) compact LU of the tail tile."""
+    return (dense_lu(a),)
+
+
+def quickstart_graph(x, y):
+    """Tiny smoke graph used by the runtime's unit tests: matmul + 2."""
+    return (jnp.matmul(x, y) + 2.0,)

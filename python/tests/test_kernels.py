@@ -1,0 +1,140 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; every property compares against
+``compile.kernels.ref`` with ``assert_allclose`` — the core correctness
+signal of the Python layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.dense_lu import dense_lu, dense_lu_batched, flops
+from compile.kernels.level_update import level_update, vmem_bytes
+from compile.kernels.trisolve import lower_unit_solve, upper_solve
+
+jax.config.update("jax_enable_x64", True)
+
+
+def rand(rng, shape, dtype):
+    return jnp.asarray(rng.uniform(-1.0, 1.0, size=shape), dtype=dtype)
+
+
+def tol(dtype):
+    """XLA may fuse multiply-add differently between the jitted kernel and
+    the eager reference (FMA contraction), so comparisons are to a few ulps
+    rather than bit-exact."""
+    return 1e-6 if dtype == jnp.float32 else 1e-14
+
+
+def dd_matrix(rng, n, dtype):
+    """Column diagonally dominant matrix (no-pivot LU well-defined)."""
+    a = rng.uniform(-1.0, 1.0, size=(n, n))
+    np.fill_diagonal(a, np.abs(a).sum(axis=0) + 1.0)
+    return jnp.asarray(a, dtype=dtype)
+
+
+# ---------------------------------------------------------------- level_update
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 130),
+    n=st.integers(1, 600),
+    dtype=st.sampled_from([jnp.float32, jnp.float64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_level_update_matches_ref(b, n, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (b, n), dtype)
+    u = rand(rng, (n,), dtype)
+    s = rand(rng, (b,), dtype)
+    got = level_update(x, u, s)
+    want = ref.ref_level_update(x, u, s)
+    np.testing.assert_allclose(got, want, rtol=tol(dtype), atol=tol(dtype))
+
+
+@pytest.mark.parametrize("tile", [(8, 16), (128, 512), (4, 600)])
+def test_level_update_tile_invariance(tile):
+    rng = np.random.default_rng(7)
+    x = rand(rng, (37, 211), jnp.float32)
+    u = rand(rng, (211,), jnp.float32)
+    s = rand(rng, (37,), jnp.float32)
+    got = level_update(x, u, s, tile_b=tile[0], tile_n=tile[1])
+    np.testing.assert_allclose(got, ref.ref_level_update(x, u, s),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_level_update_vmem_budget():
+    # default tiles must fit VMEM with double buffering (~16 MiB/core)
+    assert vmem_bytes() * 2 < 16 << 20
+
+
+# ---------------------------------------------------------------- dense_lu
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 96),
+    dtype=st.sampled_from([jnp.float32, jnp.float64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_lu_matches_ref(n, dtype, seed):
+    rng = np.random.default_rng(seed)
+    a = dd_matrix(rng, n, dtype)
+    got = dense_lu(a)
+    want = ref.ref_dense_lu(a)
+    t = 1e-4 if dtype == jnp.float32 else 1e-12  # n-step accumulation
+    np.testing.assert_allclose(got, want, rtol=t, atol=t)
+
+
+def test_dense_lu_reconstructs_a():
+    rng = np.random.default_rng(3)
+    n = 48
+    a = dd_matrix(rng, n, jnp.float64)
+    lu = np.asarray(dense_lu(a))
+    l = np.tril(lu, -1) + np.eye(n)
+    u = np.triu(lu)
+    np.testing.assert_allclose(l @ u, np.asarray(a), rtol=1e-12, atol=1e-12)
+
+
+def test_dense_lu_batched_matches_loop():
+    rng = np.random.default_rng(5)
+    batch = jnp.stack([dd_matrix(rng, 16, jnp.float64) for _ in range(6)])
+    got = dense_lu_batched(batch)
+    for i in range(6):
+        np.testing.assert_allclose(got[i], dense_lu(batch[i]), rtol=1e-14, atol=1e-14)
+
+
+def test_flops_model():
+    assert flops(256) == 2 * 256**3 // 3
+
+
+# ---------------------------------------------------------------- trisolve
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 80), seed=st.integers(0, 2**31 - 1))
+def test_trisolve_round_trip(n, seed):
+    rng = np.random.default_rng(seed)
+    a = dd_matrix(rng, n, jnp.float64)
+    b = rand(rng, (n,), jnp.float64)
+    lu = dense_lu(a)
+    y = lower_unit_solve(lu, b)
+    x = upper_solve(lu, y)
+    # A x == b
+    np.testing.assert_allclose(np.asarray(a) @ np.asarray(x), np.asarray(b),
+                               rtol=1e-9, atol=1e-9)
+    # and each half matches its oracle exactly
+    np.testing.assert_allclose(y, ref.ref_lower_unit_solve(lu, b), rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(x, ref.ref_upper_solve(lu, y), rtol=1e-12, atol=1e-12)
+
+
+def test_dense_solve_vs_jnp_linalg():
+    rng = np.random.default_rng(11)
+    n = 40
+    a = dd_matrix(rng, n, jnp.float64)
+    b = rand(rng, (n,), jnp.float64)
+    x = ref.ref_dense_solve(a, b)
+    want = jnp.linalg.solve(a, b)
+    np.testing.assert_allclose(x, want, rtol=1e-9, atol=1e-9)

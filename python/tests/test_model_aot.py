@@ -1,0 +1,67 @@
+"""L2 + AOT: composed graphs and HLO-text lowering."""
+
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def test_dense_tail_solve_graph_solves():
+    rng = np.random.default_rng(2)
+    n = 32
+    a = rng.uniform(-1, 1, (n, n))
+    np.fill_diagonal(a, np.abs(a).sum(axis=0) + 1.0)
+    a = jnp.asarray(a)
+    b = jnp.asarray(rng.uniform(-1, 1, n))
+    lu, x = model.dense_tail_solve_graph(a, b)
+    np.testing.assert_allclose(np.asarray(a) @ np.asarray(x), np.asarray(b),
+                               rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(lu, ref.ref_dense_lu(a), rtol=1e-12, atol=1e-12)
+
+
+def test_level_update_graph_tuple():
+    x = jnp.ones((4, 8), jnp.float32)
+    u = jnp.ones((8,), jnp.float32)
+    s = 2.0 * jnp.ones((4,), jnp.float32)
+    (out,) = model.level_update_graph(x, u, s)
+    np.testing.assert_allclose(out, -jnp.ones((4, 8)), rtol=1e-6, atol=1e-6)
+
+
+def test_hlo_text_lowering_all_artifacts():
+    """Every artifact lowers to parseable-looking HLO text.
+
+    Lowered with x64 *disabled* — exactly how ``python -m compile.aot``
+    runs (this test module enables x64 globally for oracle precision).
+    """
+    jax.config.update("jax_enable_x64", False)
+    try:
+        for name, lowered in aot.artifacts():
+            text = aot.to_hlo_text(lowered)
+            assert text.startswith("HloModule"), name
+            assert "ENTRY" in text, name
+            # f32 graphs only — the rust runtime feeds f32 buffers.
+            assert "f64" not in text, f"{name} must lower in f32"
+    finally:
+        jax.config.update("jax_enable_x64", True)
+
+
+def test_aot_cli_incremental(tmp_path):
+    """Second run with unchanged sources is a no-op."""
+    env_dir = pathlib.Path(__file__).resolve().parents[1]
+    out = tmp_path / "artifacts"
+    cmd = [sys.executable, "-m", "compile.aot", "--outdir", str(out)]
+    r1 = subprocess.run(cmd, cwd=env_dir, capture_output=True, text=True)
+    assert r1.returncode == 0, r1.stderr
+    assert (out / "manifest.json").exists()
+    assert (out / "quickstart.hlo.txt").exists()
+    r2 = subprocess.run(cmd, cwd=env_dir, capture_output=True, text=True)
+    assert r2.returncode == 0, r2.stderr
+    assert "up to date" in r2.stdout

@@ -1,0 +1,56 @@
+//! Fig. 10 — number of parallelizable columns (level size) and maximum
+//! subcolumns per level over the course of factorization, for the
+//! ASIC_100ks-class matrix. Prints the two series (the paper's subfigures
+//! (a)/(b)) plus the type A/B/C segmentation and the inverse-correlation
+//! statistic that motivates Eq. 4.
+
+use glu3::bench_support::table::Table;
+use glu3::glu::profile::{parallelism_profile, size_subcol_correlation};
+use glu3::glu::{GluOptions, GluSolver};
+use glu3::gpusim::{DeviceConfig, KernelMode};
+use glu3::sparse::gen::{self, SuiteMatrix};
+
+fn main() {
+    let m = SuiteMatrix::Asic100ks;
+    let a = gen::generate(&m.spec());
+    let s = GluSolver::factor(&a, &GluOptions::default()).expect("factor");
+    let prof = parallelism_profile(s.symbolic(), s.levels());
+    let dev = DeviceConfig::titan_x();
+
+    println!(
+        "# Fig. 10 — parallelism profile of {} ({} levels)",
+        m.ufl_name(),
+        prof.len()
+    );
+    let mut t = Table::new(vec!["level", "size", "max_subcols", "type"]);
+    // Print a readable subsample: every level for the first 20, then 1-in-k.
+    let stride = (prof.len() / 60).max(1);
+    for (i, p) in prof.iter().enumerate() {
+        if i > 20 && i % stride != 0 && i != prof.len() - 1 {
+            continue;
+        }
+        let mode = glu3::gpusim::exec::select_mode(p.size, 16, &dev);
+        t.row(vec![
+            p.level.to_string(),
+            p.size.to_string(),
+            p.max_subcols.to_string(),
+            mode.level_type().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let (mut na, mut nb, mut nc) = (0, 0, 0);
+    for p in &prof {
+        match glu3::gpusim::exec::select_mode(p.size, 16, &dev) {
+            KernelMode::SmallBlock { .. } => na += 1,
+            KernelMode::LargeBlock => nb += 1,
+            KernelMode::Stream => nc += 1,
+        }
+    }
+    let corr = size_subcol_correlation(&prof);
+    println!("type distribution: A={na} B={nb} C={nc}");
+    println!("size vs max-subcols correlation: {corr:.3} (paper: inverse)");
+    assert!(corr < 0.1, "Fig. 10's inverse correlation must hold");
+    assert!(prof[0].size > prof.last().unwrap().size, "sizes must shrink");
+    println!("fig10 OK");
+}

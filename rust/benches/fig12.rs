@@ -1,0 +1,67 @@
+//! Fig. 12 — GPU kernel runtime vs the stream-mode threshold N, normalized
+//! to N = 5, over the stream-heavy matrices (the paper plots the ones that
+//! benefit most from stream mode). The paper's finding: runtime keeps
+//! dropping until N = 16, and N > 16 is flat or worse — which is why
+//! GLU3.0 fixes the threshold at 16.
+
+use glu3::bench_support::table::Table;
+use glu3::glu::{GluOptions, GluSolver};
+use glu3::gpusim::Policy;
+use glu3::sparse::gen::{self, SuiteMatrix};
+
+const THRESHOLDS: [usize; 6] = [5, 8, 12, 16, 24, 32];
+
+fn main() {
+    // Stream-heavy subset (matches the paper's selection criterion).
+    let matrices = [
+        SuiteMatrix::Onetone2,
+        SuiteMatrix::Rajat15,
+        SuiteMatrix::Rajat27,
+        SuiteMatrix::Rajat26,
+    ];
+    let mut header: Vec<String> = vec!["matrix".into()];
+    header.extend(THRESHOLDS.iter().map(|n| format!("N={n}")));
+    let mut t = Table::new(header);
+
+    let mut n16_wins = 0usize;
+    for m in matrices {
+        let a = gen::generate(&m.spec());
+        let mut times = Vec::new();
+        for &n in &THRESHOLDS {
+            let opts = GluOptions {
+                policy: Policy::glu3_with_threshold(n),
+                ..Default::default()
+            };
+            let s = GluSolver::factor(&a, &opts).expect("factor");
+            times.push(s.stats().numeric_ms);
+        }
+        let base = times[0];
+        let mut row = vec![m.ufl_name().to_string()];
+        row.extend(times.iter().map(|t| format!("{:.3}", t / base)));
+        t.row(row);
+        // check the paper's shape: N=16 no slower than N=5 and N=8
+        let i16 = THRESHOLDS.iter().position(|&n| n == 16).unwrap();
+        if times[i16] <= times[0] * 1.001 {
+            n16_wins += 1;
+        }
+        eprintln!("fig12: {} done", m.ufl_name());
+    }
+    println!("# Fig. 12 — kernel runtime vs stream threshold N (normalized to N=5)");
+    print!("{}", t.render());
+    println!("paper: runtime keeps reducing until N=16; larger N flat or slower");
+    // Shape note: the paper's curves drop 5-20% toward N=16 and flatten.
+    // Under this simulator the sweep is flat to slightly rising (<= ~7%):
+    // our per-column stream-launch tail outweighs the compute gain on
+    // 5-16-column levels of the (sparser) synthetic suite. Both agree on
+    // the flat tail beyond 16; the location of the shallow optimum is the
+    // one shape this model does not pin down (EXPERIMENTS.md discusses).
+    if n16_wins >= matrices.len() - 1 {
+        println!("fig12 OK ({n16_wins}/{} matrices favor N=16 over N=5)", matrices.len());
+    } else {
+        println!(
+            "fig12 NOTE: {n16_wins}/{} matrices favor N=16 over N=5 on this \
+             simulator; sweep is flat within a few percent (see EXPERIMENTS.md)",
+            matrices.len()
+        );
+    }
+}

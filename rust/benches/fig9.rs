@@ -1,0 +1,56 @@
+//! Fig. 9 — dependency graphs of the three detection methods on the
+//! paper's 8×8 example matrix: GLU1.0 (incorrect), GLU2.0 (exact),
+//! GLU3.0 (relaxed, superset). Prints the edge lists and the resulting
+//! levelization, and checks the figure's claims.
+
+use glu3::bench_support::paper_example;
+use glu3::depend::{glu1, glu2, glu3 as g3, levelize, DepGraph};
+use glu3::symbolic::symbolic_fill;
+
+fn edges(g: &DepGraph) -> String {
+    let mut s = String::new();
+    for k in 0..g.n() {
+        for &i in g.deps_of(k) {
+            // paper uses 1-based labels and x -> y for "x depends on y"
+            s.push_str(&format!("{} -> {}  ", k + 1, i + 1));
+        }
+    }
+    s
+}
+
+fn main() {
+    let a = paper_example();
+    let sym = symbolic_fill(&a).expect("symbolic");
+    let g1 = glu1::detect(&sym.filled);
+    let g2 = glu2::detect(&sym.filled);
+    let g3 = g3::detect(&sym.filled);
+
+    println!("# Fig. 9 — dependency graphs on the example matrix (1-based labels)");
+    println!("(a) GLU1.0 (U-pattern, incorrect) : {}", edges(&g1));
+    println!("(b) GLU2.0 (exact double-U)       : {}", edges(&g2));
+    println!("(c) GLU3.0 (relaxed)              : {}", edges(&g3));
+
+    let l1 = levelize(&g1);
+    let l2 = levelize(&g2);
+    let l3 = levelize(&g3);
+    println!(
+        "levels: glu1 {} (unsafe), glu2 {}, glu3 {}",
+        l1.num_levels(),
+        l2.num_levels(),
+        l3.num_levels()
+    );
+
+    // the figure's claims, enforced:
+    assert!(g2.contains(&g1), "exact must contain U-pattern edges");
+    assert!(
+        g2.has_edge(5, 3),
+        "the Fig. 4 double-U (6 -> 4, 1-based) must be detected"
+    );
+    assert!(g3.num_edges() >= g2.num_edges(), "relaxed is a superset");
+    assert_eq!(
+        l2.num_levels(),
+        l3.num_levels(),
+        "levelization identical despite redundant edges (paper claim)"
+    );
+    println!("fig9 OK: all Fig. 9 claims hold");
+}

@@ -1,0 +1,82 @@
+//! L1/L2 kernel bench: the PJRT-executed Pallas kernels vs the native Rust
+//! implementation of the same math — measures the AOT path's dispatch
+//! overhead and throughput (EXPERIMENTS.md §Perf records these numbers).
+//!
+//! Skips (with a message) when `artifacts/` has not been built.
+
+use glu3::bench_support::table::{ms, Table};
+use glu3::runtime::{default_artifact_dir, Runtime};
+use glu3::util::timer::measure;
+
+fn main() {
+    let dir = default_artifact_dir();
+    if !dir.join("quickstart.hlo.txt").exists() {
+        println!("pjrt_kernels: artifacts not built (make artifacts) — skipping");
+        return;
+    }
+    let rt = Runtime::load(&dir).expect("runtime load");
+    println!("# PJRT kernel bench (artifacts: {:?})", rt.names());
+
+    let mut t = Table::new(vec!["kernel", "shape", "pjrt (ms)", "native (ms)", "ratio"]);
+
+    // level_update at both ladder sizes
+    for (b, n) in glu3::runtime::LEVEL_SIZES {
+        let x: Vec<f32> = (0..b * n).map(|i| (i % 13) as f32).collect();
+        let u: Vec<f32> = (0..n).map(|i| (i % 7) as f32 * 0.5).collect();
+        let s: Vec<f32> = (0..b).map(|i| (i % 3) as f32).collect();
+        let pjrt = measure(3, 10, || rt.level_update(&x, &u, &s, b, n).unwrap());
+        let native = measure(3, 10, || {
+            let mut out = x.clone();
+            for r in 0..b {
+                let sr = s[r];
+                for c in 0..n {
+                    out[r * n + c] -= sr * u[c];
+                }
+            }
+            out
+        });
+        t.row(vec![
+            "level_update".to_string(),
+            format!("{b}x{n}"),
+            ms(pjrt.median_ms()),
+            ms(native.median_ms()),
+            format!("{:.1}", pjrt.median / native.median),
+        ]);
+    }
+
+    // dense tail at both ladder sizes
+    for tsize in glu3::runtime::TAIL_SIZES {
+        let mut rng = glu3::util::Rng::new(tsize as u64);
+        let mut a = vec![0f32; tsize * tsize];
+        for r in 0..tsize {
+            for c in 0..tsize {
+                if r != c {
+                    a[r * tsize + c] = rng.range_f64(-1.0, 1.0) as f32;
+                }
+            }
+        }
+        for d in 0..tsize {
+            let sum: f32 = (0..tsize).filter(|&r| r != d).map(|r| a[r * tsize + d].abs()).sum();
+            a[d * tsize + d] = sum + 1.0;
+        }
+        let rhs: Vec<f32> = (0..tsize).map(|i| (i % 5) as f32).collect();
+        let a64: Vec<f64> = a.iter().map(|&v| v as f64).collect();
+        let rhs64: Vec<f64> = rhs.iter().map(|&v| v as f64).collect();
+
+        let pjrt = measure(2, 8, || rt.dense_tail_solve(&a, &rhs, tsize).unwrap());
+        let native = measure(2, 8, || {
+            glu3::numeric::dense::solve(&a64, tsize, &rhs64).unwrap()
+        });
+        t.row(vec![
+            "dense_tail".to_string(),
+            format!("{tsize}x{tsize}"),
+            ms(pjrt.median_ms()),
+            ms(native.median_ms()),
+            format!("{:.1}", pjrt.median / native.median),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("note: PJRT time includes buffer upload/download; the interpret-mode");
+    println!("Pallas lowering is a CPU reference path (real-TPU perf is estimated");
+    println!("in DESIGN.md §Perf from VMEM footprint + MXU utilization).");
+}

@@ -1,0 +1,119 @@
+//! Table I — solver runtimes: GLU3.0 vs GLU2.0 (simulated GPU), enhanced
+//! GLU2.0 [Lee], and the NICSLU-like CPU baseline; CPU preprocessing time;
+//! per-matrix speedups plus arithmetic/geometric means.
+//!
+//! `GLU3_SET=small|med|all` selects the suite subset (see
+//! `bench_support::bench_set`); EXPERIMENTS.md records the `all` run.
+//!
+//! Shape expectations vs the paper (absolute ms are not comparable — the
+//! GPU is a timing simulator, the CPU baseline runs on this host):
+//! speedup over GLU2.0 grows with matrix size, small matrices sit near 1x,
+//! and the mean rows mirror the paper's 13.0x/6.7x (arith/geo) claim in
+//! ordering, not magnitude.
+
+use glu3::bench_support::table::{ms, ratio, Table};
+use glu3::bench_support::bench_set;
+use glu3::glu::{GluOptions, GluSolver, NumericEngine};
+use glu3::gpusim::Policy;
+use glu3::sparse::gen;
+use glu3::util::stats::{arith_mean, geo_mean};
+
+fn main() {
+    let set = bench_set();
+    let mut t = Table::new(vec![
+        "matrix",
+        "rows",
+        "nz",
+        "nnz",
+        "cpu(ms)",
+        "glu3(ms)",
+        "glu2(ms)",
+        "lee(ms)",
+        "nicslu(ms)",
+        "vs glu2",
+        "vs lee",
+        "vs nicslu",
+    ]);
+    let (mut s2, mut sl, mut sn) = (Vec::new(), Vec::new(), Vec::new());
+
+    for m in set {
+        let a = gen::generate(&m.spec());
+        let run = |policy: Policy| -> (f64, f64) {
+            let opts = GluOptions {
+                policy,
+                ..Default::default()
+            };
+            let s = GluSolver::factor(&a, &opts).expect("factor");
+            (s.stats().numeric_ms, s.stats().cpu_ms())
+        };
+        let (glu3_ms, cpu_ms) = run(Policy::glu3());
+        let (glu2_ms, _) = run(Policy::glu2_fixed());
+        let (lee_ms, _) = run(Policy::lee_enhanced());
+
+        // NICSLU-like CPU baseline: wall-clock of the multithreaded
+        // left-looking engine (this host's core count).
+        let nic_opts = GluOptions {
+            engine: NumericEngine::ParallelCpu {
+                threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            },
+            ..Default::default()
+        };
+        let nic = GluSolver::factor(&a, &nic_opts).expect("nicslu factor");
+        let nic_ms = nic.stats().numeric_ms;
+
+        let st = GluSolver::factor(&a, &GluOptions::default()).unwrap();
+        let stats = st.stats();
+        let r2 = glu2_ms / glu3_ms;
+        let rl = lee_ms / glu3_ms;
+        let rn = nic_ms / glu3_ms;
+        s2.push(r2);
+        sl.push(rl);
+        sn.push(rn);
+        t.row(vec![
+            m.ufl_name().to_string(),
+            stats.n.to_string(),
+            stats.nz.to_string(),
+            stats.nnz.to_string(),
+            ms(cpu_ms),
+            ms(glu3_ms),
+            ms(glu2_ms),
+            ms(lee_ms),
+            ms(nic_ms),
+            ratio(r2),
+            ratio(rl),
+            ratio(rn),
+        ]);
+        eprintln!("table1: {} done", m.ufl_name());
+    }
+    t.row(vec![
+        "arith mean".into(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        ratio(arith_mean(&s2)),
+        ratio(arith_mean(&sl)),
+        ratio(arith_mean(&sn)),
+    ]);
+    t.row(vec![
+        "geo mean".into(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        ratio(geo_mean(&s2)),
+        ratio(geo_mean(&sl)),
+        ratio(geo_mean(&sn)),
+    ]);
+    println!("# Table I — solver runtimes (simulated TITAN X; see DESIGN.md §2)");
+    print!("{}", t.render());
+    println!("paper (full UFL suite): vs GLU2.0 arith 13.0 / geo 6.7; vs [21] arith 7.1 / geo 4.8");
+}

@@ -1,0 +1,80 @@
+//! Table II — levelization runtimes: GLU2.0's O(n³) double-U search
+//! (Algorithm 3) vs GLU3.0's relaxed detection (Algorithm 4), with the
+//! resulting level counts and per-matrix speedups.
+//!
+//! This is the paper's headline "2–3 orders of magnitude" claim. Both
+//! algorithms run on the same filled pattern; times are wall-clock of
+//! detection + levelization.
+
+use std::time::Instant;
+
+use glu3::bench_support::bench_set;
+use glu3::bench_support::table::{ms, Table};
+use glu3::depend::{glu2, glu3 as g3, levelize};
+use glu3::order::{preprocess, FillOrdering};
+use glu3::sparse::gen;
+use glu3::symbolic::symbolic_fill;
+use glu3::util::stats::{arith_mean, geo_mean};
+
+fn main() {
+    let set = bench_set();
+    let mut t = Table::new(vec![
+        "matrix",
+        "levels glu2",
+        "levels glu3",
+        "glu2 (ms)",
+        "glu3 (ms)",
+        "speed-up",
+    ]);
+    let mut ratios = Vec::new();
+
+    for m in set {
+        let a = gen::generate(&m.spec());
+        let pre = preprocess(&a, FillOrdering::Amd, true).expect("preprocess");
+        let sym = symbolic_fill(&pre.a).expect("symbolic");
+
+        // Algorithm 3 verbatim — what GLU2.0 shipped and the paper timed
+        // (this crate's optimized variant would understate the speedup;
+        // see depend::glu2::detect_verbatim docs).
+        let t2 = Instant::now();
+        let d2 = glu2::detect_verbatim(&sym.filled);
+        let l2 = levelize(&d2);
+        let glu2_ms = t2.elapsed().as_secs_f64() * 1e3;
+
+        let t3 = Instant::now();
+        let d3 = g3::detect(&sym.filled);
+        let l3 = levelize(&d3);
+        let glu3_ms = t3.elapsed().as_secs_f64() * 1e3;
+
+        let speedup = glu2_ms / glu3_ms;
+        ratios.push(speedup);
+        t.row(vec![
+            m.ufl_name().to_string(),
+            l2.num_levels().to_string(),
+            l3.num_levels().to_string(),
+            ms(glu2_ms),
+            ms(glu3_ms),
+            format!("{speedup:.1}"),
+        ]);
+        eprintln!("table2: {} done", m.ufl_name());
+    }
+    t.row(vec![
+        "arith mean".into(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        format!("{:.1}", arith_mean(&ratios)),
+    ]);
+    t.row(vec![
+        "geo mean".into(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        format!("{:.1}", geo_mean(&ratios)),
+    ]);
+    println!("# Table II — levelization runtimes (Alg. 3 vs Alg. 4)");
+    print!("{}", t.render());
+    println!("paper (full UFL suite): arith mean 8804.1, geo mean 3145.8; levels differ by at most a few");
+}

@@ -1,0 +1,56 @@
+//! Table III — mode ablations: GPU kernel time with all three modes
+//! (GLU3.0) vs case 1 (small-block disabled) vs case 2 (stream disabled),
+//! plus the A/B/C level-type distribution.
+//!
+//! Shape expectations: case 1 hurts most matrices moderately (type A levels
+//! are few but cheap to win), case 2 hurts type-C-heavy matrices badly, and
+//! very large-n matrices can *gain* from disabling small-block mode (the
+//! Eq. 5 column-cache cap — the paper's G3_circuit anomaly).
+
+use glu3::bench_support::bench_set;
+use glu3::bench_support::table::{ms, Table};
+use glu3::glu::{GluOptions, GluSolver};
+use glu3::gpusim::Policy;
+use glu3::sparse::gen;
+
+fn main() {
+    let set = bench_set();
+    let mut t = Table::new(vec![
+        "matrix",
+        "GLU3.0(ms)",
+        "case1(ms)",
+        "case2(ms)",
+        "A",
+        "B",
+        "C",
+    ]);
+    for m in set {
+        let a = gen::generate(&m.spec());
+        let run = |policy: Policy| -> (f64, (usize, usize, usize)) {
+            let opts = GluOptions {
+                policy,
+                ..Default::default()
+            };
+            let s = GluSolver::factor(&a, &opts).expect("factor");
+            let stats = s.stats();
+            let dist = stats.sim.as_ref().map(|r| r.level_distribution()).unwrap_or((0, 0, 0));
+            (stats.numeric_ms, dist)
+        };
+        let (full, dist) = run(Policy::glu3());
+        let (case1, _) = run(Policy::glu3_no_small());
+        let (case2, _) = run(Policy::glu3_no_stream());
+        t.row(vec![
+            m.ufl_name().to_string(),
+            ms(full),
+            ms(case1),
+            ms(case2),
+            dist.0.to_string(),
+            dist.1.to_string(),
+            dist.2.to_string(),
+        ]);
+        eprintln!("table3: {} done", m.ufl_name());
+    }
+    println!("# Table III — kernel-mode ablations (case 1: no small block; case 2: no stream)");
+    print!("{}", t.render());
+    println!("paper: stream mode (case 2 delta) dominates; G3_circuit is faster in case 1 (Eq. 5 cap)");
+}

@@ -1,0 +1,68 @@
+//! Test/bench fixtures, most importantly the paper's running example matrix.
+
+use crate::sparse::{Coo, Csc};
+
+/// The paper's running example (Fig. 1): an 8×8 circuit-like matrix,
+/// reverse-engineered from the worked examples of Figs. 2–4 and 8–9:
+///
+/// - factorizing column 7 (0-based 6) uses columns 4 and 6 (Fig. 2), so
+///   `A(3,6)` and `A(5,6)` are nonzero;
+/// - column 4's L pattern contains rows 6 and 8 (Fig. 2a): `A(5,3)`,
+///   `A(7,3)`;
+/// - column 6's L pattern contains row 8 (Fig. 2b): `A(7,5)`;
+/// - `A(5,3)` sits left of the diagonal `(5,5)` — the Fig. 8 "look left"
+///   witness for the 6-depends-on-4 double-U (Fig. 4);
+/// - an upper entry in column 2 of row 0 produces the second double-U
+///   (`1 → 2` in Fig. 9b's 1-based labels).
+///
+/// Values are diagonally dominant (10 on the diagonal, −1 off) so the same
+/// fixture drives numeric tests without pivoting.
+pub fn paper_example() -> Csc {
+    let entries: &[(usize, usize)] = &[
+        (0, 0),
+        (1, 0),
+        (4, 0),
+        (0, 1),
+        (1, 1),
+        (3, 1),
+        (2, 2),
+        (5, 2),
+        (3, 3),
+        (5, 3),
+        (6, 3),
+        (7, 3),
+        (4, 4),
+        (6, 4),
+        (5, 5),
+        (7, 5),
+        (0, 6),
+        (3, 6),
+        (5, 6),
+        (6, 6),
+        (2, 7),
+        (6, 7),
+        (7, 7),
+    ];
+    let mut coo = Coo::new(8, 8);
+    for &(r, c) in entries {
+        let v = if r == c { 10.0 } else { -1.0 };
+        coo.push(r, c, v);
+    }
+    coo.to_csc()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_shape() {
+        let a = paper_example();
+        assert_eq!(a.nrows(), 8);
+        assert!(a.has_full_diagonal());
+        // The key structural facts the worked examples rely on:
+        assert!(a.has_entry(3, 6) && a.has_entry(5, 6)); // Fig. 2 updates
+        assert!(a.has_entry(5, 3) && a.has_entry(7, 3)); // Fig. 2a L col 4
+        assert!(a.has_entry(7, 5)); // Fig. 2b L col 6
+    }
+}

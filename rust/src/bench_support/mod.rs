@@ -1,0 +1,22 @@
+//! Shared fixtures and table-formatting helpers for the bench harnesses in
+//! `rust/benches/` (criterion is unavailable offline; each bench is a
+//! `harness = false` binary built on these helpers plus
+//! [`crate::util::timer::measure`]).
+
+pub mod fixtures;
+pub mod table;
+
+pub use fixtures::paper_example;
+
+use crate::sparse::gen::SuiteMatrix;
+
+/// Which suite subset a bench runs on, from `GLU3_SET`:
+/// `small` (5 matrices, seconds), `med` (default; 8 matrices),
+/// `all` (the full 15, minutes — the EXPERIMENTS.md configuration).
+pub fn bench_set() -> Vec<SuiteMatrix> {
+    match std::env::var("GLU3_SET").as_deref() {
+        Ok("small") => SuiteMatrix::SMALL.to_vec(),
+        Ok("all") => SuiteMatrix::ALL.to_vec(),
+        _ => SuiteMatrix::ALL[..8].to_vec(),
+    }
+}

@@ -1,0 +1,297 @@
+//! Modified nodal analysis: stamping the netlist into `J x = ...` systems.
+//!
+//! Unknown vector `x` = node voltages (ground eliminated) followed by one
+//! branch current per voltage source. The Jacobian sparsity pattern is
+//! *identical on every call* — nonlinear elements (diodes) stamp a
+//! conductance whose value changes but whose position does not — which is
+//! what lets the GLU solver reuse its symbolic state across all NR
+//! iterations and time steps.
+
+use super::netlist::{Element, Netlist};
+use crate::coordinator::nr::NonlinearSystem;
+use crate::sparse::{Coo, Csc};
+
+/// Minimum conductance to ground on every node (SPICE's GMIN).
+pub const GMIN: f64 = 1e-12;
+
+/// An MNA view of a netlist, optionally with capacitor companion models
+/// (backward Euler) for transient analysis.
+#[derive(Debug, Clone)]
+pub struct MnaSystem {
+    pub netlist: Netlist,
+    /// Backward-Euler step; `None` for DC (capacitors open).
+    pub dt: Option<f64>,
+    /// Previous-step solution for companion models (transient only).
+    pub x_prev: Vec<f64>,
+}
+
+impl MnaSystem {
+    /// DC system (capacitors open-circuit).
+    pub fn dc(netlist: Netlist) -> Self {
+        let dim = netlist.n_nodes() - 1 + netlist.n_vsources();
+        MnaSystem {
+            netlist,
+            dt: None,
+            x_prev: vec![0.0; dim],
+        }
+    }
+
+    /// Index of node `n` in `x` (ground has no index).
+    fn ni(&self, n: usize) -> Option<usize> {
+        (n > 0).then(|| n - 1)
+    }
+
+    /// Voltage of node `n` under `x`.
+    fn v(&self, x: &[f64], n: usize) -> f64 {
+        self.ni(n).map_or(0.0, |i| x[i])
+    }
+
+    /// Diode current and conductance with overflow-safe linearization.
+    fn diode_iv(vd: f64, isat: f64, nvt: f64) -> (f64, f64) {
+        let t = (vd / nvt).min(40.0);
+        let e = t.exp();
+        let i = isat * (e - 1.0);
+        let g = isat / nvt * e;
+        if vd / nvt > 40.0 {
+            // linear extension beyond the clamp keeps NR stable
+            (i + g * (vd - 40.0 * nvt), g)
+        } else {
+            (i, g)
+        }
+    }
+}
+
+impl NonlinearSystem for MnaSystem {
+    fn dim(&self) -> usize {
+        self.netlist.n_nodes() - 1 + self.netlist.n_vsources()
+    }
+
+    /// KCL residual at every non-ground node + branch equations.
+    fn residual(&self, x: &[f64]) -> Vec<f64> {
+        let nn = self.netlist.n_nodes() - 1;
+        let mut f = vec![0.0; self.dim()];
+        // GMIN leak
+        for (i, fi) in f.iter_mut().take(nn).enumerate() {
+            *fi += GMIN * x[i];
+        }
+        let mut vs_idx = 0usize;
+        for e in &self.netlist.elements {
+            match *e {
+                Element::Resistor { a, b, ohms } => {
+                    let i = (self.v(x, a) - self.v(x, b)) / ohms;
+                    if let Some(ia) = self.ni(a) {
+                        f[ia] += i;
+                    }
+                    if let Some(ib) = self.ni(b) {
+                        f[ib] -= i;
+                    }
+                }
+                Element::Capacitor { a, b, farads } => {
+                    if let Some(dt) = self.dt {
+                        let g = farads / dt;
+                        let vd = self.v(x, a) - self.v(x, b);
+                        let vd_prev = self.v(&self.x_prev, a) - self.v(&self.x_prev, b);
+                        let i = g * (vd - vd_prev);
+                        if let Some(ia) = self.ni(a) {
+                            f[ia] += i;
+                        }
+                        if let Some(ib) = self.ni(b) {
+                            f[ib] -= i;
+                        }
+                    }
+                }
+                Element::CurrentSource { a, b, amps } => {
+                    if let Some(ia) = self.ni(a) {
+                        f[ia] += amps;
+                    }
+                    if let Some(ib) = self.ni(b) {
+                        f[ib] -= amps;
+                    }
+                }
+                Element::VoltageSource { a, b, volts } => {
+                    let ij = x[nn + vs_idx];
+                    if let Some(ia) = self.ni(a) {
+                        f[ia] += ij;
+                    }
+                    if let Some(ib) = self.ni(b) {
+                        f[ib] -= ij;
+                    }
+                    f[nn + vs_idx] = self.v(x, a) - self.v(x, b) - volts;
+                    vs_idx += 1;
+                }
+                Element::Diode { a, b, isat, nvt } => {
+                    let vd = self.v(x, a) - self.v(x, b);
+                    let (i, _) = Self::diode_iv(vd, isat, nvt);
+                    if let Some(ia) = self.ni(a) {
+                        f[ia] += i;
+                    }
+                    if let Some(ib) = self.ni(b) {
+                        f[ib] -= i;
+                    }
+                }
+                Element::Vccs { a, b, c, d, gm } => {
+                    let i = gm * (self.v(x, c) - self.v(x, d));
+                    if let Some(ia) = self.ni(a) {
+                        f[ia] += i;
+                    }
+                    if let Some(ib) = self.ni(b) {
+                        f[ib] -= i;
+                    }
+                }
+            }
+        }
+        f
+    }
+
+    /// Jacobian with a call-invariant sparsity pattern.
+    fn jacobian(&self, x: &[f64]) -> Csc {
+        let nn = self.netlist.n_nodes() - 1;
+        let dim = self.dim();
+        let mut coo = Coo::new(dim, dim);
+        // GMIN keeps every node diagonal structurally present.
+        for i in 0..nn {
+            coo.push(i, i, GMIN);
+        }
+        let stamp_g = |coo: &mut Coo, a: Option<usize>, b: Option<usize>, g: f64| {
+            if let Some(ia) = a {
+                coo.push(ia, ia, g);
+            }
+            if let Some(ib) = b {
+                coo.push(ib, ib, g);
+            }
+            if let (Some(ia), Some(ib)) = (a, b) {
+                coo.push(ia, ib, -g);
+                coo.push(ib, ia, -g);
+            }
+        };
+        let mut vs_idx = 0usize;
+        for e in &self.netlist.elements {
+            match *e {
+                Element::Resistor { a, b, ohms } => {
+                    stamp_g(&mut coo, self.ni(a), self.ni(b), 1.0 / ohms);
+                }
+                Element::Capacitor { a, b, farads } => {
+                    // DC: stamp 0-valued entries so the pattern is identical
+                    // between DC and transient runs of the same netlist.
+                    let g = self.dt.map_or(0.0, |dt| farads / dt);
+                    stamp_g(&mut coo, self.ni(a), self.ni(b), g);
+                }
+                Element::CurrentSource { .. } => {}
+                Element::VoltageSource { a, b, .. } => {
+                    let j = nn + vs_idx;
+                    if let Some(ia) = self.ni(a) {
+                        coo.push(ia, j, 1.0);
+                        coo.push(j, ia, 1.0);
+                    }
+                    if let Some(ib) = self.ni(b) {
+                        coo.push(ib, j, -1.0);
+                        coo.push(j, ib, -1.0);
+                    }
+                    // No structural diagonal on the branch row: its pivot
+                    // would be numerically zero. The MC64 matching step
+                    // pairs the branch row with one of its ±1 entries
+                    // instead (static pivoting, as real GLU deployments do
+                    // for MNA systems).
+                    vs_idx += 1;
+                }
+                Element::Diode { a, b, isat, nvt } => {
+                    let vd = self.v(x, a) - self.v(x, b);
+                    let (_, g) = Self::diode_iv(vd, isat, nvt);
+                    stamp_g(&mut coo, self.ni(a), self.ni(b), g);
+                }
+                Element::Vccs { a, b, c, d, gm } => {
+                    for (row, sign) in [(self.ni(a), 1.0), (self.ni(b), -1.0)] {
+                        if let Some(r) = row {
+                            if let Some(ic) = self.ni(c) {
+                                coo.push(r, ic, sign * gm);
+                            }
+                            if let Some(id) = self.ni(d) {
+                                coo.push(r, id, -sign * gm);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        coo.to_csc()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::netlist::parse_netlist;
+    use crate::coordinator::nr::{newton_raphson, NrOptions};
+
+    #[test]
+    fn voltage_divider_dc() {
+        let nl = parse_netlist(
+            "V1 in 0 6\n\
+             R1 in out 1k\n\
+             R2 out 0 2k\n",
+        )
+        .unwrap();
+        let sys = MnaSystem::dc(nl.clone());
+        let res = newton_raphson(&sys, &vec![0.0; sys.dim()], &NrOptions::default()).unwrap();
+        assert!(res.converged);
+        let out = nl.node("out").unwrap() - 1;
+        assert!((res.x[out] - 4.0).abs() < 1e-6, "v(out) = {}", res.x[out]);
+        // vsource current = 6V / 3k = 2 mA (flowing in->0 through branch)
+        let i = res.x[sys.dim() - 1];
+        assert!((i + 2e-3).abs() < 1e-7, "i = {i}");
+    }
+
+    #[test]
+    fn diode_clamp_dc() {
+        // 5V through 1k into a diode: v(d) ≈ 0.6-0.8V forward drop.
+        let nl = parse_netlist(
+            "V1 in 0 5\n\
+             R1 in d 1k\n\
+             D1 d 0 is=1e-14\n",
+        )
+        .unwrap();
+        let sys = MnaSystem::dc(nl.clone());
+        let res = newton_raphson(
+            &sys,
+            &vec![0.0; sys.dim()],
+            &NrOptions {
+                max_iters: 200,
+                damping: 0.5,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(res.converged, "norms {:?}", &res.residual_norms[..5.min(res.residual_norms.len())]);
+        let vd = res.x[nl.node("d").unwrap() - 1];
+        assert!((0.5..0.9).contains(&vd), "diode drop {vd}");
+    }
+
+    #[test]
+    fn jacobian_pattern_invariant() {
+        let nl = super::super::netlist::diode_grid(5, 5, 1.8, 4, 2);
+        let sys = MnaSystem::dc(nl);
+        let j0 = sys.jacobian(&vec![0.0; sys.dim()]);
+        let x1: Vec<f64> = (0..sys.dim()).map(|i| (i % 3) as f64 * 0.3).collect();
+        let j1 = sys.jacobian(&x1);
+        assert_eq!(j0.colptr(), j1.colptr());
+        assert_eq!(j0.rowidx(), j1.rowidx());
+        // but values differ (diode operating point moved)
+        assert_ne!(j0.values(), j1.values());
+    }
+
+    #[test]
+    fn vccs_stamps() {
+        // V1 sets v(c)=1; G converts it to 2A into node out through 1 ohm.
+        let nl = parse_netlist(
+            "V1 c 0 1\n\
+             R1 out 0 1\n\
+             G1 0 out c 0 2\n",
+        )
+        .unwrap();
+        let sys = MnaSystem::dc(nl.clone());
+        let res = newton_raphson(&sys, &vec![0.0; sys.dim()], &NrOptions::default()).unwrap();
+        assert!(res.converged);
+        let v_out = res.x[nl.node("out").unwrap() - 1];
+        assert!((v_out - 2.0).abs() < 1e-6, "v(out) = {v_out}");
+    }
+}

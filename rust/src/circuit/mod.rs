@@ -1,0 +1,17 @@
+//! SPICE-lite circuit simulator — the end-to-end workload that motivates
+//! the paper ("for circuit simulation application such as the widely used
+//! SPICE program, the core of the computing is to solve Ax = b").
+//!
+//! Modified nodal analysis over a [`netlist`], DC operating point via
+//! Newton–Raphson ([`crate::coordinator::nr`]) and backward-Euler transient
+//! analysis — all solving through [`crate::glu::GluSolver`], with the
+//! symbolic state reused across every NR iteration and time step exactly as
+//! the paper's flow (Fig. 5) intends.
+
+pub mod mna;
+pub mod netlist;
+pub mod transient;
+
+pub use mna::MnaSystem;
+pub use netlist::{parse_netlist, Element, Netlist};
+pub use transient::{transient, TranOptions, TranResult};

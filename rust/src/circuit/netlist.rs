@@ -1,0 +1,303 @@
+//! SPICE-like netlist representation and parser.
+//!
+//! Supported cards (case-insensitive, `*`/`;` comments, `.end` optional):
+//!
+//! ```text
+//! R<name> a b <ohms>        resistor
+//! C<name> a b <farads>      capacitor
+//! I<name> a b <amps>        DC current source (flows a -> b)
+//! V<name> a b <volts>       DC voltage source (MNA branch variable)
+//! D<name> a b [is=..] [n=..]  diode (Shockley, linearized by NR)
+//! G<name> a b c d <siemens> VCCS: i(a->b) = g * (v(c) - v(d))
+//! ```
+//!
+//! Node `0` (or `gnd`) is ground. Values accept SPICE suffixes
+//! (`k M meg u n p f`).
+
+use std::collections::HashMap;
+
+/// A circuit element.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Element {
+    Resistor { a: usize, b: usize, ohms: f64 },
+    Capacitor { a: usize, b: usize, farads: f64 },
+    CurrentSource { a: usize, b: usize, amps: f64 },
+    VoltageSource { a: usize, b: usize, volts: f64 },
+    Diode { a: usize, b: usize, isat: f64, nvt: f64 },
+    Vccs { a: usize, b: usize, c: usize, d: usize, gm: f64 },
+}
+
+/// A parsed netlist. Node 0 is ground; nodes are compacted to `0..n_nodes`.
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    pub elements: Vec<Element>,
+    pub node_names: Vec<String>,
+}
+
+impl Netlist {
+    /// Number of nodes including ground.
+    pub fn n_nodes(&self) -> usize {
+        self.node_names.len()
+    }
+
+    /// Number of voltage sources (MNA branch variables).
+    pub fn n_vsources(&self) -> usize {
+        self.elements
+            .iter()
+            .filter(|e| matches!(e, Element::VoltageSource { .. }))
+            .count()
+    }
+
+    /// Node id by name, if present.
+    pub fn node(&self, name: &str) -> Option<usize> {
+        let name = normalize_node(name);
+        self.node_names.iter().position(|n| *n == name)
+    }
+}
+
+fn normalize_node(name: &str) -> String {
+    let lower = name.to_ascii_lowercase();
+    if lower == "gnd" {
+        "0".to_string()
+    } else {
+        lower
+    }
+}
+
+/// Parse a SPICE-ish value with suffix (`1k`, `2.2u`, `3meg`, `10`).
+pub fn parse_value(tok: &str) -> anyhow::Result<f64> {
+    let t = tok.trim().to_ascii_lowercase();
+    let (num, mult) = if let Some(p) = t.strip_suffix("meg") {
+        (p, 1e6)
+    } else if let Some(p) = t.strip_suffix('k') {
+        (p, 1e3)
+    } else if let Some(p) = t.strip_suffix('m') {
+        (p, 1e-3)
+    } else if let Some(p) = t.strip_suffix('u') {
+        (p, 1e-6)
+    } else if let Some(p) = t.strip_suffix('n') {
+        (p, 1e-9)
+    } else if let Some(p) = t.strip_suffix('p') {
+        (p, 1e-12)
+    } else if let Some(p) = t.strip_suffix('f') {
+        (p, 1e-15)
+    } else if let Some(p) = t.strip_suffix('g') {
+        (p, 1e9)
+    } else {
+        (t.as_str(), 1.0)
+    };
+    num.parse::<f64>()
+        .map(|v| v * mult)
+        .map_err(|_| anyhow::anyhow!("bad value {tok}"))
+}
+
+/// Parse a netlist from text.
+pub fn parse_netlist(text: &str) -> anyhow::Result<Netlist> {
+    let mut node_ids: HashMap<String, usize> = HashMap::new();
+    let mut node_names: Vec<String> = Vec::new();
+    // ground is always id 0
+    node_ids.insert("0".into(), 0);
+    node_names.push("0".into());
+
+    let intern = |name: &str, ids: &mut HashMap<String, usize>, names: &mut Vec<String>| {
+        let key = normalize_node(name);
+        *ids.entry(key.clone()).or_insert_with(|| {
+            names.push(key);
+            names.len() - 1
+        })
+    };
+
+    let mut elements = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split(['*', ';']).next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        let card = toks[0].to_ascii_lowercase();
+        if card.starts_with('.') {
+            if card == ".end" {
+                break;
+            }
+            continue; // directives ignored in this subset
+        }
+        let err = |m: &str| anyhow::anyhow!("line {}: {m}: {line}", lineno + 1);
+        let kind = card.chars().next().unwrap();
+        match kind {
+            'r' | 'c' | 'i' | 'v' => {
+                if toks.len() < 4 {
+                    return Err(err("expected: X a b value"));
+                }
+                let a = intern(toks[1], &mut node_ids, &mut node_names);
+                let b = intern(toks[2], &mut node_ids, &mut node_names);
+                let v = parse_value(toks[3])?;
+                elements.push(match kind {
+                    'r' => {
+                        anyhow::ensure!(v > 0.0, err("resistance must be positive"));
+                        Element::Resistor { a, b, ohms: v }
+                    }
+                    'c' => Element::Capacitor { a, b, farads: v },
+                    'i' => Element::CurrentSource { a, b, amps: v },
+                    _ => Element::VoltageSource { a, b, volts: v },
+                });
+            }
+            'd' => {
+                if toks.len() < 3 {
+                    return Err(err("expected: D a b [is=..] [n=..]"));
+                }
+                let a = intern(toks[1], &mut node_ids, &mut node_names);
+                let b = intern(toks[2], &mut node_ids, &mut node_names);
+                let mut isat = 1e-14;
+                let mut nvt = 0.02585;
+                for t in &toks[3..] {
+                    let tl = t.to_ascii_lowercase();
+                    if let Some(v) = tl.strip_prefix("is=") {
+                        isat = parse_value(v)?;
+                    } else if let Some(v) = tl.strip_prefix("n=") {
+                        nvt = 0.02585 * parse_value(v)?;
+                    }
+                }
+                elements.push(Element::Diode { a, b, isat, nvt });
+            }
+            'g' => {
+                if toks.len() < 6 {
+                    return Err(err("expected: G a b c d gm"));
+                }
+                let a = intern(toks[1], &mut node_ids, &mut node_names);
+                let b = intern(toks[2], &mut node_ids, &mut node_names);
+                let c = intern(toks[3], &mut node_ids, &mut node_names);
+                let d = intern(toks[4], &mut node_ids, &mut node_names);
+                elements.push(Element::Vccs {
+                    a,
+                    b,
+                    c,
+                    d,
+                    gm: parse_value(toks[5])?,
+                });
+            }
+            _ => return Err(err("unknown card")),
+        }
+    }
+    Ok(Netlist {
+        elements,
+        node_names,
+    })
+}
+
+/// Programmatic builder: an `n`-stage RC ladder driven by a step source —
+/// the classic SPICE benchmark topology (also used by the end-to-end
+/// example).
+pub fn rc_ladder(stages: usize, r: f64, c: f64, vin: f64) -> Netlist {
+    let mut text = String::new();
+    text.push_str(&format!("V1 in 0 {vin}\n"));
+    let mut prev = "in".to_string();
+    for i in 0..stages {
+        let node = format!("n{i}");
+        text.push_str(&format!("R{i} {prev} {node} {r}\n"));
+        text.push_str(&format!("C{i} {node} 0 {c}\n"));
+        prev = node;
+    }
+    parse_netlist(&text).expect("rc_ladder is well-formed")
+}
+
+/// Programmatic builder: a grid power network with diode clamps at random
+/// nodes — a nonlinear workload with a big, sparse Jacobian.
+pub fn diode_grid(nx: usize, ny: usize, vdd: f64, n_diodes: usize, seed: u64) -> Netlist {
+    use crate::util::Rng;
+    let mut rng = Rng::new(seed);
+    let mut text = String::new();
+    text.push_str(&format!("V1 vdd 0 {vdd}\n"));
+    let node = |x: usize, y: usize| format!("g{x}_{y}");
+    for y in 0..ny {
+        for x in 0..nx {
+            if x + 1 < nx {
+                text.push_str(&format!(
+                    "Rh{x}_{y} {} {} {}\n",
+                    node(x, y),
+                    node(x + 1, y),
+                    1.0 + rng.f64()
+                ));
+            }
+            if y + 1 < ny {
+                text.push_str(&format!(
+                    "Rv{x}_{y} {} {} {}\n",
+                    node(x, y),
+                    node(x, y + 1),
+                    1.0 + rng.f64()
+                ));
+            }
+            // weak leak to ground keeps the matrix nonsingular
+            text.push_str(&format!("Rl{x}_{y} {} 0 1e5\n", node(x, y)));
+            // node decap: gives the transient real dynamics
+            text.push_str(&format!("Cd{x}_{y} {} 0 1n\n", node(x, y)));
+        }
+    }
+    // feed corners from vdd
+    text.push_str(&format!("Rf0 vdd {} 0.1\n", node(0, 0)));
+    text.push_str(&format!("Rf1 vdd {} 0.1\n", node(nx - 1, ny - 1)));
+    for i in 0..n_diodes {
+        let x = rng.below(nx);
+        let y = rng.below(ny);
+        text.push_str(&format!("Dd{i} {} 0 is=1e-12\n", node(x, y)));
+    }
+    parse_netlist(&text).expect("diode_grid is well-formed")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_values_with_suffixes() {
+        assert_eq!(parse_value("1k").unwrap(), 1e3);
+        assert!((parse_value("2.5u").unwrap() - 2.5e-6).abs() < 1e-18);
+        assert_eq!(parse_value("3meg").unwrap(), 3e6);
+        assert_eq!(parse_value("10").unwrap(), 10.0);
+        assert!(parse_value("abc").is_err());
+    }
+
+    #[test]
+    fn parse_basic_netlist() {
+        let nl = parse_netlist(
+            "* voltage divider\n\
+             V1 in 0 5\n\
+             R1 in out 1k\n\
+             R2 out 0 1k ; load\n\
+             .end\n",
+        )
+        .unwrap();
+        assert_eq!(nl.elements.len(), 3);
+        assert_eq!(nl.n_nodes(), 3);
+        assert_eq!(nl.n_vsources(), 1);
+        assert!(nl.node("out").is_some());
+        assert_eq!(nl.node("gnd"), Some(0));
+    }
+
+    #[test]
+    fn parse_diode_params() {
+        let nl = parse_netlist("D1 a 0 is=1e-12 n=2\n").unwrap();
+        match &nl.elements[0] {
+            Element::Diode { isat, nvt, .. } => {
+                assert_eq!(*isat, 1e-12);
+                assert!((nvt - 0.0517).abs() < 1e-4);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn builders_are_well_formed() {
+        let rc = rc_ladder(10, 1e3, 1e-6, 5.0);
+        assert_eq!(rc.n_vsources(), 1);
+        assert_eq!(rc.n_nodes(), 12); // gnd + in + 10 stages
+        let dg = diode_grid(4, 4, 1.8, 3, 1);
+        assert!(dg.n_nodes() > 16);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_netlist("R1 a b\n").is_err());
+        assert!(parse_netlist("X1 a b 5\n").is_err());
+        assert!(parse_netlist("R1 a b -5\n").is_err());
+    }
+}

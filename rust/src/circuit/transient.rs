@@ -1,0 +1,204 @@
+//! Backward-Euler transient analysis over the GLU solver.
+//!
+//! The SPICE inner loop the paper optimizes: at each time step, Newton
+//! iterations restamp the Jacobian *values* (companion models move, diode
+//! operating points move) while the *pattern* is fixed, so the solver's
+//! preprocessing + symbolic state (the expensive CPU phases of Fig. 5) are
+//! computed exactly once for the whole simulation and only the numeric
+//! kernel reruns — this is where GLU3.0's fast refactorization pays off.
+
+use super::mna::MnaSystem;
+use super::netlist::Netlist;
+use crate::coordinator::nr::NonlinearSystem;
+use crate::glu::{GluOptions, GluSolver};
+
+/// Transient options.
+#[derive(Debug, Clone)]
+pub struct TranOptions {
+    pub dt: f64,
+    pub steps: usize,
+    pub nr_abstol: f64,
+    pub nr_max_iters: usize,
+    pub glu: GluOptions,
+}
+
+impl Default for TranOptions {
+    fn default() -> Self {
+        TranOptions {
+            dt: 1e-6,
+            steps: 100,
+            nr_abstol: 1e-9,
+            nr_max_iters: 50,
+            glu: GluOptions::default(),
+        }
+    }
+}
+
+/// Transient result: the full waveform matrix plus solver statistics.
+#[derive(Debug, Clone)]
+pub struct TranResult {
+    /// Time points (`steps + 1` including t = 0).
+    pub times: Vec<f64>,
+    /// `x` per time point (node voltages + branch currents).
+    pub waveforms: Vec<Vec<f64>>,
+    /// Total NR iterations across all steps.
+    pub nr_iterations: usize,
+    /// Total numeric refactorizations (== NR iterations; symbolic reused).
+    pub refactorizations: usize,
+    /// Sum of numeric-kernel time, ms (simulated-GPU kernel ms when the
+    /// GPU engine is configured).
+    pub numeric_ms_total: f64,
+    /// One-time CPU preprocessing + symbolic + levelization time, ms.
+    pub cpu_ms_once: f64,
+}
+
+impl TranResult {
+    /// Waveform of one unknown (node index - 1, or branch index).
+    pub fn trace(&self, idx: usize) -> Vec<f64> {
+        self.waveforms.iter().map(|x| x[idx]).collect()
+    }
+}
+
+/// Run a backward-Euler transient from the DC operating point `x0`.
+pub fn transient(netlist: &Netlist, x0: &[f64], opts: &TranOptions) -> anyhow::Result<TranResult> {
+    let mut sys = MnaSystem::dc(netlist.clone());
+    sys.dt = Some(opts.dt);
+    sys.x_prev = x0.to_vec();
+    let dim = sys.dim();
+    anyhow::ensure!(x0.len() == dim, "x0 dimension mismatch");
+
+    // Factor once on the initial Jacobian: symbolic state lives for the
+    // whole simulation.
+    let mut x = x0.to_vec();
+    let j0 = sys.jacobian(&x);
+    let mut solver = GluSolver::factor(&j0, &opts.glu)?;
+    let cpu_ms_once = solver.stats().cpu_ms();
+    let mut numeric_ms_total = solver.stats().numeric_ms;
+    let mut nr_iterations = 0usize;
+    let mut refactorizations = 1usize;
+
+    let mut times = vec![0.0];
+    let mut waveforms = vec![x.clone()];
+
+    for step in 0..opts.steps {
+        sys.x_prev = x.clone();
+        // Newton loop for this time point.
+        let mut converged = false;
+        for it in 0..opts.nr_max_iters {
+            let f = sys.residual(&x);
+            let norm = f.iter().map(|v| v.abs()).fold(0.0, f64::max);
+            if norm < opts.nr_abstol {
+                converged = true;
+                break;
+            }
+            if it > 0 || step > 0 {
+                let j = sys.jacobian(&x);
+                solver.refactor(&j)?;
+                refactorizations += 1;
+                numeric_ms_total += solver.stats().numeric_ms;
+            }
+            let dx = solver.solve(&f)?;
+            for (xi, di) in x.iter_mut().zip(&dx) {
+                *xi -= di;
+            }
+            nr_iterations += 1;
+        }
+        anyhow::ensure!(converged, "NR failed to converge at step {step}");
+        times.push((step + 1) as f64 * opts.dt);
+        waveforms.push(x.clone());
+    }
+
+    Ok(TranResult {
+        times,
+        waveforms,
+        nr_iterations,
+        refactorizations,
+        numeric_ms_total,
+        cpu_ms_once,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::netlist::parse_netlist;
+    use crate::coordinator::nr::{newton_raphson, NrOptions};
+
+    #[test]
+    fn rc_step_response_matches_analytic() {
+        // Single RC: v(t) = V (1 - exp(-t/RC)), R = 1k, C = 1u, tau = 1ms.
+        let nl = parse_netlist(
+            "V1 in 0 1\n\
+             R1 in out 1k\n\
+             C1 out 0 1u\n",
+        )
+        .unwrap();
+        let sys = MnaSystem::dc(nl.clone());
+        let dim = sys.dim();
+        // start from v=0 everywhere but with the source consistent: use DC
+        // solution with capacitor voltage forced by x0 = 0 (cap initially
+        // discharged, BE companion handles it).
+        let mut x0 = vec![0.0; dim];
+        // the source branch equation needs v(in)=1 at t=0+; solve one NR on
+        // the resistive network with the cap as short to ground at t=0 is
+        // approximated well enough by starting transient from 0 directly.
+        x0[nl.node("in").unwrap() - 1] = 1.0;
+        let opts = TranOptions {
+            dt: 5e-5, // tau/20
+            steps: 60, // 3 tau
+            ..Default::default()
+        };
+        let res = transient(&nl, &x0, &opts).unwrap();
+        let out = nl.node("out").unwrap() - 1;
+        let trace = res.trace(out);
+        let tau = 1e-3;
+        for (k, &t) in res.times.iter().enumerate().skip(5) {
+            let want = 1.0 - (-t / tau).exp();
+            // BE is first-order: a few percent at dt = tau/20
+            assert!(
+                (trace[k] - want).abs() < 0.05,
+                "t={t}: {} vs {}",
+                trace[k],
+                want
+            );
+        }
+        // monotone rise toward 1.0
+        assert!(trace.last().unwrap() > &0.9);
+        // one refactor per NR solve (the initial factor covers step 0/it 0)
+        assert_eq!(res.refactorizations, res.nr_iterations);
+    }
+
+    #[test]
+    fn diode_grid_transient_runs() {
+        let nl = crate::circuit::netlist::diode_grid(4, 4, 1.8, 2, 3);
+        let sys = MnaSystem::dc(nl.clone());
+        let dc = newton_raphson(
+            &sys,
+            &vec![0.0; sys.dim()],
+            &NrOptions {
+                max_iters: 100,
+                damping: 0.7,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(dc.converged);
+        let res = transient(
+            &nl,
+            &dc.x,
+            &TranOptions {
+                dt: 1e-7,
+                steps: 10,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(res.waveforms.len(), 11);
+        // purely resistive+diode grid at steady state: waveform flat
+        let first = &res.waveforms[0];
+        let last = res.waveforms.last().unwrap();
+        for (p, q) in first.iter().zip(last) {
+            assert!((p - q).abs() < 1e-6);
+        }
+    }
+}

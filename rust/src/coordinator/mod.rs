@@ -1,0 +1,15 @@
+//! Layer-3 coordinator: a threaded solver service and the Newton–Raphson
+//! refactorization driver.
+//!
+//! The paper's system is a *solver*, so L3 is a thin-but-real runtime: a
+//! worker thread owns each factored system (symbolic state is large and
+//! reusable), clients submit solve/refactor jobs over channels, and the
+//! service batches multiple right-hand sides against one set of factors —
+//! the access pattern of a SPICE transient loop, where one Jacobian pattern
+//! is refactored per Newton step and solved against one or more RHS.
+
+pub mod nr;
+pub mod service;
+
+pub use nr::{newton_raphson, NonlinearSystem, NrOptions, NrResult};
+pub use service::{SolverHandle, SolverService};

@@ -1,0 +1,222 @@
+//! The solver service: one worker thread per factored system, channel-based
+//! job submission, RHS batching.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::glu::{GluOptions, GluSolver, GluStats};
+use crate::sparse::Csc;
+
+enum Job {
+    /// Solve a batch of right-hand sides.
+    Solve {
+        rhs: Vec<Vec<f64>>,
+        reply: mpsc::Sender<anyhow::Result<Vec<Vec<f64>>>>,
+    },
+    /// Refactor with new values on the same pattern.
+    Refactor {
+        a: Box<Csc>,
+        reply: mpsc::Sender<anyhow::Result<()>>,
+    },
+    /// Fetch current stats.
+    Stats {
+        reply: mpsc::Sender<GluStats>,
+    },
+    Shutdown,
+}
+
+/// Handle to one factored system living on its worker thread.
+pub struct SolverHandle {
+    tx: mpsc::Sender<Job>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl SolverHandle {
+    /// Factor `a` on a fresh worker thread.
+    pub fn spawn(a: Csc, opts: GluOptions) -> anyhow::Result<SolverHandle> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let join = std::thread::spawn(move || {
+            let mut solver = match GluSolver::factor(&a, &opts) {
+                Ok(s) => {
+                    let _ = ready_tx.send(Ok(()));
+                    s
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(job) = rx.recv() {
+                match job {
+                    Job::Solve { rhs, reply } => {
+                        let out: anyhow::Result<Vec<Vec<f64>>> =
+                            rhs.iter().map(|b| solver.solve(b)).collect();
+                        let _ = reply.send(out);
+                    }
+                    Job::Refactor { a, reply } => {
+                        let _ = reply.send(solver.refactor(&a));
+                    }
+                    Job::Stats { reply } => {
+                        let _ = reply.send(solver.stats().clone());
+                    }
+                    Job::Shutdown => break,
+                }
+            }
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("worker died during factorization"))??;
+        Ok(SolverHandle {
+            tx,
+            join: Some(join),
+        })
+    }
+
+    /// Solve one RHS.
+    pub fn solve(&self, b: Vec<f64>) -> anyhow::Result<Vec<f64>> {
+        Ok(self.solve_batch(vec![b])?.pop().unwrap())
+    }
+
+    /// Solve a batch of RHS against the same factors (amortizes dispatch).
+    pub fn solve_batch(&self, rhs: Vec<Vec<f64>>) -> anyhow::Result<Vec<Vec<f64>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Job::Solve { rhs, reply })
+            .map_err(|_| anyhow::anyhow!("worker gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("worker gone"))?
+    }
+
+    /// Refactor with new values (same pattern).
+    pub fn refactor(&self, a: Csc) -> anyhow::Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Job::Refactor {
+                a: Box::new(a),
+                reply,
+            })
+            .map_err(|_| anyhow::anyhow!("worker gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("worker gone"))?
+    }
+
+    /// Current stats snapshot.
+    pub fn stats(&self) -> anyhow::Result<GluStats> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Job::Stats { reply })
+            .map_err(|_| anyhow::anyhow!("worker gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("worker gone"))
+    }
+}
+
+impl Drop for SolverHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// A registry of named solver instances (the long-running service a circuit
+/// simulator or batch workload talks to).
+#[derive(Default)]
+pub struct SolverService {
+    solvers: HashMap<String, SolverHandle>,
+}
+
+impl SolverService {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Factor and register a system under `name` (replaces any previous).
+    pub fn load(&mut self, name: &str, a: Csc, opts: GluOptions) -> anyhow::Result<()> {
+        let h = SolverHandle::spawn(a, opts)?;
+        self.solvers.insert(name.to_string(), h);
+        Ok(())
+    }
+
+    /// Get a handle by name.
+    pub fn get(&self, name: &str) -> Option<&SolverHandle> {
+        self.solvers.get(name)
+    }
+
+    /// Drop a system.
+    pub fn unload(&mut self, name: &str) -> bool {
+        self.solvers.remove(name).is_some()
+    }
+
+    /// Registered system names.
+    pub fn names(&self) -> Vec<&str> {
+        self.solvers.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::residual;
+    use crate::sparse::gen;
+
+    #[test]
+    fn service_solves_and_refactors() {
+        let a = gen::netlist(200, 5, 10, 0.05, 2, 0.2, 31);
+        let mut svc = SolverService::new();
+        svc.load("sys", a.clone(), GluOptions::default()).unwrap();
+        let h = svc.get("sys").unwrap();
+
+        let b = vec![1.0; 200];
+        let x = h.solve(b.clone()).unwrap();
+        assert!(residual(&a, &x, &b) < 1e-10);
+
+        // batch of RHS
+        let batch: Vec<Vec<f64>> = (0..4)
+            .map(|s| (0..200).map(|i| ((i + s) % 7) as f64).collect())
+            .collect();
+        let xs = h.solve_batch(batch.clone()).unwrap();
+        for (x, b) in xs.iter().zip(&batch) {
+            assert!(residual(&a, x, b) < 1e-10);
+        }
+
+        // refactor with scaled values
+        let mut a2 = a.clone();
+        for v in a2.values_mut() {
+            *v *= 2.0;
+        }
+        h.refactor(a2.clone()).unwrap();
+        let x2 = h.solve(b.clone()).unwrap();
+        assert!(residual(&a2, &x2, &b) < 1e-10);
+
+        let st = h.stats().unwrap();
+        assert_eq!(st.n, 200);
+        assert!(svc.unload("sys"));
+        assert!(!svc.unload("sys"));
+    }
+
+    #[test]
+    fn factor_error_propagates() {
+        use crate::sparse::Coo;
+        // structurally singular
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(1, 0, 1.0);
+        let mut svc = SolverService::new();
+        assert!(svc
+            .load("bad", coo.to_csc(), GluOptions::default())
+            .is_err());
+    }
+
+    #[test]
+    fn multiple_systems_coexist() {
+        let mut svc = SolverService::new();
+        for (i, n) in [100usize, 150].iter().enumerate() {
+            let a = gen::netlist(*n, 5, 8, 0.1, 1, 0.2, i as u64);
+            svc.load(&format!("m{i}"), a, GluOptions::default()).unwrap();
+        }
+        assert_eq!(svc.names().len(), 2);
+        let x = svc.get("m0").unwrap().solve(vec![1.0; 100]).unwrap();
+        assert_eq!(x.len(), 100);
+    }
+}

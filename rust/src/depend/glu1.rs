@@ -1,0 +1,58 @@
+//! GLU1.0 dependency detection: the U-pattern ("look up") method.
+//!
+//! `U(i, k) ≠ 0` for `i < k` makes column `k` depend on column `i` — the
+//! dependency structure of the *left-looking* triangular solve. GLU1.0
+//! reused it unchanged for the hybrid right-looking kernel, which is why
+//! GLU1.0 can produce wrong numbers: the right-looking submatrix update adds
+//! the double-U read/write hazard this method cannot see (paper Fig. 4,
+//! Fig. 9a).
+//!
+//! Kept as (a) the baseline for Table II, (b) a correctness foil for the
+//! hazard-checking property tests, and (c) the correct detector for the
+//! *left-looking* CPU baseline where it is sufficient.
+
+use super::DepGraph;
+use crate::sparse::Csc;
+
+/// U-pattern dependencies on a filled matrix `As = L + U`.
+pub fn detect(filled: &Csc) -> DepGraph {
+    let n = filled.ncols();
+    let mut deps: Vec<Vec<u32>> = Vec::with_capacity(n);
+    for k in 0..n {
+        let (rows, _) = filled.col(k);
+        // all entries strictly above the diagonal: U(i, k) with i < k
+        let d: Vec<u32> = rows
+            .iter()
+            .take_while(|&&i| i < k)
+            .map(|&i| i as u32)
+            .collect();
+        deps.push(d);
+    }
+    DepGraph::new(deps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::symbolic::symbolic_fill;
+
+    #[test]
+    fn u_entries_become_edges() {
+        // Tridiagonal chain: U(k-1, k) != 0 for every k -> chain deps.
+        let a = gen::ladder(8, 8, 0, 1);
+        let f = symbolic_fill(&a).unwrap();
+        let g = detect(&f.filled);
+        for k in 1..8 {
+            assert_eq!(g.deps_of(k), &[(k - 1) as u32]);
+        }
+        assert!(g.deps_of(0).is_empty());
+    }
+
+    #[test]
+    fn diagonal_matrix_no_edges() {
+        let a = crate::sparse::Csc::identity(6);
+        let f = symbolic_fill(&a).unwrap();
+        assert_eq!(detect(&f.filled).num_edges(), 0);
+    }
+}

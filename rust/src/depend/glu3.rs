@@ -1,0 +1,146 @@
+//! GLU3.0 *relaxed* dependency detection (Algorithm 4) — the paper's first
+//! contribution.
+//!
+//! Observation (§III-A): a nonzero `As(t, i)` with `i < t` — an entry to the
+//! *left* of the diagonal in row `t` of `L` — is a necessary condition for
+//! any double-U hazard between columns `i` and `t`: it is exactly the entry
+//! through which column `i`'s submatrix update writes into row `t`.
+//! So instead of searching for the full double-U witness (`O(n³)`), GLU3.0
+//! simply:
+//!
+//! - **looks up** column `k` of `U` (the GLU1.0 edges — kept only when
+//!   column `i` of `L` is non-empty, since an empty `L(:,i)` produces no
+//!   submatrix update at all), and
+//! - **looks left** along row `k` of `L`, adding an edge for every nonzero.
+//!
+//! Two loops over the stored pattern: `O(nnz(As))`. The result is a
+//! *superset* of the exact GLU2.0 set (possibly with redundant edges — the
+//! red edges of Fig. 9c); levelization on the superset is at worst a few
+//! levels deeper (Table II) while detection is 2–3 orders of magnitude
+//! faster.
+
+use super::DepGraph;
+use crate::sparse::Csc;
+
+/// Relaxed dependencies (Algorithm 4 verbatim: "look up" + "look left").
+pub fn detect(filled: &Csc) -> DepGraph {
+    let n = filled.ncols();
+
+    // Column i of L is non-empty iff it has an entry strictly below the
+    // diagonal. Precompute in one pass over columns.
+    let mut l_nonempty = vec![false; n];
+    for i in 0..n {
+        let (rows, _) = filled.col(i);
+        l_nonempty[i] = rows.last().is_some_and(|&r| r > i);
+    }
+
+    // "Look left": row-wise access to the strictly-lower triangle. Build a
+    // row-bucketed list of L entries in one pass (cheaper than a full CSR
+    // transpose — values are not needed).
+    let mut lrow: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for i in 0..n {
+        let (rows, _) = filled.col(i);
+        for &t in rows.iter().filter(|&&t| t > i) {
+            lrow[t].push(i as u32);
+        }
+    }
+
+    let mut deps: Vec<Vec<u32>> = Vec::with_capacity(n);
+    for k in 0..n {
+        let (rows, _) = filled.col(k);
+        let mut d: Vec<u32> = Vec::new();
+        // Look up: U(i, k) != 0, i < k, and column i of L non-empty.
+        for &i in rows.iter().take_while(|&&i| i < k) {
+            if l_nonempty[i] {
+                d.push(i as u32);
+            }
+        }
+        // Look left: L-row entries As(k, i) != 0, i < k.
+        d.extend_from_slice(&lrow[k]);
+        deps.push(d);
+    }
+    DepGraph::new(deps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::depend::{glu1, glu2};
+    use crate::sparse::gen;
+    use crate::bench_support::paper_example;
+    use crate::symbolic::symbolic_fill;
+    use crate::util::Rng;
+
+    #[test]
+    fn fig8_look_left_finds_double_u() {
+        // Paper Fig. 8: looking up from (6,6) finds nothing; looking left
+        // finds the nonzero in column 4 -> the 6-on-4 dependency (0-based
+        // 5 -> 3).
+        let f = symbolic_fill(&paper_example()).unwrap();
+        let g3 = detect(&f.filled);
+        assert!(g3.has_edge(5, 3));
+    }
+
+    /// The safety property behind the "relaxed" claim: every *true*
+    /// dependency is found. True deps = U-pattern-with-nonempty-L ∪ exact
+    /// double-U (what GLU2.0 computes, minus U-edges from empty L columns
+    /// which generate no work at all).
+    fn relaxed_covers_required(filled: &Csc) {
+        let g3 = detect(filled);
+        let du = glu2::detect_double_u(filled);
+        assert!(
+            g3.contains(&du),
+            "relaxed detection missed a double-U edge"
+        );
+        // U-pattern edges from columns whose L part is non-empty:
+        let g1 = glu1::detect(filled);
+        for k in 0..filled.ncols() {
+            for &i in g1.deps_of(k) {
+                let (rows, _) = filled.col(i as usize);
+                let nonempty = rows.last().is_some_and(|&r| r > i as usize);
+                if nonempty {
+                    assert!(
+                        g3.has_edge(k, i as usize),
+                        "relaxed detection missed U edge {k} -> {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn covers_required_on_paper_example() {
+        let f = symbolic_fill(&paper_example()).unwrap();
+        relaxed_covers_required(&f.filled);
+    }
+
+    #[test]
+    fn property_covers_required_on_random_circuits() {
+        let mut rng = Rng::new(0xA14);
+        for trial in 0..20 {
+            let n = rng.range(30, 120);
+            let a = gen::netlist(n, 6, 8, 0.1, 2, 0.25, 1000 + trial);
+            let f = symbolic_fill(&a).unwrap();
+            relaxed_covers_required(&f.filled);
+        }
+    }
+
+    #[test]
+    fn property_covers_required_on_meshes() {
+        for (nx, ny, seed) in [(6, 6, 1u64), (9, 5, 2), (12, 12, 3)] {
+            let a = gen::grid2d(nx, ny, seed);
+            let f = symbolic_fill(&a).unwrap();
+            relaxed_covers_required(&f.filled);
+        }
+    }
+
+    #[test]
+    fn relaxed_may_add_redundant_edges() {
+        // Fig. 9(c): the relaxed set is allowed to be strictly larger.
+        // On the paper example it is.
+        let f = symbolic_fill(&paper_example()).unwrap();
+        let g2 = glu2::detect(&f.filled);
+        let g3 = detect(&f.filled);
+        assert!(g3.num_edges() >= g2.num_edges());
+    }
+}

@@ -1,0 +1,210 @@
+//! Levelization: grouping columns into parallel levels.
+//!
+//! `level(k) = 0` if column `k` has no dependencies, else
+//! `1 + max(level(dep))` — longest-path layering of the dependency DAG (the
+//! paper's analogue of an elimination-tree schedule). All columns in one
+//! level are mutually independent and are factorized in parallel by the GPU
+//! kernel; *the number of levels is the most decisive parameter of the GPU
+//! kernel runtime* (paper §IV).
+
+use super::DepGraph;
+use crate::sparse::Csc;
+
+/// A level schedule for the numeric kernel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Levels {
+    /// `level_of[k]` = level index of column `k`.
+    pub level_of: Vec<u32>,
+    /// `levels[l]` = columns in level `l`, ascending.
+    pub levels: Vec<Vec<u32>>,
+}
+
+impl Levels {
+    /// Number of levels (the paper's "most decisive parameter").
+    pub fn num_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Size of the largest level.
+    pub fn max_level_size(&self) -> usize {
+        self.levels.iter().map(|l| l.len()).max().unwrap_or(0)
+    }
+}
+
+/// Compute levels from a dependency graph. Single forward pass: every
+/// dependency references a smaller column index, so levels are final by the
+/// time they are read.
+pub fn levelize(deps: &DepGraph) -> Levels {
+    let n = deps.n();
+    let mut level_of = vec![0u32; n];
+    let mut nlevels = 0u32;
+    for k in 0..n {
+        let mut lvl = 0u32;
+        for &d in deps.deps_of(k) {
+            lvl = lvl.max(level_of[d as usize] + 1);
+        }
+        level_of[k] = lvl;
+        nlevels = nlevels.max(lvl + 1);
+    }
+    let mut levels: Vec<Vec<u32>> = vec![Vec::new(); nlevels as usize];
+    for (k, &l) in level_of.iter().enumerate() {
+        levels[l as usize].push(k as u32);
+    }
+    Levels { level_of, levels }
+}
+
+/// Validate that a level schedule is *hazard-free* for the hybrid
+/// right-looking kernel: no two columns in the same level may have (a) a
+/// direct U dependency with work attached, or (b) a double-U read/write
+/// hazard. This is the ground-truth safety check used by the property tests
+/// (it re-derives the hazards from the pattern, independently of whichever
+/// detection algorithm produced the schedule).
+pub fn validate_hazard_free(filled: &Csc, levels: &Levels) -> Result<(), String> {
+    let n = filled.ncols();
+    let csr = filled.to_csr();
+    let l_nonempty: Vec<bool> = (0..n)
+        .map(|i| filled.col(i).0.last().is_some_and(|&r| r > i))
+        .collect();
+
+    // (a) direct U edges with work: As(i,k) != 0, i < k, L(:,i) non-empty.
+    for k in 0..n {
+        let (rows, _) = filled.col(k);
+        for &i in rows.iter().take_while(|&&i| i < k) {
+            if l_nonempty[i] && levels.level_of[i] >= levels.level_of[k] {
+                return Err(format!(
+                    "columns {i} and {k}: U dependency within/across level order \
+                     (lvl {} vs {})",
+                    levels.level_of[i], levels.level_of[k]
+                ));
+            }
+        }
+    }
+
+    // (b) double-U hazards: reuse the Algorithm 3 condition.
+    for i in 0..n {
+        let (row_i, _) = csr.row(i);
+        if row_i.last().is_none_or(|&last| last <= i) {
+            continue;
+        }
+        let (lrows, _) = filled.col(i);
+        for &t in lrows.iter().filter(|&&t| t > i) {
+            if levels.level_of[t] > levels.level_of[i] {
+                continue; // already ordered
+            }
+            let (lt_rows, _) = filled.col(t);
+            for &j in lt_rows.iter().filter(|&&j| j > t) {
+                let (row_j, _) = csr.row(j);
+                if super::glu2::sorted_intersect_after_pub(row_i, row_j, t) {
+                    return Err(format!(
+                        "columns {i} and {t}: double-U hazard not ordered \
+                         (lvl {} vs {})",
+                        levels.level_of[i], levels.level_of[t]
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_support::paper_example;
+    use crate::depend::{glu1, glu2, glu3};
+    use crate::sparse::gen;
+    use crate::symbolic::symbolic_fill;
+    use crate::util::Rng;
+
+    #[test]
+    fn chain_levels_are_sequential() {
+        let a = gen::ladder(8, 8, 0, 1);
+        let f = symbolic_fill(&a).unwrap();
+        let lv = levelize(&glu3::detect(&f.filled));
+        assert_eq!(lv.num_levels(), 8);
+        for k in 0..8 {
+            assert_eq!(lv.level_of[k], k as u32);
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix_single_level() {
+        let a = crate::sparse::Csc::identity(10);
+        let f = symbolic_fill(&a).unwrap();
+        let lv = levelize(&glu3::detect(&f.filled));
+        assert_eq!(lv.num_levels(), 1);
+        assert_eq!(lv.levels[0].len(), 10);
+    }
+
+    #[test]
+    fn levels_partition_columns() {
+        let a = gen::netlist(200, 6, 12, 0.05, 3, 0.2, 5);
+        let f = symbolic_fill(&a).unwrap();
+        let lv = levelize(&glu3::detect(&f.filled));
+        let total: usize = lv.levels.iter().map(|l| l.len()).sum();
+        assert_eq!(total, 200);
+        for (l, cols) in lv.levels.iter().enumerate() {
+            assert!(!cols.is_empty(), "level {l} empty");
+            for &c in cols {
+                assert_eq!(lv.level_of[c as usize], l as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn glu2_and_glu3_schedules_are_hazard_free() {
+        let mut rng = Rng::new(0xBEEF);
+        for trial in 0..15 {
+            let n = rng.range(30, 100);
+            let a = gen::netlist(n, 6, 8, 0.1, 2, 0.25, 2000 + trial);
+            let f = symbolic_fill(&a).unwrap();
+            for (name, g) in [
+                ("glu2", glu2::detect(&f.filled)),
+                ("glu3", glu3::detect(&f.filled)),
+            ] {
+                let lv = levelize(&g);
+                validate_hazard_free(&f.filled, &lv)
+                    .unwrap_or_else(|e| panic!("trial {trial} {name}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn glu1_schedule_has_hazard_on_paper_example() {
+        // Fig. 9(a) is *incorrect*: the GLU1.0 schedule must fail the
+        // hazard validator on the example matrix (that is the whole point
+        // of GLU2.0/3.0).
+        let f = symbolic_fill(&paper_example()).unwrap();
+        let lv = levelize(&glu1::detect(&f.filled));
+        assert!(validate_hazard_free(&f.filled, &lv).is_err());
+    }
+
+    #[test]
+    fn relaxed_levelization_close_to_exact() {
+        // Table II: "the number of additional levels resulting from the new
+        // dependency detection method are just a few or even zero".
+        let mut rng = Rng::new(0xFACE);
+        for trial in 0..10 {
+            let n = rng.range(50, 150);
+            let a = gen::netlist(n, 6, 10, 0.08, 2, 0.2, 3000 + trial);
+            let f = symbolic_fill(&a).unwrap();
+            let exact = levelize(&glu2::detect(&f.filled)).num_levels();
+            let relaxed = levelize(&glu3::detect(&f.filled)).num_levels();
+            assert!(relaxed >= exact);
+            assert!(
+                relaxed <= exact + exact / 2 + 8,
+                "trial {trial}: relaxed {relaxed} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn paper_example_levelization_matches_between_glu2_and_glu3() {
+        // Fig. 9: "Despite the redundant dependencies, the result of
+        // levelization is exactly the same".
+        let f = symbolic_fill(&paper_example()).unwrap();
+        let exact = levelize(&glu2::detect(&f.filled));
+        let relaxed = levelize(&glu3::detect(&f.filled));
+        assert_eq!(exact.num_levels(), relaxed.num_levels());
+    }
+}

@@ -1,0 +1,22 @@
+//! The GLU3.0 solver pipeline — the crate's primary public API.
+//!
+//! Mirrors the paper's Fig. 5 flow:
+//!
+//! ```text
+//! A ──MC64 match+scale──► A₁ ──AMD──► A₂ ──symbolic fill──► As
+//!    ──dependency detection (GLU3.0 relaxed / GLU2.0 / GLU1.0)──► deps
+//!    ──levelization──► levels ──numeric kernel (3-mode, simulated GPU
+//!      or PJRT dense-batch path)──► L, U ──tri-solve──► x
+//! ```
+//!
+//! Preprocessing and symbolic analysis run once on the CPU; the numeric
+//! factorization can be repeated for new values on the same pattern
+//! ([`GluSolver::refactor`]) — the Newton–Raphson pattern of SPICE-class
+//! circuit simulation, where the GPU kernel "might be repeated many times"
+//! (paper §III).
+
+pub mod profile;
+pub mod solver;
+
+pub use profile::{parallelism_profile, LevelProfile};
+pub use solver::{Detection, GluOptions, GluSolver, GluStats, NumericEngine};

@@ -1,0 +1,119 @@
+//! Per-level parallelism profile — the data behind the paper's Fig. 10
+//! ("Number of columns and subcolumns of different levels") and the A/B/C
+//! level taxonomy that motivates the three kernel modes.
+
+use crate::depend::Levels;
+use crate::numeric::rightlook::upper_rows;
+use crate::symbolic::SymbolicFill;
+
+/// One level's parallelism metrics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LevelProfile {
+    /// Level index (x-axis of Fig. 10).
+    pub level: usize,
+    /// Level size = number of parallelizable columns.
+    pub size: usize,
+    /// Maximum number of subcolumns over the level's columns (Fig. 10
+    /// uses the max per level).
+    pub max_subcols: usize,
+    /// Mean L length of the level's columns (subcolumn task length).
+    pub mean_l_len: f64,
+}
+
+/// Compute the Fig. 10 profile for a schedule.
+pub fn parallelism_profile(sym: &SymbolicFill, levels: &Levels) -> Vec<LevelProfile> {
+    let urow = upper_rows(sym);
+    let filled = &sym.filled;
+    levels
+        .levels
+        .iter()
+        .enumerate()
+        .map(|(li, cols)| {
+            let mut max_subcols = 0usize;
+            let mut l_sum = 0usize;
+            for &j in cols {
+                let j = j as usize;
+                max_subcols = max_subcols.max(urow[j].len());
+                let (rows, _) = filled.col(j);
+                l_sum += rows.len() - rows.partition_point(|&r| r <= j);
+            }
+            LevelProfile {
+                level: li,
+                size: cols.len(),
+                max_subcols,
+                mean_l_len: l_sum as f64 / cols.len().max(1) as f64,
+            }
+        })
+        .collect()
+}
+
+/// Pearson correlation between level size and max subcolumns — the paper's
+/// §III-B observation that the two are *inversely correlated* (used as an
+/// assertion in tests and printed by the fig10 bench).
+pub fn size_subcol_correlation(profile: &[LevelProfile]) -> f64 {
+    let n = profile.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let (mx, my) = (
+        profile.iter().map(|p| p.size as f64).sum::<f64>() / n,
+        profile.iter().map(|p| p.max_subcols as f64).sum::<f64>() / n,
+    );
+    let (mut sxy, mut sxx, mut syy) = (0.0f64, 0.0f64, 0.0f64);
+    for p in profile {
+        let dx = p.size as f64 - mx;
+        let dy = p.max_subcols as f64 - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        0.0
+    } else {
+        sxy / (sxx * syy).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::depend::{glu3, levelize};
+    use crate::sparse::gen;
+    use crate::symbolic::symbolic_fill;
+
+    fn amd_mesh(nx: usize, ny: usize) -> SymbolicFill {
+        let g = gen::grid2d(nx, ny, 1);
+        let p = crate::order::amd::amd_order(&g).unwrap();
+        symbolic_fill(&g.permute(p.as_scatter(), p.as_scatter())).unwrap()
+    }
+
+    #[test]
+    fn profile_covers_all_levels() {
+        let sym = amd_mesh(20, 20);
+        let lv = levelize(&glu3::detect(&sym.filled));
+        let prof = parallelism_profile(&sym, &lv);
+        assert_eq!(prof.len(), lv.num_levels());
+        let total: usize = prof.iter().map(|p| p.size).sum();
+        assert_eq!(total, 400);
+    }
+
+    #[test]
+    fn fig10_shape_on_amd_mesh() {
+        // Paper Fig. 10: early levels have many columns with few
+        // subcolumns; late levels few columns with many subcolumns, and
+        // size vs max-subcolumns is inversely correlated overall.
+        let sym = amd_mesh(40, 40);
+        let lv = levelize(&glu3::detect(&sym.filled));
+        let prof = parallelism_profile(&sym, &lv);
+        assert!(prof[0].size > prof.last().unwrap().size * 10);
+        let early_sub = prof[0].max_subcols;
+        let late_max = prof[prof.len() / 2..]
+            .iter()
+            .map(|p| p.max_subcols)
+            .max()
+            .unwrap();
+        assert!(late_max > early_sub, "late {late_max} vs early {early_sub}");
+        let corr = size_subcol_correlation(&prof);
+        assert!(corr < 0.1, "expected inverse/no correlation, got {corr}");
+    }
+}

@@ -1,0 +1,406 @@
+//! The [`GluSolver`]: preprocess → symbolic → levelize → numeric → solve.
+
+use crate::depend::{glu1, glu2, glu3, levelize, DepGraph, Levels};
+use crate::gpusim::{simulate_factorization, DeviceConfig, Policy, SimReport};
+use crate::numeric::{leftlook, parlu, rightlook, LuFactors};
+use crate::order::{preprocess, FillOrdering, Preprocessed};
+use crate::symbolic::{symbolic_fill, SymbolicFill};
+use crate::util::Stopwatch;
+
+/// Which dependency detection algorithm to run (paper Fig. 9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Detection {
+    /// GLU1.0 U-pattern (unsafe for the right-looking kernel; only valid
+    /// together with [`NumericEngine::LeftLookingCpu`]).
+    Glu1,
+    /// GLU2.0 exact double-U search (Algorithm 3) — O(n³)-class.
+    Glu2,
+    /// GLU3.0 relaxed detection (Algorithm 4) — the default.
+    #[default]
+    Glu3,
+}
+
+/// Which numeric engine executes the factorization.
+#[derive(Debug, Clone, Default)]
+pub enum NumericEngine {
+    /// Simulated-GPU hybrid right-looking kernel under a [`Policy`]
+    /// (the paper's system; default: GLU3.0 adaptive on a TITAN X model).
+    #[default]
+    SimulatedGpu,
+    /// Sequential Gilbert–Peierls left-looking (oracle).
+    LeftLookingCpu,
+    /// Multithreaded left-looking (NICSLU-like baseline).
+    ParallelCpu {
+        threads: usize,
+    },
+    /// Sequential right-looking (Algorithm 2 reference).
+    RightLookingCpu,
+}
+
+/// Options for [`GluSolver::factor`].
+#[derive(Debug, Clone)]
+pub struct GluOptions {
+    /// Fill-reducing ordering (default AMD, as the paper).
+    pub ordering: FillOrdering,
+    /// Apply MC64-style equilibration scaling.
+    pub scale: bool,
+    /// Dependency detection algorithm.
+    pub detection: Detection,
+    /// Numeric engine.
+    pub engine: NumericEngine,
+    /// Kernel policy for the simulated GPU engine.
+    pub policy: Policy,
+    /// Device model for the simulated GPU engine.
+    pub device: DeviceConfig,
+}
+
+impl Default for GluOptions {
+    fn default() -> Self {
+        GluOptions {
+            ordering: FillOrdering::Amd,
+            scale: true,
+            detection: Detection::Glu3,
+            engine: NumericEngine::SimulatedGpu,
+            policy: Policy::glu3(),
+            device: DeviceConfig::titan_x(),
+        }
+    }
+}
+
+/// Phase timings and structural statistics of one factorization.
+#[derive(Debug, Clone)]
+pub struct GluStats {
+    pub n: usize,
+    /// nnz before fill.
+    pub nz: usize,
+    /// nnz after fill.
+    pub nnz: usize,
+    pub num_levels: usize,
+    pub max_level_size: usize,
+    /// CPU preprocessing time (matching + ordering + permute), ms.
+    pub preprocess_ms: f64,
+    /// Symbolic fill time, ms.
+    pub symbolic_ms: f64,
+    /// Dependency detection + levelization time, ms (Table II's metric).
+    pub levelization_ms: f64,
+    /// Numeric factorization time, ms: simulated-GPU kernel time for the
+    /// GPU engine, wall-clock for CPU engines.
+    pub numeric_ms: f64,
+    /// Simulated-GPU report (None for CPU engines).
+    pub sim: Option<SimReport>,
+}
+
+impl GluStats {
+    /// Total CPU-side time (the paper's "CPU time" column).
+    pub fn cpu_ms(&self) -> f64 {
+        self.preprocess_ms + self.symbolic_ms + self.levelization_ms
+    }
+}
+
+/// A factored system ready to solve and refactor.
+#[derive(Debug)]
+pub struct GluSolver {
+    opts: GluOptions,
+    pre: Preprocessed,
+    sym: SymbolicFill,
+    levels: Levels,
+    factors: LuFactors,
+    stats: GluStats,
+    /// Map: position in the *original* matrix's CSC value array → position
+    /// in the filled pattern's value array (for fast refactorization).
+    value_map: Vec<usize>,
+}
+
+impl GluSolver {
+    /// Run the full pipeline on `a`.
+    pub fn factor(a: &crate::sparse::Csc, opts: &GluOptions) -> anyhow::Result<Self> {
+        anyhow::ensure!(a.nrows() == a.ncols(), "matrix must be square");
+        let mut sw = Stopwatch::new();
+
+        let pre = sw.time("preprocess", || preprocess(a, opts.ordering, opts.scale))?;
+        let sym = sw.time("symbolic", || symbolic_fill(&pre.a))?;
+        let (deps, levels) = sw.time("levelize", || {
+            let deps = detect(opts.detection, &sym);
+            let levels = levelize(&deps);
+            (deps, levels)
+        });
+        drop(deps);
+
+        let (factors, sim, numeric_ms) = run_engine(&opts.engine, &opts.policy, &opts.device, &sym, &levels, &mut sw)?;
+
+        let value_map = build_value_map(a, &pre, &sym);
+
+        let stats = GluStats {
+            n: a.nrows(),
+            nz: a.nnz(),
+            nnz: sym.filled.nnz(),
+            num_levels: levels.num_levels(),
+            max_level_size: levels.max_level_size(),
+            preprocess_ms: sw.get("preprocess").unwrap().as_secs_f64() * 1e3,
+            symbolic_ms: sw.get("symbolic").unwrap().as_secs_f64() * 1e3,
+            levelization_ms: sw.get("levelize").unwrap().as_secs_f64() * 1e3,
+            numeric_ms,
+            sim,
+        };
+
+        Ok(GluSolver {
+            opts: opts.clone(),
+            pre,
+            sym,
+            levels,
+            factors,
+            stats,
+            value_map,
+        })
+    }
+
+    /// Solve `A x = b` using the current factors.
+    pub fn solve(&mut self, b: &[f64]) -> anyhow::Result<Vec<f64>> {
+        anyhow::ensure!(b.len() == self.stats.n, "rhs dimension mismatch");
+        // b' = Dr * b permuted by the row permutation.
+        let pr = self.pre.row_perm.as_scatter();
+        let mut pb = vec![0.0; b.len()];
+        for (old, &new) in pr.iter().enumerate() {
+            pb[new] = b[old] * self.pre.row_scale[old];
+        }
+        let px = self.factors.solve(&pb);
+        // x = Dc * (P_colᵀ x').
+        let pc = self.pre.col_perm.as_scatter();
+        let mut x = vec![0.0; b.len()];
+        for (old, &new) in pc.iter().enumerate() {
+            x[old] = px[new] * self.pre.col_scale[old];
+        }
+        Ok(x)
+    }
+
+    /// Refactor with new values on the *same sparsity pattern* (the
+    /// Newton–Raphson iteration pattern). Preprocessing, symbolic analysis
+    /// and levelization are all reused; only the numeric kernel reruns.
+    pub fn refactor(&mut self, a: &crate::sparse::Csc) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            a.nnz() == self.value_map.len() && a.nrows() == self.stats.n,
+            "refactor requires the original sparsity pattern"
+        );
+        // Reset filled values: zero everywhere (fill positions stay zero),
+        // then scatter A's scaled values through the precomputed map.
+        let mut fresh = vec![0.0f64; self.sym.filled.nnz()];
+        let rs = &self.pre.row_scale;
+        let cs = &self.pre.col_scale;
+        let mut pos = 0usize;
+        for c in 0..a.ncols() {
+            let (rows, vals) = a.col(c);
+            for (&r, &v) in rows.iter().zip(vals) {
+                let scaled = if self.opts.scale {
+                    v * rs[r] * cs[c]
+                } else {
+                    v
+                };
+                fresh[self.value_map[pos]] += scaled;
+                pos += 1;
+            }
+        }
+        self.sym.filled.values_mut().copy_from_slice(&fresh);
+
+        let mut sw = Stopwatch::new();
+        let (factors, sim, numeric_ms) = run_engine(
+            &self.opts.engine,
+            &self.opts.policy,
+            &self.opts.device,
+            &self.sym,
+            &self.levels,
+            &mut sw,
+        )?;
+        self.factors = factors;
+        self.stats.numeric_ms = numeric_ms;
+        self.stats.sim = sim;
+        Ok(())
+    }
+
+    /// Factorization statistics.
+    pub fn stats(&self) -> &GluStats {
+        &self.stats
+    }
+
+    /// The level schedule (Fig. 10 / Table III analysis).
+    pub fn levels(&self) -> &Levels {
+        &self.levels
+    }
+
+    /// The symbolic fill result.
+    pub fn symbolic(&self) -> &SymbolicFill {
+        &self.sym
+    }
+
+    /// The LU factors (permuted/scaled domain).
+    pub fn factors(&self) -> &LuFactors {
+        &self.factors
+    }
+}
+
+/// Dispatch the configured detection algorithm.
+pub fn detect(detection: Detection, sym: &SymbolicFill) -> DepGraph {
+    match detection {
+        Detection::Glu1 => glu1::detect(&sym.filled),
+        Detection::Glu2 => glu2::detect(&sym.filled),
+        Detection::Glu3 => glu3::detect(&sym.filled),
+    }
+}
+
+fn run_engine(
+    engine: &NumericEngine,
+    policy: &Policy,
+    device: &DeviceConfig,
+    sym: &SymbolicFill,
+    levels: &Levels,
+    sw: &mut Stopwatch,
+) -> anyhow::Result<(LuFactors, Option<SimReport>, f64)> {
+    match engine {
+        NumericEngine::SimulatedGpu => {
+            let (factors, report) =
+                sw.time("numeric", || simulate_factorization(sym, levels, policy, device))?;
+            let ms = report.kernel_ms();
+            Ok((factors, Some(report), ms))
+        }
+        NumericEngine::LeftLookingCpu => {
+            let factors = sw.time("numeric", || leftlook::factor(sym))?;
+            Ok((factors, None, sw.get("numeric").unwrap().as_secs_f64() * 1e3))
+        }
+        NumericEngine::RightLookingCpu => {
+            let factors = sw.time("numeric", || rightlook::factor(sym))?;
+            Ok((factors, None, sw.get("numeric").unwrap().as_secs_f64() * 1e3))
+        }
+        NumericEngine::ParallelCpu { threads } => {
+            let factors = sw.time("numeric", || parlu::factor(sym, *threads))?;
+            Ok((factors, None, sw.get("numeric").unwrap().as_secs_f64() * 1e3))
+        }
+    }
+}
+
+/// For each stored entry of `a` (CSC order), the index of its destination
+/// in the filled pattern's value array after row/col permutation.
+fn build_value_map(
+    a: &crate::sparse::Csc,
+    pre: &Preprocessed,
+    sym: &SymbolicFill,
+) -> Vec<usize> {
+    let pr = pre.row_perm.as_scatter();
+    let pc = pre.col_perm.as_scatter();
+    let mut map = Vec::with_capacity(a.nnz());
+    for c in 0..a.ncols() {
+        let (rows, _) = a.col(c);
+        for &r in rows {
+            let (nr, nc) = (pr[r], pc[c]);
+            let idx = sym
+                .filled
+                .entry_index(nr, nc)
+                .expect("original entry missing from filled pattern");
+            map.push(idx);
+        }
+    }
+    map
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::residual;
+    use crate::sparse::gen;
+
+    #[test]
+    fn full_pipeline_solves() {
+        let a = gen::netlist(500, 6, 16, 0.05, 4, 0.2, 42);
+        let mut s = GluSolver::factor(&a, &GluOptions::default()).unwrap();
+        let b: Vec<f64> = (0..500).map(|i| ((i % 13) as f64) - 6.0).collect();
+        let x = s.solve(&b).unwrap();
+        // n=500 hub netlist: condition ~1e5; 1e-7 relative is the right
+        // acceptance here (oracle-equality is asserted elsewhere).
+        assert!(residual(&a, &x, &b) < 1e-7, "residual {}", residual(&a, &x, &b));
+        let st = s.stats();
+        assert!(st.nnz >= st.nz);
+        assert!(st.num_levels > 1);
+        assert!(st.sim.is_some());
+    }
+
+    #[test]
+    fn all_engines_agree() {
+        let a = gen::grid2d(15, 15, 3);
+        let b: Vec<f64> = (0..225).map(|i| (i as f64).sin()).collect();
+        let mut xs = Vec::new();
+        for engine in [
+            NumericEngine::SimulatedGpu,
+            NumericEngine::LeftLookingCpu,
+            NumericEngine::RightLookingCpu,
+            NumericEngine::ParallelCpu { threads: 3 },
+        ] {
+            let opts = GluOptions {
+                engine,
+                ..Default::default()
+            };
+            let mut s = GluSolver::factor(&a, &opts).unwrap();
+            xs.push(s.solve(&b).unwrap());
+        }
+        for x in &xs[1..] {
+            for (p, q) in x.iter().zip(&xs[0]) {
+                assert!((p - q).abs() < 1e-9 * (1.0 + q.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn refactor_newton_raphson_pattern() {
+        let a = gen::netlist(300, 5, 12, 0.05, 2, 0.2, 11);
+        let mut s = GluSolver::factor(&a, &GluOptions::default()).unwrap();
+        let b = vec![1.0; 300];
+        let x0 = s.solve(&b).unwrap();
+        assert!(residual(&a, &x0, &b) < 1e-10);
+
+        // Same pattern, perturbed values (a Newton step's new Jacobian).
+        let mut a2 = a.clone();
+        for v in a2.values_mut() {
+            *v *= 1.25;
+        }
+        s.refactor(&a2).unwrap();
+        let x1 = s.solve(&b).unwrap();
+        assert!(residual(&a2, &x1, &b) < 1e-10);
+        // And x1 should differ from x0 (values changed).
+        assert!(x1.iter().zip(&x0).any(|(p, q)| (p - q).abs() > 1e-9));
+
+        // Refactor back to the original values reproduces x0.
+        s.refactor(&a).unwrap();
+        let x2 = s.solve(&b).unwrap();
+        for (p, q) in x2.iter().zip(&x0) {
+            assert!((p - q).abs() < 1e-9 * (1.0 + q.abs()));
+        }
+    }
+
+    #[test]
+    fn detection_options_all_work_with_safe_engines() {
+        let a = gen::netlist(200, 6, 10, 0.08, 2, 0.2, 5);
+        let b = vec![1.0; 200];
+        for det in [Detection::Glu2, Detection::Glu3] {
+            let opts = GluOptions {
+                detection: det,
+                ..Default::default()
+            };
+            let mut s = GluSolver::factor(&a, &opts).unwrap();
+            let x = s.solve(&b).unwrap();
+            assert!(residual(&a, &x, &b) < 1e-7, "{det:?}");
+        }
+        // GLU1 detection is only safe with the left-looking engine.
+        let opts = GluOptions {
+            detection: Detection::Glu1,
+            engine: NumericEngine::LeftLookingCpu,
+            ..Default::default()
+        };
+        let mut s = GluSolver::factor(&a, &opts).unwrap();
+        let x = s.solve(&b).unwrap();
+        assert!(residual(&a, &x, &b) < 1e-7);
+    }
+
+    #[test]
+    fn rejects_nonsquare_and_bad_rhs() {
+        let a = gen::netlist(100, 5, 8, 0.1, 1, 0.2, 1);
+        let mut s = GluSolver::factor(&a, &GluOptions::default()).unwrap();
+        assert!(s.solve(&vec![1.0; 99]).is_err());
+    }
+}

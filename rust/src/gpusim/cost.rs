@@ -1,0 +1,126 @@
+//! Per-warp / per-block cost formulas for the GLU kernel's two phases.
+//!
+//! The kernel body per column `j` (paper Fig. 11) is:
+//!
+//! 1. **divide phase** — `L(:,j) /= pivot`: one strided pass over `Lj`
+//!    elements by the block's threads;
+//! 2. **update phase** — for each subcolumn `k`: an element-wise MAC pass
+//!    over the `Lj` update targets (`As(i,k) -= As(i,j)·As(j,k)`), by one
+//!    warp (small/large block modes) or one whole block (stream mode).
+//!
+//! The kernel is *latency-bound*, not bandwidth-bound: the scatter accesses
+//! into the target subcolumns are uncoalesced, so each warp iteration stalls
+//! on DRAM unless enough other warps are resident on the SM to hide the
+//! latency (this is exactly why the paper's occupancy engineering — Eq. 4,
+//! the three modes — pays off; a bandwidth-roof model would make all modes
+//! look identical). The effective stall per iteration is
+//! `mem_latency / min(resident_warps_per_sm, MLP_CAP)` — Little's-law
+//! latency hiding capped by the SM's memory-level parallelism.
+
+/// Issue cycles per MAC iteration of one warp (ld multiplier, ld/st target,
+/// ld row index, FMA, loop bookkeeping — Maxwell dual-issue averaged).
+pub const MAC_ISSUE_CYCLES: u64 = 8;
+
+/// Issue cycles per divide iteration of one warp.
+pub const DIV_ISSUE_CYCLES: u64 = 6;
+
+/// Fixed overhead per subcolumn task (pointer setup, multiplier broadcast,
+/// warp-level reduction of the loop bound).
+pub const SUBCOL_OVERHEAD_CYCLES: u64 = 48;
+
+/// Fixed overhead per column (pivot broadcast + block-level sync between
+/// divide and update phases).
+pub const COLUMN_OVERHEAD_CYCLES: u64 = 96;
+
+/// Memory-level-parallelism cap: outstanding-miss capacity per SM, in
+/// warps' worth of requests (MSHR limit on Maxwell-class parts).
+pub const MLP_CAP: usize = 8;
+
+/// Effective stall cycles added to each warp iteration, given the number of
+/// warps resident on the SM available to hide DRAM latency.
+pub fn iter_stall_cycles(mem_latency: u64, resident_warps_per_sm: usize) -> u64 {
+    mem_latency / (resident_warps_per_sm.clamp(1, MLP_CAP) as u64)
+}
+
+/// Bytes moved per MAC element: read `As(i,j)` (value), read-modify-write
+/// `As(i,k)` (2 accesses), read the row index (u32).
+pub fn mac_bytes_per_elem(bytes_per_value: usize) -> u64 {
+    (3 * bytes_per_value + 4) as u64
+}
+
+/// Bytes moved per divide element: read+write `As(i,j)`.
+pub fn div_bytes_per_elem(bytes_per_value: usize) -> u64 {
+    (2 * bytes_per_value) as u64
+}
+
+/// Cycles for one subcolumn of `len` update targets processed by `threads`
+/// threads, with `stall` effective stall cycles per iteration.
+pub fn subcol_cycles(len: usize, threads: usize, stall: u64) -> u64 {
+    if len == 0 {
+        return 0;
+    }
+    let iters = len.div_ceil(threads.max(1)) as u64;
+    SUBCOL_OVERHEAD_CYCLES + iters * (MAC_ISSUE_CYCLES + stall)
+}
+
+/// Cycles for the divide phase of a column with `len` L entries, `threads`
+/// threads, and `stall` per-iteration stall.
+pub fn divide_cycles(len: usize, threads: usize, stall: u64) -> u64 {
+    let iters = (len.div_ceil(threads.max(1))) as u64;
+    COLUMN_OVERHEAD_CYCLES + iters * (DIV_ISSUE_CYCLES + stall)
+}
+
+/// Total bytes for a column's update phase: `n_subcols` passes over `l_len`
+/// targets each.
+pub fn column_update_bytes(l_len: usize, n_subcols: usize, bytes_per_value: usize) -> u64 {
+    (l_len as u64) * (n_subcols as u64) * mac_bytes_per_elem(bytes_per_value)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subcol_scaling() {
+        // 64 elements on one warp: 2 iterations, no stall.
+        assert_eq!(
+            subcol_cycles(64, 32, 0),
+            SUBCOL_OVERHEAD_CYCLES + 2 * MAC_ISSUE_CYCLES
+        );
+        // 64 elements on 1024 threads: 1 iteration.
+        assert_eq!(
+            subcol_cycles(64, 1024, 0),
+            SUBCOL_OVERHEAD_CYCLES + MAC_ISSUE_CYCLES
+        );
+        assert_eq!(subcol_cycles(0, 32, 10), 0);
+    }
+
+    #[test]
+    fn more_threads_never_slower() {
+        for len in [1usize, 31, 32, 33, 1000, 5000] {
+            let mut prev = u64::MAX;
+            for threads in [32, 64, 128, 256, 512, 1024] {
+                let c = subcol_cycles(len, threads, 25);
+                assert!(c <= prev, "len {len} threads {threads}");
+                prev = c;
+            }
+        }
+    }
+
+    #[test]
+    fn latency_hiding() {
+        // One lonely warp eats the full latency; 16+ warps hide most of it.
+        assert_eq!(iter_stall_cycles(400, 1), 400);
+        assert_eq!(iter_stall_cycles(400, 4), 100);
+        assert_eq!(iter_stall_cycles(400, 8), 50);
+        // MLP cap: more warps than MSHRs cannot hide further.
+        assert_eq!(iter_stall_cycles(400, 64), 50);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        assert_eq!(mac_bytes_per_elem(8), 28);
+        assert_eq!(div_bytes_per_elem(8), 16);
+        assert_eq!(column_update_bytes(10, 3, 8), 10 * 3 * 28);
+    }
+}

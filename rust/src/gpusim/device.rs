@@ -1,0 +1,104 @@
+//! GPU device model.
+//!
+//! Defaults follow the paper's testbed: NVIDIA GTX TITAN X (Maxwell GM200),
+//! 24 SMs × 128 SPs, 12 GB GDDR5 @ 336 GB/s, ~1.0 GHz boost clock. The
+//! resident-warp/block limits are the Maxwell architectural values the
+//! paper's occupancy reasoning (Eqs. 4–5, Fig. 11) depends on.
+
+/// Configuration of the simulated device.
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    /// Marketing name, for reports.
+    pub name: &'static str,
+    /// Number of streaming multiprocessors.
+    pub num_sms: usize,
+    /// Max resident warps per SM (Maxwell: 64).
+    pub max_warps_per_sm: usize,
+    /// Max resident blocks per SM (Maxwell: 32).
+    pub max_blocks_per_sm: usize,
+    /// Threads per warp.
+    pub warp_size: usize,
+    /// Max threads per block (=> max 32 warps/block).
+    pub max_threads_per_block: usize,
+    /// SM clock in GHz (cycles are reported at this clock; 1.0 => 1 cycle = 1 ns).
+    pub clock_ghz: f64,
+    /// Aggregate DRAM bandwidth, bytes per cycle (336 GB/s at 1 GHz ≈ 336 B/cy).
+    pub mem_bytes_per_cycle: f64,
+    /// DRAM latency in cycles (pipeline-fill term per warp task chain).
+    pub mem_latency_cycles: u64,
+    /// Bytes of global memory budgeted for the per-column dense caches —
+    /// the Eq. (5) numerator. The paper's kernel allocates an n-length
+    /// array per column in flight; this budget caps concurrent columns.
+    pub column_cache_bytes: usize,
+    /// Bytes per matrix value. The paper uses f32 (Maxwell lacks f64
+    /// atomics); this reproduction computes in f64 and accounts 8 B.
+    pub bytes_per_value: usize,
+    /// Per-kernel-launch overhead in cycles (~5 µs at 1 GHz).
+    pub kernel_launch_cycles: u64,
+    /// One-time driver/context setup in cycles (paper §IV: the first CUDA
+    /// call took ~40% of total GPU time on ASIC_100ks).
+    pub setup_cycles: u64,
+    /// Number of CUDA streams available to stream mode.
+    pub num_streams: usize,
+}
+
+impl DeviceConfig {
+    /// The paper's testbed: GTX TITAN X (Maxwell).
+    pub fn titan_x() -> Self {
+        DeviceConfig {
+            name: "GTX TITAN X (simulated)",
+            num_sms: 24,
+            max_warps_per_sm: 64,
+            max_blocks_per_sm: 32,
+            warp_size: 32,
+            max_threads_per_block: 1024,
+            clock_ghz: 1.0,
+            mem_bytes_per_cycle: 336.0,
+            mem_latency_cycles: 600,
+            column_cache_bytes: 256 << 20,
+            bytes_per_value: 8,
+            kernel_launch_cycles: 2_000,
+            setup_cycles: 3_000_000,
+            num_streams: 16,
+        }
+    }
+
+    /// Total warp contexts on the device (the Eq. 4 numerator).
+    pub fn total_warps(&self) -> usize {
+        self.num_sms * self.max_warps_per_sm
+    }
+
+    /// Eq. (5): maximum concurrently-factorizable columns for an n-row
+    /// matrix given the column-cache budget.
+    pub fn max_parallel_columns(&self, n: usize) -> usize {
+        (self.column_cache_bytes / (n * self.bytes_per_value).max(1)).max(1)
+    }
+
+    /// Convert cycles to milliseconds at the configured clock.
+    pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.clock_ghz * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn titan_x_shape() {
+        let d = DeviceConfig::titan_x();
+        assert_eq!(d.total_warps(), 1536);
+        assert_eq!(d.max_threads_per_block / d.warp_size, 32);
+        assert!((d.cycles_to_ms(1_000_000) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eq5_memory_cap() {
+        let d = DeviceConfig::titan_x();
+        // 256 MiB / (250k rows * 8 B) = 134 columns
+        let cap = d.max_parallel_columns(250_000);
+        assert!((100..200).contains(&cap), "cap {cap}");
+        // small matrices are effectively uncapped
+        assert!(d.max_parallel_columns(2_000) > 10_000);
+    }
+}

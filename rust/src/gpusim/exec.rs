@@ -1,0 +1,410 @@
+//! Kernel-mode timing: block construction + greedy SM scheduling.
+//!
+//! One level = one (or, in stream mode, many) kernel launch(es). The level's
+//! duration is `max(compute makespan, bandwidth roof) + launch overheads`:
+//!
+//! - **compute makespan** — blocks are placed greedily onto *block slots*
+//!   (SM count × resident-blocks-per-SM, further capped by the Eq. (5)
+//!   column-cache limit); each slot runs its blocks back-to-back. This is
+//!   exactly the throughput model behind the paper's Eq. (4) reasoning:
+//!   halving warps-per-block doubles resident blocks.
+//! - **bandwidth roof** — the kernel is memory-bound (sparse MAC streams);
+//!   a level can never finish faster than its total DRAM traffic divided by
+//!   aggregate bandwidth.
+
+use super::cost;
+use super::device::DeviceConfig;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// The three GPU kernel modes of GLU3.0 (paper Fig. 11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Type A levels: one block per column, few warps per block
+    /// (Eq. 4), one warp per subcolumn task.
+    SmallBlock {
+        /// Warps per block ∈ {2, 4, 8, 16}.
+        warps_per_block: usize,
+    },
+    /// Type B levels: one block per column, 32 warps (1024 threads),
+    /// one warp per subcolumn — the GLU1.0/2.0 kernel.
+    LargeBlock,
+    /// Type C levels: one kernel per column over 16 CUDA streams, one
+    /// *block* (1024 threads) per subcolumn.
+    Stream,
+}
+
+impl KernelMode {
+    /// Short label for reports.
+    pub fn label(&self) -> String {
+        match self {
+            KernelMode::SmallBlock { warps_per_block } => format!("small({warps_per_block}w)"),
+            KernelMode::LargeBlock => "large".to_string(),
+            KernelMode::Stream => "stream".to_string(),
+        }
+    }
+
+    /// Level-type letter for Table III's distribution columns.
+    pub fn level_type(&self) -> char {
+        match self {
+            KernelMode::SmallBlock { .. } => 'A',
+            KernelMode::LargeBlock => 'B',
+            KernelMode::Stream => 'C',
+        }
+    }
+}
+
+/// Select the GLU3.0 mode for a level (Eq. 4 + the stream threshold).
+pub fn select_mode(level_size: usize, stream_threshold: usize, device: &DeviceConfig) -> KernelMode {
+    if level_size <= stream_threshold {
+        return KernelMode::Stream;
+    }
+    let w = device.total_warps() / level_size.max(1);
+    if w >= 32 {
+        KernelMode::LargeBlock
+    } else {
+        // Round down to a power of two in {2, 4, 8, 16} (paper §III-B.1:
+        // "grows from 2 to 4, 8, and eventually to 32").
+        let w = w.max(2);
+        let w = 1usize << (usize::BITS - 1 - w.leading_zeros());
+        KernelMode::SmallBlock {
+            warps_per_block: w.clamp(2, 16),
+        }
+    }
+}
+
+/// Static work description of one column: `l_len` L entries (= length of
+/// every subcolumn update task) and `n_subcols` subcolumn tasks.
+#[derive(Debug, Clone, Copy)]
+pub struct ColumnWork {
+    pub l_len: usize,
+    pub n_subcols: usize,
+}
+
+/// Timing result for one level.
+#[derive(Debug, Clone)]
+pub struct LevelTiming {
+    pub mode: KernelMode,
+    pub columns: usize,
+    pub max_subcols: usize,
+    /// Cycles of the level (compute/bandwidth max + launches).
+    pub cycles: u64,
+    /// Total DRAM traffic of the level.
+    pub bytes: u64,
+    /// Kernel launches charged.
+    pub launches: u64,
+    /// Mean warp occupancy during the level (busy warp-cycles over
+    /// resident capacity).
+    pub occupancy: f64,
+}
+
+/// Greedy makespan of `durations` over `slots` parallel servers.
+fn greedy_makespan(durations: impl Iterator<Item = u64>, slots: usize) -> u64 {
+    let slots = slots.max(1);
+    let mut heap: BinaryHeap<Reverse<u64>> = (0..slots).map(|_| Reverse(0u64)).collect();
+    let mut makespan = 0u64;
+    for d in durations {
+        let Reverse(t) = heap.pop().unwrap();
+        let fin = t + d;
+        makespan = makespan.max(fin);
+        heap.push(Reverse(fin));
+    }
+    makespan
+}
+
+/// Simulate one level in the given mode. `n` is the matrix dimension
+/// (for the Eq. 5 cap); `launch_scale` discounts launch overhead
+/// (Lee's dynamic parallelism batches launches, scale < 1).
+pub fn simulate_level(
+    cols: &[ColumnWork],
+    mode: KernelMode,
+    n: usize,
+    device: &DeviceConfig,
+    launch_scale: f64,
+    compute_scale: f64,
+) -> LevelTiming {
+    let bpv = device.bytes_per_value;
+    let total_bytes: u64 = cols
+        .iter()
+        .map(|c| {
+            cost::column_update_bytes(c.l_len, c.n_subcols, bpv)
+                + (c.l_len as u64) * cost::div_bytes_per_elem(bpv)
+        })
+        .sum();
+    let mem_cycles = (total_bytes as f64 / device.mem_bytes_per_cycle) as u64;
+    let mem_cap = device.max_parallel_columns(n);
+
+    let (compute_cycles, launches, busy_warp_cycles, slots, warps_per_block): (
+        u64,
+        u64,
+        u64,
+        usize,
+        usize,
+    ) = match mode {
+        KernelMode::SmallBlock { .. } | KernelMode::LargeBlock => {
+            let w = match mode {
+                KernelMode::SmallBlock { warps_per_block } => warps_per_block,
+                _ => 32,
+            };
+            let threads = w * device.warp_size;
+            let resident_blocks_per_sm = (device.max_warps_per_sm / w)
+                .min(device.max_blocks_per_sm)
+                .max(1);
+            let slots = (device.num_sms * resident_blocks_per_sm).min(mem_cap.max(1));
+            // Latency hiding: warps resident on an SM while this level runs.
+            // Bounded both by the block-slot geometry and by how many blocks
+            // the level actually supplies.
+            let blocks_live_per_sm = resident_blocks_per_sm
+                .min(cols.len().div_ceil(device.num_sms))
+                .max(1);
+            let hiding = (blocks_live_per_sm * w).min(device.max_warps_per_sm);
+            let stall = cost::iter_stall_cycles(device.mem_latency_cycles, hiding);
+            // Block duration: divide phase on all W warps, then each warp
+            // serially processes ceil(S/W) subcolumn tasks.
+            let durations = cols.iter().map(|c| {
+                let div = cost::divide_cycles(c.l_len, threads, stall);
+                let per_warp_tasks = c.n_subcols.div_ceil(w);
+                let upd =
+                    per_warp_tasks as u64 * cost::subcol_cycles(c.l_len, device.warp_size, stall);
+                div + upd
+            });
+            // Pipeline-fill latency is paid once per level: back-to-back
+            // blocks in a slot overlap their DRAM fills.
+            let makespan = greedy_makespan(durations, slots) + device.mem_latency_cycles;
+            // Busy warp-cycles: warps actually doing subcolumn/div work.
+            let busy: u64 = cols
+                .iter()
+                .map(|c| {
+                    let div = cost::divide_cycles(c.l_len, threads, stall) * w as u64;
+                    let upd = c.n_subcols as u64
+                        * cost::subcol_cycles(c.l_len, device.warp_size, stall);
+                    div + upd
+                })
+                .sum();
+            (makespan, 1, busy, slots, w)
+        }
+        KernelMode::Stream => {
+            // One kernel per column; one 1024-thread block per subcolumn.
+            let threads = device.max_threads_per_block;
+            let w = threads / device.warp_size; // 32 warps per block
+            let resident_blocks_per_sm = (device.max_warps_per_sm / w)
+                .min(device.max_blocks_per_sm)
+                .max(1);
+            let slots = (device.num_sms * resident_blocks_per_sm).min(mem_cap.max(1));
+            let total_blocks: usize = cols.iter().map(|c| c.n_subcols.max(1)).sum();
+            let blocks_live_per_sm = resident_blocks_per_sm
+                .min(total_blocks.div_ceil(device.num_sms))
+                .max(1);
+            let hiding = (blocks_live_per_sm * w).min(device.max_warps_per_sm);
+            let stall = cost::iter_stall_cycles(device.mem_latency_cycles, hiding);
+            let block_durations = cols.iter().flat_map(|c| {
+                std::iter::repeat_n(
+                    cost::subcol_cycles(c.l_len, threads, stall),
+                    c.n_subcols.max(1),
+                )
+            });
+            // Pipeline-fill latency once per level (see above).
+            let makespan = greedy_makespan(block_durations, slots) + device.mem_latency_cycles;
+            // Divide phases: one small pass per column, pipelined over
+            // streams with the update blocks; approximate by the max.
+            let div_tail = cols
+                .iter()
+                .map(|c| cost::divide_cycles(c.l_len, threads, stall))
+                .max()
+                .unwrap_or(0);
+            // Each update block keeps its w warps busy for the block
+            // duration's issue portion.
+            let busy: u64 = cols
+                .iter()
+                .map(|c| {
+                    (c.n_subcols as u64) * cost::subcol_cycles(c.l_len, threads, stall) * w as u64
+                        + cost::divide_cycles(c.l_len, threads, stall)
+                })
+                .sum();
+            // Launches: one per column, dispatched over num_streams.
+            let launches = cols.len() as u64;
+            (makespan + div_tail, launches, busy, slots, w)
+        }
+    };
+
+    // Launch overhead: stream-mode launches pipeline over the streams; the
+    // level pays the serialized dispatch tail.
+    let launch_cycles = match mode {
+        KernelMode::Stream => {
+            let per = (device.kernel_launch_cycles as f64 * launch_scale) as u64;
+            launches * per / device.num_streams.max(1) as u64 + per
+        }
+        _ => (device.kernel_launch_cycles as f64 * launch_scale) as u64,
+    };
+
+    // The kernel is latency-bound (uncoalesced scatters): memory cost is
+    // already charged per iteration via the stall model, so the aggregate
+    // DRAM roof is reported but never binds at the occupancies these
+    // kernels reach (see module docs / DESIGN.md §Hardware-Adaptation).
+    let _ = mem_cycles;
+    let cycles = (compute_cycles as f64 * compute_scale) as u64 + launch_cycles;
+    let capacity =
+        (slots * warps_per_block) as u64 * compute_cycles.max(1);
+    let occupancy = (busy_warp_cycles as f64 / capacity as f64).min(1.0);
+
+    LevelTiming {
+        mode,
+        columns: cols.len(),
+        max_subcols: cols.iter().map(|c| c.n_subcols).max().unwrap_or(0),
+        cycles,
+        bytes: total_bytes,
+        launches,
+        occupancy,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> DeviceConfig {
+        DeviceConfig::titan_x()
+    }
+
+    #[test]
+    fn mode_selection_follows_eq4() {
+        let d = dev();
+        // level size <= 16 -> stream
+        assert_eq!(select_mode(1, 16, &d), KernelMode::Stream);
+        assert_eq!(select_mode(16, 16, &d), KernelMode::Stream);
+        // 1536 total warps: level 48 -> W = 32 -> large
+        assert_eq!(select_mode(48, 16, &d), KernelMode::LargeBlock);
+        assert_eq!(select_mode(17, 16, &d), KernelMode::LargeBlock);
+        // level 100 -> W = 15 -> small(8); level 1000 -> W = 1 -> small(2)
+        assert_eq!(
+            select_mode(100, 16, &d),
+            KernelMode::SmallBlock { warps_per_block: 8 }
+        );
+        assert_eq!(
+            select_mode(1000, 16, &d),
+            KernelMode::SmallBlock { warps_per_block: 2 }
+        );
+    }
+
+    #[test]
+    fn greedy_makespan_basics() {
+        assert_eq!(greedy_makespan([5, 5, 5, 5].into_iter(), 2), 10);
+        assert_eq!(greedy_makespan([10, 1, 1, 1].into_iter(), 2), 10);
+        assert_eq!(greedy_makespan(std::iter::empty(), 4), 0);
+    }
+
+    /// Type A shape: many columns, few subcolumns each — small block must
+    /// beat large block (the Table III case-1 story).
+    #[test]
+    fn small_block_wins_on_type_a() {
+        let d = dev();
+        let cols: Vec<ColumnWork> = (0..4000)
+            .map(|_| ColumnWork {
+                l_len: 8,
+                n_subcols: 2,
+            })
+            .collect();
+        let small = simulate_level(
+            &cols,
+            KernelMode::SmallBlock { warps_per_block: 2 },
+            50_000,
+            &d,
+            1.0,
+            1.0,
+        );
+        let large = simulate_level(&cols, KernelMode::LargeBlock, 50_000, &d, 1.0, 1.0);
+        assert!(
+            small.cycles < large.cycles,
+            "small {} vs large {}",
+            small.cycles,
+            large.cycles
+        );
+    }
+
+    /// Type C shape: few columns, many long subcolumns — stream mode must
+    /// beat large block (the Table III case-2 story).
+    #[test]
+    fn stream_wins_on_type_c() {
+        let d = dev();
+        let cols: Vec<ColumnWork> = (0..4)
+            .map(|_| ColumnWork {
+                l_len: 3000,
+                n_subcols: 400,
+            })
+            .collect();
+        let stream = simulate_level(&cols, KernelMode::Stream, 50_000, &d, 1.0, 1.0);
+        let large = simulate_level(&cols, KernelMode::LargeBlock, 50_000, &d, 1.0, 1.0);
+        assert!(
+            stream.cycles < large.cycles,
+            "stream {} vs large {}",
+            stream.cycles,
+            large.cycles
+        );
+    }
+
+    /// Eq. (5): a huge matrix caps concurrent columns, hurting small-block
+    /// mode (the paper's G3_circuit anomaly in Table III).
+    #[test]
+    fn memory_cap_throttles_small_block_on_huge_n() {
+        let d = dev();
+        let cols: Vec<ColumnWork> = (0..6000)
+            .map(|_| ColumnWork {
+                l_len: 6,
+                n_subcols: 2,
+            })
+            .collect();
+        let small_small_n = simulate_level(
+            &cols,
+            KernelMode::SmallBlock { warps_per_block: 2 },
+            30_000,
+            &d,
+            1.0,
+            1.0,
+        );
+        let small_huge_n = simulate_level(
+            &cols,
+            KernelMode::SmallBlock { warps_per_block: 2 },
+            2_000_000,
+            &d,
+            1.0,
+            1.0,
+        );
+        assert!(
+            small_huge_n.cycles > small_small_n.cycles * 3,
+            "cap should throttle: {} vs {}",
+            small_huge_n.cycles,
+            small_small_n.cycles
+        );
+    }
+
+    #[test]
+    fn traffic_is_accounted() {
+        let d = dev();
+        let cols = vec![ColumnWork {
+            l_len: 100,
+            n_subcols: 4,
+        }];
+        let t = simulate_level(&cols, KernelMode::LargeBlock, 10_000, &d, 1.0, 1.0);
+        // update: 100*4*28 bytes + divide: 100*16 bytes
+        assert_eq!(t.bytes, 100 * 4 * 28 + 100 * 16);
+    }
+
+    #[test]
+    fn occupancy_in_unit_range() {
+        let d = dev();
+        let cols: Vec<ColumnWork> = (0..100)
+            .map(|i| ColumnWork {
+                l_len: 10 + i % 50,
+                n_subcols: 1 + i % 8,
+            })
+            .collect();
+        for mode in [
+            KernelMode::SmallBlock { warps_per_block: 4 },
+            KernelMode::LargeBlock,
+            KernelMode::Stream,
+        ] {
+            let t = simulate_level(&cols, mode, 10_000, &d, 1.0, 1.0);
+            assert!((0.0..=1.0).contains(&t.occupancy), "{mode:?}: {}", t.occupancy);
+        }
+    }
+}

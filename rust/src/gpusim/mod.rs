@@ -1,0 +1,39 @@
+//! Cycle-approximate GPU execution substrate — the testbed substitution for
+//! the paper's NVIDIA GTX TITAN X (DESIGN.md §2).
+//!
+//! No GPU exists in this environment, so the paper's measured object — *GPU
+//! kernel time under different thread/block allocation policies* — is
+//! reproduced by simulation. The simulator:
+//!
+//! 1. **executes the real numerics** of the hybrid right-looking kernel
+//!    (level-ordered Algorithm 2; results checked against the sequential
+//!    engines to fp tolerance), and
+//! 2. **accounts cycles** with the same occupancy arithmetic the paper
+//!    reasons with: resident-warp limits per SM, block-slot limits, the
+//!    Eq. (4) warps-per-block rule, the Eq. (5) column-cache memory cap,
+//!    aggregate memory bandwidth, kernel-launch and one-time driver
+//!    overheads, and 16-deep CUDA-stream pipelining for stream mode.
+//!
+//! Absolute milliseconds are not comparable to the authors' testbed; the
+//! *shape* — which kernel mode wins on which level type, where GLU3.0's
+//! advantage over the fixed-allocation GLU2.0 kernel grows, the stream-
+//! threshold sweep of Fig. 12 — is what the benches reproduce.
+//!
+//! Submodules:
+//! - [`device`] — device model ([`DeviceConfig::titan_x`] default).
+//! - [`cost`] — per-warp/per-block cost formulas and memory traffic.
+//! - [`exec`] — kernel-mode timing: block building + greedy SM scheduling.
+//! - [`policy`] — solver policies: GLU3.0 adaptive, GLU2.0 fixed, Lee's
+//!   enhanced GLU2.0, and ablations (Table III's case 1 / case 2).
+//! - [`executor`] — level-ordered numeric factorization + timing report.
+
+pub mod cost;
+pub mod device;
+pub mod exec;
+pub mod executor;
+pub mod policy;
+
+pub use device::DeviceConfig;
+pub use exec::{KernelMode, LevelTiming};
+pub use executor::{simulate_factorization, SimReport};
+pub use policy::Policy;

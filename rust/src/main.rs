@@ -1,0 +1,267 @@
+//! `glu3` — CLI for the GLU3.0 sparse LU reproduction.
+//!
+//! ```text
+//! glu3 factor  --matrix <suite-name|file.mtx> [--policy P] [--detect D] [--ordering O] [--engine E]
+//! glu3 solve   --matrix <...> [--rhs ones|ramp] [options]
+//! glu3 suite   [--set small|all] [--policy P]
+//! glu3 profile --matrix <...>        # Fig. 10 per-level parallelism dump
+//! glu3 info    --matrix <...>        # structural stats only
+//! ```
+//!
+//! Matrix names resolve against the synthetic suite
+//! ([`glu3::sparse::gen::SuiteMatrix`]); anything ending in `.mtx` is read
+//! as a Matrix Market file. (Offline build: argument parsing is hand-rolled —
+//! no clap in the vendored crate set.)
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use glu3::bench_support::table::{ms, ratio, Table};
+use glu3::glu::{parallelism_profile, Detection, GluOptions, GluSolver, NumericEngine};
+use glu3::gpusim::Policy;
+use glu3::numeric::residual;
+use glu3::order::FillOrdering;
+use glu3::sparse::gen::{self, SuiteMatrix};
+use glu3::sparse::{io, Csc};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "factor" => cmd_factor(&flags, false),
+        "solve" => cmd_factor(&flags, true),
+        "suite" => cmd_suite(&flags),
+        "profile" => cmd_profile(&flags),
+        "info" => cmd_info(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other}; try `glu3 help`"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "glu3 — GLU3.0 sparse LU factorization (paper reproduction)\n\n\
+         commands:\n\
+         \x20 factor  --matrix <name|file.mtx> [--policy glu3|glu2|lee|nosmall|nostream]\n\
+         \x20         [--detect glu1|glu2|glu3] [--ordering amd|rcm|natural]\n\
+         \x20         [--engine gpu|left|right|parcpu]\n\
+         \x20 solve   same options, also solves (--rhs ones|ramp)\n\
+         \x20 suite   [--set small|all] [--policy ...]   run the whole suite\n\
+         \x20 profile --matrix <...>   per-level parallelism profile (Fig. 10)\n\
+         \x20 info    --matrix <...>   structural stats\n\n\
+         suite names: {}",
+        SuiteMatrix::ALL
+            .iter()
+            .map(|m| m.ufl_name())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+}
+
+fn parse_flags(args: &[String]) -> anyhow::Result<HashMap<String, String>> {
+    let mut map = HashMap::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let Some(key) = a.strip_prefix("--") else {
+            anyhow::bail!("unexpected argument {a}");
+        };
+        let val = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("flag --{key} needs a value"))?;
+        map.insert(key.to_string(), val.clone());
+    }
+    Ok(map)
+}
+
+fn load_matrix(flags: &HashMap<String, String>) -> anyhow::Result<(String, Csc)> {
+    let spec = flags
+        .get("matrix")
+        .ok_or_else(|| anyhow::anyhow!("--matrix is required"))?;
+    if spec.ends_with(".mtx") {
+        return Ok((spec.clone(), io::read_matrix_market(spec)?));
+    }
+    for m in SuiteMatrix::ALL {
+        if m.ufl_name().eq_ignore_ascii_case(spec) {
+            return Ok((m.ufl_name().to_string(), gen::generate(&m.spec())));
+        }
+    }
+    anyhow::bail!("unknown matrix {spec} (suite name or .mtx path)")
+}
+
+fn options_from(flags: &HashMap<String, String>) -> anyhow::Result<GluOptions> {
+    let mut opts = GluOptions::default();
+    if let Some(p) = flags.get("policy") {
+        opts.policy = match p.as_str() {
+            "glu3" => Policy::glu3(),
+            "glu2" => Policy::glu2_fixed(),
+            "lee" => Policy::lee_enhanced(),
+            "nosmall" => Policy::glu3_no_small(),
+            "nostream" => Policy::glu3_no_stream(),
+            other => anyhow::bail!("unknown policy {other}"),
+        };
+    }
+    if let Some(d) = flags.get("detect") {
+        opts.detection = match d.as_str() {
+            "glu1" => Detection::Glu1,
+            "glu2" => Detection::Glu2,
+            "glu3" => Detection::Glu3,
+            other => anyhow::bail!("unknown detection {other}"),
+        };
+    }
+    if let Some(o) = flags.get("ordering") {
+        opts.ordering = match o.as_str() {
+            "amd" => FillOrdering::Amd,
+            "rcm" => FillOrdering::Rcm,
+            "natural" => FillOrdering::Natural,
+            other => anyhow::bail!("unknown ordering {other}"),
+        };
+    }
+    if let Some(e) = flags.get("engine") {
+        opts.engine = match e.as_str() {
+            "gpu" => NumericEngine::SimulatedGpu,
+            "left" => NumericEngine::LeftLookingCpu,
+            "right" => NumericEngine::RightLookingCpu,
+            "parcpu" => NumericEngine::ParallelCpu {
+                threads: std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1),
+            },
+            other => anyhow::bail!("unknown engine {other}"),
+        };
+    }
+    Ok(opts)
+}
+
+fn cmd_factor(flags: &HashMap<String, String>, also_solve: bool) -> anyhow::Result<()> {
+    let (name, a) = load_matrix(flags)?;
+    let opts = options_from(flags)?;
+    println!(
+        "factoring {name}: n={} nz={} (policy {}, {:?}, {:?})",
+        a.nrows(),
+        a.nnz(),
+        opts.policy.name,
+        opts.detection,
+        opts.ordering
+    );
+    let mut solver = GluSolver::factor(&a, &opts)?;
+    let st = solver.stats();
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["rows".to_string(), st.n.to_string()]);
+    t.row(vec!["nz (before fill)".to_string(), st.nz.to_string()]);
+    t.row(vec!["nnz (after fill)".to_string(), st.nnz.to_string()]);
+    t.row(vec!["levels".to_string(), st.num_levels.to_string()]);
+    t.row(vec![
+        "max level size".to_string(),
+        st.max_level_size.to_string(),
+    ]);
+    t.row(vec!["preprocess (ms)".to_string(), ms(st.preprocess_ms)]);
+    t.row(vec!["symbolic (ms)".to_string(), ms(st.symbolic_ms)]);
+    t.row(vec![
+        "levelization (ms)".to_string(),
+        ms(st.levelization_ms),
+    ]);
+    t.row(vec!["numeric (ms)".to_string(), ms(st.numeric_ms)]);
+    if let Some(sim) = &st.sim {
+        let (da, db, dc) = sim.level_distribution();
+        t.row(vec![
+            "level types A/B/C".to_string(),
+            format!("{da}/{db}/{dc}"),
+        ]);
+        t.row(vec![
+            "mean warp occupancy".to_string(),
+            format!("{:.2}", sim.mean_occupancy()),
+        ]);
+    }
+    print!("{}", t.render());
+
+    if also_solve {
+        let n = a.nrows();
+        let b: Vec<f64> = match flags.get("rhs").map(|s| s.as_str()).unwrap_or("ones") {
+            "ones" => vec![1.0; n],
+            "ramp" => (0..n).map(|i| 1.0 + (i % 100) as f64 / 100.0).collect(),
+            other => anyhow::bail!("unknown rhs {other}"),
+        };
+        let x = solver.solve(&b)?;
+        println!("solve: relative residual = {:.3e}", residual(&a, &x, &b));
+    }
+    Ok(())
+}
+
+fn cmd_suite(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let set = flags.get("set").map(|s| s.as_str()).unwrap_or("small");
+    let matrices: Vec<SuiteMatrix> = match set {
+        "small" => SuiteMatrix::SMALL.to_vec(),
+        "all" => SuiteMatrix::ALL.to_vec(),
+        other => anyhow::bail!("unknown set {other} (small|all)"),
+    };
+    let opts = options_from(flags)?;
+    let mut t = Table::new(vec![
+        "matrix", "rows", "nnz", "levels", "cpu(ms)", "kernel(ms)",
+    ]);
+    for m in matrices {
+        let a = gen::generate(&m.spec());
+        let solver = GluSolver::factor(&a, &opts)?;
+        let st = solver.stats();
+        t.row(vec![
+            m.ufl_name().to_string(),
+            st.n.to_string(),
+            st.nnz.to_string(),
+            st.num_levels.to_string(),
+            ms(st.cpu_ms()),
+            ms(st.numeric_ms),
+        ]);
+        println!("done {}", m.ufl_name());
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_profile(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let (name, a) = load_matrix(flags)?;
+    let opts = options_from(flags)?;
+    let solver = GluSolver::factor(&a, &opts)?;
+    let prof = parallelism_profile(solver.symbolic(), solver.levels());
+    println!("# {name}: level size vs max subcolumns (Fig. 10 data)");
+    let mut t = Table::new(vec!["level", "size", "max_subcols", "mean_L_len"]);
+    for p in &prof {
+        t.row(vec![
+            p.level.to_string(),
+            p.size.to_string(),
+            p.max_subcols.to_string(),
+            format!("{:.1}", p.mean_l_len),
+        ]);
+    }
+    print!("{}", t.render());
+    let corr = glu3::glu::profile::size_subcol_correlation(&prof);
+    println!("size/subcol correlation: {}", ratio(corr));
+    Ok(())
+}
+
+fn cmd_info(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let (name, a) = load_matrix(flags)?;
+    println!(
+        "{name}: {}x{}, nnz {}, full diagonal: {}",
+        a.nrows(),
+        a.ncols(),
+        a.nnz(),
+        a.has_full_diagonal()
+    );
+    Ok(())
+}

@@ -1,0 +1,152 @@
+//! Algorithm 2: the hybrid column right-looking factorization of GLU —
+//! sequential reference implementation.
+//!
+//! Identical arithmetic to the GPU kernel pipelines (same MAC ordering per
+//! subcolumn), so the simulator's numerics are checked against this engine
+//! bit-for-bit, and this engine against the left-looking oracle to fp
+//! tolerance.
+
+use super::LuFactors;
+use crate::symbolic::SymbolicFill;
+
+/// Row-wise view of the strictly-upper pattern: for each row `j`, the
+/// columns `k > j` with `As(j,k) ≠ 0` — column `j`'s *subcolumns* in the
+/// paper's terminology (Fig. 3).
+pub fn upper_rows(sym: &SymbolicFill) -> Vec<Vec<u32>> {
+    let n = sym.filled.ncols();
+    let mut urow: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for k in 0..n {
+        let (rows, _) = sym.filled.col(k);
+        for &j in rows.iter().take_while(|&&j| j < k) {
+            urow[j].push(k as u32);
+        }
+    }
+    urow
+}
+
+/// Factor `As` with the hybrid right-looking algorithm (Algorithm 2).
+pub fn factor(sym: &SymbolicFill) -> anyhow::Result<LuFactors> {
+    let n = sym.filled.ncols();
+    let mut lu = sym.filled.clone();
+    let urow = upper_rows(sym);
+
+    for j in 0..n {
+        // --- Step 1: compute L part of column j (divide by pivot). ---
+        let (rows_j, vals_j) = lu.col(j);
+        let diag_pos = rows_j
+            .binary_search(&j)
+            .map_err(|_| anyhow::anyhow!("missing diagonal at {j}"))?;
+        let pivot = vals_j[diag_pos];
+        anyhow::ensure!(
+            pivot != 0.0 && pivot.is_finite(),
+            "zero/non-finite pivot at column {j}"
+        );
+        let colptr_j = lu.colptr()[j];
+        let col_len = rows_j.len();
+        // Copy L rows/values for the update step (avoid aliasing).
+        let lrows: Vec<usize> = rows_j[diag_pos + 1..].to_vec();
+        {
+            let vals = lu.values_mut();
+            for idx in diag_pos + 1..col_len {
+                vals[colptr_j + idx] /= pivot;
+            }
+        }
+        let lvals: Vec<f64> = {
+            let (_, vals_j) = lu.col(j);
+            vals_j[diag_pos + 1..].to_vec()
+        };
+
+        // --- Step 2: submatrix update — for each subcolumn k (As(j,k)≠0,
+        // k > j), apply the rank-1 column update (Eq. 3). ---
+        for &k in &urow[j] {
+            let k = k as usize;
+            let multiplier = lu.get(j, k); // As(j, k)
+            if multiplier == 0.0 {
+                continue;
+            }
+            let colptr_k = lu.colptr()[k];
+            let (rows_k, _) = lu.col(k);
+            // Walk the L rows of column j and the pattern of column k in
+            // lock-step (both sorted): every L row of column j is
+            // guaranteed present in column k's pattern by the symbolic
+            // analysis (fill-in closure).
+            let mut pos = rows_k.partition_point(|&r| r <= j);
+            let rows_k: Vec<usize> = rows_k[pos..].to_vec();
+            let base = pos;
+            pos = 0;
+            let vals = lu.values_mut();
+            for (&i, &lij) in lrows.iter().zip(&lvals) {
+                while rows_k[pos] != i {
+                    pos += 1;
+                }
+                vals[colptr_k + base + pos] -= lij * multiplier;
+            }
+        }
+    }
+    Ok(LuFactors { lu })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::leftlook;
+    use crate::sparse::gen;
+    use crate::symbolic::symbolic_fill;
+    use crate::util::Rng;
+
+    #[test]
+    fn subcolumns_match_paper_fig3() {
+        // Fig. 3: j = 3 (1-based) has subcolumns 5 and 8 because As(3,5)
+        // and As(3,8) are nonzero. Our fixture encodes the same idea via
+        // its upper row patterns; check on the fixture: row 3 (0-based)
+        // has subcolumn 6 (As(3,6) != 0).
+        let a = crate::bench_support::paper_example();
+        let f = symbolic_fill(&a).unwrap();
+        let urow = upper_rows(&f);
+        assert!(urow[3].contains(&6));
+    }
+
+    #[test]
+    fn matches_leftlooking_oracle_exactly_enough() {
+        let mut rng = Rng::new(0x1717);
+        for trial in 0..20 {
+            let n = rng.range(10, 80);
+            let a = gen::netlist(n.max(8), 6, 8, 0.1, 2, 0.25, 900 + trial);
+            let f = symbolic_fill(&a).unwrap();
+            let l = leftlook::factor(&f).unwrap();
+            let r = factor(&f).unwrap();
+            for (p, q) in l.lu.values().iter().zip(r.lu.values()) {
+                assert!(
+                    (p - q).abs() < 1e-10 * (1.0 + q.abs()),
+                    "trial {trial}: {p} vs {q}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn factor_solves_correctly() {
+        let a = gen::grid2d(9, 9, 11);
+        let f = symbolic_fill(&a).unwrap();
+        let lu = factor(&f).unwrap();
+        let b = vec![1.0; 81];
+        let x = lu.solve(&b);
+        assert!(crate::numeric::residual(&a, &x, &b) < 1e-12);
+    }
+
+    #[test]
+    fn paper_example_update_order() {
+        // Fig. 2 vs right-looking timing: the (a) update happens while
+        // j = 4 and (b) while j = 6 (1-based). After factoring, both
+        // engines agree on column 7's final values.
+        let a = crate::bench_support::paper_example();
+        let f = symbolic_fill(&a).unwrap();
+        let l = leftlook::factor(&f).unwrap();
+        let r = factor(&f).unwrap();
+        let (_, lv) = l.lu.col(6);
+        let (_, rv) = r.lu.col(6);
+        for (p, q) in lv.iter().zip(rv) {
+            assert!((p - q).abs() < 1e-14);
+        }
+    }
+}

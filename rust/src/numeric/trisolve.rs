@@ -1,0 +1,108 @@
+//! Sparse triangular solves over compact LU factors.
+//!
+//! Completes `Ax = b` after factorization (the `L y = b`, `U x = y` halves
+//! of the paper's SPICE use-case); also exercised standalone by the
+//! coordinator's repeated-solve path (same factors, many right-hand sides —
+//! the Newton–Raphson pattern).
+
+use crate::sparse::Csc;
+
+/// In-place forward substitution with the unit-lower factor stored in the
+/// strictly-lower triangle of `lu`: `x ← L⁻¹ x`.
+pub fn lower_unit_solve(lu: &Csc, x: &mut [f64]) {
+    let n = lu.ncols();
+    assert_eq!(x.len(), n);
+    for j in 0..n {
+        let xj = x[j];
+        if xj == 0.0 {
+            continue;
+        }
+        let (rows, vals) = lu.col(j);
+        let start = rows.partition_point(|&r| r <= j);
+        for (&i, &lij) in rows[start..].iter().zip(&vals[start..]) {
+            x[i] -= lij * xj;
+        }
+    }
+}
+
+/// In-place backward substitution with the upper factor (diagonal included):
+/// `x ← U⁻¹ x`.
+pub fn upper_solve(lu: &Csc, x: &mut [f64]) {
+    let n = lu.ncols();
+    assert_eq!(x.len(), n);
+    for j in (0..n).rev() {
+        let (rows, vals) = lu.col(j);
+        let dpos = rows.partition_point(|&r| r < j);
+        debug_assert!(rows[dpos] == j, "missing diagonal");
+        let xj = x[j] / vals[dpos];
+        x[j] = xj;
+        if xj == 0.0 {
+            continue;
+        }
+        for (&i, &uij) in rows[..dpos].iter().zip(&vals[..dpos]) {
+            x[i] -= uij * xj;
+        }
+    }
+}
+
+/// Transpose solve `Aᵀ x = b` over the same factors (`Uᵀ y = b`, `Lᵀ x = y`)
+/// — used by adjoint/sensitivity analysis in circuit simulators.
+pub fn transpose_solve(lu: &Csc, b: &[f64]) -> Vec<f64> {
+    let n = lu.ncols();
+    let mut x = b.to_vec();
+    // U^T is lower triangular (non-unit): forward substitution by columns.
+    for j in 0..n {
+        let (rows, vals) = lu.col(j);
+        let dpos = rows.partition_point(|&r| r < j);
+        let mut acc = x[j];
+        for (&i, &uij) in rows[..dpos].iter().zip(&vals[..dpos]) {
+            acc -= uij * x[i];
+        }
+        x[j] = acc / vals[dpos];
+    }
+    // L^T is unit upper: backward substitution.
+    for j in (0..n).rev() {
+        let (rows, vals) = lu.col(j);
+        let start = rows.partition_point(|&r| r <= j);
+        let mut acc = x[j];
+        for (&i, &lij) in rows[start..].iter().zip(&vals[start..]) {
+            acc -= lij * x[i];
+        }
+        x[j] = acc;
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::numeric::{leftlook, residual};
+    use crate::sparse::gen;
+    use crate::symbolic::symbolic_fill;
+
+    #[test]
+    fn solve_and_transpose_solve() {
+        let a = gen::netlist(60, 5, 8, 0.1, 1, 0.2, 21);
+        let f = symbolic_fill(&a).unwrap();
+        let lu = leftlook::factor(&f).unwrap();
+        let b: Vec<f64> = (0..60).map(|i| ((i * 13) % 11) as f64 - 5.0).collect();
+
+        let x = lu.solve(&b);
+        assert!(residual(&a, &x, &b) < 1e-12);
+
+        let xt = super::transpose_solve(&lu.lu, &b);
+        let at = a.transpose();
+        assert!(residual(&at, &xt, &b) < 1e-12);
+    }
+
+    #[test]
+    fn multiple_rhs_reuse_factors() {
+        let a = gen::grid2d(7, 7, 2);
+        let f = symbolic_fill(&a).unwrap();
+        let lu = leftlook::factor(&f).unwrap();
+        for s in 0..5 {
+            let b: Vec<f64> = (0..49).map(|i| ((i + s) % 5) as f64).collect();
+            let x = lu.solve(&b);
+            assert!(residual(&a, &x, &b) < 1e-12);
+        }
+    }
+}

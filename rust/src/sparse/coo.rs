@@ -1,0 +1,185 @@
+//! Coordinate-format sparse matrix: the assembly/interchange format.
+//!
+//! COO is what the Matrix Market reader and the circuit MNA stamper produce;
+//! duplicate entries are summed on conversion (exactly the stamping semantics
+//! circuit simulators rely on).
+
+use super::csc::Csc;
+
+/// A coordinate-format sparse matrix with `f64` values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Coo {
+    nrows: usize,
+    ncols: usize,
+    /// `(row, col, value)` triples, in arbitrary order, duplicates allowed.
+    entries: Vec<(usize, usize, f64)>,
+}
+
+impl Coo {
+    /// An empty `nrows x ncols` matrix.
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Coo {
+            nrows,
+            ncols,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Build from triples, validating indices.
+    pub fn from_entries(
+        nrows: usize,
+        ncols: usize,
+        entries: Vec<(usize, usize, f64)>,
+    ) -> anyhow::Result<Self> {
+        for &(r, c, _) in &entries {
+            anyhow::ensure!(
+                r < nrows && c < ncols,
+                "entry ({r},{c}) outside {nrows}x{ncols}"
+            );
+        }
+        Ok(Coo {
+            nrows,
+            ncols,
+            entries,
+        })
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Number of stored triples (duplicates counted).
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn entries(&self) -> &[(usize, usize, f64)] {
+        &self.entries
+    }
+
+    /// Add `v` at `(r, c)` (duplicates are summed at conversion time —
+    /// MNA stamping semantics).
+    pub fn push(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.nrows && c < self.ncols);
+        self.entries.push((r, c, v));
+    }
+
+    /// Convert to CSC, summing duplicates and dropping exact zeros produced
+    /// *only* by duplicate cancellation (explicit zero entries are kept:
+    /// circuit matrices use them as structural placeholders).
+    pub fn to_csc(&self) -> Csc {
+        // Counting sort by column, then by row within column.
+        let mut colcount = vec![0usize; self.ncols + 1];
+        for &(_, c, _) in &self.entries {
+            colcount[c + 1] += 1;
+        }
+        for c in 0..self.ncols {
+            colcount[c + 1] += colcount[c];
+        }
+        let mut rows = vec![0usize; self.entries.len()];
+        let mut vals = vec![0f64; self.entries.len()];
+        let mut next = colcount.clone();
+        for &(r, c, v) in &self.entries {
+            let p = next[c];
+            rows[p] = r;
+            vals[p] = v;
+            next[c] += 1;
+        }
+        // Sort within each column and merge duplicates.
+        let mut colptr = vec![0usize; self.ncols + 1];
+        let mut out_rows = Vec::with_capacity(self.entries.len());
+        let mut out_vals = Vec::with_capacity(self.entries.len());
+        for c in 0..self.ncols {
+            let (s, e) = (colcount[c], colcount[c + 1]);
+            let mut col: Vec<(usize, f64)> = rows[s..e]
+                .iter()
+                .copied()
+                .zip(vals[s..e].iter().copied())
+                .collect();
+            col.sort_unstable_by_key(|&(r, _)| r);
+            let mut i = 0;
+            while i < col.len() {
+                let r = col[i].0;
+                let mut v = col[i].1;
+                let mut j = i + 1;
+                let mut merged = false;
+                while j < col.len() && col[j].0 == r {
+                    v += col[j].1;
+                    j += 1;
+                    merged = true;
+                }
+                // Keep explicit singleton zeros; drop only merged cancellations.
+                if !(merged && v == 0.0) {
+                    out_rows.push(r);
+                    out_vals.push(v);
+                }
+                i = j;
+            }
+            colptr[c + 1] = out_rows.len();
+        }
+        Csc::from_raw_parts(self.nrows, self.ncols, colptr, out_rows, out_vals)
+            .expect("COO->CSC produced invalid CSC")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_convert() {
+        let mut a = Coo::new(3, 3);
+        a.push(0, 0, 1.0);
+        a.push(2, 1, 3.0);
+        a.push(1, 1, 2.0);
+        let csc = a.to_csc();
+        assert_eq!(csc.nnz(), 3);
+        assert_eq!(csc.get(0, 0), 1.0);
+        assert_eq!(csc.get(1, 1), 2.0);
+        assert_eq!(csc.get(2, 1), 3.0);
+        assert_eq!(csc.get(2, 2), 0.0);
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let mut a = Coo::new(2, 2);
+        a.push(0, 0, 1.0);
+        a.push(0, 0, 2.5);
+        let csc = a.to_csc();
+        assert_eq!(csc.nnz(), 1);
+        assert_eq!(csc.get(0, 0), 3.5);
+    }
+
+    #[test]
+    fn duplicate_cancellation_dropped_but_explicit_zero_kept() {
+        let mut a = Coo::new(2, 2);
+        a.push(0, 0, 1.0);
+        a.push(0, 0, -1.0);
+        a.push(1, 1, 0.0); // explicit structural zero
+        let csc = a.to_csc();
+        assert_eq!(csc.nnz(), 1);
+        assert!(csc.has_entry(1, 1));
+        assert!(!csc.has_entry(0, 0));
+    }
+
+    #[test]
+    fn rows_sorted_within_columns() {
+        let mut a = Coo::new(4, 2);
+        a.push(3, 0, 1.0);
+        a.push(0, 0, 2.0);
+        a.push(2, 0, 3.0);
+        let csc = a.to_csc();
+        let (rows, _) = csc.col(0);
+        assert_eq!(rows, &[0, 2, 3]);
+    }
+
+    #[test]
+    fn from_entries_validates() {
+        assert!(Coo::from_entries(2, 2, vec![(2, 0, 1.0)]).is_err());
+        assert!(Coo::from_entries(2, 2, vec![(1, 1, 1.0)]).is_ok());
+    }
+}

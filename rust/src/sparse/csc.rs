@@ -1,0 +1,394 @@
+//! Compressed sparse column matrix — the workhorse format of the crate.
+//!
+//! Invariants (checked by [`Csc::from_raw_parts`]):
+//! - `colptr.len() == ncols + 1`, `colptr[0] == 0`, non-decreasing;
+//! - `rowidx`/`values` have length `colptr[ncols]`;
+//! - row indices within each column are strictly increasing (sorted, unique).
+
+use super::coo::Coo;
+use super::csr::Csr;
+
+/// A compressed sparse column matrix with `f64` values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csc {
+    nrows: usize,
+    ncols: usize,
+    colptr: Vec<usize>,
+    rowidx: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl Csc {
+    /// Build from raw CSC arrays, validating all invariants.
+    pub fn from_raw_parts(
+        nrows: usize,
+        ncols: usize,
+        colptr: Vec<usize>,
+        rowidx: Vec<usize>,
+        values: Vec<f64>,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(colptr.len() == ncols + 1, "colptr length mismatch");
+        anyhow::ensure!(colptr[0] == 0, "colptr[0] != 0");
+        anyhow::ensure!(
+            rowidx.len() == *colptr.last().unwrap() && values.len() == rowidx.len(),
+            "index/value array length mismatch"
+        );
+        for c in 0..ncols {
+            anyhow::ensure!(colptr[c] <= colptr[c + 1], "colptr not monotone at {c}");
+            let col = &rowidx[colptr[c]..colptr[c + 1]];
+            for w in col.windows(2) {
+                anyhow::ensure!(w[0] < w[1], "rows not strictly increasing in col {c}");
+            }
+            if let Some(&last) = col.last() {
+                anyhow::ensure!(last < nrows, "row index out of range in col {c}");
+            }
+        }
+        Ok(Csc {
+            nrows,
+            ncols,
+            colptr,
+            rowidx,
+            values,
+        })
+    }
+
+    /// Identity matrix of size `n`.
+    pub fn identity(n: usize) -> Self {
+        Csc {
+            nrows: n,
+            ncols: n,
+            colptr: (0..=n).collect(),
+            rowidx: (0..n).collect(),
+            values: vec![1.0; n],
+        }
+    }
+
+    /// Build from a dense row-major matrix, keeping entries with `|v| > 0`.
+    pub fn from_dense(nrows: usize, ncols: usize, dense: &[f64]) -> Self {
+        assert_eq!(dense.len(), nrows * ncols);
+        let mut coo = Coo::new(nrows, ncols);
+        for r in 0..nrows {
+            for c in 0..ncols {
+                let v = dense[r * ncols + c];
+                if v != 0.0 {
+                    coo.push(r, c, v);
+                }
+            }
+        }
+        coo.to_csc()
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.rowidx.len()
+    }
+
+    pub fn colptr(&self) -> &[usize] {
+        &self.colptr
+    }
+
+    pub fn rowidx(&self) -> &[usize] {
+        &self.rowidx
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn values_mut(&mut self) -> &mut [f64] {
+        &mut self.values
+    }
+
+    /// Split borrow: `(colptr, rowidx, values_mut)` — lets numeric kernels
+    /// walk the immutable pattern while scattering into the values without
+    /// per-column copies (the factorization hot path).
+    pub fn split_mut(&mut self) -> (&[usize], &[usize], &mut [f64]) {
+        (&self.colptr, &self.rowidx, &mut self.values)
+    }
+
+    /// The `(rows, values)` slices of column `c`.
+    #[inline]
+    pub fn col(&self, c: usize) -> (&[usize], &[f64]) {
+        let (s, e) = (self.colptr[c], self.colptr[c + 1]);
+        (&self.rowidx[s..e], &self.values[s..e])
+    }
+
+    /// Value at `(r, c)`; 0.0 if not stored. O(log nnz(col)).
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        let (rows, vals) = self.col(c);
+        match rows.binary_search(&r) {
+            Ok(i) => vals[i],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Whether `(r, c)` is a stored (structural) entry.
+    pub fn has_entry(&self, r: usize, c: usize) -> bool {
+        self.col(c).0.binary_search(&r).is_ok()
+    }
+
+    /// Position of `(r, c)` in the value array, if stored.
+    pub fn entry_index(&self, r: usize, c: usize) -> Option<usize> {
+        let (rows, _) = self.col(c);
+        rows.binary_search(&r).ok().map(|i| self.colptr[c] + i)
+    }
+
+    /// `y = A * x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![0.0; self.nrows];
+        for c in 0..self.ncols {
+            let xc = x[c];
+            if xc == 0.0 {
+                continue;
+            }
+            let (rows, vals) = self.col(c);
+            for (&r, &v) in rows.iter().zip(vals) {
+                y[r] += v * xc;
+            }
+        }
+        y
+    }
+
+    /// Transpose (also the CSC<->CSR pivot).
+    pub fn transpose(&self) -> Csc {
+        let mut rowcount = vec![0usize; self.nrows + 1];
+        for &r in &self.rowidx {
+            rowcount[r + 1] += 1;
+        }
+        for r in 0..self.nrows {
+            rowcount[r + 1] += rowcount[r];
+        }
+        let mut colptr = rowcount.clone();
+        let mut rowidx = vec![0usize; self.nnz()];
+        let mut values = vec![0f64; self.nnz()];
+        let mut next = rowcount;
+        for c in 0..self.ncols {
+            let (rows, vals) = self.col(c);
+            for (&r, &v) in rows.iter().zip(vals) {
+                let p = next[r];
+                rowidx[p] = c;
+                values[p] = v;
+                next[r] += 1;
+            }
+        }
+        colptr.rotate_right(0); // already cumulative
+        Csc {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            colptr,
+            rowidx,
+            values,
+        }
+    }
+
+    /// Same pattern+values viewed as CSR (row-compressed).
+    pub fn to_csr(&self) -> Csr {
+        let t = self.transpose();
+        // CSR of A == CSC of A^T with rows/cols swapped.
+        Csr::from_raw_parts(self.nrows, self.ncols, t.colptr, t.rowidx, t.values)
+            .expect("transpose produced invalid CSR")
+    }
+
+    /// Dense row-major copy (test/debug helper; asserts small sizes).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.nrows * self.ncols];
+        for c in 0..self.ncols {
+            let (rows, vals) = self.col(c);
+            for (&r, &v) in rows.iter().zip(vals) {
+                d[r * self.ncols + c] = v;
+            }
+        }
+        d
+    }
+
+    /// Symmetric permutation+ scaling `P R A C Q` where `perm_row` maps
+    /// old row -> new row and `perm_col` maps old col -> new col; `r_scale`
+    /// and `c_scale` are optional diagonal scalings applied as
+    /// `A'(pr[i], pc[j]) = r[i] * A(i,j) * c[j]`.
+    pub fn permute_scale(
+        &self,
+        perm_row: &[usize],
+        perm_col: &[usize],
+        r_scale: Option<&[f64]>,
+        c_scale: Option<&[f64]>,
+    ) -> Csc {
+        assert_eq!(perm_row.len(), self.nrows);
+        assert_eq!(perm_col.len(), self.ncols);
+        let mut coo = Coo::new(self.nrows, self.ncols);
+        for c in 0..self.ncols {
+            let (rows, vals) = self.col(c);
+            for (&r, &v) in rows.iter().zip(vals) {
+                let mut w = v;
+                if let Some(rs) = r_scale {
+                    w *= rs[r];
+                }
+                if let Some(cs) = c_scale {
+                    w *= cs[c];
+                }
+                coo.push(perm_row[r], perm_col[c], w);
+            }
+        }
+        coo.to_csc()
+    }
+
+    /// Convenience: `A(P,Q)` permutation without scaling.
+    pub fn permute(&self, perm_row: &[usize], perm_col: &[usize]) -> Csc {
+        self.permute_scale(perm_row, perm_col, None, None)
+    }
+
+    /// Structural pattern of `A + A^T` (values summed; used by AMD which
+    /// wants a symmetric pattern).
+    pub fn plus_transpose_pattern(&self) -> Csc {
+        assert_eq!(self.nrows, self.ncols);
+        let t = self.transpose();
+        let mut coo = Coo::new(self.nrows, self.ncols);
+        for c in 0..self.ncols {
+            let (rows, _) = self.col(c);
+            for &r in rows {
+                coo.push(r, c, 1.0);
+            }
+            let (rows, _) = t.col(c);
+            for &r in rows {
+                coo.push(r, c, 1.0);
+            }
+        }
+        coo.to_csc()
+    }
+
+    /// Whether every diagonal entry is structurally present (required before
+    /// factorization; MC64 matching establishes it).
+    pub fn has_full_diagonal(&self) -> bool {
+        assert_eq!(self.nrows, self.ncols);
+        (0..self.ncols).all(|j| self.has_entry(j, j))
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.values.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csc {
+        // [1 0 2]
+        // [0 3 0]
+        // [4 0 5]
+        Csc::from_dense(3, 3, &[1.0, 0.0, 2.0, 0.0, 3.0, 0.0, 4.0, 0.0, 5.0])
+    }
+
+    #[test]
+    fn from_raw_parts_validates() {
+        assert!(Csc::from_raw_parts(2, 2, vec![0, 1, 2], vec![0, 1], vec![1.0, 2.0]).is_ok());
+        // bad colptr head
+        assert!(Csc::from_raw_parts(2, 2, vec![1, 1, 2], vec![0, 1], vec![1.0, 2.0]).is_err());
+        // unsorted rows
+        assert!(Csc::from_raw_parts(3, 1, vec![0, 2], vec![2, 1], vec![1.0, 2.0]).is_err());
+        // duplicate rows
+        assert!(Csc::from_raw_parts(3, 1, vec![0, 2], vec![1, 1], vec![1.0, 2.0]).is_err());
+        // out-of-range row
+        assert!(Csc::from_raw_parts(2, 1, vec![0, 1], vec![5], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn get_and_nnz() {
+        let a = small();
+        assert_eq!(a.nnz(), 5);
+        assert_eq!(a.get(0, 0), 1.0);
+        assert_eq!(a.get(0, 2), 2.0);
+        assert_eq!(a.get(2, 2), 5.0);
+        assert_eq!(a.get(1, 0), 0.0);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let a = small();
+        let y = a.matvec(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![1.0 + 6.0, 6.0, 4.0 + 15.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = small();
+        let att = a.transpose().transpose();
+        assert_eq!(a, att);
+        assert_eq!(a.transpose().get(2, 0), 2.0);
+    }
+
+    #[test]
+    fn to_csr_matches() {
+        let a = small();
+        let csr = a.to_csr();
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(a.get(r, c), csr.get(r, c), "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn permute_identity_is_noop() {
+        let a = small();
+        let id: Vec<usize> = (0..3).collect();
+        assert_eq!(a.permute(&id, &id), a);
+    }
+
+    #[test]
+    fn permute_swap_rows() {
+        let a = small();
+        // swap rows 0 and 2
+        let p = vec![2, 1, 0];
+        let id: Vec<usize> = (0..3).collect();
+        let b = a.permute(&p, &id);
+        assert_eq!(b.get(0, 0), 4.0);
+        assert_eq!(b.get(2, 0), 1.0);
+    }
+
+    #[test]
+    fn scaling_applied() {
+        let a = small();
+        let id: Vec<usize> = (0..3).collect();
+        let b = a.permute_scale(&id, &id, Some(&[2.0, 1.0, 1.0]), Some(&[1.0, 1.0, 10.0]));
+        assert_eq!(b.get(0, 0), 2.0);
+        assert_eq!(b.get(0, 2), 40.0); // 2 * 2 * 10
+        assert_eq!(b.get(2, 2), 50.0);
+    }
+
+    #[test]
+    fn plus_transpose_symmetric() {
+        let a = small();
+        let s = a.plus_transpose_pattern();
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(s.has_entry(r, c), s.has_entry(c, r));
+            }
+        }
+        assert!(s.has_entry(0, 2) && s.has_entry(2, 0));
+    }
+
+    #[test]
+    fn full_diagonal_check() {
+        assert!(small().has_full_diagonal());
+        let b = Csc::from_dense(2, 2, &[0.0, 1.0, 1.0, 0.0]);
+        assert!(!b.has_full_diagonal());
+    }
+
+    #[test]
+    fn identity_properties() {
+        let i = Csc::identity(4);
+        assert_eq!(i.nnz(), 4);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(i.matvec(&x), x);
+    }
+}

@@ -1,0 +1,130 @@
+//! Compressed sparse row matrix — used where row access dominates
+//! (dependency detection "look left along row k", Matrix Market export,
+//! and the GLU2.0 double-U search which walks rows).
+
+/// A compressed sparse row matrix with `f64` values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    nrows: usize,
+    ncols: usize,
+    rowptr: Vec<usize>,
+    colidx: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from raw CSR arrays, validating invariants (mirror of CSC).
+    pub fn from_raw_parts(
+        nrows: usize,
+        ncols: usize,
+        rowptr: Vec<usize>,
+        colidx: Vec<usize>,
+        values: Vec<f64>,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(rowptr.len() == nrows + 1, "rowptr length mismatch");
+        anyhow::ensure!(rowptr[0] == 0, "rowptr[0] != 0");
+        anyhow::ensure!(
+            colidx.len() == *rowptr.last().unwrap() && values.len() == colidx.len(),
+            "index/value array length mismatch"
+        );
+        for r in 0..nrows {
+            anyhow::ensure!(rowptr[r] <= rowptr[r + 1], "rowptr not monotone at {r}");
+            let row = &colidx[rowptr[r]..rowptr[r + 1]];
+            for w in row.windows(2) {
+                anyhow::ensure!(w[0] < w[1], "cols not strictly increasing in row {r}");
+            }
+            if let Some(&last) = row.last() {
+                anyhow::ensure!(last < ncols, "col index out of range in row {r}");
+            }
+        }
+        Ok(Csr {
+            nrows,
+            ncols,
+            rowptr,
+            colidx,
+            values,
+        })
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.colidx.len()
+    }
+
+    pub fn rowptr(&self) -> &[usize] {
+        &self.rowptr
+    }
+
+    pub fn colidx(&self) -> &[usize] {
+        &self.colidx
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// The `(cols, values)` slices of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[usize], &[f64]) {
+        let (s, e) = (self.rowptr[r], self.rowptr[r + 1]);
+        (&self.colidx[s..e], &self.values[s..e])
+    }
+
+    /// Value at `(r, c)`; 0.0 if not stored.
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        let (cols, vals) = self.row(r);
+        match cols.binary_search(&c) {
+            Ok(i) => vals[i],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Whether `(r, c)` is a stored entry.
+    pub fn has_entry(&self, r: usize, c: usize) -> bool {
+        self.row(r).0.binary_search(&c).is_ok()
+    }
+
+    /// `y = A * x` (row-major traversal).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![0.0; self.nrows];
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            let mut acc = 0.0;
+            for (&c, &v) in cols.iter().zip(vals) {
+                acc += v * x[c];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Csc;
+
+    #[test]
+    fn validation() {
+        assert!(Csr::from_raw_parts(2, 2, vec![0, 1, 2], vec![0, 1], vec![1.0, 2.0]).is_ok());
+        assert!(Csr::from_raw_parts(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0, 2.0]).is_err());
+        assert!(Csr::from_raw_parts(1, 2, vec![0, 2], vec![1, 1], vec![1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn row_access_and_matvec() {
+        let a = Csc::from_dense(2, 3, &[1.0, 0.0, 2.0, 0.0, 3.0, 4.0]).to_csr();
+        assert_eq!(a.row(0).0, &[0, 2]);
+        assert_eq!(a.get(1, 1), 3.0);
+        assert!(!a.has_entry(1, 0));
+        assert_eq!(a.matvec(&[1.0, 1.0, 1.0]), vec![3.0, 7.0]);
+    }
+}

@@ -1,0 +1,218 @@
+//! Matrix Market (`.mtx`) reader / writer.
+//!
+//! The paper's suite comes from the UFL (SuiteSparse) collection, distributed
+//! in Matrix Market format. This environment is offline, so benchmarks run on
+//! the synthetic suite from [`crate::sparse::gen`] by default — but any real
+//! UFL `.mtx` file dropped next to the binary loads through this module
+//! unchanged (`coordinate real/integer/pattern`, `general/symmetric`).
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use super::coo::Coo;
+use super::csc::Csc;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Field {
+    Real,
+    Integer,
+    Pattern,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Symmetry {
+    General,
+    Symmetric,
+    SkewSymmetric,
+}
+
+/// Read a Matrix Market coordinate file into CSC.
+pub fn read_matrix_market(path: impl AsRef<Path>) -> anyhow::Result<Csc> {
+    let file = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    read_matrix_market_from(std::io::BufReader::new(file))
+}
+
+/// Read Matrix Market from any buffered reader (exposed for tests).
+pub fn read_matrix_market_from(reader: impl BufRead) -> anyhow::Result<Csc> {
+    let mut lines = reader.lines();
+
+    // Header: %%MatrixMarket matrix coordinate <field> <symmetry>
+    let header = loop {
+        match lines.next() {
+            Some(l) => {
+                let l = l?;
+                if !l.trim().is_empty() {
+                    break l;
+                }
+            }
+            None => bail!("empty file"),
+        }
+    };
+    let toks: Vec<String> = header
+        .trim()
+        .split_whitespace()
+        .map(|t| t.to_ascii_lowercase())
+        .collect();
+    if toks.len() < 5 || toks[0] != "%%matrixmarket" || toks[1] != "matrix" {
+        bail!("not a MatrixMarket matrix header: {header}");
+    }
+    if toks[2] != "coordinate" {
+        bail!("only coordinate format supported, got {}", toks[2]);
+    }
+    let field = match toks[3].as_str() {
+        "real" => Field::Real,
+        "integer" => Field::Integer,
+        "pattern" => Field::Pattern,
+        other => bail!("unsupported field type {other}"),
+    };
+    let symmetry = match toks[4].as_str() {
+        "general" => Symmetry::General,
+        "symmetric" => Symmetry::Symmetric,
+        "skew-symmetric" => Symmetry::SkewSymmetric,
+        other => bail!("unsupported symmetry {other}"),
+    };
+
+    // Size line (after comments).
+    let size_line = loop {
+        match lines.next() {
+            Some(l) => {
+                let l = l?;
+                let t = l.trim();
+                if !t.is_empty() && !t.starts_with('%') {
+                    break l;
+                }
+            }
+            None => bail!("missing size line"),
+        }
+    };
+    let mut it = size_line.trim().split_whitespace();
+    let nrows: usize = it.next().context("missing nrows")?.parse()?;
+    let ncols: usize = it.next().context("missing ncols")?.parse()?;
+    let nnz: usize = it.next().context("missing nnz")?.parse()?;
+
+    let mut coo = Coo::new(nrows, ncols);
+    let mut read = 0usize;
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut f = t.split_whitespace();
+        let r: usize = f.next().context("missing row")?.parse::<usize>()? - 1;
+        let c: usize = f.next().context("missing col")?.parse::<usize>()? - 1;
+        let v: f64 = match field {
+            Field::Pattern => 1.0,
+            _ => f.next().context("missing value")?.parse()?,
+        };
+        if r >= nrows || c >= ncols {
+            bail!("entry ({},{}) outside {}x{}", r + 1, c + 1, nrows, ncols);
+        }
+        coo.push(r, c, v);
+        match symmetry {
+            Symmetry::General => {}
+            Symmetry::Symmetric => {
+                if r != c {
+                    coo.push(c, r, v);
+                }
+            }
+            Symmetry::SkewSymmetric => {
+                if r != c {
+                    coo.push(c, r, -v);
+                }
+            }
+        }
+        read += 1;
+    }
+    if read != nnz {
+        bail!("expected {nnz} entries, found {read}");
+    }
+    Ok(coo.to_csc())
+}
+
+/// Write a CSC matrix as `coordinate real general`.
+pub fn write_matrix_market(path: impl AsRef<Path>, a: &Csc) -> anyhow::Result<()> {
+    let file = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "% written by glu3 (GLU3.0 reproduction)")?;
+    writeln!(w, "{} {} {}", a.nrows(), a.ncols(), a.nnz())?;
+    for c in 0..a.ncols() {
+        let (rows, vals) = a.col(c);
+        for (&r, &v) in rows.iter().zip(vals) {
+            writeln!(w, "{} {} {:.17e}", r + 1, c + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_general_real() {
+        let text = "%%MatrixMarket matrix coordinate real general\n\
+                    % comment\n\
+                    3 3 4\n\
+                    1 1 1.5\n\
+                    2 2 -2.0\n\
+                    3 1 4.0\n\
+                    3 3 1e2\n";
+        let a = read_matrix_market_from(Cursor::new(text)).unwrap();
+        assert_eq!(a.nrows(), 3);
+        assert_eq!(a.nnz(), 4);
+        assert_eq!(a.get(0, 0), 1.5);
+        assert_eq!(a.get(2, 0), 4.0);
+        assert_eq!(a.get(2, 2), 100.0);
+    }
+
+    #[test]
+    fn parse_symmetric_mirrors() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n\
+                    2 2 2\n\
+                    1 1 2.0\n\
+                    2 1 3.0\n";
+        let a = read_matrix_market_from(Cursor::new(text)).unwrap();
+        assert_eq!(a.nnz(), 3);
+        assert_eq!(a.get(0, 1), 3.0);
+        assert_eq!(a.get(1, 0), 3.0);
+    }
+
+    #[test]
+    fn parse_pattern() {
+        let text = "%%MatrixMarket matrix coordinate pattern general\n\
+                    2 2 2\n\
+                    1 2\n\
+                    2 1\n";
+        let a = read_matrix_market_from(Cursor::new(text)).unwrap();
+        assert_eq!(a.get(0, 1), 1.0);
+        assert_eq!(a.get(1, 0), 1.0);
+    }
+
+    #[test]
+    fn rejects_bad_header_and_counts() {
+        assert!(read_matrix_market_from(Cursor::new("garbage\n1 1 0\n")).is_err());
+        let short = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n";
+        assert!(read_matrix_market_from(Cursor::new(short)).is_err());
+    }
+
+    #[test]
+    fn roundtrip_through_tempfile() {
+        let mut coo = Coo::new(4, 4);
+        coo.push(0, 0, 1.0);
+        coo.push(3, 1, -2.5);
+        coo.push(2, 3, 1e-8);
+        let a = coo.to_csc();
+        let path = std::env::temp_dir().join("glu3_io_roundtrip.mtx");
+        write_matrix_market(&path, &a).unwrap();
+        let b = read_matrix_market(&path).unwrap();
+        assert_eq!(a, b);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,17 @@
+//! Sparse matrix substrate: COO / CSC / CSR storage, conversions,
+//! permutation, Matrix Market I/O, and synthetic circuit-matrix generators.
+//!
+//! CSC is the primary format — every LU algorithm in this crate is
+//! column-based, matching the Gilbert–Peierls tradition (KLU, NICSLU, GLU).
+
+pub mod coo;
+pub mod csc;
+pub mod csr;
+pub mod gen;
+pub mod io;
+pub mod perm;
+
+pub use coo::Coo;
+pub use csc::Csc;
+pub use csr::Csr;
+pub use perm::Permutation;

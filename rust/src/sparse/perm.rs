@@ -1,0 +1,130 @@
+//! Permutation vectors with explicit direction.
+//!
+//! Ordering code is a classic source of perm/inverse-perm bugs; this type
+//! pins the convention: `perm[old] == new` ("scatter" form), matching
+//! [`crate::sparse::Csc::permute`].
+
+/// A permutation of `0..n` stored in scatter form: `perm[old] = new`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Permutation {
+    perm: Vec<usize>,
+}
+
+impl Permutation {
+    /// Identity permutation of size `n`.
+    pub fn identity(n: usize) -> Self {
+        Permutation {
+            perm: (0..n).collect(),
+        }
+    }
+
+    /// From a scatter-form vector (`perm[old] = new`), validated.
+    pub fn from_scatter(perm: Vec<usize>) -> anyhow::Result<Self> {
+        let n = perm.len();
+        let mut seen = vec![false; n];
+        for &p in &perm {
+            anyhow::ensure!(p < n, "permutation value {p} out of range");
+            anyhow::ensure!(!seen[p], "duplicate permutation value {p}");
+            seen[p] = true;
+        }
+        Ok(Permutation { perm })
+    }
+
+    /// From gather form (`order[new] = old`, e.g. an elimination order).
+    pub fn from_order(order: &[usize]) -> anyhow::Result<Self> {
+        let n = order.len();
+        let mut perm = vec![usize::MAX; n];
+        for (new, &old) in order.iter().enumerate() {
+            anyhow::ensure!(old < n, "order value {old} out of range");
+            anyhow::ensure!(perm[old] == usize::MAX, "duplicate order value {old}");
+            perm[old] = new;
+        }
+        Ok(Permutation { perm })
+    }
+
+    pub fn len(&self) -> usize {
+        self.perm.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.perm.is_empty()
+    }
+
+    /// Scatter-form slice: `as_scatter()[old] = new`.
+    pub fn as_scatter(&self) -> &[usize] {
+        &self.perm
+    }
+
+    /// Gather form: `gather()[new] = old`.
+    pub fn gather(&self) -> Vec<usize> {
+        let mut inv = vec![0usize; self.perm.len()];
+        for (old, &new) in self.perm.iter().enumerate() {
+            inv[new] = old;
+        }
+        inv
+    }
+
+    /// Inverse permutation (scatter form of the inverse).
+    pub fn inverse(&self) -> Permutation {
+        Permutation {
+            perm: self.gather(),
+        }
+    }
+
+    /// Apply to a vector: `out[perm[i]] = x[i]`.
+    pub fn apply<T: Clone + Default>(&self, x: &[T]) -> Vec<T> {
+        assert_eq!(x.len(), self.perm.len());
+        let mut out = vec![T::default(); x.len()];
+        for (old, &new) in self.perm.iter().enumerate() {
+            out[new] = x[old].clone();
+        }
+        out
+    }
+
+    /// Compose: `self` then `other` (`(other ∘ self)[old] = other[self[old]]`).
+    pub fn then(&self, other: &Permutation) -> Permutation {
+        assert_eq!(self.len(), other.len());
+        Permutation {
+            perm: self.perm.iter().map(|&m| other.perm[m]).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_apply() {
+        let p = Permutation::identity(3);
+        assert_eq!(p.apply(&[1, 2, 3]), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn scatter_validation() {
+        assert!(Permutation::from_scatter(vec![1, 1]).is_err());
+        assert!(Permutation::from_scatter(vec![2, 0]).is_err());
+        assert!(Permutation::from_scatter(vec![1, 0]).is_ok());
+    }
+
+    #[test]
+    fn order_vs_scatter() {
+        // elimination order: first eliminate old index 2, then 0, then 1.
+        let p = Permutation::from_order(&[2, 0, 1]).unwrap();
+        assert_eq!(p.as_scatter(), &[1, 2, 0]); // old 0 -> position 1, etc.
+        assert_eq!(p.gather(), vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn inverse_composes_to_identity() {
+        let p = Permutation::from_scatter(vec![2, 0, 3, 1]).unwrap();
+        let id = p.then(&p.inverse());
+        assert_eq!(id, Permutation::identity(4));
+    }
+
+    #[test]
+    fn apply_scatters() {
+        let p = Permutation::from_scatter(vec![2, 0, 1]).unwrap();
+        assert_eq!(p.apply(&[10, 20, 30]), vec![20, 30, 10]);
+    }
+}

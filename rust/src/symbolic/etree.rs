@@ -1,0 +1,94 @@
+//! Column elimination tree over a filled pattern.
+//!
+//! `parent[j] = min { i > j : L(i, j) ≠ 0 }` (or `NONE` for roots). SuperLU
+//! and NICSLU schedule column tasks with this tree; here it feeds the
+//! multithreaded CPU baseline and provides an independent check of the
+//! levelization (a column's level must be ≥ its tree depth over U-pattern
+//! dependencies).
+
+use crate::sparse::Csc;
+
+/// Sentinel for "no parent" (tree root).
+pub const NONE: usize = usize::MAX;
+
+/// Compute the elimination tree from a *filled* pattern `As = L + U`.
+pub fn etree_from_filled(filled: &Csc) -> Vec<usize> {
+    let n = filled.ncols();
+    let mut parent = vec![NONE; n];
+    for j in 0..n {
+        let (rows, _) = filled.col(j);
+        // first L entry strictly below the diagonal
+        if let Some(&r) = rows.iter().find(|&&r| r > j) {
+            parent[j] = r;
+        }
+    }
+    parent
+}
+
+/// Depth of each node in the tree (roots have depth 0).
+pub fn tree_depths(parent: &[usize]) -> Vec<usize> {
+    let n = parent.len();
+    let mut depth = vec![usize::MAX; n];
+    for mut v in 0..n {
+        // walk up until a known depth, collecting the path
+        let mut path = Vec::new();
+        while depth[v] == usize::MAX {
+            path.push(v);
+            if parent[v] == NONE {
+                depth[v] = 0;
+                break;
+            }
+            v = parent[v];
+        }
+        let mut d = depth[v];
+        for &u in path.iter().rev() {
+            if depth[u] == usize::MAX {
+                d += 1;
+                depth[u] = d;
+            }
+        }
+    }
+    depth
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::symbolic::symbolic_fill;
+
+    #[test]
+    fn chain_gives_path_tree() {
+        let a = gen::ladder(16, 16, 0, 1); // tridiagonal chain
+        let f = symbolic_fill(&a).unwrap();
+        let p = etree_from_filled(&f.filled);
+        for j in 0..15 {
+            assert_eq!(p[j], j + 1);
+        }
+        assert_eq!(p[15], NONE);
+        let d = tree_depths(&p);
+        assert_eq!(d[0], 15);
+        assert_eq!(d[15], 0);
+    }
+
+    #[test]
+    fn diagonal_matrix_all_roots() {
+        let a = crate::sparse::Csc::identity(5);
+        let f = symbolic_fill(&a).unwrap();
+        let p = etree_from_filled(&f.filled);
+        assert!(p.iter().all(|&x| x == NONE));
+        assert!(tree_depths(&p).iter().all(|&d| d == 0));
+    }
+
+    #[test]
+    fn parents_strictly_increase() {
+        let a = gen::netlist(120, 6, 10, 0.05, 2, 0.2, 8);
+        let f = symbolic_fill(&a).unwrap();
+        let p = etree_from_filled(&f.filled);
+        for (j, &pj) in p.iter().enumerate() {
+            if pj != NONE {
+                assert!(pj > j);
+            }
+        }
+    }
+}

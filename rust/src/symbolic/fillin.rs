@@ -1,0 +1,234 @@
+//! Gilbert–Peierls symbolic fill-in.
+//!
+//! For each column `j`, the nonzero pattern of column `j` of `L+U` is the set
+//! of nodes reachable from the pattern of `A(:,j)` in the DAG of already-
+//! factorized `L` columns (edge `i → t` when `L(t,i) ≠ 0`, `t > i`,
+//! propagating only through `i < j`). This is exactly the pattern the
+//! numeric triangular solve of Algorithm 1 touches, so the numeric kernels
+//! can run data-oblivious on the filled pattern.
+
+use crate::sparse::Csc;
+
+/// Result of symbolic analysis.
+#[derive(Debug, Clone)]
+pub struct SymbolicFill {
+    /// `As`: the filled matrix. Structural union of `A` and all fill;
+    /// values are copied from `A` (0.0 at fill positions).
+    pub filled: Csc,
+    /// Number of entries of `filled` that are fill (not structural in `A`).
+    pub fill_count: usize,
+}
+
+impl SymbolicFill {
+    /// nnz of `A` before fill (`filled.nnz() - fill_count`).
+    pub fn nz_original(&self) -> usize {
+        self.filled.nnz() - self.fill_count
+    }
+}
+
+/// Compute the filled pattern `As = L + U` of `a` (no pivoting — GLU's
+/// regime: the diagonal must be structurally present and numerically usable,
+/// which MC64-style preprocessing establishes).
+pub fn symbolic_fill(a: &Csc) -> anyhow::Result<SymbolicFill> {
+    anyhow::ensure!(a.nrows() == a.ncols(), "matrix must be square");
+    let n = a.nrows();
+    anyhow::ensure!(
+        a.has_full_diagonal(),
+        "diagonal must be structurally full (run MC64 matching first)"
+    );
+
+    // L patterns discovered so far: lower[c] = sorted rows > c of column c.
+    let mut lower: Vec<Vec<u32>> = Vec::with_capacity(n);
+
+    let mut colptr = Vec::with_capacity(n + 1);
+    colptr.push(0usize);
+    let mut rowidx: Vec<usize> = Vec::new();
+    let mut values: Vec<f64> = Vec::new();
+
+    // DFS scratch.
+    let mut marked = vec![u32::MAX; n]; // marked[i] == j means visited in col j
+    let mut dfs_stack: Vec<(u32, u32)> = Vec::new(); // (node, next child index)
+    let mut pattern: Vec<u32> = Vec::new();
+
+    let mut fill_count = 0usize;
+
+    for j in 0..n {
+        pattern.clear();
+        let ju = j as u32;
+        let (arows, _) = a.col(j);
+        for &r in arows {
+            // DFS from r through the L DAG (only nodes < j propagate).
+            if marked[r] == ju {
+                continue;
+            }
+            dfs_stack.clear();
+            marked[r] = ju;
+            dfs_stack.push((r as u32, 0));
+            while let Some(&mut (v, ref mut ci)) = dfs_stack.last_mut() {
+                let v_ = v as usize;
+                if v_ >= j {
+                    // L part of the current column: no outgoing edges yet.
+                    pattern.push(v);
+                    dfs_stack.pop();
+                    continue;
+                }
+                let kids = &lower[v_];
+                let mut pushed = false;
+                while (*ci as usize) < kids.len() {
+                    let t = kids[*ci as usize];
+                    *ci += 1;
+                    if marked[t as usize] != ju {
+                        marked[t as usize] = ju;
+                        dfs_stack.push((t, 0));
+                        pushed = true;
+                        break;
+                    }
+                }
+                if !pushed {
+                    pattern.push(v);
+                    dfs_stack.pop();
+                }
+            }
+        }
+        pattern.sort_unstable();
+
+        // Record column j of the filled matrix and its L pattern.
+        let mut lcol: Vec<u32> = Vec::new();
+        for &r in &pattern {
+            let r_ = r as usize;
+            rowidx.push(r_);
+            let v = a.get(r_, j);
+            if !a.has_entry(r_, j) {
+                fill_count += 1;
+            }
+            values.push(v);
+            if r > ju {
+                lcol.push(r);
+            }
+        }
+        lower.push(lcol);
+        colptr.push(rowidx.len());
+    }
+
+    let filled = Csc::from_raw_parts(n, n, colptr, rowidx, values)?;
+    Ok(SymbolicFill { filled, fill_count })
+}
+
+/// Dense-oracle symbolic factorization for tests: simulate right-looking
+/// Gaussian elimination on a boolean dense matrix, return the filled pattern.
+#[cfg(test)]
+pub fn dense_symbolic_oracle(a: &Csc) -> Vec<bool> {
+    let n = a.nrows();
+    let mut p = vec![false; n * n];
+    for c in 0..n {
+        let (rows, _) = a.col(c);
+        for &r in rows {
+            p[r * n + c] = true;
+        }
+    }
+    for k in 0..n {
+        assert!(p[k * n + k], "zero diagonal in oracle");
+        for i in k + 1..n {
+            if p[i * n + k] {
+                for j in k + 1..n {
+                    if p[k * n + j] {
+                        p[i * n + j] = true;
+                    }
+                }
+            }
+        }
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{gen, Coo};
+    use crate::util::Rng;
+
+    use crate::bench_support::paper_example;
+
+    #[test]
+    fn matches_dense_oracle_small_random() {
+        let mut rng = Rng::new(17);
+        for trial in 0..30 {
+            let n = rng.range(4, 24);
+            // random sparse pattern with full diagonal
+            let mut coo = Coo::new(n, n);
+            for i in 0..n {
+                coo.push(i, i, 10.0);
+            }
+            let extras = rng.range(n, 3 * n);
+            for _ in 0..extras {
+                let r = rng.below(n);
+                let c = rng.below(n);
+                if r != c {
+                    coo.push(r, c, -1.0);
+                }
+            }
+            let a = coo.to_csc();
+            let f = symbolic_fill(&a).unwrap();
+            let oracle = dense_symbolic_oracle(&a);
+            for c in 0..n {
+                for r in 0..n {
+                    assert_eq!(
+                        f.filled.has_entry(r, c),
+                        oracle[r * n + c],
+                        "trial {trial}: mismatch at ({r},{c})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_fill_on_tridiagonal() {
+        let a = gen::ladder(32, 32, 0, 1);
+        let f = symbolic_fill(&a).unwrap();
+        assert_eq!(f.fill_count, 0);
+        assert_eq!(f.filled.nnz(), a.nnz());
+    }
+
+    #[test]
+    fn fill_values_copied_from_a() {
+        let a = gen::grid2d(5, 5, 3);
+        let f = symbolic_fill(&a).unwrap();
+        for c in 0..a.ncols() {
+            let (rows, vals) = f.filled.col(c);
+            for (&r, &v) in rows.iter().zip(vals) {
+                assert_eq!(v, a.get(r, c));
+            }
+        }
+        assert_eq!(f.nz_original(), a.nnz());
+    }
+
+    #[test]
+    fn grid_fill_is_positive() {
+        let a = gen::grid2d(8, 8, 5);
+        let f = symbolic_fill(&a).unwrap();
+        assert!(f.fill_count > 0, "2-D grids always fill in");
+    }
+
+    #[test]
+    fn paper_example_column7_updates() {
+        // Fig. 2: factorizing column 7 (0-based 6) uses columns 4 and 6
+        // (0-based 3 and 5): U entries A(3,6) and A(5,6) must be present.
+        let a = paper_example();
+        let f = symbolic_fill(&a).unwrap();
+        assert!(f.filled.has_entry(3, 6));
+        assert!(f.filled.has_entry(5, 6));
+        // Fig. 2(a): col 4's L pattern includes rows 6 and 8 (0-based 5, 7).
+        assert!(f.filled.has_entry(5, 3));
+        assert!(f.filled.has_entry(7, 3));
+    }
+
+    #[test]
+    fn rejects_missing_diagonal() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 1, 1.0);
+        coo.push(1, 0, 1.0);
+        assert!(symbolic_fill(&coo.to_csc()).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Symbolic analysis: fill-in computation and elimination-tree utilities.
+//!
+//! GLU (like KLU/NICSLU) performs all symbolic work once on the CPU; the
+//! numeric GPU kernel then runs on a *static* filled pattern `As = L + U`.
+//! This module computes that pattern with the Gilbert–Peierls reachability
+//! argument, and derives the column elimination tree used by tests and the
+//! multithreaded CPU baseline.
+
+pub mod etree;
+pub mod fillin;
+
+pub use fillin::{symbolic_fill, SymbolicFill};

@@ -1,0 +1,11 @@
+//! Small shared utilities: deterministic PRNG, timers, stats helpers.
+//!
+//! The build environment is offline (no `rand`, no `criterion`), so the crate
+//! carries its own tiny, well-tested PRNG and measurement helpers.
+
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Stopwatch;

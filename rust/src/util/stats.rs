@@ -1,0 +1,54 @@
+//! Aggregate statistics used by the bench tables (the paper reports both
+//! arithmetic and geometric means of speedup ratios).
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn arith_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Geometric mean over strictly-positive values; 0.0 for an empty slice.
+pub fn geo_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    debug_assert!(xs.iter().all(|&x| x > 0.0));
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Relative L∞ error between two vectors, `max |a-b| / (1 + |b|)`.
+pub fn rel_linf(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs() / (1.0 + y.abs()))
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn means_basic() {
+        assert_eq!(arith_mean(&[1.0, 3.0]), 2.0);
+        assert!((geo_mean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(arith_mean(&[]), 0.0);
+        assert_eq!(geo_mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn geo_mean_matches_paper_style() {
+        // geometric mean of {2, 8} is 4; of {10, 1000} is 100.
+        assert!((geo_mean(&[10.0, 1000.0]) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rel_linf_zero_for_equal() {
+        let v = vec![1.0, -2.0, 3.5];
+        assert_eq!(rel_linf(&v, &v), 0.0);
+        assert!(rel_linf(&[1.0], &[1.1]) > 0.0);
+    }
+}

@@ -1,0 +1,113 @@
+//! Wall-clock measurement helpers (criterion is unavailable offline; the
+//! bench harnesses in `rust/benches/` are built on these).
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch accumulating named phases.
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    phases: Vec<(String, Duration)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f`, record it under `name`, and return its value.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.phases.push((name.to_string(), t0.elapsed()));
+        out
+    }
+
+    /// Total across all recorded phases.
+    pub fn total(&self) -> Duration {
+        self.phases.iter().map(|(_, d)| *d).sum()
+    }
+
+    /// Duration of the (last-recorded) phase with this name, if any.
+    pub fn get(&self, name: &str) -> Option<Duration> {
+        self.phases
+            .iter()
+            .rev()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+    }
+
+    /// All recorded `(name, duration)` pairs in insertion order.
+    pub fn phases(&self) -> &[(String, Duration)] {
+        &self.phases
+    }
+}
+
+/// Measure `f` repeatedly: `warmup` unrecorded runs, then `iters` recorded
+/// runs; returns (min, median, mean) in seconds. The bench harness's
+/// replacement for criterion's sampling.
+pub fn measure<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> MeasureStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    MeasureStats::from_samples(samples)
+}
+
+/// Summary statistics over timing samples (seconds).
+#[derive(Debug, Clone)]
+pub struct MeasureStats {
+    pub samples: Vec<f64>,
+    pub min: f64,
+    pub median: f64,
+    pub mean: f64,
+}
+
+impl MeasureStats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.total_cmp(b));
+        let min = samples[0];
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        MeasureStats {
+            samples,
+            min,
+            median,
+            mean,
+        }
+    }
+
+    /// Median in milliseconds — the headline number the tables print.
+    pub fn median_ms(&self) -> f64 {
+        self.median * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_records_phases() {
+        let mut sw = Stopwatch::new();
+        let x = sw.time("work", || (0..1000).sum::<usize>());
+        assert_eq!(x, 499_500);
+        assert!(sw.get("work").is_some());
+        assert!(sw.get("missing").is_none());
+        assert_eq!(sw.phases().len(), 1);
+        assert!(sw.total() >= sw.get("work").unwrap());
+    }
+
+    #[test]
+    fn measure_returns_ordered_stats() {
+        let stats = measure(1, 9, || std::thread::sleep(Duration::from_micros(50)));
+        assert_eq!(stats.samples.len(), 9);
+        assert!(stats.min <= stats.median);
+        assert!(stats.min > 0.0);
+    }
+}

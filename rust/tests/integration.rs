@@ -1,0 +1,190 @@
+//! Cross-module integration tests: the full pipeline on generated suites,
+//! engine equivalences, paper-claim checks at integration scope, and the
+//! PJRT runtime against the native solver.
+
+use glu3::depend::levelize::validate_hazard_free;
+use glu3::depend::{glu2, glu3 as g3, levelize};
+use glu3::glu::{Detection, GluOptions, GluSolver, NumericEngine};
+use glu3::gpusim::{simulate_factorization, DeviceConfig, Policy};
+use glu3::numeric::{leftlook, residual};
+use glu3::order::{preprocess, FillOrdering};
+use glu3::sparse::gen::{self, SuiteMatrix};
+use glu3::symbolic::symbolic_fill;
+
+/// The full pipeline solves every small suite matrix accurately.
+#[test]
+fn pipeline_small_suite() {
+    for m in [SuiteMatrix::Rajat12, SuiteMatrix::Circuit2] {
+        let a = gen::generate(&m.spec());
+        let mut s = GluSolver::factor(&a, &GluOptions::default()).unwrap();
+        let n = a.nrows();
+        let b: Vec<f64> = (0..n).map(|i| ((i % 23) as f64) - 11.0).collect();
+        let x = s.solve(&b).unwrap();
+        let r = residual(&a, &x, &b);
+        assert!(r < 1e-7, "{}: residual {r}", m.ufl_name());
+    }
+}
+
+/// GPU-simulated factors == CPU oracle factors on a real suite matrix.
+#[test]
+fn simulator_matches_oracle_on_suite_matrix() {
+    let a = gen::generate(&SuiteMatrix::Rajat12.spec());
+    let pre = preprocess(&a, FillOrdering::Amd, true).unwrap();
+    let sym = symbolic_fill(&pre.a).unwrap();
+    let lv = levelize(&g3::detect(&sym.filled));
+    validate_hazard_free(&sym.filled, &lv).unwrap();
+
+    let (lu_sim, _) =
+        simulate_factorization(&sym, &lv, &Policy::glu3(), &DeviceConfig::titan_x()).unwrap();
+    let lu_ref = leftlook::factor(&sym).unwrap();
+    for (p, q) in lu_sim.lu.values().iter().zip(lu_ref.lu.values()) {
+        assert!((p - q).abs() < 1e-8 * (1.0 + q.abs()));
+    }
+}
+
+/// Paper Table II claim at integration scope: relaxed detection is much
+/// faster than the double-U search and costs at most a few extra levels.
+#[test]
+fn relaxed_detection_faster_and_equivalent() {
+    let a = gen::generate(&SuiteMatrix::Circuit2.spec());
+    let pre = preprocess(&a, FillOrdering::Amd, true).unwrap();
+    let sym = symbolic_fill(&pre.a).unwrap();
+
+    let t2 = std::time::Instant::now();
+    let d2 = glu2::detect(&sym.filled);
+    let time2 = t2.elapsed();
+    let t3 = std::time::Instant::now();
+    let d3 = g3::detect(&sym.filled);
+    let time3 = t3.elapsed();
+
+    let l2 = levelize(&d2).num_levels();
+    let l3 = levelize(&d3).num_levels();
+    assert!(l3 >= l2 && l3 <= l2 + 10, "levels {l2} vs {l3}");
+    assert!(
+        time3 < time2,
+        "relaxed {time3:?} must beat double-U {time2:?}"
+    );
+}
+
+/// All engines produce the same solution through the full pipeline.
+#[test]
+fn engines_agree_through_pipeline() {
+    let a = gen::generate(&SuiteMatrix::Rajat12.spec());
+    let n = a.nrows();
+    let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+    let mut solutions = Vec::new();
+    for engine in [
+        NumericEngine::SimulatedGpu,
+        NumericEngine::LeftLookingCpu,
+        NumericEngine::RightLookingCpu,
+        NumericEngine::ParallelCpu { threads: 2 },
+    ] {
+        let opts = GluOptions {
+            engine,
+            ..Default::default()
+        };
+        let mut s = GluSolver::factor(&a, &opts).unwrap();
+        solutions.push(s.solve(&b).unwrap());
+    }
+    for x in &solutions[1..] {
+        for (p, q) in x.iter().zip(&solutions[0]) {
+            assert!((p - q).abs() < 1e-8 * (1.0 + q.abs()));
+        }
+    }
+}
+
+/// GLU2.0 exact detection also drives the simulator correctly.
+#[test]
+fn glu2_detection_full_pipeline() {
+    let a = gen::generate(&SuiteMatrix::Rajat12.spec());
+    let opts = GluOptions {
+        detection: Detection::Glu2,
+        ..Default::default()
+    };
+    let mut s = GluSolver::factor(&a, &opts).unwrap();
+    let b = vec![1.0; a.nrows()];
+    let x = s.solve(&b).unwrap();
+    assert!(residual(&a, &x, &b) < 1e-7);
+}
+
+/// Matrix Market round-trip feeds the pipeline identically.
+#[test]
+fn matrix_market_roundtrip_pipeline() {
+    let a = gen::generate(&SuiteMatrix::Rajat12.spec());
+    let path = std::env::temp_dir().join("glu3_integration_rt.mtx");
+    glu3::sparse::io::write_matrix_market(&path, &a).unwrap();
+    let b = glu3::sparse::io::read_matrix_market(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(a, b);
+    let mut s = GluSolver::factor(&b, &GluOptions::default()).unwrap();
+    let rhs = vec![1.0; b.nrows()];
+    let x = s.solve(&rhs).unwrap();
+    assert!(residual(&a, &x, &rhs) < 1e-7);
+}
+
+/// PJRT runtime agrees with the native dense solver (skips without
+/// artifacts — `make artifacts` first).
+#[test]
+fn pjrt_dense_tail_vs_native() {
+    let dir = glu3::runtime::default_artifact_dir();
+    if !dir.join("quickstart.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = glu3::runtime::Runtime::load(dir).unwrap();
+    // take the trailing 48x48 dense block of a factored suite matrix as a
+    // realistic tail system
+    let a = gen::generate(&SuiteMatrix::Rajat12.spec());
+    let pre = preprocess(&a, FillOrdering::Amd, true).unwrap();
+    let sym = symbolic_fill(&pre.a).unwrap();
+    let n = sym.filled.ncols();
+    let t = 48;
+    let mut tail = vec![0f32; t * t];
+    for (ci, c) in (n - t..n).enumerate() {
+        let (rows, vals) = sym.filled.col(c);
+        for (&r, &v) in rows.iter().zip(vals) {
+            if r >= n - t {
+                tail[(r - (n - t)) * t + ci] = v as f32;
+            }
+        }
+    }
+    // make it solvable standalone (diagonal boost)
+    for d in 0..t {
+        let sum: f32 = (0..t).filter(|&r| r != d).map(|r| tail[r * t + d].abs()).sum();
+        tail[d * t + d] += sum + 1.0;
+    }
+    let rhs: Vec<f32> = (0..t).map(|i| ((i % 5) as f32) - 2.0).collect();
+    let (_, x) = rt.dense_tail_solve(&tail, &rhs, t).unwrap();
+    let a64: Vec<f64> = tail.iter().map(|&v| v as f64).collect();
+    let b64: Vec<f64> = rhs.iter().map(|&v| v as f64).collect();
+    let want = glu3::numeric::dense::solve(&a64, t, &b64).unwrap();
+    for (g, w) in x.iter().zip(&want) {
+        assert!((*g as f64 - w).abs() < 1e-3 * (1.0 + w.abs()));
+    }
+}
+
+/// Failure injection: structurally singular and numerically singular
+/// matrices are rejected with errors, not bad answers.
+#[test]
+fn singular_inputs_rejected() {
+    use glu3::sparse::Coo;
+    // empty column
+    let mut coo = Coo::new(3, 3);
+    coo.push(0, 0, 1.0);
+    coo.push(1, 1, 1.0);
+    coo.push(2, 0, 1.0);
+    assert!(GluSolver::factor(&coo.to_csc(), &GluOptions::default()).is_err());
+
+    // exact cancellation pivot
+    let mut coo = Coo::new(2, 2);
+    coo.push(0, 0, 1.0);
+    coo.push(0, 1, 1.0);
+    coo.push(1, 0, 1.0);
+    coo.push(1, 1, 1.0);
+    let opts = GluOptions {
+        scale: false,
+        ordering: FillOrdering::Natural,
+        ..Default::default()
+    };
+    assert!(GluSolver::factor(&coo.to_csc(), &opts).is_err());
+}
