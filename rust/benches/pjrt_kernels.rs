@@ -9,6 +9,10 @@ use glu3::runtime::{default_artifact_dir, Runtime};
 use glu3::util::timer::measure;
 
 fn main() {
+    if !glu3::runtime::PJRT_ENABLED {
+        println!("pjrt_kernels: built without the pjrt feature — skipping");
+        return;
+    }
     let dir = default_artifact_dir();
     if !dir.join("quickstart.hlo.txt").exists() {
         println!("pjrt_kernels: artifacts not built (make artifacts) — skipping");

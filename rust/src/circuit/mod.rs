@@ -14,4 +14,4 @@ pub mod transient;
 
 pub use mna::MnaSystem;
 pub use netlist::{parse_netlist, Element, Netlist};
-pub use transient::{transient, TranOptions, TranResult};
+pub use transient::{transient, transient_in, TranOptions, TranResult};

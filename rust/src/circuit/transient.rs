@@ -10,7 +10,8 @@
 use super::mna::MnaSystem;
 use super::netlist::Netlist;
 use crate::coordinator::nr::NonlinearSystem;
-use crate::glu::{GluOptions, GluSolver};
+use crate::coordinator::pool::{Checkout, SolverPool};
+use crate::glu::GluOptions;
 
 /// Transient options.
 #[derive(Debug, Clone)]
@@ -48,7 +49,9 @@ pub struct TranResult {
     /// Sum of numeric-kernel time, ms (simulated-GPU kernel ms when the
     /// GPU engine is configured).
     pub numeric_ms_total: f64,
-    /// One-time CPU preprocessing + symbolic + levelization time, ms.
+    /// One-time CPU preprocessing + symbolic + levelization time, ms
+    /// (0 when the simulation ran against an already-warm [`SolverPool`]
+    /// and never factored).
     pub cpu_ms_once: f64,
 }
 
@@ -59,23 +62,37 @@ impl TranResult {
     }
 }
 
-/// Run a backward-Euler transient from the DC operating point `x0`.
+/// Run a backward-Euler transient from the DC operating point `x0` with a
+/// private, single-pattern pool. See [`transient_in`] to share a
+/// [`SolverPool`] across simulations (Monte-Carlo corners, concurrent
+/// sessions): the pattern cache then carries the symbolic state from one
+/// run to the next and even the first Newton solve refactors.
 pub fn transient(netlist: &Netlist, x0: &[f64], opts: &TranOptions) -> anyhow::Result<TranResult> {
+    let pool = SolverPool::with_config(opts.glu.clone(), 1, 1);
+    transient_in(netlist, x0, opts, &pool)
+}
+
+/// Run a backward-Euler transient, solving every Newton step through
+/// `pool`. The Jacobian pattern is fixed for the whole simulation, so the
+/// pool factors at most once (not at all when already warm) and every other
+/// solve takes the numeric-only refactor fast path.
+pub fn transient_in(
+    netlist: &Netlist,
+    x0: &[f64],
+    opts: &TranOptions,
+    pool: &SolverPool,
+) -> anyhow::Result<TranResult> {
     let mut sys = MnaSystem::dc(netlist.clone());
     sys.dt = Some(opts.dt);
     sys.x_prev = x0.to_vec();
     let dim = sys.dim();
     anyhow::ensure!(x0.len() == dim, "x0 dimension mismatch");
 
-    // Factor once on the initial Jacobian: symbolic state lives for the
-    // whole simulation.
     let mut x = x0.to_vec();
-    let j0 = sys.jacobian(&x);
-    let mut solver = GluSolver::factor(&j0, &opts.glu)?;
-    let cpu_ms_once = solver.stats().cpu_ms();
-    let mut numeric_ms_total = solver.stats().numeric_ms;
+    let mut cpu_ms_once = 0.0f64;
+    let mut numeric_ms_total = 0.0f64;
     let mut nr_iterations = 0usize;
-    let mut refactorizations = 1usize;
+    let mut refactorizations = 0usize;
 
     let mut times = vec![0.0];
     let mut waveforms = vec![x.clone()];
@@ -84,20 +101,26 @@ pub fn transient(netlist: &Netlist, x0: &[f64], opts: &TranOptions) -> anyhow::R
         sys.x_prev = x.clone();
         // Newton loop for this time point.
         let mut converged = false;
-        for it in 0..opts.nr_max_iters {
+        for _it in 0..opts.nr_max_iters {
             let f = sys.residual(&x);
             let norm = f.iter().map(|v| v.abs()).fold(0.0, f64::max);
             if norm < opts.nr_abstol {
                 converged = true;
                 break;
             }
-            if it > 0 || step > 0 {
-                let j = sys.jacobian(&x);
-                solver.refactor(&j)?;
-                refactorizations += 1;
-                numeric_ms_total += solver.stats().numeric_ms;
+            let j = sys.jacobian(&x);
+            let mut guard = pool.checkout(&j)?;
+            if guard.outcome() == Checkout::Factored {
+                // CPU cost (preprocess + symbolic + levelization) of each
+                // factorization this simulation paid — normally exactly one,
+                // but accumulated in case a shared pool evicted the pattern
+                // mid-run and it had to be re-analyzed.
+                cpu_ms_once += guard.stats().cpu_ms();
             }
-            let dx = solver.solve(&f)?;
+            refactorizations += 1;
+            numeric_ms_total += guard.stats().numeric_ms;
+            let dx = guard.solve(&f)?;
+            drop(guard);
             for (xi, di) in x.iter_mut().zip(&dx) {
                 *xi -= di;
             }
@@ -199,6 +222,48 @@ mod tests {
         let last = res.waveforms.last().unwrap();
         for (p, q) in first.iter().zip(last) {
             assert!((p - q).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn warm_pool_transient_never_factors() {
+        use crate::coordinator::pool::SolverPool;
+        use crate::glu::GluOptions;
+
+        let nl = parse_netlist(
+            "V1 in 0 1\n\
+             R1 in out 1k\n\
+             C1 out 0 1u\n",
+        )
+        .unwrap();
+        let sys = MnaSystem::dc(nl.clone());
+        let dim = sys.dim();
+        let mut x0 = vec![0.0; dim];
+        x0[nl.node("in").unwrap() - 1] = 1.0;
+        let opts = TranOptions {
+            dt: 1e-4,
+            steps: 5,
+            ..Default::default()
+        };
+        let pool = SolverPool::new(GluOptions::default());
+
+        let r1 = transient_in(&nl, &x0, &opts, &pool).unwrap();
+        assert!(r1.cpu_ms_once >= 0.0);
+        assert_eq!(pool.stats().factors, 1);
+
+        // Second run with the warm pool: zero factorizations, all hits.
+        let r2 = transient_in(&nl, &x0, &opts, &pool).unwrap();
+        assert_eq!(pool.stats().factors, 1);
+        assert_eq!(r2.cpu_ms_once, 0.0);
+        assert_eq!(
+            pool.stats().hits as usize,
+            r1.nr_iterations + r2.nr_iterations - 1
+        );
+        // identical waveforms
+        for (a, b) in r1.waveforms.iter().zip(&r2.waveforms) {
+            for (p, q) in a.iter().zip(b) {
+                assert!((p - q).abs() < 1e-12);
+            }
         }
     }
 }

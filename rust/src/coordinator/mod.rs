@@ -1,15 +1,25 @@
-//! Layer-3 coordinator: a threaded solver service and the Newton–Raphson
+//! Layer-3 coordinator: the batched solver service and the Newton–Raphson
 //! refactorization driver.
 //!
-//! The paper's system is a *solver*, so L3 is a thin-but-real runtime: a
-//! worker thread owns each factored system (symbolic state is large and
-//! reusable), clients submit solve/refactor jobs over channels, and the
-//! service batches multiple right-hand sides against one set of factors —
-//! the access pattern of a SPICE transient loop, where one Jacobian pattern
-//! is refactored per Newton step and solved against one or more RHS.
+//! The paper's system is a *solver*, so L3 is a thin-but-real runtime with
+//! two serving layers:
+//!
+//! - [`pool`] — the [`SolverPool`]: a sharded, pattern-keyed symbolic cache.
+//!   Requests carrying a matrix whose sparsity pattern has been seen before
+//!   take the refactor fast path (numeric kernel only); new patterns pay one
+//!   full factorization and are cached with LRU eviction. Batched multi-RHS
+//!   solves amortize the permute/trisolve setup, and per-request latency is
+//!   tracked for p50/p99 reporting. This is the layer the NR driver
+//!   ([`nr`]) and the transient simulator route through.
+//! - [`service`] — the named-handle worker-thread service: one thread owns
+//!   each factored system, clients submit solve/refactor jobs over channels.
+//!   Useful when systems are long-lived and callers want isolation rather
+//!   than a shared cache.
 
 pub mod nr;
+pub mod pool;
 pub mod service;
 
-pub use nr::{newton_raphson, NonlinearSystem, NrOptions, NrResult};
+pub use nr::{newton_raphson, newton_raphson_in, NonlinearSystem, NrOptions, NrResult};
+pub use pool::{pattern_key, Checkout, PatternKey, PoolGuard, PoolStats, SolverPool};
 pub use service::{SolverHandle, SolverService};

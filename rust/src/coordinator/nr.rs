@@ -5,9 +5,15 @@
 //!
 //! The symbolic work (MC64, AMD, fill-in, levelization) is done once for
 //! the Jacobian *pattern*; each iteration only restamps values and reruns
-//! the numeric kernel via [`GluSolver::refactor`].
+//! the numeric kernel. The driver routes every Jacobian through a
+//! [`SolverPool`] ([`newton_raphson_in`]): the first iteration misses the
+//! pattern cache and factors, every later iteration hits it and takes the
+//! refactor fast path — and when the caller shares a pool across NR runs
+//! (the transient loop does), even the *first* iteration of subsequent
+//! solves is a refactor.
 
-use crate::glu::{GluOptions, GluSolver};
+use crate::coordinator::pool::SolverPool;
+use crate::glu::GluOptions;
 use crate::sparse::Csc;
 
 /// A nonlinear system `F(x) = 0` with a fixed Jacobian sparsity pattern.
@@ -52,25 +58,40 @@ pub struct NrResult {
     pub converged: bool,
     /// `‖F(x)‖∞` per iteration (the convergence log).
     pub residual_norms: Vec<f64>,
-    /// Numeric-refactorization time per iteration, ms.
+    /// Numeric kernel time of each executed NR solve, ms (the first entry
+    /// is a full factor on a cold pool, a refactor on a warm one).
     pub refactor_ms: Vec<f64>,
 }
 
-/// Run Newton–Raphson from `x0`.
+/// Run Newton–Raphson from `x0` with a private, single-pattern pool.
+///
+/// Convenience wrapper over [`newton_raphson_in`]; callers that run many NR
+/// solves over the same Jacobian pattern (transient analysis, parameter
+/// sweeps, concurrent sessions) should share a [`SolverPool`] instead so the
+/// symbolic state survives between calls.
 pub fn newton_raphson(
     sys: &dyn NonlinearSystem,
     x0: &[f64],
     opts: &NrOptions,
 ) -> anyhow::Result<NrResult> {
+    let pool = SolverPool::with_config(opts.glu.clone(), 1, 1);
+    newton_raphson_in(sys, x0, opts, &pool)
+}
+
+/// Run Newton–Raphson from `x0`, solving every linearized step through
+/// `pool`. One checkout per iteration: a full factorization the first time
+/// the Jacobian pattern is seen (by this pool), the numeric-only refactor
+/// fast path after that.
+pub fn newton_raphson_in(
+    sys: &dyn NonlinearSystem,
+    x0: &[f64],
+    opts: &NrOptions,
+    pool: &SolverPool,
+) -> anyhow::Result<NrResult> {
     anyhow::ensure!(x0.len() == sys.dim(), "x0 dimension mismatch");
     let mut x = x0.to_vec();
     let mut norms = Vec::new();
     let mut refactor_ms = Vec::new();
-
-    // Factor once on the initial Jacobian (symbolic state is reused after).
-    let j0 = sys.jacobian(&x);
-    let mut solver = GluSolver::factor(&j0, &opts.glu)?;
-    refactor_ms.push(solver.stats().numeric_ms);
 
     for it in 0..opts.max_iters {
         let f = sys.residual(&x);
@@ -85,12 +106,11 @@ pub fn newton_raphson(
                 refactor_ms,
             });
         }
-        if it > 0 {
-            let j = sys.jacobian(&x);
-            solver.refactor(&j)?;
-            refactor_ms.push(solver.stats().numeric_ms);
-        }
-        let dx = solver.solve(&f)?;
+        let j = sys.jacobian(&x);
+        let mut guard = pool.checkout(&j)?;
+        refactor_ms.push(guard.stats().numeric_ms);
+        let dx = guard.solve(&f)?;
+        drop(guard);
         for (xi, di) in x.iter_mut().zip(&dx) {
             *xi -= opts.damping * di;
         }
@@ -189,5 +209,34 @@ mod tests {
         let res = newton_raphson(&sys, &vec![0.0; 80], &NrOptions::default()).unwrap();
         assert!(res.converged);
         assert!(res.iterations <= 2);
+    }
+
+    #[test]
+    fn shared_pool_hits_refactor_path_across_nr_runs() {
+        use crate::coordinator::pool::SolverPool;
+
+        let a = gen::grid2d(9, 9, 6);
+        let b: Vec<f64> = (0..81).map(|i| ((i % 7) as f64) - 3.0).collect();
+        let sys = CubicGrid { a, b };
+        let opts = NrOptions::default();
+        let pool = SolverPool::new(opts.glu.clone());
+
+        let r1 = newton_raphson_in(&sys, &vec![0.0; 81], &opts, &pool).unwrap();
+        assert!(r1.converged);
+        let st = pool.stats();
+        // first NR solve factored, the rest refactored
+        assert_eq!(st.factors, 1);
+        assert_eq!(st.refactors as usize, r1.iterations - 1);
+
+        // a second run over the same pattern never factors again
+        let r2 = newton_raphson_in(&sys, &vec![0.0; 81], &opts, &pool).unwrap();
+        assert!(r2.converged);
+        let st = pool.stats();
+        assert_eq!(st.factors, 1);
+        assert_eq!(st.misses, 1);
+        assert_eq!(st.hits as usize, r1.iterations + r2.iterations - 1);
+        for (p, q) in r1.x.iter().zip(&r2.x) {
+            assert!((p - q).abs() < 1e-8);
+        }
     }
 }

@@ -1,0 +1,523 @@
+//! The [`SolverPool`]: a pattern-keyed symbolic cache serving batched,
+//! concurrent solves.
+//!
+//! GLU3.0's whole value proposition is amortization: a SPICE-class workload
+//! refactors the *same sparsity pattern* thousands of times across
+//! Newton–Raphson iterations and transient steps, so the expensive CPU
+//! phases (MC64 matching, AMD ordering, symbolic fill, dependency detection,
+//! levelization — Fig. 5's front half) should run **once per pattern** and
+//! be reused hot. The pool makes that policy a service-level guarantee:
+//!
+//! - requests are keyed by a [`PatternKey`] (an FNV-1a hash of the CSC
+//!   structure, verified against the stored pattern on every hit, so a hash
+//!   collision can never route values onto the wrong symbolic state);
+//! - a hit takes the [`GluSolver::refactor`] fast path (numeric kernel
+//!   only); a miss pays one full [`GluSolver::factor`] — run *outside* the
+//!   shard lock, so a slow first factorization never stalls other patterns
+//!   — and caches it (two threads racing on the same cold pattern may both
+//!   factor; the later insert wins, so counters can report a few extra
+//!   misses under contention but never a stale answer);
+//! - the cache is sharded (`Mutex` per shard, share the pool itself behind
+//!   an `Arc` or scoped-thread borrow) so concurrent sessions with
+//!   different patterns proceed in parallel, with per-shard LRU eviction;
+//! - every checkout records its latency (lock wait + factor/refactor +
+//!   whatever the caller does before releasing the guard) into a
+//!   [`LatencyRecorder`], surfaced as p50/p99 through [`PoolStats`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+use crate::glu::{GluOptions, GluSolver, GluStats};
+use crate::sparse::Csc;
+use crate::util::stats::LatencyRecorder;
+
+/// Identity of a sparsity pattern: dimensions, nnz, and a structural hash.
+///
+/// Two matrices with equal keys *almost certainly* share a pattern; the pool
+/// still verifies the stored `colptr`/`rowidx` before reusing symbolic
+/// state, so the key is a router, not a proof.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PatternKey {
+    /// Matrix dimension.
+    pub n: usize,
+    /// Stored nonzeros.
+    pub nnz: usize,
+    /// FNV-1a hash of `colptr` and `rowidx`.
+    pub hash: u64,
+}
+
+/// Compute the [`PatternKey`] of a CSC matrix (values are ignored — only
+/// the structure participates).
+pub fn pattern_key(a: &Csc) -> PatternKey {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    #[inline]
+    fn eat(mut h: u64, x: u64) -> u64 {
+        for b in x.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+        h
+    }
+    let mut h = eat(FNV_OFFSET, a.nrows() as u64);
+    h = eat(h, a.ncols() as u64);
+    for &p in a.colptr() {
+        h = eat(h, p as u64);
+    }
+    for &r in a.rowidx() {
+        h = eat(h, r as u64);
+    }
+    PatternKey {
+        n: a.nrows(),
+        nnz: a.nnz(),
+        hash: h,
+    }
+}
+
+/// What a [`SolverPool::checkout`] did to satisfy the request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Checkout {
+    /// Cache miss: the full pipeline ran (preprocess + symbolic + numeric).
+    Factored,
+    /// Cache hit: only the numeric kernel reran on the cached symbolic state.
+    Refactored,
+}
+
+/// One cached factored system.
+struct Entry {
+    key: PatternKey,
+    /// Stored structure for exact verification on hash hits.
+    colptr: Vec<usize>,
+    rowidx: Vec<usize>,
+    solver: GluSolver,
+    last_used: u64,
+}
+
+/// One cache shard: a small LRU set plus that shard's latency samples.
+#[derive(Default)]
+struct Shard {
+    entries: Vec<Entry>,
+    latency: LatencyRecorder,
+}
+
+/// Aggregate pool counters (see [`SolverPool::stats`]).
+#[derive(Debug, Clone)]
+pub struct PoolStats {
+    /// Requests that reused cached symbolic state (refactor fast path).
+    pub hits: u64,
+    /// Requests that paid a full factorization.
+    pub misses: u64,
+    /// Entries dropped by LRU pressure.
+    pub evictions: u64,
+    /// Full factorizations performed.
+    pub factors: u64,
+    /// Value-only refactorizations performed.
+    pub refactors: u64,
+    /// Right-hand sides solved.
+    pub solves: u64,
+    /// Patterns currently cached.
+    pub entries: usize,
+    /// Per-checkout request latencies (ms; lock wait + factor/refactor +
+    /// caller's solves until the guard drops), merged across shards over a
+    /// bounded recent window.
+    pub latency: LatencyRecorder,
+}
+
+impl PoolStats {
+    /// Total pattern lookups.
+    pub fn requests(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Symbolic-cache hit rate in `[0, 1]`.
+    pub fn hit_rate(&self) -> f64 {
+        if self.requests() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.requests() as f64
+        }
+    }
+
+    /// Median request latency, ms.
+    pub fn p50_ms(&self) -> f64 {
+        self.latency.p50_ms()
+    }
+
+    /// 99th-percentile request latency, ms.
+    pub fn p99_ms(&self) -> f64 {
+        self.latency.p99_ms()
+    }
+}
+
+/// A sharded, pattern-keyed pool of factored systems.
+pub struct SolverPool {
+    opts: GluOptions,
+    shards: Vec<Mutex<Shard>>,
+    capacity_per_shard: usize,
+    clock: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    factors: AtomicU64,
+    refactors: AtomicU64,
+    solves: AtomicU64,
+}
+
+/// Exclusive access to one cached solver, obtained from
+/// [`SolverPool::checkout`]. Holds the shard lock: concurrent requests for
+/// patterns on the same shard wait until the guard drops. Dropping the
+/// guard records the checkout-to-release latency into the shard's
+/// [`LatencyRecorder`].
+pub struct PoolGuard<'a> {
+    pool: &'a SolverPool,
+    shard: MutexGuard<'a, Shard>,
+    idx: usize,
+    outcome: Checkout,
+    start: Instant,
+}
+
+impl PoolGuard<'_> {
+    /// Whether this checkout factored or refactored.
+    pub fn outcome(&self) -> Checkout {
+        self.outcome
+    }
+
+    /// Statistics of the underlying solver (n, timings, run counters).
+    pub fn stats(&self) -> &GluStats {
+        self.shard.entries[self.idx].solver.stats()
+    }
+
+    /// Mutable access to the checked-out solver.
+    pub fn solver_mut(&mut self) -> &mut GluSolver {
+        &mut self.shard.entries[self.idx].solver
+    }
+
+    /// Solve one right-hand side against the checked-out factors.
+    pub fn solve(&mut self, b: &[f64]) -> anyhow::Result<Vec<f64>> {
+        let x = self.shard.entries[self.idx].solver.solve(b)?;
+        self.pool.solves.fetch_add(1, Ordering::Relaxed);
+        Ok(x)
+    }
+
+    /// Solve a batch of right-hand sides against the checked-out factors.
+    pub fn solve_many(&mut self, rhs: &[Vec<f64>]) -> anyhow::Result<Vec<Vec<f64>>> {
+        let xs = self.shard.entries[self.idx].solver.solve_many(rhs)?;
+        self.pool.solves.fetch_add(rhs.len() as u64, Ordering::Relaxed);
+        Ok(xs)
+    }
+}
+
+impl Drop for PoolGuard<'_> {
+    fn drop(&mut self) {
+        let ms = self.start.elapsed().as_secs_f64() * 1e3;
+        self.shard.latency.record(ms);
+    }
+}
+
+fn lock_shard(m: &Mutex<Shard>) -> MutexGuard<'_, Shard> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl SolverPool {
+    /// A pool with the default layout: 8 shards × 4 entries.
+    pub fn new(opts: GluOptions) -> Self {
+        Self::with_config(opts, 8, 4)
+    }
+
+    /// A pool with `shards` mutex shards and `capacity_per_shard` cached
+    /// patterns per shard (LRU-evicted beyond that).
+    pub fn with_config(opts: GluOptions, shards: usize, capacity_per_shard: usize) -> Self {
+        assert!(shards >= 1 && capacity_per_shard >= 1);
+        SolverPool {
+            opts,
+            shards: (0..shards).map(|_| Mutex::new(Shard::default())).collect(),
+            capacity_per_shard,
+            clock: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            factors: AtomicU64::new(0),
+            refactors: AtomicU64::new(0),
+            solves: AtomicU64::new(0),
+        }
+    }
+
+    /// The options every cached solver is built with.
+    pub fn options(&self) -> &GluOptions {
+        &self.opts
+    }
+
+    /// Index of the entry matching `a`'s exact pattern, if cached.
+    fn find(shard: &Shard, key: &PatternKey, a: &Csc) -> Option<usize> {
+        shard.entries.iter().position(|e| {
+            e.key == *key
+                && e.colptr.as_slice() == a.colptr()
+                && e.rowidx.as_slice() == a.rowidx()
+        })
+    }
+
+    /// Check out the solver for `a`'s sparsity pattern, factoring on a miss
+    /// and refactoring (numeric kernel only) on a hit. The returned guard
+    /// pins the shard until dropped.
+    ///
+    /// The miss-path factorization runs with the shard lock *released*, so
+    /// a large cold pattern never stalls requests for other patterns that
+    /// happen to share its shard. Two threads racing on the same cold
+    /// pattern may therefore both factor; whichever inserts second replaces
+    /// the first entry (its values are the fresher stamp), costing a
+    /// duplicated factorization but never a wrong answer.
+    pub fn checkout(&self, a: &Csc) -> anyhow::Result<PoolGuard<'_>> {
+        let start = Instant::now();
+        let key = pattern_key(a);
+        let si = (key.hash as usize) % self.shards.len();
+
+        {
+            let mut shard = lock_shard(&self.shards[si]);
+            if let Some(i) = Self::find(&shard, &key, a) {
+                // Hit (counted before the refactor attempt, so hits + misses
+                // always equals checkout calls).
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                if let Err(e) = shard.entries[i].solver.refactor(a) {
+                    // A failed refactor (numerically singular values) leaves
+                    // the entry's factors stale — drop it rather than serve
+                    // them.
+                    shard.entries.swap_remove(i);
+                    return Err(e);
+                }
+                self.refactors.fetch_add(1, Ordering::Relaxed);
+                shard.entries[i].last_used = self.tick();
+                return Ok(PoolGuard {
+                    pool: self,
+                    shard,
+                    idx: i,
+                    outcome: Checkout::Refactored,
+                    start,
+                });
+            }
+        } // release the shard lock for the expensive factorization
+
+        // Miss: pay the full pipeline outside the lock, then cache.
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let solver = GluSolver::factor(a, &self.opts)?;
+        self.factors.fetch_add(1, Ordering::Relaxed);
+
+        let mut shard = lock_shard(&self.shards[si]);
+        let idx = if let Some(i) = Self::find(&shard, &key, a) {
+            // Another thread inserted this pattern while we factored. Its
+            // guard is gone (we hold the shard lock), so replacing the
+            // solver with ours — stamped with *our* request's values — is
+            // safe and serves this checkout correctly.
+            shard.entries[i].solver = solver;
+            i
+        } else {
+            if shard.entries.len() >= self.capacity_per_shard {
+                let lru = shard
+                    .entries
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(i, _)| i)
+                    .expect("non-empty shard");
+                shard.entries.swap_remove(lru);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+            shard.entries.push(Entry {
+                key,
+                colptr: a.colptr().to_vec(),
+                rowidx: a.rowidx().to_vec(),
+                solver,
+                last_used: 0,
+            });
+            shard.entries.len() - 1
+        };
+        shard.entries[idx].last_used = self.tick();
+        Ok(PoolGuard {
+            pool: self,
+            shard,
+            idx,
+            outcome: Checkout::Factored,
+            start,
+        })
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Solve `A x = b`, reusing cached symbolic state when `A`'s pattern is
+    /// known. One checkout: latency and solve counters are recorded by the
+    /// guard.
+    pub fn solve(&self, a: &Csc, b: &[f64]) -> anyhow::Result<Vec<f64>> {
+        self.checkout(a)?.solve(b)
+    }
+
+    /// Solve a batch of right-hand sides against one matrix: one pattern
+    /// lookup, one factor-or-refactor, then the batched trisolve path
+    /// ([`GluSolver::solve_many`]). Counted as one request, `rhs.len()`
+    /// solves.
+    pub fn solve_many(&self, a: &Csc, rhs: &[Vec<f64>]) -> anyhow::Result<Vec<Vec<f64>>> {
+        self.checkout(a)?.solve_many(rhs)
+    }
+
+    /// Number of cached patterns across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| lock_shard(s).entries.len()).sum()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached entry (counters and latency samples are kept).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            lock_shard(s).entries.clear();
+        }
+    }
+
+    /// Snapshot of per-entry solver statistics (one per cached pattern),
+    /// most-recently-used first.
+    pub fn entry_stats(&self) -> Vec<(PatternKey, GluStats)> {
+        let mut out: Vec<(u64, PatternKey, GluStats)> = Vec::new();
+        for s in &self.shards {
+            let shard = lock_shard(s);
+            for e in &shard.entries {
+                out.push((e.last_used, e.key, e.solver.stats().clone()));
+            }
+        }
+        out.sort_by(|a, b| b.0.cmp(&a.0));
+        out.into_iter().map(|(_, k, st)| (k, st)).collect()
+    }
+
+    /// Aggregate counters and merged latency samples.
+    pub fn stats(&self) -> PoolStats {
+        // Size the merged window to hold every shard's current window, so
+        // no shard's samples overwrite another's and the p50/p99 reflect
+        // the whole pool rather than whichever shard merged last.
+        let shards: Vec<_> = self.shards.iter().map(lock_shard).collect();
+        let window: usize = shards.iter().map(|s| s.latency.samples().len()).sum();
+        let mut latency = LatencyRecorder::with_window(window.max(1));
+        let mut entries = 0usize;
+        for shard in &shards {
+            latency.merge(&shard.latency);
+            entries += shard.entries.len();
+        }
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            factors: self.factors.load(Ordering::Relaxed),
+            refactors: self.refactors.load(Ordering::Relaxed),
+            solves: self.solves.load(Ordering::Relaxed),
+            entries,
+            latency,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::residual;
+    use crate::sparse::gen;
+
+    #[test]
+    fn pattern_key_structure_only() {
+        let a = gen::netlist(120, 5, 8, 0.1, 1, 0.2, 3);
+        let mut b = a.clone();
+        for v in b.values_mut() {
+            *v *= 3.25;
+        }
+        // same structure, different values -> same key
+        assert_eq!(pattern_key(&a), pattern_key(&b));
+        // different structure -> different key
+        let c = gen::netlist(120, 5, 8, 0.1, 1, 0.2, 4);
+        assert_ne!(pattern_key(&a), pattern_key(&c));
+    }
+
+    #[test]
+    fn hit_refactors_miss_factors() {
+        let a = gen::netlist(150, 5, 10, 0.05, 2, 0.2, 9);
+        let pool = SolverPool::new(GluOptions::default());
+        let b = vec![1.0; 150];
+
+        let x0 = pool.solve(&a, &b).unwrap();
+        assert!(residual(&a, &x0, &b) < 1e-7);
+        let st = pool.stats();
+        assert_eq!((st.hits, st.misses, st.factors, st.refactors), (0, 1, 1, 0));
+
+        let mut a2 = a.clone();
+        for v in a2.values_mut() {
+            *v *= 1.5;
+        }
+        let x1 = pool.solve(&a2, &b).unwrap();
+        assert!(residual(&a2, &x1, &b) < 1e-7);
+        let st = pool.stats();
+        assert_eq!((st.hits, st.misses, st.factors, st.refactors), (1, 1, 1, 1));
+        assert_eq!(st.solves, 2);
+        assert_eq!(st.entries, 1);
+        assert_eq!(st.latency.count(), 2);
+
+        // the cached entry never reran its symbolic phases
+        let es = pool.entry_stats();
+        assert_eq!(es.len(), 1);
+        assert_eq!(es[0].1.symbolic_runs, 1);
+        assert_eq!(es[0].1.numeric_runs, 2);
+    }
+
+    #[test]
+    fn lru_eviction_under_capacity_pressure() {
+        // 1 shard x 2 entries; three patterns force an eviction.
+        let pool = SolverPool::with_config(GluOptions::default(), 1, 2);
+        let mats: Vec<_> = (0..3)
+            .map(|s| gen::netlist(80, 5, 8, 0.1, 1, 0.2, 100 + s))
+            .collect();
+        let b = vec![1.0; 80];
+        for m in &mats {
+            pool.solve(m, &b).unwrap();
+        }
+        let st = pool.stats();
+        assert_eq!(st.misses, 3);
+        assert_eq!(st.evictions, 1);
+        assert_eq!(st.entries, 2);
+        // the evicted (least recently used) pattern is mats[0]: solving it
+        // again is a miss, while mats[2] stays hot
+        pool.solve(&mats[2], &b).unwrap();
+        assert_eq!(pool.stats().hits, 1);
+        pool.solve(&mats[0], &b).unwrap();
+        assert_eq!(pool.stats().misses, 4);
+    }
+
+    #[test]
+    fn checkout_outcomes_and_clear() {
+        let a = gen::grid2d(8, 8, 7);
+        let pool = SolverPool::new(GluOptions::default());
+        let g = pool.checkout(&a).unwrap();
+        assert_eq!(g.outcome(), Checkout::Factored);
+        drop(g);
+        let g = pool.checkout(&a).unwrap();
+        assert_eq!(g.outcome(), Checkout::Refactored);
+        assert_eq!(g.stats().numeric_runs, 2);
+        drop(g);
+        assert_eq!(pool.len(), 1);
+        pool.clear();
+        assert!(pool.is_empty());
+        let g = pool.checkout(&a).unwrap();
+        assert_eq!(g.outcome(), Checkout::Factored);
+    }
+
+    #[test]
+    fn factor_error_is_not_cached() {
+        use crate::sparse::Coo;
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(1, 0, 1.0); // structurally singular
+        let bad = coo.to_csc();
+        let pool = SolverPool::new(GluOptions::default());
+        assert!(pool.checkout(&bad).is_err());
+        assert!(pool.is_empty());
+        assert_eq!(pool.stats().factors, 0);
+        assert_eq!(pool.stats().misses, 1);
+    }
+}

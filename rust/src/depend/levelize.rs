@@ -207,4 +207,166 @@ mod tests {
         let relaxed = levelize(&glu3::detect(&f.filled));
         assert_eq!(exact.num_levels(), relaxed.num_levels());
     }
+
+    /// Tridiagonal chain: every column depends on its predecessor, so the
+    /// only hazard-free schedule is fully sequential. The validator must
+    /// accept it and reject any flattened variant.
+    #[test]
+    fn validator_on_adversarial_chain() {
+        let n = 12;
+        let mut dense = vec![0.0; n * n];
+        for i in 0..n {
+            dense[i * n + i] = 4.0;
+            if i + 1 < n {
+                dense[i * n + i + 1] = 1.0; // U entry (i, i+1)
+                dense[(i + 1) * n + i] = 1.0; // L entry (i+1, i)
+            }
+        }
+        let a = crate::sparse::Csc::from_dense(n, n, &dense);
+        let f = symbolic_fill(&a).unwrap();
+        let lv = levelize(&glu3::detect(&f.filled));
+        assert_eq!(lv.num_levels(), n);
+        validate_hazard_free(&f.filled, &lv).unwrap();
+
+        // flat schedule: everything "parallel" — must be rejected
+        let flat = Levels {
+            level_of: vec![0; n],
+            levels: vec![(0..n as u32).collect()],
+        };
+        assert!(validate_hazard_free(&f.filled, &flat).is_err());
+
+        // off-by-one schedule: columns paired two-per-level — also unsafe
+        let paired = Levels {
+            level_of: (0..n).map(|k| (k / 2) as u32).collect(),
+            levels: Vec::new(), // validator only reads level_of
+        };
+        assert!(validate_hazard_free(&f.filled, &paired).is_err());
+    }
+
+    /// Star: column 0 feeds every other column (dense U row 0 + L work in
+    /// column 0). A 2-deep schedule is the exact answer; putting any
+    /// dependent column next to its hub must be rejected.
+    #[test]
+    fn validator_on_adversarial_star() {
+        let n = 8;
+        let mut dense = vec![0.0; n * n];
+        for i in 0..n {
+            dense[i * n + i] = 8.0;
+        }
+        for j in 1..n {
+            dense[j] = 1.0; // U row 0: (0, j)
+        }
+        dense[(n - 1) * n] = 1.0; // L work in column 0: (n-1, 0)
+        let a = crate::sparse::Csc::from_dense(n, n, &dense);
+        let f = symbolic_fill(&a).unwrap();
+
+        let exact = levelize(&glu2::detect(&f.filled));
+        validate_hazard_free(&f.filled, &exact).unwrap();
+        assert!(exact.level_of[0] == 0);
+        for k in 1..n {
+            assert!(exact.level_of[k] >= 1, "column {k} must wait for the hub");
+        }
+
+        // the relaxed schedule is also safe (supersets only add ordering)
+        let relaxed = levelize(&glu3::detect(&f.filled));
+        validate_hazard_free(&f.filled, &relaxed).unwrap();
+        assert!(relaxed.num_levels() >= exact.num_levels());
+
+        // hoisting a spoke into the hub's level races on U(0, k)
+        let mut bad = exact.clone();
+        bad.level_of[3] = 0;
+        assert!(validate_hazard_free(&f.filled, &bad).is_err());
+    }
+
+    /// The *true hazard graph*: exact double-U edges plus U-pattern edges
+    /// whose source column carries L work. These — and only these — are the
+    /// orderings [`validate_hazard_free`] enforces (a no-work U edge
+    /// produces no submatrix update, hence no hazard).
+    fn true_hazard_graph(filled: &crate::sparse::Csc) -> crate::depend::DepGraph {
+        let n = filled.ncols();
+        let l_nonempty: Vec<bool> = (0..n)
+            .map(|i| filled.col(i).0.last().is_some_and(|&r| r > i))
+            .collect();
+        let g1 = glu1::detect(filled);
+        let du = glu2::detect_double_u(filled);
+        let mut deps: Vec<Vec<u32>> = Vec::with_capacity(n);
+        for k in 0..n {
+            let mut d: Vec<u32> = g1
+                .deps_of(k)
+                .iter()
+                .copied()
+                .filter(|&i| l_nonempty[i as usize])
+                .collect();
+            d.extend_from_slice(du.deps_of(k));
+            deps.push(d);
+        }
+        crate::depend::DepGraph::new(deps)
+    }
+
+    /// Randomly generated DAGs (via random circuit matrices): the true,
+    /// exact, and relaxed schedules always validate, and demoting any
+    /// column whose true-hazard level is positive must trip the validator —
+    /// that level was forced by a real read/write hazard.
+    #[test]
+    fn validator_on_random_dags() {
+        let mut rng = Rng::new(0xDA6);
+        for trial in 0..10 {
+            let n = rng.range(25, 90);
+            let a = gen::netlist(n, 6, 8, 0.1, 2, 0.25, 7000 + trial);
+            let f = symbolic_fill(&a).unwrap();
+            let truth = levelize(&true_hazard_graph(&f.filled));
+            validate_hazard_free(&f.filled, &truth)
+                .unwrap_or_else(|e| panic!("trial {trial} true graph: {e}"));
+            let exact = levelize(&glu2::detect(&f.filled));
+            validate_hazard_free(&f.filled, &exact)
+                .unwrap_or_else(|e| panic!("trial {trial} exact: {e}"));
+            let relaxed = levelize(&glu3::detect(&f.filled));
+            validate_hazard_free(&f.filled, &relaxed)
+                .unwrap_or_else(|e| panic!("trial {trial} relaxed: {e}"));
+
+            // corrupt: demote one hazard-constrained column to level 0
+            let candidates: Vec<usize> = (0..n).filter(|&k| truth.level_of[k] > 0).collect();
+            if candidates.is_empty() {
+                continue;
+            }
+            let victim = candidates[rng.below(candidates.len())];
+            let mut bad = truth.clone();
+            bad.level_of[victim] = 0;
+            assert!(
+                validate_hazard_free(&f.filled, &bad).is_err(),
+                "trial {trial}: demoting column {victim} must be caught"
+            );
+        }
+    }
+
+    /// GLU3.0's relaxed detection covers every true dependency, so its
+    /// schedule can never be shallower than the true dependency depth (the
+    /// longest path through the real hazard graph).
+    #[test]
+    fn relaxed_never_fewer_levels_than_true_depth() {
+        // the paper's 8x8 example first
+        let f = symbolic_fill(&paper_example()).unwrap();
+        let true_depth = levelize(&true_hazard_graph(&f.filled)).num_levels();
+        assert!(levelize(&glu3::detect(&f.filled)).num_levels() >= true_depth);
+
+        let mut rng = Rng::new(0xDEB7);
+        for trial in 0..12 {
+            let n = rng.range(20, 120);
+            let a = gen::netlist(n, 5, 9, 0.08, 2, 0.2, 8000 + trial);
+            let f = symbolic_fill(&a).unwrap();
+            let truth = true_hazard_graph(&f.filled);
+            let relaxed_graph = glu3::detect(&f.filled);
+            // the superset property is what guarantees the depth bound
+            assert!(
+                relaxed_graph.contains(&truth),
+                "trial {trial}: relaxed must cover every true dependency"
+            );
+            let true_depth = levelize(&truth).num_levels();
+            let relaxed_depth = levelize(&relaxed_graph).num_levels();
+            assert!(
+                relaxed_depth >= true_depth,
+                "trial {trial}: relaxed {relaxed_depth} < true depth {true_depth}"
+            );
+        }
+    }
 }

@@ -18,5 +18,5 @@
 pub mod profile;
 pub mod solver;
 
-pub use profile::{parallelism_profile, LevelProfile};
+pub use profile::{amortization_profile, parallelism_profile, AmortizationProfile, LevelProfile};
 pub use solver::{Detection, GluOptions, GluSolver, GluStats, NumericEngine};

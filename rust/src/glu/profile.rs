@@ -1,7 +1,10 @@
 //! Per-level parallelism profile — the data behind the paper's Fig. 10
 //! ("Number of columns and subcolumns of different levels") and the A/B/C
-//! level taxonomy that motivates the three kernel modes.
+//! level taxonomy that motivates the three kernel modes — plus the
+//! [`AmortizationProfile`] that quantifies the factor-once/refactor-many
+//! economics the solver service is built on.
 
+use super::solver::GluStats;
 use crate::depend::Levels;
 use crate::numeric::rightlook::upper_rows;
 use crate::symbolic::SymbolicFill;
@@ -74,6 +77,45 @@ pub fn size_subcol_correlation(profile: &[LevelProfile]) -> f64 {
     }
 }
 
+/// Amortization economics of one cached solver: how much CPU-side symbolic
+/// work the refactor fast path has saved so far (paper §III — the numeric
+/// kernel "might be repeated many times" per symbolic analysis).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AmortizationProfile {
+    /// Times the symbolic pipeline ran (1 per cached pattern, by design).
+    pub symbolic_runs: usize,
+    /// Times the numeric kernel ran (factor + refactors).
+    pub numeric_runs: usize,
+    /// One-time CPU cost actually paid, ms.
+    pub cpu_ms_paid: f64,
+    /// CPU cost that *would* have been paid had every numeric run
+    /// re-preprocessed (the no-cache counterfactual), ms.
+    pub cpu_ms_counterfactual: f64,
+}
+
+impl AmortizationProfile {
+    /// CPU milliseconds saved by reusing symbolic state.
+    pub fn cpu_ms_saved(&self) -> f64 {
+        self.cpu_ms_counterfactual - self.cpu_ms_paid
+    }
+
+    /// Reuse factor: numeric runs per symbolic run.
+    pub fn reuse(&self) -> f64 {
+        self.numeric_runs as f64 / self.symbolic_runs.max(1) as f64
+    }
+}
+
+/// Derive the [`AmortizationProfile`] from a solver's run counters.
+pub fn amortization_profile(stats: &GluStats) -> AmortizationProfile {
+    let per_run_cpu = stats.cpu_ms();
+    AmortizationProfile {
+        symbolic_runs: stats.symbolic_runs,
+        numeric_runs: stats.numeric_runs,
+        cpu_ms_paid: per_run_cpu * stats.symbolic_runs as f64,
+        cpu_ms_counterfactual: per_run_cpu * stats.numeric_runs as f64,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -115,5 +157,26 @@ mod tests {
         assert!(late_max > early_sub, "late {late_max} vs early {early_sub}");
         let corr = size_subcol_correlation(&prof);
         assert!(corr < 0.1, "expected inverse/no correlation, got {corr}");
+    }
+
+    #[test]
+    fn amortization_tracks_refactors() {
+        use crate::glu::{GluOptions, GluSolver};
+
+        let a = gen::netlist(150, 5, 10, 0.05, 2, 0.2, 23);
+        let mut s = GluSolver::factor(&a, &GluOptions::default()).unwrap();
+        let p0 = amortization_profile(s.stats());
+        assert_eq!((p0.symbolic_runs, p0.numeric_runs), (1, 1));
+        assert_eq!(p0.cpu_ms_saved(), 0.0);
+        assert_eq!(p0.reuse(), 1.0);
+
+        for _ in 0..4 {
+            s.refactor(&a).unwrap();
+        }
+        let p = amortization_profile(s.stats());
+        assert_eq!((p.symbolic_runs, p.numeric_runs), (1, 5));
+        assert_eq!(p.reuse(), 5.0);
+        assert!(p.cpu_ms_saved() >= 0.0);
+        assert!(p.cpu_ms_counterfactual >= p.cpu_ms_paid);
     }
 }

@@ -88,6 +88,15 @@ pub struct GluStats {
     pub numeric_ms: f64,
     /// Simulated-GPU report (None for CPU engines).
     pub sim: Option<SimReport>,
+    /// How many times the symbolic pipeline (ordering + fill + dependency
+    /// detection + levelization) has run for this solver — always 1: the
+    /// whole point of [`GluSolver::refactor`] is that it never reruns.
+    /// Exposed so the service layer can *assert* the refactor fast path
+    /// skipped the CPU phases.
+    pub symbolic_runs: usize,
+    /// How many times the numeric kernel has run (1 for the initial factor
+    /// plus one per [`GluSolver::refactor`]).
+    pub numeric_runs: usize,
 }
 
 impl GluStats {
@@ -141,6 +150,8 @@ impl GluSolver {
             levelization_ms: sw.get("levelize").unwrap().as_secs_f64() * 1e3,
             numeric_ms,
             sim,
+            symbolic_runs: 1,
+            numeric_runs: 1,
         };
 
         Ok(GluSolver {
@@ -157,20 +168,49 @@ impl GluSolver {
     /// Solve `A x = b` using the current factors.
     pub fn solve(&mut self, b: &[f64]) -> anyhow::Result<Vec<f64>> {
         anyhow::ensure!(b.len() == self.stats.n, "rhs dimension mismatch");
+        let mut pb = vec![0.0; b.len()];
+        let mut x = vec![0.0; b.len()];
+        self.solve_into(b, &mut pb, &mut x);
+        Ok(x)
+    }
+
+    /// Solve a batch of right-hand sides against the same factors.
+    ///
+    /// The permute/scale scratch buffer is allocated once and the triangular
+    /// solves run back-to-back over the cached level structure — the batched
+    /// fast path the [`crate::coordinator::SolverPool`] feeds. Each solution
+    /// is bit-identical to the corresponding [`GluSolver::solve`] call (same
+    /// inner routine, same operation order).
+    pub fn solve_many(&mut self, rhs: &[Vec<f64>]) -> anyhow::Result<Vec<Vec<f64>>> {
+        for b in rhs {
+            anyhow::ensure!(b.len() == self.stats.n, "rhs dimension mismatch");
+        }
+        let mut pb = vec![0.0; self.stats.n];
+        let mut out = Vec::with_capacity(rhs.len());
+        for b in rhs {
+            let mut x = vec![0.0; self.stats.n];
+            self.solve_into(b, &mut pb, &mut x);
+            out.push(x);
+        }
+        Ok(out)
+    }
+
+    /// Shared inner solve: scatter `b` through row scaling/permutation into
+    /// `pb`, run the triangular solves in place, gather into `x` through the
+    /// column permutation/scaling. `pb` and `x` must have length `n`.
+    fn solve_into(&self, b: &[f64], pb: &mut [f64], x: &mut [f64]) {
         // b' = Dr * b permuted by the row permutation.
         let pr = self.pre.row_perm.as_scatter();
-        let mut pb = vec![0.0; b.len()];
         for (old, &new) in pr.iter().enumerate() {
             pb[new] = b[old] * self.pre.row_scale[old];
         }
-        let px = self.factors.solve(&pb);
+        crate::numeric::trisolve::lower_unit_solve(&self.factors.lu, pb);
+        crate::numeric::trisolve::upper_solve(&self.factors.lu, pb);
         // x = Dc * (P_colᵀ x').
         let pc = self.pre.col_perm.as_scatter();
-        let mut x = vec![0.0; b.len()];
         for (old, &new) in pc.iter().enumerate() {
-            x[old] = px[new] * self.pre.col_scale[old];
+            x[old] = pb[new] * self.pre.col_scale[old];
         }
-        Ok(x)
     }
 
     /// Refactor with new values on the *same sparsity pattern* (the
@@ -213,6 +253,7 @@ impl GluSolver {
         self.factors = factors;
         self.stats.numeric_ms = numeric_ms;
         self.stats.sim = sim;
+        self.stats.numeric_runs += 1;
         Ok(())
     }
 
@@ -395,6 +436,29 @@ mod tests {
         let mut s = GluSolver::factor(&a, &opts).unwrap();
         let x = s.solve(&b).unwrap();
         assert!(residual(&a, &x, &b) < 1e-7);
+    }
+
+    #[test]
+    fn solve_many_matches_individual_solves() {
+        let a = gen::netlist(250, 5, 10, 0.06, 2, 0.2, 77);
+        let mut s = GluSolver::factor(&a, &GluOptions::default()).unwrap();
+        let batch: Vec<Vec<f64>> = (0..6)
+            .map(|k| (0..250).map(|i| ((i * 7 + k) % 13) as f64 - 6.0).collect())
+            .collect();
+        let many = s.solve_many(&batch).unwrap();
+        assert_eq!(many.len(), batch.len());
+        for (b, x_batch) in batch.iter().zip(&many) {
+            let x_one = s.solve(b).unwrap();
+            // same inner routine — results are identical, not just close
+            assert_eq!(x_one, *x_batch);
+            assert!(residual(&a, x_batch, b) < 1e-7);
+        }
+        // counters: one symbolic + one numeric run, no matter how many solves
+        assert_eq!(s.stats().symbolic_runs, 1);
+        assert_eq!(s.stats().numeric_runs, 1);
+
+        // dimension mismatch anywhere in the batch is rejected
+        assert!(s.solve_many(&[vec![1.0; 249]]).is_err());
     }
 
     #[test]

@@ -33,6 +33,45 @@
 //! let b = vec![1.0; a.nrows()];
 //! let x = solver.solve(&b).unwrap();
 //! ```
+//!
+//! ## Serving many solves
+//!
+//! One-shot factorization is the wrong shape for circuit simulation: a
+//! SPICE transient loop restamps the *same* Jacobian pattern thousands of
+//! times, and only the values change. The serving tier —
+//! [`coordinator::SolverPool`] — makes the factor-once/refactor-many split
+//! an API guarantee. The pool caches each pattern's symbolic state
+//! (ordering + fill + dependency graph + levels) under a structural hash:
+//! the first request for a pattern pays [`glu::GluSolver::factor`], every
+//! later request (same structure, any values) takes the numeric-only
+//! [`glu::GluSolver::refactor`] fast path. Batched right-hand sides share
+//! one checkout and one trisolve setup, the cache is sharded for
+//! concurrent sessions, and hit/miss/latency counters (p50/p99) come back
+//! through [`coordinator::SolverPool::stats`].
+//!
+//! ```no_run
+//! use glu3::coordinator::SolverPool;
+//! use glu3::glu::GluOptions;
+//! use glu3::sparse::gen::{self, SuiteMatrix};
+//!
+//! let pool = SolverPool::new(GluOptions::default());
+//! let a = gen::generate(&SuiteMatrix::Circuit2.spec());
+//! let rhs: Vec<Vec<f64>> = vec![vec![1.0; a.nrows()]; 4];
+//!
+//! let _xs = pool.solve_many(&a, &rhs).unwrap(); // miss: full factor
+//! let mut a2 = a.clone();
+//! for v in a2.values_mut() {
+//!     *v *= 1.5; // Newton restamp: same pattern, new values
+//! }
+//! let _xs = pool.solve_many(&a2, &rhs).unwrap(); // hit: refactor only
+//! assert_eq!(pool.stats().hits, 1);
+//! ```
+//!
+//! The Newton–Raphson driver ([`coordinator::nr::newton_raphson_in`]) and
+//! the transient simulator ([`circuit::transient::transient_in`]) route
+//! every linear solve through a pool, so a warm pool carries symbolic
+//! state across whole simulations (e.g. Monte-Carlo corners of one
+//! circuit).
 
 pub mod bench_support;
 pub mod circuit;

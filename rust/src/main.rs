@@ -17,7 +17,10 @@ use std::collections::HashMap;
 use std::process::ExitCode;
 
 use glu3::bench_support::table::{ms, ratio, Table};
-use glu3::glu::{parallelism_profile, Detection, GluOptions, GluSolver, NumericEngine};
+use glu3::coordinator::SolverPool;
+use glu3::glu::{
+    amortization_profile, parallelism_profile, Detection, GluOptions, GluSolver, NumericEngine,
+};
 use glu3::gpusim::Policy;
 use glu3::numeric::residual;
 use glu3::order::FillOrdering;
@@ -46,6 +49,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "solve" => cmd_factor(&flags, true),
         "suite" => cmd_suite(&flags),
         "profile" => cmd_profile(&flags),
+        "serve" => cmd_serve(&flags),
         "info" => cmd_info(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -65,6 +69,8 @@ fn print_usage() {
          \x20 solve   same options, also solves (--rhs ones|ramp)\n\
          \x20 suite   [--set small|all] [--policy ...]   run the whole suite\n\
          \x20 profile --matrix <...>   per-level parallelism profile (Fig. 10)\n\
+         \x20 serve   --matrix <...> [--requests N] [--threads T] [--patterns P]\n\
+         \x20         drive the SolverPool and report cache/latency counters\n\
          \x20 info    --matrix <...>   structural stats\n\n\
          suite names: {}",
         SuiteMatrix::ALL
@@ -251,6 +257,103 @@ fn cmd_profile(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     print!("{}", t.render());
     let corr = glu3::glu::profile::size_subcol_correlation(&prof);
     println!("size/subcol correlation: {}", ratio(corr));
+    Ok(())
+}
+
+fn flag_usize(
+    flags: &HashMap<String, String>,
+    key: &str,
+    default: usize,
+) -> anyhow::Result<usize> {
+    match flags.get(key) {
+        Some(s) => Ok(s.parse()?),
+        None => Ok(default),
+    }
+}
+
+/// Drive the [`SolverPool`] with a concurrent repeated-pattern workload and
+/// report the cache/latency counters — the serving view of the solver.
+fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let (name, a) = load_matrix(flags)?;
+    let opts = options_from(flags)?;
+    let requests = flag_usize(flags, "requests", 64)?;
+    let threads = flag_usize(flags, "threads", 4)?;
+    let patterns = flag_usize(flags, "patterns", 3)?.max(1);
+
+    // Distinct sparsity patterns: the base matrix plus symmetric random
+    // permutations of it (structure changes, solvability is preserved).
+    let mut rng = glu3::util::Rng::new(0x5EED);
+    let mut variants = vec![a.clone()];
+    for _ in 1..patterns {
+        let mut p: Vec<usize> = (0..a.nrows()).collect();
+        rng.shuffle(&mut p);
+        variants.push(a.permute(&p, &p));
+    }
+
+    println!(
+        "serving {name}: n={} nz={}, {threads} threads x {requests} requests, {patterns} patterns",
+        a.nrows(),
+        a.nnz()
+    );
+    let pool = SolverPool::new(opts);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let pool = &pool;
+            let variants = &variants;
+            scope.spawn(move || {
+                let mut rng = glu3::util::Rng::new(0xC0FFEE + t as u64);
+                for i in 0..requests {
+                    let m = gen::restamp_columns(&variants[(t + i) % variants.len()], &mut rng);
+                    let n = m.nrows();
+                    let rhs: Vec<Vec<f64>> = (0..2)
+                        .map(|s| (0..n).map(|j| ((j + s + i) % 11) as f64 - 5.0).collect())
+                        .collect();
+                    let xs = pool.solve_many(&m, &rhs).expect("solve");
+                    for (x, b) in xs.iter().zip(&rhs) {
+                        assert!(residual(&m, x, b) < 1e-6, "bad residual");
+                    }
+                }
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let st = pool.stats();
+    let mut t = Table::new(vec!["counter", "value"]);
+    t.row(vec!["requests".to_string(), st.requests().to_string()]);
+    t.row(vec!["rhs solved".to_string(), st.solves.to_string()]);
+    t.row(vec![
+        "cache hit rate".to_string(),
+        format!("{:.1}%", st.hit_rate() * 100.0),
+    ]);
+    t.row(vec!["full factorizations".to_string(), st.factors.to_string()]);
+    t.row(vec!["refactorizations".to_string(), st.refactors.to_string()]);
+    t.row(vec!["evictions".to_string(), st.evictions.to_string()]);
+    t.row(vec!["cached patterns".to_string(), st.entries.to_string()]);
+    t.row(vec!["p50 latency (ms)".to_string(), ms(st.p50_ms())]);
+    t.row(vec!["p99 latency (ms)".to_string(), ms(st.p99_ms())]);
+    t.row(vec![
+        "throughput (req/s)".to_string(),
+        format!("{:.0}", st.requests() as f64 / wall_s),
+    ]);
+    print!("{}", t.render());
+
+    println!("\n# per-pattern amortization (symbolic work paid once, reused hot)");
+    let mut t = Table::new(vec![
+        "pattern", "symbolic", "numeric", "reuse", "cpu saved (ms)",
+    ]);
+    for (key, stats) in pool.entry_stats() {
+        let ap = amortization_profile(&stats);
+        t.row(vec![
+            format!("{:016x}", key.hash),
+            ap.symbolic_runs.to_string(),
+            ap.numeric_runs.to_string(),
+            format!("{:.1}x", ap.reuse()),
+            ms(ap.cpu_ms_saved()),
+        ]);
+    }
+    print!("{}", t.render());
     Ok(())
 }
 

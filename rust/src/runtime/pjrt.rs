@@ -1,0 +1,266 @@
+//! Real PJRT runtime (requires the `pjrt` feature and the `xla` bindings).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use super::{LEVEL_SIZES, TAIL_SIZES};
+
+/// A loaded PJRT runtime with compiled executables.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("dir", &self.dir)
+            .field("executables", &self.executables.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and compile every artifact in `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for entry in std::fs::read_dir(&dir)
+            .with_context(|| format!("reading artifact dir {}", dir.display()))?
+        {
+            let path = entry?.path();
+            let Some(fname) = path.file_name().and_then(|s| s.to_str()) else {
+                continue;
+            };
+            let Some(name) = fname.strip_suffix(".hlo.txt") else {
+                continue;
+            };
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            executables.insert(name.to_string(), exe);
+        }
+        anyhow::ensure!(
+            !executables.is_empty(),
+            "no *.hlo.txt artifacts in {} — run `make artifacts`",
+            dir.display()
+        );
+        Ok(Runtime {
+            client,
+            executables,
+            dir,
+        })
+    }
+
+    /// Artifact names available.
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.executables.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    fn exe(&self, name: &str) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name} not loaded (have {:?})", self.names()))
+    }
+
+    /// Execute an artifact on literal inputs, returning the tuple elements.
+    fn run(&self, name: &str, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let exe = self.exe(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {name}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {name} result"))?;
+        // aot.py lowers with return_tuple=True.
+        Ok(lit.to_tuple()?)
+    }
+
+    /// The Eq. 3 batched MAC on the PJRT path: `x (b×n) − s ⊗ u`.
+    ///
+    /// Pads into the smallest `level_update_{B}x{N}` variant that fits;
+    /// errors if `b`/`n` exceed the largest.
+    pub fn level_update(
+        &self,
+        x: &[f32],
+        u: &[f32],
+        s: &[f32],
+        b: usize,
+        n: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(x.len() == b * n && u.len() == n && s.len() == b, "shape mismatch");
+        let (pb, pn) = LEVEL_SIZES
+            .iter()
+            .copied()
+            .find(|&(lb, ln)| b <= lb && n <= ln)
+            .ok_or_else(|| anyhow::anyhow!("batch {b}x{n} exceeds artifact ladder"))?;
+        let name = format!("level_update_{pb}x{pn}");
+
+        let mut xp = vec![0f32; pb * pn];
+        for r in 0..b {
+            xp[r * pn..r * pn + n].copy_from_slice(&x[r * n..(r + 1) * n]);
+        }
+        let mut up = vec![0f32; pn];
+        up[..n].copy_from_slice(u);
+        let mut sp = vec![0f32; pb];
+        sp[..b].copy_from_slice(s);
+
+        let lx = xla::Literal::vec1(&xp).reshape(&[pb as i64, pn as i64])?;
+        let lu = xla::Literal::vec1(&up);
+        let ls = xla::Literal::vec1(&sp);
+        let out = self.run(&name, &[lx, lu, ls])?;
+        let full = out[0].to_vec::<f32>()?;
+        let mut result = vec![0f32; b * n];
+        for r in 0..b {
+            result[r * n..(r + 1) * n].copy_from_slice(&full[r * pn..r * pn + n]);
+        }
+        Ok(result)
+    }
+
+    /// Dense-tail factor+solve on the PJRT path: returns `(lu, x)` for the
+    /// `t×t` system, padding into the artifact ladder with an identity
+    /// bottom-right block (so the padded pivots are 1 and the pad solves to
+    /// the padded RHS zeros).
+    pub fn dense_tail_solve(
+        &self,
+        a: &[f32],
+        rhs: &[f32],
+        t: usize,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(a.len() == t * t && rhs.len() == t, "shape mismatch");
+        let pt = TAIL_SIZES
+            .iter()
+            .copied()
+            .find(|&s| t <= s)
+            .ok_or_else(|| anyhow::anyhow!("tail {t} exceeds artifact ladder"))?;
+        let name = format!("dense_tail_{pt}");
+
+        let mut ap = vec![0f32; pt * pt];
+        for r in 0..t {
+            ap[r * pt..r * pt + t].copy_from_slice(&a[r * t..(r + 1) * t]);
+        }
+        for d in t..pt {
+            ap[d * pt + d] = 1.0; // identity pad
+        }
+        let mut bp = vec![0f32; pt];
+        bp[..t].copy_from_slice(rhs);
+
+        let la = xla::Literal::vec1(&ap).reshape(&[pt as i64, pt as i64])?;
+        let lb = xla::Literal::vec1(&bp);
+        let out = self.run(&name, &[la, lb])?;
+        let lu_full = out[0].to_vec::<f32>()?;
+        let x_full = out[1].to_vec::<f32>()?;
+        let mut lu = vec![0f32; t * t];
+        for r in 0..t {
+            lu[r * t..(r + 1) * t].copy_from_slice(&lu_full[r * pt..r * pt + t]);
+        }
+        Ok((lu, x_full[..t].to_vec()))
+    }
+
+    /// The 2×2 quickstart smoke graph: `matmul(x, y) + 2`.
+    pub fn quickstart(&self, x: [f32; 4], y: [f32; 4]) -> anyhow::Result<[f32; 4]> {
+        let lx = xla::Literal::vec1(&x).reshape(&[2, 2])?;
+        let ly = xla::Literal::vec1(&y).reshape(&[2, 2])?;
+        let out = self.run("quickstart", &[lx, ly])?;
+        let v = out[0].to_vec::<f32>()?;
+        Ok([v[0], v[1], v[2], v[3]])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::default_artifact_dir;
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = default_artifact_dir();
+        if !dir.join("quickstart.hlo.txt").exists() {
+            eprintln!("skipping runtime tests: artifacts not built (make artifacts)");
+            return None;
+        }
+        Some(Runtime::load(dir).expect("runtime load"))
+    }
+
+    #[test]
+    fn quickstart_numbers() {
+        let Some(rt) = runtime() else { return };
+        let out = rt
+            .quickstart([1.0, 2.0, 3.0, 4.0], [1.0, 1.0, 1.0, 1.0])
+            .unwrap();
+        assert_eq!(out, [5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn level_update_matches_native() {
+        let Some(rt) = runtime() else { return };
+        for (b, n) in [(1usize, 1usize), (5, 40), (64, 256), (100, 1000)] {
+            let x: Vec<f32> = (0..b * n).map(|i| (i % 17) as f32 - 8.0).collect();
+            let u: Vec<f32> = (0..n).map(|i| (i % 5) as f32 * 0.25).collect();
+            let s: Vec<f32> = (0..b).map(|i| (i % 3) as f32 - 1.0).collect();
+            let got = rt.level_update(&x, &u, &s, b, n).unwrap();
+            for r in 0..b {
+                for c in 0..n {
+                    let want = x[r * n + c] - s[r] * u[c];
+                    let g = got[r * n + c];
+                    assert!((g - want).abs() < 1e-5, "({r},{c}): {g} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn level_update_rejects_oversize() {
+        let Some(rt) = runtime() else { return };
+        let b = 300usize;
+        let x = vec![0f32; b];
+        let u = vec![0f32; 1];
+        let s = vec![0f32; b];
+        assert!(rt.level_update(&x, &u, &s, b, 1).is_err());
+    }
+
+    #[test]
+    fn dense_tail_solves_against_rust_oracle() {
+        let Some(rt) = runtime() else { return };
+        for t in [3usize, 17, 64, 100] {
+            // column diagonally dominant system
+            let mut rng = crate::util::Rng::new(t as u64);
+            let mut a = vec![0f64; t * t];
+            for r in 0..t {
+                for c in 0..t {
+                    if r != c {
+                        a[r * t + c] = rng.range_f64(-1.0, 1.0);
+                    }
+                }
+            }
+            for d in 0..t {
+                let col_sum: f64 = (0..t).filter(|&r| r != d).map(|r| a[r * t + d].abs()).sum();
+                a[d * t + d] = col_sum + 1.0;
+            }
+            let rhs: Vec<f64> = (0..t).map(|i| ((i % 7) as f64) - 3.0).collect();
+
+            let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+            let rhs32: Vec<f32> = rhs.iter().map(|&v| v as f32).collect();
+            let (_, x) = rt.dense_tail_solve(&a32, &rhs32, t).unwrap();
+
+            let want = crate::numeric::dense::solve(&a, t, &rhs).unwrap();
+            for (g, w) in x.iter().zip(&want) {
+                assert!(
+                    (*g as f64 - w).abs() < 1e-3 * (1.0 + w.abs()),
+                    "t={t}: {g} vs {w}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Default-build stand-in for the PJRT runtime (`xla` bindings absent).
+//!
+//! Same public surface as the `pjrt` implementation; [`Runtime::load`] always
+//! errors, so every caller that guards on artifacts being built (the bench
+//! and the integration test do) skips before touching the other methods.
+
+use std::path::Path;
+
+/// Stub runtime: carries the API, never loads.
+#[derive(Debug)]
+pub struct Runtime {}
+
+impl Runtime {
+    /// Always fails: the `pjrt` feature (and the vendored `xla` crate) is
+    /// required for artifact execution.
+    pub fn load(_dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        anyhow::bail!(
+            "glu3 was built without the `pjrt` feature; vendor the `xla` \
+             bindings and rebuild with `--features pjrt` to load artifacts"
+        )
+    }
+
+    /// Artifact names available (none in the stub).
+    pub fn names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    /// Stubbed `level_update` (see the `pjrt` module when enabled).
+    pub fn level_update(
+        &self,
+        _x: &[f32],
+        _u: &[f32],
+        _s: &[f32],
+        _b: usize,
+        _n: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::bail!("pjrt feature disabled")
+    }
+
+    /// Stubbed `dense_tail_solve` (see the `pjrt` module when enabled).
+    pub fn dense_tail_solve(
+        &self,
+        _a: &[f32],
+        _rhs: &[f32],
+        _t: usize,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::bail!("pjrt feature disabled")
+    }
+
+    /// Stubbed `quickstart` (see the `pjrt` module when enabled).
+    pub fn quickstart(&self, _x: [f32; 4], _y: [f32; 4]) -> anyhow::Result<[f32; 4]> {
+        anyhow::bail!("pjrt feature disabled")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_reports_missing_feature() {
+        let err = Runtime::load(super::super::default_artifact_dir()).unwrap_err();
+        assert!(format!("{err}").contains("pjrt"));
+    }
+}

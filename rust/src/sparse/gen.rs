@@ -191,6 +191,25 @@ pub fn netlist(
     assemble(n, &couplings, seed)
 }
 
+/// "Newton restamp": same sparsity pattern, fresh values. Scales every
+/// column by an independent random factor in `[0.5, 2)`, which preserves
+/// the column diagonal dominance the pivot-free GLU regime relies on —
+/// the value churn a solver service sees between refactor requests. Used
+/// by the service demo, the `serve` CLI command, and the service/property
+/// tests.
+pub fn restamp_columns(a: &Csc, rng: &mut Rng) -> Csc {
+    let mut m = a.clone();
+    let colptr = m.colptr().to_vec();
+    let vals = m.values_mut();
+    for c in 0..colptr.len() - 1 {
+        let s = rng.range_f64(0.5, 2.0);
+        for v in &mut vals[colptr[c]..colptr[c + 1]] {
+            *v *= s;
+        }
+    }
+    m
+}
+
 /// 5-point 2-D mesh Laplacian (G3_circuit class).
 pub fn grid2d(nx: usize, ny: usize, seed: u64) -> Csc {
     let n = nx * ny;

@@ -1,5 +1,6 @@
 //! Aggregate statistics used by the bench tables (the paper reports both
-//! arithmetic and geometric means of speedup ratios).
+//! arithmetic and geometric means of speedup ratios) and by the solver
+//! service's latency accounting (p50/p99 per-request solve times).
 
 /// Arithmetic mean; 0.0 for an empty slice.
 pub fn arith_mean(xs: &[f64]) -> f64 {
@@ -16,6 +17,105 @@ pub fn geo_mean(xs: &[f64]) -> f64 {
     }
     debug_assert!(xs.iter().all(|&x| x > 0.0));
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Nearest-rank percentile of an *unsorted* sample slice; `p` in `[0, 100]`.
+/// Returns 0.0 for an empty slice.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// A streaming latency recorder: keeps a bounded ring of recent per-request
+/// samples (ms) and summarizes them as count / mean / p50 / p99 — the
+/// service-facing numbers. Bounding the window keeps a long-lived serving
+/// pool at constant memory no matter how many requests it handles;
+/// [`LatencyRecorder::count`] still reports the all-time total.
+#[derive(Debug, Clone)]
+pub struct LatencyRecorder {
+    /// Sample window (ring once `cap` is reached).
+    samples: Vec<f64>,
+    /// Next ring slot to overwrite once full.
+    next: usize,
+    /// All-time number of recorded samples.
+    total: usize,
+    cap: usize,
+}
+
+/// Default sample-window size.
+const LATENCY_WINDOW: usize = 4096;
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        Self::with_window(LATENCY_WINDOW)
+    }
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A recorder keeping at most `window` recent samples (`window >= 1`).
+    pub fn with_window(window: usize) -> Self {
+        assert!(window >= 1);
+        LatencyRecorder {
+            samples: Vec::new(),
+            next: 0,
+            total: 0,
+            cap: window,
+        }
+    }
+
+    /// Record one request latency in milliseconds.
+    pub fn record(&mut self, ms: f64) {
+        self.total += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(ms);
+        } else {
+            self.samples[self.next] = ms;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    /// Merge another recorder (shard aggregation): its window samples enter
+    /// this window, its all-time total carries over.
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        for &s in &other.samples {
+            self.record(s);
+        }
+        self.total += other.total - other.samples.len();
+    }
+
+    /// All-time number of recorded samples.
+    pub fn count(&self) -> usize {
+        self.total
+    }
+
+    /// Mean over the current window, ms.
+    pub fn mean_ms(&self) -> f64 {
+        arith_mean(&self.samples)
+    }
+
+    /// Median over the current window, ms.
+    pub fn p50_ms(&self) -> f64 {
+        percentile(&self.samples, 50.0)
+    }
+
+    /// 99th percentile over the current window, ms.
+    pub fn p99_ms(&self) -> f64 {
+        percentile(&self.samples, 99.0)
+    }
+
+    /// The sample window (insertion order until the ring wraps).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
 }
 
 /// Relative L∞ error between two vectors, `max |a-b| / (1 + |b|)`.
@@ -43,6 +143,57 @@ mod tests {
     fn geo_mean_matches_paper_style() {
         // geometric mean of {2, 8} is 4; of {10, 1000} is 100.
         assert!((geo_mean(&[10.0, 1000.0]) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        // order-independent
+        let mut rev = xs.clone();
+        rev.reverse();
+        assert_eq!(percentile(&rev, 50.0), 50.0);
+    }
+
+    #[test]
+    fn latency_recorder_summary() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=10 {
+            r.record(i as f64);
+        }
+        assert_eq!(r.count(), 10);
+        assert_eq!(r.p50_ms(), 5.0);
+        assert_eq!(r.p99_ms(), 10.0);
+        assert!((r.mean_ms() - 5.5).abs() < 1e-12);
+
+        let mut other = LatencyRecorder::new();
+        other.record(100.0);
+        r.merge(&other);
+        assert_eq!(r.count(), 11);
+        assert_eq!(r.p99_ms(), 100.0);
+    }
+
+    #[test]
+    fn latency_recorder_window_is_bounded() {
+        let mut r = LatencyRecorder::with_window(4);
+        for i in 1..=10 {
+            r.record(i as f64);
+        }
+        // window holds the last 4 samples (7, 8, 9, 10); total is all-time
+        assert_eq!(r.count(), 10);
+        assert_eq!(r.samples().len(), 4);
+        assert_eq!(r.p99_ms(), 10.0);
+        assert!((r.mean_ms() - 8.5).abs() < 1e-12);
+
+        // merging keeps totals and respects the receiver's window
+        let mut big = LatencyRecorder::with_window(2);
+        big.merge(&r);
+        assert_eq!(big.count(), 10);
+        assert_eq!(big.samples().len(), 2);
     }
 
     #[test]

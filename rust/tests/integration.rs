@@ -122,10 +122,14 @@ fn matrix_market_roundtrip_pipeline() {
     assert!(residual(&a, &x, &rhs) < 1e-7);
 }
 
-/// PJRT runtime agrees with the native dense solver (skips without
-/// artifacts — `make artifacts` first).
+/// PJRT runtime agrees with the native dense solver (skips without the
+/// `pjrt` feature or without artifacts — `make artifacts` first).
 #[test]
 fn pjrt_dense_tail_vs_native() {
+    if !glu3::runtime::PJRT_ENABLED {
+        eprintln!("skipping: built without the pjrt feature");
+        return;
+    }
     let dir = glu3::runtime::default_artifact_dir();
     if !dir.join("quickstart.hlo.txt").exists() {
         eprintln!("skipping: artifacts not built");

@@ -1,0 +1,236 @@
+//! Service-tier integration tests: the [`SolverPool`]'s pattern-keyed
+//! symbolic cache, batched multi-RHS solves, and concurrent sessions.
+//!
+//! Tier layout: see `rust/tests/README.md`.
+
+use glu3::coordinator::{pattern_key, Checkout, SolverPool};
+use glu3::glu::{GluOptions, GluSolver};
+use glu3::numeric::residual;
+use glu3::sparse::gen::{self, restamp_columns as restamp};
+use glu3::sparse::Csc;
+use glu3::util::Rng;
+
+/// Pattern-cache accounting: misses only on first sight of a pattern, hits
+/// on every repeat, entry count matches distinct patterns.
+#[test]
+fn cache_hit_miss_accounting() {
+    let pool = SolverPool::new(GluOptions::default());
+    let pats: Vec<Csc> = (0..3)
+        .map(|s| gen::netlist(200, 5, 10, 0.05, 2, 0.2, 500 + s))
+        .collect();
+    let mut rng = Rng::new(1);
+    let b = vec![1.0; 200];
+
+    // 4 rounds over 3 patterns with fresh values each time.
+    for round in 0..4 {
+        for (pi, p) in pats.iter().enumerate() {
+            let m = restamp(p, &mut rng);
+            let x = pool.solve(&m, &b).unwrap();
+            assert!(
+                residual(&m, &x, &b) < 1e-7,
+                "round {round} pattern {pi}: residual too large"
+            );
+        }
+    }
+
+    let st = pool.stats();
+    assert_eq!(st.requests(), 12);
+    assert_eq!(st.misses, 3, "one miss per distinct pattern");
+    assert_eq!(st.hits, 9, "every repeat is a hit");
+    assert_eq!(st.factors, 3);
+    assert_eq!(st.refactors, 9);
+    assert_eq!(st.entries, 3);
+    assert_eq!(st.solves, 12);
+    assert!((st.hit_rate() - 0.75).abs() < 1e-12);
+    assert_eq!(st.latency.count(), 12);
+    assert!(st.p99_ms() >= st.p50_ms());
+}
+
+/// The acceptance-criteria assertion: refactor-path solves skip ordering,
+/// fill, and dependency detection — verified via the GluStats run counters
+/// (symbolic pipeline ran exactly once while the numeric kernel ran once
+/// per request).
+#[test]
+fn refactor_path_skips_symbolic_phases() {
+    let pool = SolverPool::new(GluOptions::default());
+    let base = gen::netlist(300, 5, 12, 0.05, 2, 0.2, 11);
+    let mut rng = Rng::new(2);
+    let b = vec![1.0; 300];
+
+    let requests = 8;
+    for _ in 0..requests {
+        pool.solve(&restamp(&base, &mut rng), &b).unwrap();
+    }
+
+    let entries = pool.entry_stats();
+    assert_eq!(entries.len(), 1);
+    let (key, stats) = &entries[0];
+    assert_eq!(*key, pattern_key(&base));
+    assert_eq!(
+        stats.symbolic_runs, 1,
+        "ordering/fill/detection must run exactly once for a cached pattern"
+    );
+    assert_eq!(
+        stats.numeric_runs, requests,
+        "the numeric kernel runs once per request"
+    );
+    let st = pool.stats();
+    assert_eq!(st.factors, 1);
+    assert_eq!(st.refactors as usize, requests - 1);
+}
+
+/// Batched `solve_many` agrees with N independent `solve` calls — same
+/// inner routine, so the answers are identical, not merely close.
+#[test]
+fn solve_many_agrees_with_independent_solves() {
+    let a = gen::netlist(250, 6, 10, 0.05, 2, 0.2, 31);
+    let batch: Vec<Vec<f64>> = (0..8)
+        .map(|s| (0..250).map(|i| ((i * 3 + s) % 17) as f64 - 8.0).collect())
+        .collect();
+
+    // Batched through the pool.
+    let pool = SolverPool::new(GluOptions::default());
+    let xs_batch = pool.solve_many(&a, &batch).unwrap();
+    let st = pool.stats();
+    assert_eq!(st.requests(), 1, "one pattern lookup for the whole batch");
+    assert_eq!(st.solves as usize, batch.len());
+
+    // N independent solves on a fresh solver.
+    let mut solver = GluSolver::factor(&a, &GluOptions::default()).unwrap();
+    for (b, x_batch) in batch.iter().zip(&xs_batch) {
+        let x_one = solver.solve(b).unwrap();
+        assert_eq!(&x_one, x_batch, "batched result must match independent solve");
+        assert!(residual(&a, x_batch, b) < 1e-7);
+    }
+}
+
+/// Concurrent solves from 4 threads return exactly the answers serial
+/// execution produces, and the cache accounting still adds up.
+#[test]
+fn concurrent_solves_match_serial() {
+    let threads = 4;
+    let per_thread = 6;
+    let pats: Vec<Csc> = (0..3)
+        .map(|s| gen::netlist(150, 5, 10, 0.08, 2, 0.2, 900 + s))
+        .collect();
+
+    // Build every request (thread, index) -> (matrix, rhs) up front so the
+    // serial and concurrent runs see byte-identical inputs.
+    let mut requests: Vec<Vec<(Csc, Vec<f64>)>> = Vec::new();
+    for t in 0..threads {
+        let mut rng = Rng::new(7_000 + t as u64);
+        let mut reqs = Vec::new();
+        for i in 0..per_thread {
+            let m = restamp(&pats[(t + i) % pats.len()], &mut rng);
+            let b: Vec<f64> = (0..150).map(|j| ((j + t + i) % 9) as f64 - 4.0).collect();
+            reqs.push((m, b));
+        }
+        requests.push(reqs);
+    }
+
+    // Serial reference: a fresh factorization per request (no shared state).
+    let serial: Vec<Vec<Vec<f64>>> = requests
+        .iter()
+        .map(|reqs| {
+            reqs.iter()
+                .map(|(m, b)| {
+                    GluSolver::factor(m, &GluOptions::default())
+                        .unwrap()
+                        .solve(b)
+                        .unwrap()
+                })
+                .collect()
+        })
+        .collect();
+
+    // Concurrent: all threads share one pool.
+    let pool = SolverPool::new(GluOptions::default());
+    let mut concurrent: Vec<Vec<Vec<f64>>> = vec![Vec::new(); threads];
+    std::thread::scope(|scope| {
+        for (t, (reqs, out)) in requests.iter().zip(concurrent.iter_mut()).enumerate() {
+            let pool = &pool;
+            scope.spawn(move || {
+                for (m, b) in reqs {
+                    let x = pool.solve(m, b).unwrap_or_else(|e| {
+                        panic!("thread {t}: solve failed: {e}");
+                    });
+                    out.push(x);
+                }
+            });
+        }
+    });
+
+    for (t, (ser, con)) in serial.iter().zip(&concurrent).enumerate() {
+        assert_eq!(ser.len(), con.len());
+        for (i, (xs, xc)) in ser.iter().zip(con).enumerate() {
+            for (p, q) in xs.iter().zip(xc) {
+                assert!(
+                    (p - q).abs() < 1e-9 * (1.0 + q.abs()),
+                    "thread {t} request {i}: concurrent result diverged"
+                );
+            }
+        }
+    }
+
+    let st = pool.stats();
+    assert_eq!(st.requests() as usize, threads * per_thread);
+    // The miss-path factorization runs outside the shard lock, so threads
+    // racing on the same *cold* pattern may each factor it once; after
+    // warmup every request hits. 3 patterns, 4 threads bounds the misses.
+    assert!(
+        (3..=3 * threads as u64).contains(&st.misses),
+        "misses {} outside [3, {}]",
+        st.misses,
+        3 * threads
+    );
+    assert_eq!(st.factors, st.misses);
+    assert_eq!(st.hits, st.requests() - st.misses);
+    assert_eq!(st.entries, 3);
+    assert_eq!(st.solves as usize, threads * per_thread);
+    assert_eq!(st.latency.count(), threads * per_thread);
+}
+
+/// LRU eviction under capacity pressure keeps serving correct answers and
+/// counts evictions.
+#[test]
+fn eviction_pressure_stays_correct() {
+    // A deliberately tiny pool: 1 shard, 2 entries, 4 patterns.
+    let pool = SolverPool::with_config(GluOptions::default(), 1, 2);
+    let pats: Vec<Csc> = (0..4)
+        .map(|s| gen::netlist(120, 5, 8, 0.1, 1, 0.2, 40 + s))
+        .collect();
+    let b = vec![1.0; 120];
+    for round in 0..3 {
+        for (pi, p) in pats.iter().enumerate() {
+            let x = pool.solve(p, &b).unwrap();
+            assert!(
+                residual(p, &x, &b) < 1e-7,
+                "round {round} pattern {pi} under eviction pressure"
+            );
+        }
+    }
+    let st = pool.stats();
+    // Round-robin over 4 patterns with capacity 2 thrashes: every request
+    // after the warmup misses, and each miss beyond capacity evicts.
+    assert_eq!(st.requests(), 12);
+    assert_eq!(st.misses, 12);
+    assert_eq!(st.evictions, 10);
+    assert_eq!(st.entries, 2);
+}
+
+/// Checkout outcomes are visible to callers (the NR driver keys off them).
+#[test]
+fn checkout_outcome_reporting() {
+    let a = gen::grid2d(10, 10, 3);
+    let pool = SolverPool::new(GluOptions::default());
+    {
+        let g = pool.checkout(&a).unwrap();
+        assert_eq!(g.outcome(), Checkout::Factored);
+    }
+    {
+        let g = pool.checkout(&a).unwrap();
+        assert_eq!(g.outcome(), Checkout::Refactored);
+        assert_eq!(g.stats().symbolic_runs, 1);
+        assert_eq!(g.stats().numeric_runs, 2);
+    }
+}

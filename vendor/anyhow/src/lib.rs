@@ -1,0 +1,215 @@
+//! Offline vendored stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access and no crates.io registry, so
+//! this workspace carries a minimal, dependency-free reimplementation of the
+//! `anyhow` API subset the `glu3` crate actually uses:
+//!
+//! - [`Error`] / [`Result`] — a string-chain error type (context frames are
+//!   flattened to strings eagerly; no downcasting support).
+//! - [`anyhow!`], [`bail!`], [`ensure!`] — the formatting macros.
+//! - [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//!
+//! Display mirrors `anyhow`: `{}` prints the outermost message only, `{:#}`
+//! prints the whole chain separated by `": "`, and `{:?}` prints the
+//! outermost message followed by a `Caused by:` list.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A flattened error chain. `chain[0]` is the outermost (most recent
+/// context) message; later entries are the causes, outermost-in first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg(message: impl fmt::Display) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap a standard error, capturing its `source()` chain.
+    pub fn new<E: StdError>(error: E) -> Self {
+        let mut chain = vec![error.to_string()];
+        let mut source = error.source();
+        while let Some(cause) = source {
+            chain.push(cause.to_string());
+            source = cause.source();
+        }
+        Error { chain }
+    }
+
+    /// Push a new outermost context frame.
+    pub fn context(mut self, context: impl fmt::Display) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The chain of messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`: that keeps
+// this blanket conversion coherent (the same trick real `anyhow` uses).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+/// Attach context to a `Result` or `Option` error path.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<usize> {
+        let v: usize = s.parse()?; // From<ParseIntError> via the blanket impl
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = anyhow!("bad thing {}", 7);
+        assert_eq!(format!("{e}"), "bad thing 7");
+
+        fn f(x: i32) -> Result<()> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(())
+        }
+        assert!(f(5).is_ok());
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "x must be positive, got -1");
+        assert_eq!(format!("{}", f(101).unwrap_err()), "too big");
+    }
+
+    #[test]
+    fn context_chains_render() {
+        let r: Result<()> = Err(anyhow!("root"));
+        let e = r.map_err(|e| e.context("outer")).unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root");
+        assert!(format!("{e:?}").contains("Caused by:"));
+
+        let none: Option<u32> = None;
+        let e = none.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+
+        let io: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            "disk on fire",
+        ));
+        let e = io.with_context(|| format!("writing {}", "x")).unwrap_err();
+        assert_eq!(format!("{e:#}"), "writing x: disk on fire");
+        assert_eq!(e.root_cause(), "disk on fire");
+        assert_eq!(e.chain().count(), 2);
+    }
+}
