@@ -4,6 +4,7 @@
 //! [`crate::util::timer::measure`]).
 
 pub mod fixtures;
+pub mod numeric;
 pub mod table;
 
 pub use fixtures::paper_example;

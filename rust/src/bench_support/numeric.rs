@@ -1,0 +1,392 @@
+//! Wall-clock numeric bench harness → `BENCH_numeric.json`.
+//!
+//! Times `factor` (full pipeline), `refactor` (numeric kernel only — the
+//! Newton hot path) and `solve` for every numeric engine across a set of
+//! thread counts, plus the head-to-head that motivated the persistent
+//! worker pool: pool-based [`parlu::factor_with`] vs the seed's
+//! per-level-spawn baseline [`parlu::factor_spawn_per_level_with`] on the
+//! same precomputed schedule (so the measured difference is purely worker
+//! orchestration). Wired into the CLI as `glu3 bench` and into CI as a
+//! schema-validated smoke job; the perf trajectory lives in the emitted
+//! JSON, not in a CI gate.
+//!
+//! All timings are medians (factor/refactor/solve) or minima (the
+//! spawn-vs-pool ratio, where min is the stable statistic) over
+//! `iters` runs after `warmup` discarded runs, in milliseconds.
+
+use crate::glu::{GluOptions, GluSolver, NumericEngine};
+use crate::numeric::{parlu, WorkerPool};
+use crate::sparse::{gen, Csc};
+use crate::symbolic::symbolic_fill;
+use crate::util::timer::measure;
+
+/// What to bench: one matrix, several thread counts, a sampling plan.
+pub struct BenchSpec {
+    /// Label recorded in the JSON (e.g. `grid2d-100x100-amd`).
+    pub label: String,
+    /// The (unordered) input matrix; engines apply AMD internally and the
+    /// spawn-vs-pool head-to-head pre-permutes with AMD explicitly.
+    pub a: Csc,
+    /// Thread counts for the parallel engines (sequential engines run once).
+    pub thread_counts: Vec<usize>,
+    /// Discarded warmup runs per measurement.
+    pub warmup: usize,
+    /// Recorded runs per measurement.
+    pub iters: usize,
+}
+
+impl BenchSpec {
+    /// Small fixture for CI smoke runs: fast, but still multi-level.
+    pub fn smoke() -> Self {
+        BenchSpec {
+            label: "grid2d-30x30-amd".to_string(),
+            a: gen::grid2d(30, 30, 7),
+            thread_counts: vec![1, 2],
+            warmup: 0,
+            iters: 2,
+        }
+    }
+
+    /// The acceptance fixture: 100×100 AMD-ordered 2-D grid, 4 threads —
+    /// where pool-based `parlu` must beat the per-level-spawn baseline by
+    /// ≥ 2× wall-clock.
+    pub fn acceptance() -> Self {
+        BenchSpec {
+            label: "grid2d-100x100-amd".to_string(),
+            a: gen::grid2d(100, 100, 7),
+            thread_counts: vec![1, 2, 4],
+            warmup: 1,
+            iters: 3,
+        }
+    }
+}
+
+/// One engine × thread-count row of the report.
+#[derive(Debug, Clone)]
+pub struct EngineSample {
+    pub engine: String,
+    pub threads: usize,
+    /// Median wall-clock of `GluSolver::factor` (full pipeline), ms.
+    pub factor_ms: f64,
+    /// Median wall-clock of `GluSolver::refactor` (numeric only), ms.
+    pub refactor_ms: f64,
+    /// Median wall-clock of one `GluSolver::solve`, ms.
+    pub solve_ms: f64,
+}
+
+/// The pool-vs-spawn head-to-head (same schedule, same arithmetic).
+#[derive(Debug, Clone)]
+pub struct SpawnBaseline {
+    pub threads: usize,
+    /// Min wall-clock of the per-level-spawn baseline factor, ms.
+    pub spawn_per_level_ms: f64,
+    /// Min wall-clock of the persistent-pool factor, ms.
+    pub pool_ms: f64,
+}
+
+impl SpawnBaseline {
+    /// How much the persistent pool wins by (≥ 2.0 is the acceptance bar).
+    pub fn speedup(&self) -> f64 {
+        self.spawn_per_level_ms / self.pool_ms.max(1e-9)
+    }
+}
+
+/// Full report, serializable with [`BenchReport::to_json`].
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub matrix: String,
+    pub n: usize,
+    pub nnz: usize,
+    pub host_threads: usize,
+    pub samples: Vec<EngineSample>,
+    pub baseline: SpawnBaseline,
+}
+
+/// Run the whole harness over `spec`.
+pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
+    let a = &spec.a;
+    let n = a.nrows();
+    let b: Vec<f64> = (0..n).map(|i| 1.0 + ((i % 97) as f64) / 97.0).collect();
+    let mut a2 = a.clone();
+    for v in a2.values_mut() {
+        *v *= 1.1;
+    }
+
+    let mut engines: Vec<(String, NumericEngine)> = vec![
+        ("simulated-gpu".into(), NumericEngine::SimulatedGpu),
+        ("leftlook".into(), NumericEngine::LeftLookingCpu),
+        ("rightlook".into(), NumericEngine::RightLookingCpu),
+    ];
+    for &t in &spec.thread_counts {
+        engines.push(("parlu".to_string(), NumericEngine::ParallelCpu { threads: t }));
+        engines.push((
+            "parrl".to_string(),
+            NumericEngine::ParallelRightLooking { threads: t },
+        ));
+    }
+
+    let mut samples = Vec::with_capacity(engines.len());
+    for (name, engine) in engines {
+        let threads = engine.threads();
+        let opts = GluOptions {
+            engine,
+            ..Default::default()
+        };
+        let factor_ms = measure(spec.warmup, spec.iters, || {
+            GluSolver::factor(a, &opts).expect("bench factor")
+        })
+        .median_ms();
+        let mut solver = GluSolver::factor(a, &opts)?;
+        let refactor_ms = measure(spec.warmup, spec.iters, || {
+            solver.refactor(&a2).expect("bench refactor")
+        })
+        .median_ms();
+        let solve_ms = measure(spec.warmup, spec.iters.max(3), || {
+            solver.solve(&b).expect("bench solve")
+        })
+        .median_ms();
+        samples.push(EngineSample {
+            engine: name,
+            threads,
+            factor_ms,
+            refactor_ms,
+            solve_ms,
+        });
+    }
+
+    let baseline = spawn_vs_pool(spec)?;
+
+    Ok(BenchReport {
+        matrix: spec.label.clone(),
+        n,
+        nnz: a.nnz(),
+        host_threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+        samples,
+        baseline,
+    })
+}
+
+/// The isolated head-to-head: AMD-permute the matrix (the engines' default
+/// preprocessing), compute the U-pattern schedule **once**, then time
+/// pool-based [`parlu::factor_with`] against the seed's
+/// [`parlu::factor_spawn_per_level_with`] at the largest requested thread
+/// count. Identical schedule, identical column kernel — the measured gap
+/// is the per-level spawn/join (plus its per-level workspace allocation)
+/// that the persistent pool eliminates.
+pub fn spawn_vs_pool(spec: &BenchSpec) -> anyhow::Result<SpawnBaseline> {
+    let threads = spec.thread_counts.iter().copied().max().unwrap_or(1);
+    let p = crate::order::amd::amd_order(&spec.a)?;
+    let a = spec.a.permute(p.as_scatter(), p.as_scatter());
+    let sym = symbolic_fill(&a)?;
+    let levels = parlu::leftlook_levels(&sym);
+    let n = a.nrows();
+
+    let pool = WorkerPool::new(threads);
+    let mut works = vec![vec![0.0f64; n]; pool.threads()];
+    let pool_stats = measure(spec.warmup, spec.iters, || {
+        parlu::factor_with(&sym, &levels, &pool, &mut works).expect("pool factor")
+    });
+    let spawn_stats = measure(spec.warmup, spec.iters, || {
+        parlu::factor_spawn_per_level_with(&sym, &levels, threads).expect("spawn factor")
+    });
+
+    Ok(SpawnBaseline {
+        threads,
+        spawn_per_level_ms: spawn_stats.min * 1e3,
+        pool_ms: pool_stats.min * 1e3,
+    })
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Escape a string for embedding in a JSON document (labels come from the
+/// CLI's `--matrix` argument, which can be an arbitrary file path).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl BenchReport {
+    /// Hand-rolled JSON (no serde in the offline vendored crate set).
+    /// Schema `glu3-bench-numeric-v1`; validated by the CI smoke job.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"glu3-bench-numeric-v1\",\n");
+        s.push_str(&format!("  \"matrix\": \"{}\",\n", json_str(&self.matrix)));
+        s.push_str(&format!("  \"n\": {},\n", self.n));
+        s.push_str(&format!("  \"nnz\": {},\n", self.nnz));
+        s.push_str(&format!("  \"host_threads\": {},\n", self.host_threads));
+        s.push_str("  \"results\": [\n");
+        for (i, r) in self.samples.iter().enumerate() {
+            let sep = if i + 1 == self.samples.len() { "" } else { "," };
+            s.push_str(&format!(
+                "    {{\"engine\": \"{}\", \"threads\": {}, \"factor_ms\": {}, \
+                 \"refactor_ms\": {}, \"solve_ms\": {}}}{}\n",
+                json_str(&r.engine),
+                r.threads,
+                json_num(r.factor_ms),
+                json_num(r.refactor_ms),
+                json_num(r.solve_ms),
+                sep
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str(&format!(
+            "  \"spawn_baseline\": {{\"threads\": {}, \"spawn_per_level_ms\": {}, \
+             \"pool_ms\": {}, \"speedup\": {}}}\n",
+            self.baseline.threads,
+            json_num(self.baseline.spawn_per_level_ms),
+            json_num(self.baseline.pool_ms),
+            json_num(self.baseline.speedup())
+        ));
+        s.push_str("}\n");
+        s
+    }
+
+    /// Write the JSON report to `path`.
+    pub fn write_json(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))
+    }
+}
+
+/// Light structural validation of a `glu3-bench-numeric-v1` document:
+/// required keys present, braces/brackets balanced, at least one result
+/// row. (CI additionally runs it through a real JSON parser.)
+pub fn validate_json_schema(s: &str) -> anyhow::Result<()> {
+    for key in [
+        "\"schema\": \"glu3-bench-numeric-v1\"",
+        "\"matrix\"",
+        "\"n\"",
+        "\"nnz\"",
+        "\"results\"",
+        "\"engine\"",
+        "\"threads\"",
+        "\"factor_ms\"",
+        "\"refactor_ms\"",
+        "\"solve_ms\"",
+        "\"spawn_baseline\"",
+        "\"speedup\"",
+    ] {
+        anyhow::ensure!(s.contains(key), "missing key {key}");
+    }
+    let mut depth_obj = 0i64;
+    let mut depth_arr = 0i64;
+    let mut in_str = false;
+    let mut escape = false;
+    for c in s.chars() {
+        if in_str {
+            if escape {
+                escape = false;
+            } else if c == '\\' {
+                escape = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+        } else {
+            match c {
+                '"' => in_str = true,
+                '{' => depth_obj += 1,
+                '}' => depth_obj -= 1,
+                '[' => depth_arr += 1,
+                ']' => depth_arr -= 1,
+                _ => {}
+            }
+            anyhow::ensure!(depth_obj >= 0 && depth_arr >= 0, "unbalanced nesting");
+        }
+    }
+    anyhow::ensure!(
+        depth_obj == 0 && depth_arr == 0 && !in_str,
+        "unbalanced JSON document"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_is_wellformed() {
+        let report = BenchReport {
+            matrix: "toy".into(),
+            n: 4,
+            nnz: 8,
+            host_threads: 2,
+            samples: vec![
+                EngineSample {
+                    engine: "leftlook".into(),
+                    threads: 1,
+                    factor_ms: 1.25,
+                    refactor_ms: 0.5,
+                    solve_ms: 0.125,
+                },
+                EngineSample {
+                    engine: "parlu".into(),
+                    threads: 4,
+                    factor_ms: f64::NAN, // must serialize as null, stay valid
+                    refactor_ms: 0.25,
+                    solve_ms: 0.0625,
+                },
+            ],
+            baseline: SpawnBaseline {
+                threads: 4,
+                spawn_per_level_ms: 10.0,
+                pool_ms: 2.0,
+            },
+        };
+        let json = report.to_json();
+        validate_json_schema(&json).unwrap();
+        assert!(json.contains("\"factor_ms\": null"));
+        assert!(json.contains("\"speedup\": 5.000000"));
+    }
+
+    #[test]
+    fn labels_are_json_escaped() {
+        let report = BenchReport {
+            matrix: "runs\\grid \"v2\".mtx".into(),
+            n: 1,
+            nnz: 1,
+            host_threads: 1,
+            samples: vec![EngineSample {
+                engine: "leftlook".into(),
+                threads: 1,
+                factor_ms: 1.0,
+                refactor_ms: 1.0,
+                solve_ms: 1.0,
+            }],
+            baseline: SpawnBaseline {
+                threads: 1,
+                spawn_per_level_ms: 1.0,
+                pool_ms: 1.0,
+            },
+        };
+        let json = report.to_json();
+        validate_json_schema(&json).unwrap();
+        assert!(json.contains("runs\\\\grid \\\"v2\\\".mtx"));
+    }
+
+    #[test]
+    fn validator_rejects_truncation() {
+        let report_json = "{\n  \"schema\": \"glu3-bench-numeric-v1\",\n  \"results\": [";
+        assert!(validate_json_schema(report_json).is_err());
+    }
+}

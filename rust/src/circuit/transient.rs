@@ -226,6 +226,47 @@ mod tests {
     }
 
     #[test]
+    fn transient_with_parallel_engine_matches_default() {
+        use crate::glu::{GluOptions, NumericEngine};
+
+        let nl = parse_netlist(
+            "V1 in 0 1\n\
+             R1 in out 1k\n\
+             C1 out 0 1u\n",
+        )
+        .unwrap();
+        let sys = MnaSystem::dc(nl.clone());
+        let dim = sys.dim();
+        let mut x0 = vec![0.0; dim];
+        x0[nl.node("in").unwrap() - 1] = 1.0;
+        let opts = TranOptions {
+            dt: 1e-4,
+            steps: 8,
+            ..Default::default()
+        };
+        let base = transient(&nl, &x0, &opts).unwrap();
+
+        // Thread plumbing: TranOptions -> GluOptions -> SolverPool ->
+        // pool-backed engine, for the whole Newton/transient loop.
+        let par_opts = TranOptions {
+            glu: GluOptions {
+                engine: NumericEngine::ParallelRightLooking { threads: 2 },
+                ..Default::default()
+            },
+            ..opts
+        };
+        let par = transient(&nl, &x0, &par_opts).unwrap();
+        // one refactor per executed NR solve, whatever the engine
+        assert_eq!(par.refactorizations, par.nr_iterations);
+        assert_eq!(par.waveforms.len(), base.waveforms.len());
+        for (a, b) in base.waveforms.iter().zip(&par.waveforms) {
+            for (p, q) in a.iter().zip(b) {
+                assert!((p - q).abs() < 1e-9 * (1.0 + q.abs()));
+            }
+        }
+    }
+
+    #[test]
     fn warm_pool_transient_never_factors() {
         use crate::coordinator::pool::SolverPool;
         use crate::glu::GluOptions;

@@ -212,6 +212,38 @@ mod tests {
     }
 
     #[test]
+    fn parallel_engines_through_the_pool_match_default() {
+        use crate::glu::{GluOptions, NumericEngine};
+
+        let a = gen::grid2d(10, 10, 4);
+        let b: Vec<f64> = (0..100).map(|i| ((i % 5) as f64) - 2.0).collect();
+        let sys = CubicGrid { a, b };
+        let base = newton_raphson(&sys, &vec![0.0; 100], &NrOptions::default()).unwrap();
+        assert!(base.converged);
+
+        // Thread plumbing: NrOptions -> GluOptions -> SolverPool -> the
+        // pool-backed engines (factorization *and* the parallel trisolve).
+        for engine in [
+            NumericEngine::ParallelCpu { threads: 2 },
+            NumericEngine::ParallelRightLooking { threads: 2 },
+        ] {
+            let opts = NrOptions {
+                glu: GluOptions {
+                    engine: engine.clone(),
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let res = newton_raphson(&sys, &vec![0.0; 100], &opts).unwrap();
+            assert!(res.converged, "{engine:?}");
+            assert!(res.iterations.abs_diff(base.iterations) <= 1, "{engine:?}");
+            for (p, q) in res.x.iter().zip(&base.x) {
+                assert!((p - q).abs() < 1e-8 * (1.0 + q.abs()), "{engine:?}");
+            }
+        }
+    }
+
+    #[test]
     fn shared_pool_hits_refactor_path_across_nr_runs() {
         use crate::coordinator::pool::SolverPool;
 

@@ -23,6 +23,18 @@
 //! - every checkout records its latency (lock wait + factor/refactor +
 //!   whatever the caller does before releasing the guard) into a
 //!   [`LatencyRecorder`], surfaced as p50/p99 through [`PoolStats`].
+//!
+//! Thread plumbing: the [`GluOptions`] the pool is built with select the
+//! numeric engine, including the pool-backed parallel ones
+//! ([`crate::glu::NumericEngine::ParallelCpu`] /
+//! [`crate::glu::NumericEngine::ParallelRightLooking`]). Each cached
+//! [`GluSolver`] then owns its persistent worker pool and cached level
+//! schedules (factorization *and* triangular-solve), so refactors and
+//! batched solves on a warm entry run level-parallel with no thread spawn
+//! on the hot path. Worker threads are parked (not spinning) between
+//! checkouts; a cache with many parallel-engine entries therefore costs
+//! idle threads, not idle cycles — size `shards × capacity × threads`
+//! accordingly.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard, PoisonError};

@@ -1,8 +1,10 @@
 //! The [`GluSolver`]: preprocess → symbolic → levelize → numeric → solve.
 
 use crate::depend::{glu1, glu2, glu3, levelize, DepGraph, Levels};
-use crate::gpusim::{simulate_factorization, DeviceConfig, Policy, SimReport};
-use crate::numeric::{leftlook, parlu, rightlook, LuFactors};
+use crate::gpusim::{simulate_refactorization, DeviceConfig, Policy, SimReport};
+use crate::numeric::pool::WorkerPool;
+use crate::numeric::trisolve::TriangularSchedule;
+use crate::numeric::{leftlook, parlu, parrl, rightlook, LuFactors};
 use crate::order::{preprocess, FillOrdering, Preprocessed};
 use crate::symbolic::{symbolic_fill, SymbolicFill};
 use crate::util::Stopwatch;
@@ -21,6 +23,11 @@ pub enum Detection {
 }
 
 /// Which numeric engine executes the factorization.
+///
+/// See the crate docs ("Choosing a numeric engine") for guidance; in
+/// short: [`NumericEngine::SimulatedGpu`] reproduces the paper's *timing
+/// model*, the two pool-backed parallel engines produce real wall-clock
+/// speedups on host CPUs, and the sequential engines are oracles.
 #[derive(Debug, Clone, Default)]
 pub enum NumericEngine {
     /// Simulated-GPU hybrid right-looking kernel under a [`Policy`]
@@ -29,12 +36,32 @@ pub enum NumericEngine {
     SimulatedGpu,
     /// Sequential Gilbert–Peierls left-looking (oracle).
     LeftLookingCpu,
-    /// Multithreaded left-looking (NICSLU-like baseline).
+    /// Multithreaded left-looking (NICSLU-like baseline) on a persistent
+    /// worker pool.
     ParallelCpu {
         threads: usize,
     },
     /// Sequential right-looking (Algorithm 2 reference).
     RightLookingCpu,
+    /// Pool-backed parallel hybrid right-looking executing the hazard-free
+    /// GLU2.0/GLU3.0 schedule with real CPU threads — the first engine
+    /// where the relaxed detection's extra parallelism is wall-clock, not
+    /// simulated cycles. Incompatible with [`Detection::Glu1`] (that
+    /// schedule has read/write hazards; [`GluSolver::factor`] refuses it).
+    ParallelRightLooking {
+        threads: usize,
+    },
+}
+
+impl NumericEngine {
+    /// Worker threads this engine runs with (1 for sequential engines).
+    pub fn threads(&self) -> usize {
+        match self {
+            NumericEngine::ParallelCpu { threads }
+            | NumericEngine::ParallelRightLooking { threads } => (*threads).max(1),
+            _ => 1,
+        }
+    }
 }
 
 /// Options for [`GluSolver::factor`].
@@ -106,6 +133,96 @@ impl GluStats {
     }
 }
 
+/// Solver-owned numeric scratch: everything the refactor/solve hot paths
+/// need, allocated once at factor time so Newton iterations allocate
+/// **nothing** `O(nnz)` — the amortization the paper's Fig. 5 split is
+/// about, extended to host memory traffic.
+#[derive(Debug)]
+struct NumericWorkspace {
+    /// `O(nnz)` scatter buffer for value restamping in
+    /// [`GluSolver::refactor`].
+    fresh: Vec<f64>,
+    /// Per-worker dense column workspaces (left-looking engines; one entry
+    /// for the sequential oracle, one per pool thread for `ParallelCpu`).
+    works: Vec<Vec<f64>>,
+    /// Divide-phase scratch (right-looking engines).
+    lvals: Vec<f64>,
+    /// Subcolumn (strict-upper row) view — right-looking engines.
+    urow: Option<Vec<Vec<u32>>>,
+    /// Per-column L lengths — the simulated-GPU timing model.
+    l_len: Option<Vec<usize>>,
+    /// U-pattern level schedule — the parallel *left*-looking engine
+    /// (distinct from the solver's hazard-free right-looking schedule).
+    ll_levels: Option<Levels>,
+    /// Persistent worker pool (spawned once; parks between runs) for the
+    /// parallel engines and the parallel triangular solves.
+    pool: Option<WorkerPool>,
+    /// Row-oriented L/U level schedules for the parallel trisolve —
+    /// pattern-only (refactorization never invalidates it), and kept only
+    /// when wide enough for the parallel solves to beat the sequential
+    /// ones.
+    trisched: Option<TriangularSchedule>,
+}
+
+impl NumericWorkspace {
+    fn new(engine: &NumericEngine, sym: &SymbolicFill) -> Self {
+        let n = sym.filled.ncols();
+        let threads = engine.threads();
+        let pool = match engine {
+            NumericEngine::ParallelCpu { .. } | NumericEngine::ParallelRightLooking { .. } => {
+                Some(WorkerPool::new(threads))
+            }
+            _ => None,
+        };
+        let works = match engine {
+            NumericEngine::ParallelCpu { .. } => vec![vec![0.0f64; n]; threads],
+            NumericEngine::LeftLookingCpu => vec![vec![0.0f64; n]; 1],
+            _ => Vec::new(),
+        };
+        let ll_levels = match engine {
+            NumericEngine::ParallelCpu { .. } => Some(parlu::leftlook_levels(sym)),
+            _ => None,
+        };
+        let urow = match engine {
+            NumericEngine::SimulatedGpu
+            | NumericEngine::RightLookingCpu
+            | NumericEngine::ParallelRightLooking { .. } => Some(rightlook::upper_rows(sym)),
+            _ => None,
+        };
+        let l_len = match engine {
+            NumericEngine::SimulatedGpu => Some(
+                (0..n)
+                    .map(|j| {
+                        let (rows, _) = sym.filled.col(j);
+                        rows.len() - rows.partition_point(|&r| r <= j)
+                    })
+                    .collect(),
+            ),
+            _ => None,
+        };
+        // Build the trisolve schedule only to keep it when it will
+        // actually be used: on deep/narrow schedules the parallel solves
+        // lose to the sequential path, so retaining the (O(nnz)) row
+        // views would be dead weight in every cached solver.
+        let trisched = if threads > 1 {
+            let ts = TriangularSchedule::build(&sym.filled);
+            ts.parallel_worthwhile().then_some(ts)
+        } else {
+            None
+        };
+        NumericWorkspace {
+            fresh: vec![0.0f64; sym.filled.nnz()],
+            works,
+            lvals: Vec::new(),
+            urow,
+            l_len,
+            ll_levels,
+            pool,
+            trisched,
+        }
+    }
+}
+
 /// A factored system ready to solve and refactor.
 #[derive(Debug)]
 pub struct GluSolver {
@@ -115,6 +232,10 @@ pub struct GluSolver {
     levels: Levels,
     factors: LuFactors,
     stats: GluStats,
+    ws: NumericWorkspace,
+    /// Set when an in-place refactorization failed partway: the factors
+    /// are garbage until a refactor succeeds, and solves are refused.
+    poisoned: bool,
     /// Map: position in the *original* matrix's CSC value array → position
     /// in the filled pattern's value array (for fast refactorization).
     value_map: Vec<usize>,
@@ -124,6 +245,14 @@ impl GluSolver {
     /// Run the full pipeline on `a`.
     pub fn factor(a: &crate::sparse::Csc, opts: &GluOptions) -> anyhow::Result<Self> {
         anyhow::ensure!(a.nrows() == a.ncols(), "matrix must be square");
+        if matches!(opts.engine, NumericEngine::ParallelRightLooking { .. }) {
+            anyhow::ensure!(
+                opts.detection != Detection::Glu1,
+                "ParallelRightLooking requires a hazard-free schedule: GLU1.0's \
+                 U-pattern detection misses double-U read/write hazards (paper \
+                 Fig. 9) — use Detection::Glu2 or Detection::Glu3"
+            );
+        }
         let mut sw = Stopwatch::new();
 
         let pre = sw.time("preprocess", || preprocess(a, opts.ordering, opts.scale))?;
@@ -135,7 +264,9 @@ impl GluSolver {
         });
         drop(deps);
 
-        let (factors, sim, numeric_ms) = run_engine(&opts.engine, &opts.policy, &opts.device, &sym, &levels, &mut sw)?;
+        let mut ws = NumericWorkspace::new(&opts.engine, &sym);
+        let (factors, sim, numeric_ms) =
+            run_engine(&opts.engine, &opts.policy, &opts.device, &sym, &levels, &mut ws)?;
 
         let value_map = build_value_map(a, &pre, &sym);
 
@@ -161,6 +292,8 @@ impl GluSolver {
             levels,
             factors,
             stats,
+            ws,
+            poisoned: false,
             value_map,
         })
     }
@@ -168,6 +301,7 @@ impl GluSolver {
     /// Solve `A x = b` using the current factors.
     pub fn solve(&mut self, b: &[f64]) -> anyhow::Result<Vec<f64>> {
         anyhow::ensure!(b.len() == self.stats.n, "rhs dimension mismatch");
+        self.ensure_factors_valid()?;
         let mut pb = vec![0.0; b.len()];
         let mut x = vec![0.0; b.len()];
         self.solve_into(b, &mut pb, &mut x);
@@ -180,11 +314,13 @@ impl GluSolver {
     /// solves run back-to-back over the cached level structure — the batched
     /// fast path the [`crate::coordinator::SolverPool`] feeds. Each solution
     /// is bit-identical to the corresponding [`GluSolver::solve`] call (same
-    /// inner routine, same operation order).
+    /// inner routine, same operation order — the level-parallel trisolve is
+    /// bit-identical to the sequential one by construction).
     pub fn solve_many(&mut self, rhs: &[Vec<f64>]) -> anyhow::Result<Vec<Vec<f64>>> {
         for b in rhs {
             anyhow::ensure!(b.len() == self.stats.n, "rhs dimension mismatch");
         }
+        self.ensure_factors_valid()?;
         let mut pb = vec![0.0; self.stats.n];
         let mut out = Vec::with_capacity(rhs.len());
         for b in rhs {
@@ -195,17 +331,47 @@ impl GluSolver {
         Ok(out)
     }
 
+    fn ensure_factors_valid(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.poisoned,
+            "factors are stale: the last refactor failed partway; refactor \
+             with numerically valid values before solving"
+        );
+        Ok(())
+    }
+
     /// Shared inner solve: scatter `b` through row scaling/permutation into
     /// `pb`, run the triangular solves in place, gather into `x` through the
     /// column permutation/scaling. `pb` and `x` must have length `n`.
+    ///
+    /// With a multi-thread engine configured, the triangular solves run
+    /// level-parallel on the persistent worker pool over the cached
+    /// [`TriangularSchedule`]; results are bit-identical to the sequential
+    /// path at any thread count.
     fn solve_into(&self, b: &[f64], pb: &mut [f64], x: &mut [f64]) {
         // b' = Dr * b permuted by the row permutation.
         let pr = self.pre.row_perm.as_scatter();
         for (old, &new) in pr.iter().enumerate() {
             pb[new] = b[old] * self.pre.row_scale[old];
         }
-        crate::numeric::trisolve::lower_unit_solve(&self.factors.lu, pb);
-        crate::numeric::trisolve::upper_solve(&self.factors.lu, pb);
+        // The schedule is cached only when wide enough for the parallel
+        // solves to win (see NumericWorkspace::new); narrow schedules take
+        // the sequential path — results are bit-identical either way.
+        match (&self.ws.pool, &self.ws.trisched) {
+            (Some(pool), Some(ts)) if pool.threads() > 1 => {
+                crate::numeric::trisolve::lower_unit_solve_par(
+                    &self.factors.lu,
+                    &ts.lower,
+                    pool,
+                    pb,
+                );
+                crate::numeric::trisolve::upper_solve_par(&self.factors.lu, &ts.upper, pool, pb);
+            }
+            _ => {
+                crate::numeric::trisolve::lower_unit_solve(&self.factors.lu, pb);
+                crate::numeric::trisolve::upper_solve(&self.factors.lu, pb);
+            }
+        }
         // x = Dc * (P_colᵀ x').
         let pc = self.pre.col_perm.as_scatter();
         for (old, &new) in pc.iter().enumerate() {
@@ -215,46 +381,64 @@ impl GluSolver {
 
     /// Refactor with new values on the *same sparsity pattern* (the
     /// Newton–Raphson iteration pattern). Preprocessing, symbolic analysis
-    /// and levelization are all reused; only the numeric kernel reruns.
+    /// and levelization are all reused; only the numeric kernel reruns —
+    /// **in place** over the existing factor storage, through solver-owned
+    /// scratch, so the hot loop performs no `O(nnz)` allocation.
     pub fn refactor(&mut self, a: &crate::sparse::Csc) -> anyhow::Result<()> {
         anyhow::ensure!(
             a.nnz() == self.value_map.len() && a.nrows() == self.stats.n,
             "refactor requires the original sparsity pattern"
         );
-        // Reset filled values: zero everywhere (fill positions stay zero),
-        // then scatter A's scaled values through the precomputed map.
-        let mut fresh = vec![0.0f64; self.sym.filled.nnz()];
-        let rs = &self.pre.row_scale;
-        let cs = &self.pre.col_scale;
-        let mut pos = 0usize;
-        for c in 0..a.ncols() {
-            let (rows, vals) = a.col(c);
-            for (&r, &v) in rows.iter().zip(vals) {
-                let scaled = if self.opts.scale {
-                    v * rs[r] * cs[c]
-                } else {
-                    v
-                };
-                fresh[self.value_map[pos]] += scaled;
-                pos += 1;
+        // Reset the solver-owned scatter buffer: zero everywhere (fill
+        // positions stay zero), then scatter A's scaled values through the
+        // precomputed map.
+        for v in self.ws.fresh.iter_mut() {
+            *v = 0.0;
+        }
+        {
+            let fresh = &mut self.ws.fresh;
+            let rs = &self.pre.row_scale;
+            let cs = &self.pre.col_scale;
+            let mut pos = 0usize;
+            for c in 0..a.ncols() {
+                let (rows, vals) = a.col(c);
+                for (&r, &v) in rows.iter().zip(vals) {
+                    let scaled = if self.opts.scale {
+                        v * rs[r] * cs[c]
+                    } else {
+                        v
+                    };
+                    fresh[self.value_map[pos]] += scaled;
+                    pos += 1;
+                }
             }
         }
-        self.sym.filled.values_mut().copy_from_slice(&fresh);
+        // Stamp straight into the factor storage and rerun the kernel in
+        // place (no clone of the filled pattern).
+        self.factors.lu.values_mut().copy_from_slice(&self.ws.fresh);
 
-        let mut sw = Stopwatch::new();
-        let (factors, sim, numeric_ms) = run_engine(
+        match rerun_engine(
             &self.opts.engine,
             &self.opts.policy,
             &self.opts.device,
-            &self.sym,
+            &mut self.factors.lu,
             &self.levels,
-            &mut sw,
-        )?;
-        self.factors = factors;
-        self.stats.numeric_ms = numeric_ms;
-        self.stats.sim = sim;
-        self.stats.numeric_runs += 1;
-        Ok(())
+            &mut self.ws,
+        ) {
+            Ok((sim, numeric_ms)) => {
+                self.poisoned = false;
+                self.stats.numeric_ms = numeric_ms;
+                self.stats.sim = sim;
+                self.stats.numeric_runs += 1;
+                Ok(())
+            }
+            Err(e) => {
+                // The in-place kernel may have left the factors partially
+                // updated; refuse solves until a refactor succeeds.
+                self.poisoned = true;
+                Err(e)
+            }
+        }
     }
 
     /// Factorization statistics.
@@ -276,6 +460,14 @@ impl GluSolver {
     pub fn factors(&self) -> &LuFactors {
         &self.factors
     }
+
+    /// The cached L/U row-level schedules for the parallel triangular
+    /// solves — present when a multi-thread engine is configured *and* the
+    /// schedules are wide enough for the parallel path to win (narrow
+    /// schedules keep the sequential solves and cache nothing).
+    pub fn triangular_schedule(&self) -> Option<&TriangularSchedule> {
+        self.ws.trisched.as_ref()
+    }
 }
 
 /// Dispatch the configured detection algorithm.
@@ -287,32 +479,125 @@ pub fn detect(detection: Detection, sym: &SymbolicFill) -> DepGraph {
     }
 }
 
+fn wall_ms(t0: std::time::Instant) -> f64 {
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
+/// Initial factorization through the engine, using (and warming) the
+/// solver workspace.
 fn run_engine(
     engine: &NumericEngine,
     policy: &Policy,
     device: &DeviceConfig,
     sym: &SymbolicFill,
     levels: &Levels,
-    sw: &mut Stopwatch,
+    ws: &mut NumericWorkspace,
 ) -> anyhow::Result<(LuFactors, Option<SimReport>, f64)> {
+    let t0 = std::time::Instant::now();
     match engine {
         NumericEngine::SimulatedGpu => {
-            let (factors, report) =
-                sw.time("numeric", || simulate_factorization(sym, levels, policy, device))?;
+            let mut lu = sym.filled.clone();
+            let report = simulate_refactorization(
+                &mut lu,
+                ws.urow.as_ref().expect("urow cached for the GPU engine"),
+                ws.l_len.as_ref().expect("l_len cached for the GPU engine"),
+                levels,
+                policy,
+                device,
+                &mut ws.lvals,
+            )?;
             let ms = report.kernel_ms();
-            Ok((factors, Some(report), ms))
+            Ok((LuFactors { lu }, Some(report), ms))
         }
         NumericEngine::LeftLookingCpu => {
-            let factors = sw.time("numeric", || leftlook::factor(sym))?;
-            Ok((factors, None, sw.get("numeric").unwrap().as_secs_f64() * 1e3))
+            let mut lu = sym.filled.clone();
+            leftlook::factor_in_place(&mut lu, &mut ws.works[0])?;
+            Ok((LuFactors { lu }, None, wall_ms(t0)))
         }
         NumericEngine::RightLookingCpu => {
-            let factors = sw.time("numeric", || rightlook::factor(sym))?;
-            Ok((factors, None, sw.get("numeric").unwrap().as_secs_f64() * 1e3))
+            let mut lu = sym.filled.clone();
+            rightlook::factor_in_place(
+                &mut lu,
+                ws.urow.as_ref().expect("urow cached for right-looking"),
+                &mut ws.lvals,
+            )?;
+            Ok((LuFactors { lu }, None, wall_ms(t0)))
         }
-        NumericEngine::ParallelCpu { threads } => {
-            let factors = sw.time("numeric", || parlu::factor(sym, *threads))?;
-            Ok((factors, None, sw.get("numeric").unwrap().as_secs_f64() * 1e3))
+        NumericEngine::ParallelCpu { .. } => {
+            let factors = parlu::factor_with(
+                sym,
+                ws.ll_levels.as_ref().expect("U-pattern schedule cached"),
+                ws.pool.as_ref().expect("pool spawned for parallel engine"),
+                &mut ws.works,
+            )?;
+            Ok((factors, None, wall_ms(t0)))
+        }
+        NumericEngine::ParallelRightLooking { .. } => {
+            let factors = parrl::factor_with(
+                sym,
+                ws.urow.as_ref().expect("urow cached for right-looking"),
+                levels,
+                ws.pool.as_ref().expect("pool spawned for parallel engine"),
+            )?;
+            Ok((factors, None, wall_ms(t0)))
+        }
+    }
+}
+
+/// Refactorization through the engine, **in place** over `lu` (already
+/// stamped with the new values). No `O(nnz)` allocation on any path.
+fn rerun_engine(
+    engine: &NumericEngine,
+    policy: &Policy,
+    device: &DeviceConfig,
+    lu: &mut crate::sparse::Csc,
+    levels: &Levels,
+    ws: &mut NumericWorkspace,
+) -> anyhow::Result<(Option<SimReport>, f64)> {
+    let t0 = std::time::Instant::now();
+    match engine {
+        NumericEngine::SimulatedGpu => {
+            let report = simulate_refactorization(
+                lu,
+                ws.urow.as_ref().expect("urow cached for the GPU engine"),
+                ws.l_len.as_ref().expect("l_len cached for the GPU engine"),
+                levels,
+                policy,
+                device,
+                &mut ws.lvals,
+            )?;
+            let ms = report.kernel_ms();
+            Ok((Some(report), ms))
+        }
+        NumericEngine::LeftLookingCpu => {
+            leftlook::factor_in_place(lu, &mut ws.works[0])?;
+            Ok((None, wall_ms(t0)))
+        }
+        NumericEngine::RightLookingCpu => {
+            rightlook::factor_in_place(
+                lu,
+                ws.urow.as_ref().expect("urow cached for right-looking"),
+                &mut ws.lvals,
+            )?;
+            Ok((None, wall_ms(t0)))
+        }
+        NumericEngine::ParallelCpu { .. } => {
+            parlu::refactor_in_place(
+                lu,
+                ws.ll_levels.as_ref().expect("U-pattern schedule cached"),
+                ws.pool.as_ref().expect("pool spawned for parallel engine"),
+                &mut ws.works,
+            )?;
+            Ok((None, wall_ms(t0)))
+        }
+        NumericEngine::ParallelRightLooking { .. } => {
+            parrl::refactor_in_place(
+                lu,
+                ws.urow.as_ref().expect("urow cached for right-looking"),
+                levels,
+                ws.pool.as_ref().expect("pool spawned for parallel engine"),
+            )?;
+            Ok((None, wall_ms(t0)))
         }
     }
 }
@@ -372,6 +657,7 @@ mod tests {
             NumericEngine::LeftLookingCpu,
             NumericEngine::RightLookingCpu,
             NumericEngine::ParallelCpu { threads: 3 },
+            NumericEngine::ParallelRightLooking { threads: 3 },
         ] {
             let opts = GluOptions {
                 engine,
@@ -385,6 +671,50 @@ mod tests {
                 assert!((p - q).abs() < 1e-9 * (1.0 + q.abs()));
             }
         }
+    }
+
+    #[test]
+    fn parallel_right_looking_matches_simulated_gpu_values() {
+        let a = gen::netlist(300, 6, 12, 0.06, 3, 0.2, 901);
+        let mut sim = GluSolver::factor(&a, &GluOptions::default()).unwrap();
+        for threads in [1, 2, 4] {
+            let opts = GluOptions {
+                engine: NumericEngine::ParallelRightLooking { threads },
+                ..Default::default()
+            };
+            let mut par = GluSolver::factor(&a, &opts).unwrap();
+            for (p, q) in par
+                .factors()
+                .lu
+                .values()
+                .iter()
+                .zip(sim.factors().lu.values())
+            {
+                assert!(
+                    (p - q).abs() < 1e-9 * (1.0 + q.abs()),
+                    "threads {threads}: {p} vs {q}"
+                );
+            }
+            // and the solve paths (parallel trisolve for threads > 1)
+            let b = vec![1.0; 300];
+            let xp = par.solve(&b).unwrap();
+            let xs = sim.solve(&b).unwrap();
+            for (p, q) in xp.iter().zip(&xs) {
+                assert!((p - q).abs() < 1e-9 * (1.0 + q.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_right_looking_rejects_glu1_schedule() {
+        let a = gen::netlist(100, 5, 8, 0.1, 1, 0.2, 7);
+        let opts = GluOptions {
+            detection: Detection::Glu1,
+            engine: NumericEngine::ParallelRightLooking { threads: 2 },
+            ..Default::default()
+        };
+        let err = GluSolver::factor(&a, &opts).unwrap_err();
+        assert!(err.to_string().contains("hazard"), "{err}");
     }
 
     #[test]
@@ -412,6 +742,70 @@ mod tests {
         for (p, q) in x2.iter().zip(&x0) {
             assert!((p - q).abs() < 1e-9 * (1.0 + q.abs()));
         }
+    }
+
+    #[test]
+    fn refactor_matches_fresh_factor_on_every_engine() {
+        let a = gen::netlist(220, 6, 10, 0.06, 2, 0.2, 23);
+        let mut a2 = a.clone();
+        for v in a2.values_mut() {
+            *v *= 1.1;
+        }
+        for engine in [
+            NumericEngine::SimulatedGpu,
+            NumericEngine::LeftLookingCpu,
+            NumericEngine::RightLookingCpu,
+            NumericEngine::ParallelCpu { threads: 4 },
+            NumericEngine::ParallelRightLooking { threads: 4 },
+        ] {
+            let opts = GluOptions {
+                engine: engine.clone(),
+                ..Default::default()
+            };
+            let mut s = GluSolver::factor(&a, &opts).unwrap();
+            s.refactor(&a2).unwrap();
+            let fresh = GluSolver::factor(&a2, &opts).unwrap();
+            for (p, q) in s
+                .factors()
+                .lu
+                .values()
+                .iter()
+                .zip(fresh.factors().lu.values())
+            {
+                // identical for deterministic engines, rounding-level for
+                // the CAS-accumulating parallel right-looking engine
+                assert!(
+                    (p - q).abs() < 1e-9 * (1.0 + q.abs()),
+                    "{engine:?}: {p} vs {q}"
+                );
+            }
+            assert_eq!(s.stats().numeric_runs, 2);
+            assert_eq!(s.stats().symbolic_runs, 1);
+        }
+    }
+
+    #[test]
+    fn failed_refactor_poisons_solver_until_repaired() {
+        let a = gen::netlist(120, 5, 8, 0.1, 1, 0.2, 19);
+        let mut s = GluSolver::factor(&a, &GluOptions::default()).unwrap();
+        let b = vec![1.0; 120];
+        s.solve(&b).unwrap();
+
+        // All-zero values: every pivot is zero — the refactor must fail...
+        let mut bad = a.clone();
+        for v in bad.values_mut() {
+            *v = 0.0;
+        }
+        assert!(s.refactor(&bad).is_err());
+        // ...and the solver refuses to serve the garbage factors.
+        let err = s.solve(&b).unwrap_err();
+        assert!(err.to_string().contains("stale"), "{err}");
+        assert!(s.solve_many(&[b.clone()]).is_err());
+
+        // A successful refactor repairs it.
+        s.refactor(&a).unwrap();
+        let x = s.solve(&b).unwrap();
+        assert!(residual(&a, &x, &b) < 1e-10);
     }
 
     #[test]
@@ -459,6 +853,38 @@ mod tests {
 
         // dimension mismatch anywhere in the batch is rejected
         assert!(s.solve_many(&[vec![1.0; 249]]).is_err());
+    }
+
+    #[test]
+    fn solve_many_parallel_engine_bit_identical_to_sequential_engine() {
+        // The parallel trisolve is bit-identical to the sequential one
+        // (and the width gate may route narrow schedules to the sequential
+        // path anyway), so a ParallelCpu solver must reproduce the
+        // LeftLookingCpu solver's solutions *exactly* — the factors are
+        // bit-identical between those engines too.
+        let a = gen::netlist(300, 6, 12, 0.05, 2, 0.2, 83);
+        let batch: Vec<Vec<f64>> = (0..4)
+            .map(|k| (0..300).map(|i| ((i * 11 + k) % 19) as f64 - 9.0).collect())
+            .collect();
+        let mut seq = GluSolver::factor(
+            &a,
+            &GluOptions {
+                engine: NumericEngine::LeftLookingCpu,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut par = GluSolver::factor(
+            &a,
+            &GluOptions {
+                engine: NumericEngine::ParallelCpu { threads: 4 },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let xs = seq.solve_many(&batch).unwrap();
+        let xp = par.solve_many(&batch).unwrap();
+        assert_eq!(xs, xp);
     }
 
     #[test]

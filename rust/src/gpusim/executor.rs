@@ -95,6 +95,33 @@ pub fn simulate_factorization(
         })
         .collect();
 
+    let mut lvals = Vec::new();
+    let report =
+        simulate_refactorization(&mut lu, &urow, &l_len, levels, policy, device, &mut lvals)?;
+    Ok((LuFactors { lu }, report))
+}
+
+/// The in-place core of [`simulate_factorization`]: `lu` holds the filled
+/// pattern with `A`'s values stamped in and is overwritten with the
+/// factors while cycles are accounted per level. `urow` and `l_len` are
+/// pattern-derived views the caller may cache across refactorizations
+/// (they never change for a fixed symbolic state), `lvals` is the reusable
+/// divide-phase scratch — the Newton-loop fast path reallocates none of
+/// the `O(nnz)` state.
+pub fn simulate_refactorization(
+    lu: &mut crate::sparse::Csc,
+    urow: &[Vec<u32>],
+    l_len: &[usize],
+    levels: &Levels,
+    policy: &Policy,
+    device: &DeviceConfig,
+    lvals: &mut Vec<f64>,
+) -> anyhow::Result<SimReport> {
+    let n = lu.ncols();
+    anyhow::ensure!(
+        urow.len() == n && l_len.len() == n,
+        "pattern view dimension mismatch"
+    );
     let mut per_level = Vec::with_capacity(levels.num_levels());
 
     for level in &levels.levels {
@@ -117,80 +144,21 @@ pub fn simulate_factorization(
         );
         per_level.push(timing);
 
-        // --- Numerics: factor every column of the level (ascending). ---
-        let mut lv_scratch: Vec<f64> = Vec::new();
+        // --- Numerics: factor every column of the level (ascending), via
+        // the column pipeline shared with `numeric::rightlook`. ---
         for &j in level {
             let j = j as usize;
-            factor_column(&mut lu, &urow[j], j, &mut lv_scratch)?;
+            crate::numeric::rightlook::factor_column(lu, &urow[j], j, lvals)?;
         }
     }
 
-    let report = SimReport {
+    Ok(SimReport {
         policy: policy.name.clone(),
         kernel_cycles: per_level.iter().map(|l| l.cycles).sum(),
         setup_cycles: device.setup_cycles,
         per_level,
         clock_ghz: device.clock_ghz,
-    };
-    Ok((LuFactors { lu }, report))
-}
-
-/// Factor one column: divide phase + submatrix (subcolumn) updates.
-/// Identical arithmetic to [`crate::numeric::rightlook::factor`]'s body.
-///
-/// Allocation-free on the hot path: the pattern is walked through the
-/// split borrow of [`crate::sparse::Csc::split_mut`]; only the column's L
-/// values are staged into the caller-provided scratch buffer (they are
-/// read while other columns' values are written).
-fn factor_column(
-    lu: &mut crate::sparse::Csc,
-    subcols: &[u32],
-    j: usize,
-    lvals: &mut Vec<f64>,
-) -> anyhow::Result<()> {
-    let (colptr, rowidx, values) = lu.split_mut();
-    let (s_j, e_j) = (colptr[j], colptr[j + 1]);
-    let rows_j = &rowidx[s_j..e_j];
-    let diag_pos = rows_j
-        .binary_search(&j)
-        .map_err(|_| anyhow::anyhow!("missing diagonal at {j}"))?;
-    let pivot = values[s_j + diag_pos];
-    anyhow::ensure!(
-        pivot != 0.0 && pivot.is_finite(),
-        "zero/non-finite pivot at column {j}"
-    );
-    // Divide phase, staging L values into the scratch buffer.
-    let lrows = &rows_j[diag_pos + 1..];
-    lvals.clear();
-    for idx in diag_pos + 1..rows_j.len() {
-        let v = values[s_j + idx] / pivot;
-        values[s_j + idx] = v;
-        lvals.push(v);
-    }
-
-    for &k in subcols {
-        let k = k as usize;
-        let (s_k, e_k) = (colptr[k], colptr[k + 1]);
-        let rows_k = &rowidx[s_k..e_k];
-        let multiplier = match rows_k.binary_search(&j) {
-            Ok(p) => values[s_k + p],
-            Err(_) => continue,
-        };
-        if multiplier == 0.0 {
-            continue;
-        }
-        let start = rows_k.partition_point(|&r| r <= j);
-        // Walk L rows of column j and column k's pattern in lock-step:
-        // symbolic fill guarantees every L row is present in column k.
-        let mut pos = start;
-        for (&i, &lij) in lrows.iter().zip(lvals.iter()) {
-            while rows_k[pos] != i {
-                pos += 1;
-            }
-            values[s_k + pos] -= lij * multiplier;
-        }
-    }
-    Ok(())
+    })
 }
 
 #[cfg(test)]

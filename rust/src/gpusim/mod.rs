@@ -35,5 +35,5 @@ pub mod policy;
 
 pub use device::DeviceConfig;
 pub use exec::{KernelMode, LevelTiming};
-pub use executor::{simulate_factorization, SimReport};
+pub use executor::{simulate_factorization, simulate_refactorization, SimReport};
 pub use policy::Policy;

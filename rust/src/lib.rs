@@ -72,6 +72,49 @@
 //! every linear solve through a pool, so a warm pool carries symbolic
 //! state across whole simulations (e.g. Monte-Carlo corners of one
 //! circuit).
+//!
+//! ## Choosing a numeric engine
+//!
+//! [`glu::NumericEngine`] selects what executes the numeric kernel; the
+//! engines split into two families:
+//!
+//! **Simulated** — [`glu::NumericEngine::SimulatedGpu`] (the default)
+//! runs the paper's hybrid right-looking kernel under a cycle-approximate
+//! TITAN X timing model. Its `numeric_ms` is *simulated kernel time*: use
+//! it to reproduce the paper's tables and to study policy/levelization
+//! trade-offs, never to measure this host. Numerics are real (checked
+//! against the oracles); only the clock is modeled.
+//!
+//! **Real-parallel** — the pool-backed engines report *wall-clock* and
+//! actually use your cores, spawning their worker pool once at factor
+//! time and parking it between runs ([`numeric::pool::WorkerPool`]):
+//!
+//! - [`glu::NumericEngine::ParallelRightLooking`] executes the GLU3.0
+//!   hazard-free schedule (relaxed detection + levelization) with real
+//!   threads — the engine where the paper's extra parallelism shows up in
+//!   wall-clock. Requires a hazard-free schedule, so it refuses
+//!   [`glu::Detection::Glu1`]. Same-level columns commit MAC updates with
+//!   atomic compare-and-swap, so results match the simulator to rounding
+//!   (bit-identical at one thread).
+//! - [`glu::NumericEngine::ParallelCpu`] is the NICSLU-style level-parallel
+//!   *left*-looking baseline (Table I's CPU column): bit-identical to the
+//!   sequential oracle at any thread count, scheduled on the U-pattern
+//!   dependency graph.
+//!
+//! The sequential engines — [`glu::NumericEngine::LeftLookingCpu`]
+//! (Gilbert–Peierls oracle) and [`glu::NumericEngine::RightLookingCpu`]
+//! (Algorithm 2 reference, bit-identical to the simulator's arithmetic) —
+//! are the correctness anchors the test pyramid compares everything
+//! against.
+//!
+//! Any multi-threaded engine also switches `solve`/`solve_many` to the
+//! level-scheduled parallel triangular solves (cached
+//! [`numeric::trisolve::TriangularSchedule`]), which are bit-identical to
+//! the sequential substitutions at every thread count — gated on the
+//! schedule being wide enough that the per-level barrier pays for itself
+//! (deep, narrow schedules keep the sequential path). The `glu3 bench`
+//! subcommand measures factor/refactor/solve wall-clock for every engine
+//! and writes `BENCH_numeric.json` — the recorded perf trajectory.
 
 pub mod bench_support;
 pub mod circuit;

@@ -50,6 +50,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "suite" => cmd_suite(&flags),
         "profile" => cmd_profile(&flags),
         "serve" => cmd_serve(&flags),
+        "bench" => cmd_bench(&flags),
         "info" => cmd_info(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -65,12 +66,15 @@ fn print_usage() {
          commands:\n\
          \x20 factor  --matrix <name|file.mtx> [--policy glu3|glu2|lee|nosmall|nostream]\n\
          \x20         [--detect glu1|glu2|glu3] [--ordering amd|rcm|natural]\n\
-         \x20         [--engine gpu|left|right|parcpu]\n\
+         \x20         [--engine gpu|left|right|parcpu|parrl] [--threads T]\n\
          \x20 solve   same options, also solves (--rhs ones|ramp)\n\
          \x20 suite   [--set small|all] [--policy ...]   run the whole suite\n\
          \x20 profile --matrix <...>   per-level parallelism profile (Fig. 10)\n\
          \x20 serve   --matrix <...> [--requests N] [--threads T] [--patterns P]\n\
          \x20         drive the SolverPool and report cache/latency counters\n\
+         \x20 bench   [--matrix <...>] [--threads 1,2,4] [--iters N] [--warmup N]\n\
+         \x20         [--out BENCH_numeric.json] [--smoke]\n\
+         \x20         wall-clock factor/refactor/solve across engines -> JSON\n\
          \x20 info    --matrix <...>   structural stats\n\n\
          suite names: {}",
         SuiteMatrix::ALL
@@ -81,6 +85,9 @@ fn print_usage() {
     );
 }
 
+/// Flags that take no value (presence == "true").
+const BOOL_FLAGS: &[&str] = &["smoke"];
+
 fn parse_flags(args: &[String]) -> anyhow::Result<HashMap<String, String>> {
     let mut map = HashMap::new();
     let mut it = args.iter();
@@ -88,6 +95,10 @@ fn parse_flags(args: &[String]) -> anyhow::Result<HashMap<String, String>> {
         let Some(key) = a.strip_prefix("--") else {
             anyhow::bail!("unexpected argument {a}");
         };
+        if BOOL_FLAGS.contains(&key) {
+            map.insert(key.to_string(), "true".to_string());
+            continue;
+        }
         let val = it
             .next()
             .ok_or_else(|| anyhow::anyhow!("flag --{key} needs a value"))?;
@@ -140,15 +151,22 @@ fn options_from(flags: &HashMap<String, String>) -> anyhow::Result<GluOptions> {
         };
     }
     if let Some(e) = flags.get("engine") {
+        // --threads overrides the default (host parallelism) for the
+        // pool-backed engines.
+        let threads = match flags.get("threads") {
+            Some(t) => t.parse::<usize>().map_err(|_| {
+                anyhow::anyhow!("--threads must be a single integer with --engine")
+            })?,
+            None => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        };
         opts.engine = match e.as_str() {
             "gpu" => NumericEngine::SimulatedGpu,
             "left" => NumericEngine::LeftLookingCpu,
             "right" => NumericEngine::RightLookingCpu,
-            "parcpu" => NumericEngine::ParallelCpu {
-                threads: std::thread::available_parallelism()
-                    .map(|n| n.get())
-                    .unwrap_or(1),
-            },
+            "parcpu" => NumericEngine::ParallelCpu { threads },
+            "parrl" => NumericEngine::ParallelRightLooking { threads },
             other => anyhow::bail!("unknown engine {other}"),
         };
     }
@@ -354,6 +372,81 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         ]);
     }
     print!("{}", t.render());
+    Ok(())
+}
+
+/// Run the wall-clock numeric bench harness and emit `BENCH_numeric.json`:
+/// factor/refactor/solve medians per engine and thread count, plus the
+/// persistent-pool vs per-level-spawn head-to-head. `--smoke` selects the
+/// small CI fixture; the default is the 100×100 AMD-ordered grid
+/// acceptance fixture.
+fn cmd_bench(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use glu3::bench_support::numeric::{run, validate_json_schema, BenchSpec};
+
+    let smoke = flags.get("smoke").is_some();
+    let mut spec = if smoke {
+        BenchSpec::smoke()
+    } else {
+        BenchSpec::acceptance()
+    };
+    if flags.contains_key("matrix") {
+        let (name, a) = load_matrix(flags)?;
+        spec.label = name;
+        spec.a = a;
+    }
+    if let Some(t) = flags.get("threads") {
+        let counts: Result<Vec<usize>, _> = t.split(',').map(|s| s.trim().parse()).collect();
+        spec.thread_counts = counts
+            .map_err(|_| anyhow::anyhow!("--threads expects a comma list, e.g. 1,2,4"))?;
+        anyhow::ensure!(!spec.thread_counts.is_empty(), "--threads list is empty");
+    }
+    spec.iters = flag_usize(flags, "iters", spec.iters)?.max(1);
+    spec.warmup = flag_usize(flags, "warmup", spec.warmup)?;
+    let out = flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "BENCH_numeric.json".to_string());
+
+    println!(
+        "bench {}: n={} nnz={}, threads {:?}, {} iters (+{} warmup)",
+        spec.label,
+        spec.a.nrows(),
+        spec.a.nnz(),
+        spec.thread_counts,
+        spec.iters,
+        spec.warmup
+    );
+    let report = run(&spec)?;
+
+    let mut t = Table::new(vec![
+        "engine",
+        "threads",
+        "factor(ms)",
+        "refactor(ms)",
+        "solve(ms)",
+    ]);
+    for s in &report.samples {
+        t.row(vec![
+            s.engine.clone(),
+            s.threads.to_string(),
+            ms(s.factor_ms),
+            ms(s.refactor_ms),
+            ms(s.solve_ms),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "pool vs per-level-spawn @{} threads: {} ms vs {} ms ({} speedup)",
+        report.baseline.threads,
+        ms(report.baseline.pool_ms),
+        ms(report.baseline.spawn_per_level_ms),
+        ratio(report.baseline.speedup())
+    );
+
+    let json = report.to_json();
+    validate_json_schema(&json)?;
+    report.write_json(&out)?;
+    println!("wrote {out}");
     Ok(())
 }
 

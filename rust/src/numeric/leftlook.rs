@@ -12,50 +12,58 @@ use crate::symbolic::SymbolicFill;
 /// every such `k` is fully factored), then divide the subdiagonal by the
 /// pivot. Gather back into the compact factor storage.
 pub fn factor(sym: &SymbolicFill) -> anyhow::Result<LuFactors> {
-    let n = sym.filled.ncols();
     let mut lu = sym.filled.clone();
-    let mut work = vec![0.0f64; n];
+    let mut work = vec![0.0f64; sym.filled.ncols()];
+    factor_in_place(&mut lu, &mut work)?;
+    Ok(LuFactors { lu })
+}
+
+/// Factor in place: `lu` holds the filled pattern with `A`'s values stamped
+/// in and is overwritten with the factors. `work` is a zeroed length-`n`
+/// dense workspace, returned zeroed (even on the error path) so callers can
+/// keep it hot across refactorizations — the Newton-loop fast path
+/// allocates nothing.
+pub fn factor_in_place(lu: &mut crate::sparse::Csc, work: &mut [f64]) -> anyhow::Result<()> {
+    let n = lu.ncols();
+    anyhow::ensure!(work.len() == n, "workspace must have length n");
+    let (colptr, rowidx, values) = lu.split_mut();
 
     for j in 0..n {
-        // Split: copy out column j's (rows, values) to avoid aliasing while
-        // we read earlier columns of `lu`.
-        let (rows_j, _) = lu.col(j);
-        let rows_j: Vec<usize> = rows_j.to_vec();
-        {
-            let (_, vals_j) = lu.col(j);
-            for (&r, &v) in rows_j.iter().zip(vals_j) {
-                work[r] = v;
-            }
+        let (s, e) = (colptr[j], colptr[j + 1]);
+        let rows_j = &rowidx[s..e];
+        for (idx, &r) in rows_j.iter().enumerate() {
+            work[r] = values[s + idx];
         }
 
         // Triangular solve: for every pattern index k < j (ascending).
         for &k in rows_j.iter().take_while(|&&k| k < j) {
             let xk = work[k];
             if xk != 0.0 {
-                let (rows_k, vals_k) = lu.col(k);
+                let (ks, ke) = (colptr[k], colptr[k + 1]);
+                let rows_k = &rowidx[ks..ke];
                 // L entries of column k: rows > k.
                 let start = rows_k.partition_point(|&r| r <= k);
-                for (&i, &lik) in rows_k[start..].iter().zip(&vals_k[start..]) {
-                    work[i] -= lik * xk;
+                for (off, &i) in rows_k[start..].iter().enumerate() {
+                    work[i] -= values[ks + start + off] * xk;
                 }
             }
         }
 
         // Pivot and gather.
         let pivot = work[j];
-        anyhow::ensure!(
-            pivot != 0.0 && pivot.is_finite(),
-            "zero/non-finite pivot at column {j}"
-        );
-        let colptr_j = lu.colptr()[j];
-        let vals = lu.values_mut();
+        if pivot == 0.0 || !pivot.is_finite() {
+            for &r in rows_j {
+                work[r] = 0.0;
+            }
+            anyhow::bail!("zero/non-finite pivot at column {j}");
+        }
         for (idx, &r) in rows_j.iter().enumerate() {
             let v = if r > j { work[r] / pivot } else { work[r] };
-            vals[colptr_j + idx] = v;
+            values[s + idx] = v;
             work[r] = 0.0; // clear workspace
         }
     }
-    Ok(LuFactors { lu })
+    Ok(())
 }
 
 #[cfg(test)]

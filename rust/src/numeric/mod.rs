@@ -10,16 +10,27 @@
 //!   reference: *bit-identical* op order to one GPU column pipeline, used to
 //!   cross-check the simulator's numerics.
 //! - [`parlu`] — NICSLU-style multithreaded left-looking CPU baseline
-//!   (level-scheduled, Table I's CPU comparison column).
-//! - [`trisolve`] — sparse forward/backward substitution over the factors.
+//!   (level-scheduled, Table I's CPU comparison column), running on the
+//!   persistent [`pool::WorkerPool`].
+//! - [`parrl`] — parallel hybrid right-looking on the hazard-free
+//!   GLU2.0/GLU3.0 schedule: the paper's execution model with real CPU
+//!   threads (wall-clock, not simulated cycles).
+//! - [`pool`] — the spawn-once worker pool + spin barrier all the
+//!   real-parallel paths (including the parallel triangular solves) share.
+//! - [`trisolve`] — sparse forward/backward substitution over the factors,
+//!   sequential and level-scheduled parallel.
 //! - [`dense`] — dense LU with partial pivoting: the small-scale oracle the
 //!   property tests compare everything against.
 
 pub mod dense;
 pub mod leftlook;
 pub mod parlu;
+pub mod parrl;
+pub mod pool;
 pub mod rightlook;
 pub mod trisolve;
+
+pub use pool::WorkerPool;
 
 use crate::sparse::Csc;
 

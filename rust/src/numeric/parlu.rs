@@ -4,41 +4,221 @@
 //! Column tasks are level-scheduled exactly like NICSLU's cluster/pipeline
 //! modes: the U-pattern dependency graph (sufficient for *left*-looking —
 //! the double-U hazard is a right-looking artifact) is levelized, and each
-//! level's columns are factored by a pool of worker threads with a barrier
-//! between levels.
+//! level's columns are factored by a **persistent** [`WorkerPool`]: the
+//! workers are spawned once and meet at a spin barrier between levels, and
+//! columns within a level are dealt round-robin (interleaved) across
+//! workers for load balance. The seed implementation respawned OS threads
+//! at every level ([`factor_spawn_per_level`], kept as the wall-clock
+//! baseline for the bench harness); on circuit matrices with thousands of
+//! shallow levels that spawn/join cost dwarfs the arithmetic.
 //!
-//! Safety model: within a level, thread `t` writes only the value ranges of
+//! Safety model: within a level, a worker writes only the value ranges of
 //! the columns assigned to it, and reads only columns from *earlier* levels
 //! (guaranteed by the dependency analysis) plus its own workspace. The
-//! barrier between levels publishes all writes (thread join/spawn in
-//! `std::thread::scope` provides the needed synchronization).
+//! inter-level barrier publishes all writes ([`PoolCtx::sync`]'s AcqRel
+//! rendezvous; thread join/spawn provides the same in the legacy baseline).
+//!
+//! Failure handling: a zero/non-finite pivot records the failing column in
+//! a shared abort flag that every worker re-checks between columns, so the
+//! rest of the level stops early instead of computing doomed columns; the
+//! error is reported after the level rendezvous.
 
-use crate::depend::{glu1, levelize};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::depend::{glu1, levelize, Levels};
+use crate::numeric::pool::{PoolCtx, SharedPtr, WorkerPool};
 use crate::symbolic::SymbolicFill;
 
 use super::LuFactors;
 
-/// Raw shared-values handle. See module docs for the aliasing discipline.
-struct SharedVals(*mut f64);
-unsafe impl Send for SharedVals {}
-unsafe impl Sync for SharedVals {}
+/// Compute the left-looking level schedule (U-pattern dependency graph).
+/// Callers that refactor repeatedly should compute this once and reuse it
+/// via [`factor_with`] / [`refactor_in_place`].
+pub fn leftlook_levels(sym: &SymbolicFill) -> Levels {
+    levelize(&glu1::detect(&sym.filled))
+}
 
 /// Factor with `nthreads` workers (values identical to the sequential
 /// left-looking oracle; scheduling identical in spirit to NICSLU).
+///
+/// Convenience wrapper: computes the level schedule and spawns a transient
+/// [`WorkerPool`] (one spawn per *factorization*, not per level). Hot
+/// loops (Newton refactorization) should hold a persistent pool and
+/// schedule and call [`factor_with`] / [`refactor_in_place`] instead.
 pub fn factor(sym: &SymbolicFill, nthreads: usize) -> anyhow::Result<LuFactors> {
+    let levels = leftlook_levels(sym);
+    let pool = WorkerPool::new(nthreads);
+    let mut works = vec![vec![0.0f64; sym.filled.ncols()]; pool.threads()];
+    factor_with(sym, &levels, &pool, &mut works)
+}
+
+/// Factor on a caller-provided pool and precomputed U-pattern level
+/// schedule. `works` must hold one zeroed length-`n` dense workspace per
+/// pool thread (it is returned zeroed, even on the error path).
+pub fn factor_with(
+    sym: &SymbolicFill,
+    levels: &Levels,
+    pool: &WorkerPool,
+    works: &mut [Vec<f64>],
+) -> anyhow::Result<LuFactors> {
+    let mut lu = sym.filled.clone();
+    refactor_in_place(&mut lu, levels, pool, works)?;
+    Ok(LuFactors { lu })
+}
+
+/// Factor in place: `lu` holds the filled pattern with `A`'s values
+/// stamped in and is overwritten with the factors. This is the
+/// allocation-free refactorization hot path.
+pub fn refactor_in_place(
+    lu: &mut crate::sparse::Csc,
+    levels: &Levels,
+    pool: &WorkerPool,
+    works: &mut [Vec<f64>],
+) -> anyhow::Result<()> {
+    let n = lu.ncols();
+    anyhow::ensure!(
+        works.len() >= pool.threads(),
+        "need one workspace per pool thread"
+    );
+    for w in works.iter() {
+        // hard check: `factor_col` addresses the workspace unchecked
+        anyhow::ensure!(w.len() == n, "each workspace must have length n");
+        debug_assert!(w.iter().all(|&v| v == 0.0));
+    }
+    let (colptr, rowidx, values) = lu.split_mut();
+    let shared = SharedPtr(values.as_mut_ptr());
+    let works_ptr = WorksPtr(works.as_mut_ptr());
+    let failed = AtomicUsize::new(usize::MAX);
+
+    pool.run(&|ctx: &PoolCtx<'_>| {
+        // SAFETY: worker `id` touches only `works[id]`; ids are distinct.
+        let work: &mut Vec<f64> = unsafe { &mut *works_ptr.0.add(ctx.id) };
+        for level in &levels.levels {
+            if failed.load(Ordering::Relaxed) == usize::MAX {
+                // Interleaved (round-robin) column assignment: adjacent
+                // columns tend to have similar cost, so dealing them out
+                // one at a time balances better than contiguous chunks.
+                let mut idx = ctx.id;
+                while idx < level.len() {
+                    let j = level[idx] as usize;
+                    if !factor_col(j, colptr, rowidx, &shared, work, &failed) {
+                        break;
+                    }
+                    // Abort check between columns: another worker may have
+                    // hit a bad pivot — stop computing doomed columns.
+                    if failed.load(Ordering::Relaxed) != usize::MAX {
+                        break;
+                    }
+                    idx += ctx.threads;
+                }
+            }
+            // Per-level rendezvous (even when aborting, to stay in step).
+            if !ctx.sync() {
+                return;
+            }
+        }
+    });
+
+    let f = failed.load(Ordering::Relaxed);
+    anyhow::ensure!(f == usize::MAX, "zero/non-finite pivot at column {f}");
+    Ok(())
+}
+
+/// Raw pointer to the per-worker workspace array (disjoint indexing only).
+struct WorksPtr(*mut Vec<f64>);
+unsafe impl Send for WorksPtr {}
+unsafe impl Sync for WorksPtr {}
+
+/// Factor one column left-looking against the shared values buffer.
+/// Returns `false` after recording the column in `failed` on a
+/// zero/non-finite pivot (the workspace is scrubbed before returning so
+/// the buffers stay reusable).
+///
+/// The dense workspace is addressed through a raw pointer: every index
+/// into it is a row index taken from `rowidx` (bounded by `n` — a [`Csc`]
+/// invariant), and `work.len() == n` is checked by the callers. This keeps
+/// the kernel's cost the same in debug and release profiles, which the
+/// pool-vs-spawn wall-clock comparison in the bench smoke test relies on.
+///
+/// [`Csc`]: crate::sparse::Csc
+#[inline]
+fn factor_col(
+    j: usize,
+    colptr: &[usize],
+    rowidx: &[usize],
+    shared: &SharedPtr,
+    work: &mut [f64],
+    failed: &AtomicUsize,
+) -> bool {
+    // SAFETY: see module docs — this thread owns column j's value range;
+    // all cross-column reads target columns from earlier levels. `wp`
+    // indices are row indices < n == work.len().
+    let vals = shared.0;
+    let wp = work.as_mut_ptr();
+    let (s, e) = (colptr[j], colptr[j + 1]);
+    let rows_j = &rowidx[s..e];
+    for (idx, &r) in rows_j.iter().enumerate() {
+        unsafe { *wp.add(r) = *vals.add(s + idx) };
+    }
+    for &k in rows_j.iter().take_while(|&&k| k < j) {
+        let xk = unsafe { *wp.add(k) };
+        if xk != 0.0 {
+            let (ks, ke) = (colptr[k], colptr[k + 1]);
+            let rows_k = &rowidx[ks..ke];
+            let start = rows_k.partition_point(|&r| r <= k);
+            for (off, &i) in rows_k[start..].iter().enumerate() {
+                let lik = unsafe { *vals.add(ks + start + off) };
+                unsafe { *wp.add(i) -= lik * xk };
+            }
+        }
+    }
+    let pivot = unsafe { *wp.add(j) };
+    if pivot == 0.0 || !pivot.is_finite() {
+        failed.fetch_min(j, Ordering::Relaxed);
+        for &r in rows_j {
+            unsafe { *wp.add(r) = 0.0 };
+        }
+        return false;
+    }
+    for (idx, &r) in rows_j.iter().enumerate() {
+        let wr = unsafe { *wp.add(r) };
+        let v = if r > j { wr / pivot } else { wr };
+        unsafe { *vals.add(s + idx) = v };
+        unsafe { *wp.add(r) = 0.0 };
+    }
+    true
+}
+
+/// The seed implementation: spawn `nthreads` OS threads at **every level**
+/// via `std::thread::scope`, with contiguous chunked column assignment.
+///
+/// Kept verbatim (plus the shared abort flag) as the wall-clock baseline
+/// the bench harness and the smoke test compare [`factor`] against — the
+/// per-level spawn/join cost is exactly what the persistent pool removes.
+pub fn factor_spawn_per_level(sym: &SymbolicFill, nthreads: usize) -> anyhow::Result<LuFactors> {
+    let levels = leftlook_levels(sym);
+    factor_spawn_per_level_with(sym, &levels, nthreads)
+}
+
+/// [`factor_spawn_per_level`] on a precomputed schedule (so head-to-head
+/// timings against [`factor_with`] isolate the worker orchestration cost).
+pub fn factor_spawn_per_level_with(
+    sym: &SymbolicFill,
+    levels: &Levels,
+    nthreads: usize,
+) -> anyhow::Result<LuFactors> {
     let n = sym.filled.ncols();
     let nthreads = nthreads.max(1);
-    let levels = levelize(&glu1::detect(&sym.filled));
 
     let mut lu = sym.filled.clone();
     let colptr: Vec<usize> = lu.colptr().to_vec();
     let rowidx: Vec<usize> = lu.rowidx().to_vec();
-    let shared = SharedVals(lu.values_mut().as_mut_ptr());
+    let shared = SharedPtr(lu.values_mut().as_mut_ptr());
     let shared_ref = &shared;
     let colptr_ref = &colptr;
     let rowidx_ref = &rowidx;
 
-    let failed = std::sync::atomic::AtomicUsize::new(usize::MAX);
+    let failed = AtomicUsize::new(usize::MAX);
     let failed_ref = &failed;
 
     for level in &levels.levels {
@@ -49,41 +229,16 @@ pub fn factor(sym: &SymbolicFill, nthreads: usize) -> anyhow::Result<LuFactors> 
                     let mut work = vec![0.0f64; n];
                     for &j in cols {
                         let j = j as usize;
-                        // SAFETY: see module docs — this thread owns column
-                        // j's range; all reads target earlier levels.
-                        let vals = shared_ref.0;
-                        let (s, e) = (colptr_ref[j], colptr_ref[j + 1]);
-                        let rows_j = &rowidx_ref[s..e];
-                        for (idx, &r) in rows_j.iter().enumerate() {
-                            work[r] = unsafe { *vals.add(s + idx) };
-                        }
-                        for &k in rows_j.iter().take_while(|&&k| k < j) {
-                            let xk = work[k];
-                            if xk != 0.0 {
-                                let (ks, ke) = (colptr_ref[k], colptr_ref[k + 1]);
-                                let rows_k = &rowidx_ref[ks..ke];
-                                let start = rows_k.partition_point(|&r| r <= k);
-                                for (off, &i) in rows_k[start..].iter().enumerate() {
-                                    let lik = unsafe { *vals.add(ks + start + off) };
-                                    work[i] -= lik * xk;
-                                }
-                            }
-                        }
-                        let pivot = work[j];
-                        if pivot == 0.0 || !pivot.is_finite() {
-                            failed_ref.store(j, std::sync::atomic::Ordering::Relaxed);
+                        if !factor_col(j, colptr_ref, rowidx_ref, shared_ref, &mut work, failed_ref)
+                            || failed_ref.load(Ordering::Relaxed) != usize::MAX
+                        {
                             return;
-                        }
-                        for (idx, &r) in rows_j.iter().enumerate() {
-                            let v = if r > j { work[r] / pivot } else { work[r] };
-                            unsafe { *vals.add(s + idx) = v };
-                            work[r] = 0.0;
                         }
                     }
                 });
             }
         });
-        let f = failed.load(std::sync::atomic::Ordering::Relaxed);
+        let f = failed.load(Ordering::Relaxed);
         anyhow::ensure!(f == usize::MAX, "zero/non-finite pivot at column {f}");
     }
     Ok(LuFactors { lu })
@@ -110,6 +265,31 @@ mod tests {
     }
 
     #[test]
+    fn spawn_baseline_matches_pool_implementation() {
+        let a = gen::netlist(250, 6, 12, 0.05, 2, 0.2, 31);
+        let f = symbolic_fill(&a).unwrap();
+        let pooled = factor(&f, 3).unwrap();
+        let spawned = factor_spawn_per_level(&f, 3).unwrap();
+        for (p, q) in pooled.lu.values().iter().zip(spawned.lu.values()) {
+            assert_eq!(p, q, "both schedulers run the same arithmetic");
+        }
+    }
+
+    #[test]
+    fn persistent_pool_reuse_is_deterministic() {
+        // Two factorizations over one pool + workspace set: identical
+        // values, and the workspaces come back clean in between.
+        let a = gen::netlist(200, 6, 10, 0.06, 2, 0.2, 13);
+        let f = symbolic_fill(&a).unwrap();
+        let levels = leftlook_levels(&f);
+        let pool = WorkerPool::new(4);
+        let mut works = vec![vec![0.0f64; 200]; pool.threads()];
+        let one = factor_with(&f, &levels, &pool, &mut works).unwrap();
+        let two = factor_with(&f, &levels, &pool, &mut works).unwrap();
+        assert_eq!(one.lu.values(), two.lu.values());
+    }
+
+    #[test]
     fn solves_correctly() {
         let a = gen::grid2d(12, 12, 6);
         let f = symbolic_fill(&a).unwrap();
@@ -131,5 +311,48 @@ mod tests {
         coo.push(1, 1, 1.0);
         let f = symbolic_fill(&coo.to_csc()).unwrap();
         assert!(factor(&f, 2).is_err());
+        assert!(factor_spawn_per_level(&f, 2).is_err());
+    }
+
+    #[test]
+    fn abort_flag_reports_failure_and_scrubs_workspace() {
+        // A singular block embedded in a larger matrix: the failure column
+        // aborts the factorization, the error names a column, and reusing
+        // the same pool + workspaces afterward still yields oracle-exact
+        // results (i.e. the failure path left the workspaces clean).
+        use crate::sparse::Coo;
+        let n = 40;
+        let mut coo = Coo::new(n, n);
+        for i in 0..n {
+            coo.push(i, i, 4.0);
+            if i + 1 < n {
+                coo.push(i + 1, i, 1.0);
+                coo.push(i, i + 1, 1.0);
+            }
+        }
+        // Overwrite a 2x2 corner into exact cancellation: rows/cols 10, 11.
+        // U(11,11) becomes 4 - (1*4)... instead, force a zero pivot by
+        // zeroing the diagonal entry the updates cannot repair.
+        let mut bad = coo.to_csc();
+        let idx = bad.entry_index(0, 0).unwrap();
+        bad.values_mut()[idx] = 0.0;
+
+        let f = symbolic_fill(&bad).unwrap();
+        let levels = leftlook_levels(&f);
+        let pool = WorkerPool::new(4);
+        let mut works = vec![vec![0.0f64; n]; pool.threads()];
+        let err = factor_with(&f, &levels, &pool, &mut works).unwrap_err();
+        assert!(err.to_string().contains("pivot"), "{err}");
+        for w in &works {
+            assert!(w.iter().all(|&v| v == 0.0), "workspace scrubbed on abort");
+        }
+
+        // Same pool/workspaces, good matrix: still bit-identical to oracle.
+        let good = gen::netlist(n, 5, 8, 0.1, 1, 0.2, 9);
+        let fg = symbolic_fill(&good).unwrap();
+        let lg = leftlook_levels(&fg);
+        let par = factor_with(&fg, &lg, &pool, &mut works).unwrap();
+        let seq = leftlook::factor(&fg).unwrap();
+        assert_eq!(par.lu.values(), seq.lu.values());
     }
 }

@@ -1,0 +1,278 @@
+//! Parallel hybrid right-looking factorization on a hazard-free level
+//! schedule — the GLU3.0 execution model with **real CPU threads** instead
+//! of simulated GPU warps.
+//!
+//! This is the first engine where the extra parallelism exposed by the
+//! relaxed dependency detection ([`crate::depend::glu3`], Algorithm 4) is
+//! measured in *wall-clock*, not simulated cycles: columns of one level are
+//! dealt round-robin across a persistent [`WorkerPool`], each worker runs
+//! the Algorithm 2 column pipeline (divide phase + subcolumn MAC updates),
+//! and levels meet at a spin barrier.
+//!
+//! ## Safety model (why the schedule makes this sound)
+//!
+//! A hazard-free schedule (GLU2.0 exact or GLU3.0 relaxed detection —
+//! validated by [`crate::depend::levelize::validate_hazard_free`])
+//! guarantees, for columns in the *same* level:
+//!
+//! - **No update lands in the current level.** Any column `i` with update
+//!   work (`L(:,i)` non-empty) is ordered strictly before every column `k`
+//!   with `As(i,k) != 0`, so all MAC targets live in later levels. The
+//!   divide phase therefore writes its own column without interference,
+//!   with plain (non-atomic) accesses.
+//! - **No read/write hazard on multipliers or L values** (the double-U
+//!   condition). What remains possible is two same-level columns
+//!   *accumulating* into the same element of a later column — the GPU
+//!   resolves that with atomics, and so do we: MAC updates go through a
+//!   compare-and-swap `f64` subtract, and multiplier loads are relaxed
+//!   atomic loads.
+//!
+//! Accumulation order into a shared element is therefore nondeterministic
+//! across threads — results match the simulated-GPU engine (which commits
+//! same-level columns in ascending order) to rounding, and are *identical*
+//! to it when the pool has one thread.
+//!
+//! GLU1.0's U-pattern schedule does **not** provide these guarantees
+//! (paper Fig. 9's counterexample); [`crate::glu::GluSolver`] refuses to
+//! combine it with this engine.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::depend::Levels;
+use crate::numeric::pool::{PoolCtx, SharedPtr, WorkerPool};
+use crate::symbolic::SymbolicFill;
+
+use super::LuFactors;
+
+/// Relaxed atomic load of `vals[idx]` (the multiplier read: the schedule
+/// proves no concurrent *semantic* writer, but sibling columns may be
+/// CAS-updating neighbouring elements of the same column, so the access
+/// must be atomic to be race-free).
+#[inline]
+fn atomic_load(vals: *mut f64, idx: usize) -> f64 {
+    // SAFETY: `vals` points into a live, 8-aligned f64 buffer; every
+    // concurrent access to this element during the parallel phase is
+    // atomic (see module docs).
+    let a = unsafe { &*(vals.add(idx) as *const AtomicU64) };
+    f64::from_bits(a.load(Ordering::Relaxed))
+}
+
+/// Atomic `vals[idx] -= delta` via a CAS loop — the MAC-update commit, the
+/// CPU analogue of the GPU kernel's atomic add.
+#[inline]
+fn atomic_sub(vals: *mut f64, idx: usize, delta: f64) {
+    // SAFETY: as in `atomic_load`.
+    let a = unsafe { &*(vals.add(idx) as *const AtomicU64) };
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        let new = (f64::from_bits(cur) - delta).to_bits();
+        match a.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Factor `As` on `pool` under a **hazard-free** level schedule (GLU2.0 or
+/// GLU3.0 detection; never GLU1.0 — see module docs). `urow` is the
+/// subcolumn view from [`crate::numeric::rightlook::upper_rows`].
+pub fn factor_with(
+    sym: &SymbolicFill,
+    urow: &[Vec<u32>],
+    levels: &Levels,
+    pool: &WorkerPool,
+) -> anyhow::Result<LuFactors> {
+    let mut lu = sym.filled.clone();
+    refactor_in_place(&mut lu, urow, levels, pool)?;
+    Ok(LuFactors { lu })
+}
+
+/// Factor in place: `lu` holds the filled pattern with `A`'s values
+/// stamped in and is overwritten with the factors. Allocation-free apart
+/// from each worker's small divide-phase scratch (grown once, reused
+/// across levels).
+pub fn refactor_in_place(
+    lu: &mut crate::sparse::Csc,
+    urow: &[Vec<u32>],
+    levels: &Levels,
+    pool: &WorkerPool,
+) -> anyhow::Result<()> {
+    let n = lu.ncols();
+    anyhow::ensure!(urow.len() == n, "subcolumn view dimension mismatch");
+    let (colptr, rowidx, values) = lu.split_mut();
+    let shared = SharedPtr(values.as_mut_ptr());
+    let failed = AtomicUsize::new(usize::MAX);
+
+    pool.run(&|ctx: &PoolCtx<'_>| {
+        let mut lvals: Vec<f64> = Vec::new();
+        for level in &levels.levels {
+            if failed.load(Ordering::Relaxed) == usize::MAX {
+                let mut idx = ctx.id;
+                while idx < level.len() {
+                    let j = level[idx] as usize;
+                    if !factor_column_par(j, colptr, rowidx, &shared, &urow[j], &mut lvals, &failed)
+                        || failed.load(Ordering::Relaxed) != usize::MAX
+                    {
+                        break;
+                    }
+                    idx += ctx.threads;
+                }
+            }
+            if !ctx.sync() {
+                return;
+            }
+        }
+    });
+
+    let f = failed.load(Ordering::Relaxed);
+    anyhow::ensure!(f == usize::MAX, "zero/non-finite pivot at column {f}");
+    Ok(())
+}
+
+/// One column of the Algorithm 2 pipeline: divide phase (plain accesses —
+/// the column is owned by this worker for the level), then the subcolumn
+/// MAC updates (atomic commits into later-level columns).
+#[inline]
+fn factor_column_par(
+    j: usize,
+    colptr: &[usize],
+    rowidx: &[usize],
+    shared: &SharedPtr,
+    subcols: &[u32],
+    lvals: &mut Vec<f64>,
+    failed: &AtomicUsize,
+) -> bool {
+    let vals = shared.0;
+    let (s_j, e_j) = (colptr[j], colptr[j + 1]);
+    let rows_j = &rowidx[s_j..e_j];
+    let diag_pos = match rows_j.binary_search(&j) {
+        Ok(p) => p,
+        Err(_) => {
+            failed.fetch_min(j, Ordering::Relaxed);
+            return false;
+        }
+    };
+    // SAFETY (divide phase): only this worker touches column j's value
+    // range during this level; earlier-level values it reads were
+    // published by the inter-level barrier.
+    let pivot = unsafe { *vals.add(s_j + diag_pos) };
+    if pivot == 0.0 || !pivot.is_finite() {
+        failed.fetch_min(j, Ordering::Relaxed);
+        return false;
+    }
+    let lrows = &rows_j[diag_pos + 1..];
+    lvals.clear();
+    for idx in diag_pos + 1..rows_j.len() {
+        let v = unsafe { *vals.add(s_j + idx) } / pivot;
+        unsafe { *vals.add(s_j + idx) = v };
+        lvals.push(v);
+    }
+
+    for &k in subcols {
+        let k = k as usize;
+        let (s_k, e_k) = (colptr[k], colptr[k + 1]);
+        let rows_k = &rowidx[s_k..e_k];
+        let multiplier = match rows_k.binary_search(&j) {
+            Ok(p) => atomic_load(vals, s_k + p),
+            Err(_) => continue,
+        };
+        if multiplier == 0.0 {
+            continue;
+        }
+        // Walk L rows of column j and column k's pattern in lock-step
+        // (both sorted; the fill closure guarantees containment).
+        let mut pos = rows_k.partition_point(|&r| r <= j);
+        for (&i, &lij) in lrows.iter().zip(lvals.iter()) {
+            while rows_k[pos] != i {
+                pos += 1;
+            }
+            atomic_sub(vals, s_k + pos, lij * multiplier);
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::depend::{glu2, glu3, levelize};
+    use crate::gpusim::{simulate_factorization, DeviceConfig, Policy};
+    use crate::numeric::rightlook::upper_rows;
+    use crate::numeric::{leftlook, residual};
+    use crate::sparse::gen;
+    use crate::symbolic::symbolic_fill;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_simulated_gpu_engine() {
+        let mut rng = Rng::new(0x9A11);
+        for trial in 0..8 {
+            let n = rng.range(50, 220);
+            let a = gen::netlist(n, 6, 10, 0.08, 2, 0.2, 6200 + trial);
+            let f = symbolic_fill(&a).unwrap();
+            let lv = levelize(&glu3::detect(&f.filled));
+            let urow = upper_rows(&f);
+            let d = DeviceConfig::titan_x();
+            let (sim, _) = simulate_factorization(&f, &lv, &Policy::glu3(), &d).unwrap();
+            for threads in [1, 2, 4] {
+                let pool = WorkerPool::new(threads);
+                let par = factor_with(&f, &urow, &lv, &pool).unwrap();
+                for (p, q) in par.lu.values().iter().zip(sim.lu.values()) {
+                    assert!(
+                        (p - q).abs() < 1e-9 * (1.0 + q.abs()),
+                        "trial {trial} threads {threads}: {p} vs {q}"
+                    );
+                }
+                if threads == 1 {
+                    // one thread == the simulator's ascending serialization
+                    assert_eq!(par.lu.values(), sim.lu.values());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn glu2_exact_schedule_also_works() {
+        let a = gen::netlist(150, 6, 10, 0.08, 2, 0.2, 404);
+        let f = symbolic_fill(&a).unwrap();
+        let lv = levelize(&glu2::detect(&f.filled));
+        let urow = upper_rows(&f);
+        let pool = WorkerPool::new(4);
+        let lu = factor_with(&f, &urow, &lv, &pool).unwrap();
+        let oracle = leftlook::factor(&f).unwrap();
+        for (p, q) in lu.lu.values().iter().zip(oracle.lu.values()) {
+            assert!((p - q).abs() < 1e-9 * (1.0 + q.abs()));
+        }
+    }
+
+    #[test]
+    fn solves_correctly_on_mesh() {
+        let g = gen::grid2d(20, 20, 5);
+        let p = crate::order::amd::amd_order(&g).unwrap();
+        let a = g.permute(p.as_scatter(), p.as_scatter());
+        let f = symbolic_fill(&a).unwrap();
+        let lv = levelize(&glu3::detect(&f.filled));
+        let urow = upper_rows(&f);
+        let pool = WorkerPool::new(4);
+        let lu = factor_with(&f, &urow, &lv, &pool).unwrap();
+        let b = vec![1.5; 400];
+        let x = lu.solve(&b);
+        assert!(residual(&a, &x, &b) < 1e-10);
+    }
+
+    #[test]
+    fn reports_zero_pivot() {
+        use crate::sparse::Coo;
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 1, 1.0);
+        coo.push(1, 0, 1.0);
+        coo.push(1, 1, 1.0); // U(1,1) cancels to zero
+        let f = symbolic_fill(&coo.to_csc()).unwrap();
+        let lv = levelize(&glu3::detect(&f.filled));
+        let urow = upper_rows(&f);
+        let pool = WorkerPool::new(2);
+        let err = factor_with(&f, &urow, &lv, &pool).unwrap_err();
+        assert!(err.to_string().contains("pivot"), "{err}");
+    }
+}

@@ -1,0 +1,448 @@
+//! Persistent worker pool for the level-scheduled numeric hot paths.
+//!
+//! The paper's CPU baselines (NICSLU's cluster/pipeline modes) and Li's
+//! GPU trisolve work both rest on the same execution shape: a fixed set of
+//! workers that *stay alive* across levels and meet at a cheap rendezvous
+//! between them. The seed implementation instead respawned OS threads at
+//! every level via `std::thread::scope` — on circuit matrices with
+//! thousands of shallow levels the spawn/join cost dwarfs the arithmetic.
+//!
+//! [`WorkerPool`] spawns its threads **once**; each [`WorkerPool::run`]
+//! dispatch wakes them with a condvar, executes one job on every thread
+//! (the caller participates as worker 0, so a 1-thread pool runs inline
+//! with zero synchronization), and waits on a completion counter until
+//! every worker has left the job body. Inside a job, per-level rendezvous
+//! goes through [`PoolCtx::sync`] — a
+//! sense-reversing [`SpinBarrier`] that spins briefly and then yields, so a
+//! level boundary costs microseconds instead of a spawn/join round trip.
+//!
+//! Safety model: jobs receive a [`PoolCtx`] and share data through the
+//! caller's captures. The pool erases the job's lifetime to hand it to the
+//! parked threads, which is sound because `run` does not return until every
+//! worker has bumped the completion counter — the borrow outlives all use.
+//! A panicking job poisons the pool (the barrier aborts so no thread
+//! deadlocks waiting on the panicked one) and `run` re-panics on the
+//! caller's thread; a poisoned pool refuses further jobs.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+
+/// Shared raw pointer into an `f64` buffer, for level-sliced writes where
+/// the schedule (not the borrow checker) proves disjointness. Used by the
+/// parallel factorization engines and the parallel triangular solves; see
+/// each call site's safety comment for its aliasing discipline.
+pub(crate) struct SharedPtr(pub *mut f64);
+unsafe impl Send for SharedPtr {}
+unsafe impl Sync for SharedPtr {}
+
+/// Sense-reversing spin-then-yield barrier for `total` participants.
+///
+/// `wait` returns `true` on a normal rendezvous and `false` once the
+/// barrier has been aborted (a job panicked); after an abort the barrier
+/// releases every waiter immediately and permanently.
+pub struct SpinBarrier {
+    total: usize,
+    count: AtomicUsize,
+    generation: AtomicUsize,
+    aborted: AtomicBool,
+}
+
+impl SpinBarrier {
+    pub fn new(total: usize) -> Self {
+        assert!(total >= 1);
+        SpinBarrier {
+            total,
+            count: AtomicUsize::new(0),
+            generation: AtomicUsize::new(0),
+            aborted: AtomicBool::new(false),
+        }
+    }
+
+    /// Block until all `total` participants arrive. The AcqRel/Release
+    /// orderings publish every pre-barrier write to every post-barrier
+    /// reader (the level-schedule safety argument relies on this).
+    pub fn wait(&self) -> bool {
+        if self.aborted.load(Ordering::Acquire) {
+            return false;
+        }
+        let gen = self.generation.load(Ordering::Acquire);
+        if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.total {
+            self.count.store(0, Ordering::Relaxed);
+            self.generation.store(gen.wrapping_add(1), Ordering::Release);
+            true
+        } else {
+            let mut spins = 0u32;
+            while self.generation.load(Ordering::Acquire) == gen {
+                if self.aborted.load(Ordering::Acquire) {
+                    return false;
+                }
+                spins = spins.saturating_add(1);
+                if spins < 256 {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+            true
+        }
+    }
+
+    /// Permanently release all current and future waiters (panic path).
+    pub fn abort(&self) {
+        self.aborted.store(true, Ordering::Release);
+    }
+}
+
+/// Per-thread view of a running job: worker id, pool width, and the
+/// inter-level rendezvous.
+pub struct PoolCtx<'p> {
+    /// This thread's index in `0..threads` (0 is the dispatching caller).
+    pub id: usize,
+    /// Total participating threads.
+    pub threads: usize,
+    barrier: &'p SpinBarrier,
+}
+
+impl PoolCtx<'_> {
+    /// Rendezvous with every other worker (end-of-level barrier). Returns
+    /// `false` if the pool aborted (another worker panicked) — the job
+    /// should return immediately.
+    pub fn sync(&self) -> bool {
+        self.barrier.wait()
+    }
+}
+
+type Job = dyn Fn(&PoolCtx<'_>) + Sync;
+
+/// Lifetime-erased job pointer handed to the parked workers.
+#[derive(Clone, Copy)]
+struct JobPtr(*const Job);
+unsafe impl Send for JobPtr {}
+
+struct JobSlot {
+    epoch: u64,
+    job: Option<JobPtr>,
+    shutdown: bool,
+}
+
+struct Shared {
+    nworkers: usize,
+    barrier: SpinBarrier,
+    state: Mutex<JobSlot>,
+    start: Condvar,
+    poisoned: AtomicBool,
+    /// Workers finished with the current job body. Unlike the (abortable)
+    /// barrier, this is the completion signal `run` must always wait on —
+    /// even on the panic path — before releasing the borrowed job.
+    done: AtomicUsize,
+}
+
+fn lock_state(shared: &Shared) -> MutexGuard<'_, JobSlot> {
+    shared.state.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// A pool of `threads - 1` parked OS threads plus the dispatching caller.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    /// Serializes concurrent [`WorkerPool::run`] callers (the pool is
+    /// `Sync`, e.g. behind an `Arc`): the epoch/done protocol supports one
+    /// dispatcher at a time, so a second caller queues here instead of
+    /// corrupting the rendezvous.
+    dispatch: Mutex<()>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("threads", &self.threads())
+            .field("poisoned", &self.shared.poisoned.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `threads` workers (clamped to at least 1). The
+    /// calling thread is worker 0, so `threads - 1` OS threads are created
+    /// — `WorkerPool::new(1)` spawns nothing and `run` executes inline.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            nworkers: threads - 1,
+            barrier: SpinBarrier::new(threads),
+            state: Mutex::new(JobSlot {
+                epoch: 0,
+                job: None,
+                shutdown: false,
+            }),
+            start: Condvar::new(),
+            poisoned: AtomicBool::new(false),
+            done: AtomicUsize::new(0),
+        });
+        let handles = (1..threads)
+            .map(|id| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("glu3-worker-{id}"))
+                    .spawn(move || worker_loop(&sh, id))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            handles,
+            dispatch: Mutex::new(()),
+        }
+    }
+
+    /// Total participating threads (parked workers + the caller).
+    pub fn threads(&self) -> usize {
+        self.shared.nworkers + 1
+    }
+
+    /// Execute `job` on every thread of the pool (the caller runs it as
+    /// worker 0) and return once all of them have finished. Concurrent
+    /// callers on a shared pool are serialized. Panics if the pool is
+    /// poisoned or if `job` panics on any thread.
+    pub fn run(&self, job: &Job) {
+        let _dispatch = self
+            .dispatch
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        assert!(
+            !self.shared.poisoned.load(Ordering::Acquire),
+            "worker pool poisoned by an earlier job panic"
+        );
+        if self.shared.nworkers == 0 {
+            // Inline fast path: no synchronization at all.
+            let ctx = PoolCtx {
+                id: 0,
+                threads: 1,
+                barrier: &self.shared.barrier,
+            };
+            job(&ctx);
+            return;
+        }
+        // Lifetime erasure: the pointer is only dereferenced by workers
+        // between the epoch bump below and the completion barrier, and we
+        // do not return until that barrier passes.
+        let ptr = JobPtr(job as *const Job);
+        {
+            let mut st = lock_state(&self.shared);
+            st.job = Some(ptr);
+            st.epoch += 1;
+        }
+        self.shared.start.notify_all();
+
+        let ctx = PoolCtx {
+            id: 0,
+            threads: self.threads(),
+            barrier: &self.shared.barrier,
+        };
+        let result = catch_unwind(AssertUnwindSafe(|| job(&ctx)));
+        if result.is_err() {
+            // Poison + release any worker parked at a level barrier; they
+            // observe the abort at their next sync and exit the job body.
+            self.shared.poisoned.store(true, Ordering::Release);
+            self.shared.barrier.abort();
+        }
+        // Completion: wait until every worker left the job body — on the
+        // panic path too, since returning would drop the borrows the job
+        // captures while workers still hold the erased reference.
+        let mut spins = 0u32;
+        while self.shared.done.load(Ordering::Acquire) < self.shared.nworkers {
+            spins = spins.saturating_add(1);
+            if spins < 256 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        self.shared.done.store(0, Ordering::Relaxed);
+        match result {
+            Err(payload) => std::panic::resume_unwind(payload),
+            Ok(()) => assert!(
+                !self.shared.poisoned.load(Ordering::Acquire),
+                "worker pool job panicked on a worker thread"
+            ),
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock_state(&self.shared);
+            st.shutdown = true;
+        }
+        self.shared.start.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, id: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = lock_state(shared);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch > seen {
+                    seen = st.epoch;
+                    break st.job.expect("job set whenever the epoch advances");
+                }
+                st = shared
+                    .start
+                    .wait(st)
+                    .unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        let ctx = PoolCtx {
+            id,
+            threads: shared.nworkers + 1,
+            barrier: &shared.barrier,
+        };
+        // SAFETY: `run` keeps the job alive until every worker has bumped
+        // `done` below.
+        let job_ref: &Job = unsafe { &*job.0 };
+        if catch_unwind(AssertUnwindSafe(|| job_ref(&ctx))).is_err() {
+            shared.poisoned.store(true, Ordering::Release);
+            shared.barrier.abort();
+        }
+        shared.done.fetch_add(1, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_job_on_every_thread() {
+        for threads in [1, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            assert_eq!(pool.threads(), threads);
+            let hits = AtomicU64::new(0);
+            pool.run(&|ctx: &PoolCtx<'_>| {
+                assert!(ctx.id < ctx.threads);
+                hits.fetch_add(1 << (8 * ctx.id), Ordering::Relaxed);
+            });
+            let h = hits.load(Ordering::Relaxed);
+            for t in 0..threads {
+                assert_eq!((h >> (8 * t)) & 0xff, 1, "worker {t} ran once");
+            }
+        }
+    }
+
+    #[test]
+    fn level_barriers_order_writes() {
+        // Each "level" doubles a shared counter after every worker added 1:
+        // with L levels and T threads the result is ((0+T)*2+T)*2... —
+        // deterministic only if sync() really is a barrier.
+        let threads = 4;
+        let levels = 50;
+        let pool = WorkerPool::new(threads);
+        let value = AtomicU64::new(0);
+        pool.run(&|ctx: &PoolCtx<'_>| {
+            for _ in 0..levels {
+                value.fetch_add(1, Ordering::Relaxed);
+                ctx.sync();
+                if ctx.id == 0 {
+                    let v = value.load(Ordering::Relaxed);
+                    value.store(v * 2, Ordering::Relaxed);
+                }
+                ctx.sync();
+            }
+        });
+        let mut want = 0u64;
+        for _ in 0..levels {
+            want = (want + threads as u64) * 2;
+        }
+        assert_eq!(value.load(Ordering::Relaxed), want);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_runs() {
+        let pool = WorkerPool::new(3);
+        let total = AtomicU64::new(0);
+        for _ in 0..20 {
+            pool.run(&|_ctx: &PoolCtx<'_>| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 60);
+    }
+
+    #[test]
+    fn concurrent_run_callers_are_serialized() {
+        // The pool is Sync; racing dispatchers must queue, not deadlock
+        // or corrupt the epoch/done rendezvous.
+        let pool = WorkerPool::new(3);
+        let total = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                let pool = &pool;
+                let total = &total;
+                scope.spawn(move || {
+                    for _ in 0..10 {
+                        pool.run(&|_ctx: &PoolCtx<'_>| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        // 3 callers x 10 runs x 3 pool threads
+        assert_eq!(total.load(Ordering::Relaxed), 90);
+    }
+
+    #[test]
+    fn shared_slice_levelwise_writes_are_visible() {
+        // Level k: worker t writes slot t from the slot values of level
+        // k-1; the barrier must publish all writes between levels.
+        let threads = 4;
+        let rounds = 32;
+        let pool = WorkerPool::new(threads);
+        let mut data = vec![1.0f64; threads];
+        let shared = SharedPtr(data.as_mut_ptr());
+        pool.run(&|ctx: &PoolCtx<'_>| {
+            for _ in 0..rounds {
+                // read everyone's value (from the previous level)
+                let sum: f64 = (0..ctx.threads)
+                    .map(|t| unsafe { *shared.0.add(t) })
+                    .sum();
+                ctx.sync();
+                unsafe { *shared.0.add(ctx.id) = sum / ctx.threads as f64 };
+                ctx.sync();
+            }
+        });
+        drop(pool);
+        for &v in &data {
+            assert_eq!(v, 1.0, "mean-of-ones must stay 1.0");
+        }
+    }
+
+    #[test]
+    fn panicked_job_poisons_pool_without_deadlock() {
+        let pool = WorkerPool::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&|ctx: &PoolCtx<'_>| {
+                if ctx.id == 1 {
+                    panic!("boom");
+                }
+                // other workers park on the barrier; the abort releases them
+                ctx.sync();
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        let r2 = catch_unwind(AssertUnwindSafe(|| pool.run(&|_: &PoolCtx<'_>| {})));
+        assert!(r2.is_err(), "poisoned pool must refuse further jobs");
+    }
+}

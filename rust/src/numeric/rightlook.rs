@@ -26,64 +26,90 @@ pub fn upper_rows(sym: &SymbolicFill) -> Vec<Vec<u32>> {
 
 /// Factor `As` with the hybrid right-looking algorithm (Algorithm 2).
 pub fn factor(sym: &SymbolicFill) -> anyhow::Result<LuFactors> {
-    let n = sym.filled.ncols();
     let mut lu = sym.filled.clone();
     let urow = upper_rows(sym);
+    let mut lvals = Vec::new();
+    factor_in_place(&mut lu, &urow, &mut lvals)?;
+    Ok(LuFactors { lu })
+}
 
-    for j in 0..n {
-        // --- Step 1: compute L part of column j (divide by pivot). ---
-        let (rows_j, vals_j) = lu.col(j);
-        let diag_pos = rows_j
-            .binary_search(&j)
-            .map_err(|_| anyhow::anyhow!("missing diagonal at {j}"))?;
-        let pivot = vals_j[diag_pos];
-        anyhow::ensure!(
-            pivot != 0.0 && pivot.is_finite(),
-            "zero/non-finite pivot at column {j}"
-        );
-        let colptr_j = lu.colptr()[j];
-        let col_len = rows_j.len();
-        // Copy L rows/values for the update step (avoid aliasing).
-        let lrows: Vec<usize> = rows_j[diag_pos + 1..].to_vec();
-        {
-            let vals = lu.values_mut();
-            for idx in diag_pos + 1..col_len {
-                vals[colptr_j + idx] /= pivot;
-            }
-        }
-        let lvals: Vec<f64> = {
-            let (_, vals_j) = lu.col(j);
-            vals_j[diag_pos + 1..].to_vec()
+/// Factor in place, column by column in ascending order: `lu` holds the
+/// filled pattern with `A`'s values stamped in and is overwritten with the
+/// factors. `urow` is the [`upper_rows`] view of the same pattern; `lvals`
+/// is a reusable divide-phase scratch. Allocation-free — the
+/// refactorization fast path.
+pub fn factor_in_place(
+    lu: &mut crate::sparse::Csc,
+    urow: &[Vec<u32>],
+    lvals: &mut Vec<f64>,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(urow.len() == lu.ncols(), "subcolumn view dimension mismatch");
+    for j in 0..lu.ncols() {
+        factor_column(lu, &urow[j], j, lvals)?;
+    }
+    Ok(())
+}
+
+/// Factor one column: divide phase + submatrix (subcolumn) updates — the
+/// single-column pipeline of Algorithm 2, shared verbatim with the
+/// simulated-GPU executor (so the two engines are bit-identical by
+/// construction).
+///
+/// Allocation-free on the hot path: the pattern is walked through the
+/// split borrow of [`crate::sparse::Csc::split_mut`]; only the column's L
+/// values are staged into the caller-provided scratch buffer (they are
+/// read while other columns' values are written).
+pub(crate) fn factor_column(
+    lu: &mut crate::sparse::Csc,
+    subcols: &[u32],
+    j: usize,
+    lvals: &mut Vec<f64>,
+) -> anyhow::Result<()> {
+    let (colptr, rowidx, values) = lu.split_mut();
+    let (s_j, e_j) = (colptr[j], colptr[j + 1]);
+    let rows_j = &rowidx[s_j..e_j];
+    let diag_pos = rows_j
+        .binary_search(&j)
+        .map_err(|_| anyhow::anyhow!("missing diagonal at {j}"))?;
+    let pivot = values[s_j + diag_pos];
+    anyhow::ensure!(
+        pivot != 0.0 && pivot.is_finite(),
+        "zero/non-finite pivot at column {j}"
+    );
+    // Divide phase, staging L values into the scratch buffer.
+    let lrows = &rows_j[diag_pos + 1..];
+    lvals.clear();
+    for idx in diag_pos + 1..rows_j.len() {
+        let v = values[s_j + idx] / pivot;
+        values[s_j + idx] = v;
+        lvals.push(v);
+    }
+
+    // Submatrix update — for each subcolumn k (As(j,k)≠0, k > j), apply
+    // the rank-1 column update (Eq. 3).
+    for &k in subcols {
+        let k = k as usize;
+        let (s_k, e_k) = (colptr[k], colptr[k + 1]);
+        let rows_k = &rowidx[s_k..e_k];
+        let multiplier = match rows_k.binary_search(&j) {
+            Ok(p) => values[s_k + p],
+            Err(_) => continue,
         };
-
-        // --- Step 2: submatrix update — for each subcolumn k (As(j,k)≠0,
-        // k > j), apply the rank-1 column update (Eq. 3). ---
-        for &k in &urow[j] {
-            let k = k as usize;
-            let multiplier = lu.get(j, k); // As(j, k)
-            if multiplier == 0.0 {
-                continue;
+        if multiplier == 0.0 {
+            continue;
+        }
+        let start = rows_k.partition_point(|&r| r <= j);
+        // Walk L rows of column j and column k's pattern in lock-step:
+        // symbolic fill guarantees every L row is present in column k.
+        let mut pos = start;
+        for (&i, &lij) in lrows.iter().zip(lvals.iter()) {
+            while rows_k[pos] != i {
+                pos += 1;
             }
-            let colptr_k = lu.colptr()[k];
-            let (rows_k, _) = lu.col(k);
-            // Walk the L rows of column j and the pattern of column k in
-            // lock-step (both sorted): every L row of column j is
-            // guaranteed present in column k's pattern by the symbolic
-            // analysis (fill-in closure).
-            let mut pos = rows_k.partition_point(|&r| r <= j);
-            let rows_k: Vec<usize> = rows_k[pos..].to_vec();
-            let base = pos;
-            pos = 0;
-            let vals = lu.values_mut();
-            for (&i, &lij) in lrows.iter().zip(&lvals) {
-                while rows_k[pos] != i {
-                    pos += 1;
-                }
-                vals[colptr_k + base + pos] -= lij * multiplier;
-            }
+            values[s_k + pos] -= lij * multiplier;
         }
     }
-    Ok(LuFactors { lu })
+    Ok(())
 }
 
 #[cfg(test)]

@@ -4,7 +4,24 @@
 //! of the paper's SPICE use-case); also exercised standalone by the
 //! coordinator's repeated-solve path (same factors, many right-hand sides —
 //! the Newton–Raphson pattern).
+//!
+//! Two execution modes:
+//!
+//! - the sequential column-oriented ("push") solves below, and
+//! - level-scheduled parallel row-oriented ("pull") solves
+//!   ([`lower_unit_solve_par`] / [`upper_solve_par`]) over a
+//!   [`TriangularSchedule`], following Li's GPU trisolve construction
+//!   (arXiv:1710.04985): rows are grouped into dependency levels, each
+//!   level's rows are dealt round-robin across a persistent
+//!   [`WorkerPool`], and a spin barrier separates levels.
+//!
+//! The pull form accumulates row `i`'s terms in exactly the order the push
+//! form applies them (ascending column for `L`, descending for `U`,
+//! including the skip of zero multiplicands), so the parallel solves are
+//! **bit-identical** to the sequential ones at any thread count — the
+//! property the test pyramid pins down.
 
+use crate::numeric::pool::{PoolCtx, SharedPtr, WorkerPool};
 use crate::sparse::Csc;
 
 /// In-place forward substitution with the unit-lower factor stored in the
@@ -73,11 +90,243 @@ pub fn transpose_solve(lu: &Csc, b: &[f64]) -> Vec<f64> {
     x
 }
 
+/// Row-oriented, level-scheduled view of one triangular factor: for each
+/// row, its off-diagonal entries (column + index into the CSC value array)
+/// in ascending column order, plus the rows grouped by dependency level.
+#[derive(Debug, Clone)]
+pub struct RowSched {
+    /// Row pointer into `cols`/`vidx` (length `n + 1`).
+    ptr: Vec<usize>,
+    /// Column index of each row entry, ascending within a row.
+    cols: Vec<u32>,
+    /// Index of each row entry in the CSC value array.
+    vidx: Vec<usize>,
+    /// Value index of the diagonal per row (upper factor only; empty for
+    /// the unit-lower factor).
+    diag: Vec<usize>,
+    /// Rows grouped by level: every row only reads solution entries
+    /// produced in strictly earlier levels.
+    levels: Vec<Vec<u32>>,
+}
+
+impl RowSched {
+    /// Number of dependency levels (the solve's critical-path length).
+    pub fn num_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Mean rows per level — the available parallelism. Deep/narrow
+    /// schedules (circuit matrices often levelize to width ~1–3) pay a
+    /// barrier per level for almost no concurrent work, so callers should
+    /// fall back to the sequential solve below a width threshold (see
+    /// [`TriangularSchedule::parallel_worthwhile`]).
+    pub fn mean_level_width(&self) -> f64 {
+        if self.levels.is_empty() {
+            return 0.0;
+        }
+        (self.ptr.len() - 1) as f64 / self.levels.len() as f64
+    }
+}
+
+/// L and U row schedules for one factored pattern — cached by
+/// [`crate::glu::GluSolver`] and reused across every solve on the same
+/// symbolic state (pattern-only: value restamps don't invalidate it).
+#[derive(Debug, Clone)]
+pub struct TriangularSchedule {
+    pub lower: RowSched,
+    pub upper: RowSched,
+}
+
+impl TriangularSchedule {
+    /// Whether the level-parallel solves are expected to beat the
+    /// sequential ones: both schedules need enough rows per level to
+    /// amortize the per-level barrier (a few microseconds) over real
+    /// concurrent work. Results are bit-identical either way — this is a
+    /// pure latency heuristic.
+    pub fn parallel_worthwhile(&self) -> bool {
+        const MIN_MEAN_LEVEL_WIDTH: f64 = 8.0;
+        self.lower.mean_level_width() >= MIN_MEAN_LEVEL_WIDTH
+            && self.upper.mean_level_width() >= MIN_MEAN_LEVEL_WIDTH
+    }
+
+    /// Build both row schedules from a factored (or just filled) pattern.
+    pub fn build(lu: &Csc) -> Self {
+        let n = lu.ncols();
+        let colptr = lu.colptr();
+        let rowidx = lu.rowidx();
+
+        // Count strictly-lower and strictly-upper entries per row.
+        let mut lcnt = vec![0usize; n];
+        let mut ucnt = vec![0usize; n];
+        for c in 0..n {
+            for &r in &rowidx[colptr[c]..colptr[c + 1]] {
+                match r.cmp(&c) {
+                    std::cmp::Ordering::Greater => lcnt[r] += 1,
+                    std::cmp::Ordering::Less => ucnt[r] += 1,
+                    std::cmp::Ordering::Equal => {}
+                }
+            }
+        }
+        let prefix = |cnt: &[usize]| {
+            let mut ptr = vec![0usize; n + 1];
+            for i in 0..n {
+                ptr[i + 1] = ptr[i] + cnt[i];
+            }
+            ptr
+        };
+        let lptr = prefix(&lcnt);
+        let uptr = prefix(&ucnt);
+
+        let mut lcols = vec![0u32; lptr[n]];
+        let mut lvidx = vec![0usize; lptr[n]];
+        let mut ucols = vec![0u32; uptr[n]];
+        let mut uvidx = vec![0usize; uptr[n]];
+        let mut diag = vec![usize::MAX; n];
+        let mut lcur = lptr.clone();
+        let mut ucur = uptr.clone();
+        // Column-ascending fill keeps each row's entries sorted by column.
+        for c in 0..n {
+            for (off, &r) in rowidx[colptr[c]..colptr[c + 1]].iter().enumerate() {
+                let v = colptr[c] + off;
+                match r.cmp(&c) {
+                    std::cmp::Ordering::Greater => {
+                        lcols[lcur[r]] = c as u32;
+                        lvidx[lcur[r]] = v;
+                        lcur[r] += 1;
+                    }
+                    std::cmp::Ordering::Less => {
+                        ucols[ucur[r]] = c as u32;
+                        uvidx[ucur[r]] = v;
+                        ucur[r] += 1;
+                    }
+                    std::cmp::Ordering::Equal => diag[r] = v,
+                }
+            }
+        }
+        debug_assert!(diag.iter().all(|&d| d != usize::MAX), "missing diagonal");
+
+        // Levelize. Lower: row i waits on rows j < i it reads (ascending
+        // pass). Upper: row i waits on rows j > i (descending pass).
+        let mut llev = vec![0u32; n];
+        for i in 0..n {
+            let mut lvl = 0u32;
+            for &j in &lcols[lptr[i]..lptr[i + 1]] {
+                lvl = lvl.max(llev[j as usize] + 1);
+            }
+            llev[i] = lvl;
+        }
+        let mut ulev = vec![0u32; n];
+        for i in (0..n).rev() {
+            let mut lvl = 0u32;
+            for &j in &ucols[uptr[i]..uptr[i + 1]] {
+                lvl = lvl.max(ulev[j as usize] + 1);
+            }
+            ulev[i] = lvl;
+        }
+        let group = |lev: &[u32]| {
+            let nlev = lev.iter().map(|&l| l + 1).max().unwrap_or(1) as usize;
+            let mut levels: Vec<Vec<u32>> = vec![Vec::new(); nlev];
+            for (i, &l) in lev.iter().enumerate() {
+                levels[l as usize].push(i as u32);
+            }
+            levels
+        };
+
+        TriangularSchedule {
+            lower: RowSched {
+                ptr: lptr,
+                cols: lcols,
+                vidx: lvidx,
+                diag: Vec::new(),
+                levels: group(&llev),
+            },
+            upper: RowSched {
+                ptr: uptr,
+                cols: ucols,
+                vidx: uvidx,
+                diag,
+                levels: group(&ulev),
+            },
+        }
+    }
+}
+
+/// Level-parallel forward substitution: `x ← L⁻¹ x` on `pool`, bit-identical
+/// to [`lower_unit_solve`]. `sched` must be the lower schedule built from
+/// this `lu`'s pattern.
+pub fn lower_unit_solve_par(lu: &Csc, sched: &RowSched, pool: &WorkerPool, x: &mut [f64]) {
+    let n = lu.ncols();
+    assert_eq!(x.len(), n);
+    assert_eq!(sched.ptr.len(), n + 1);
+    let vals = lu.values();
+    let xp = SharedPtr(x.as_mut_ptr());
+    pool.run(&|ctx: &PoolCtx<'_>| {
+        for level in &sched.levels {
+            let mut idx = ctx.id;
+            while idx < level.len() {
+                let i = level[idx] as usize;
+                // SAFETY: row i is owned by this worker for this level;
+                // entries read belong to earlier levels (published by the
+                // barrier) or to the initial right-hand side.
+                let mut acc = unsafe { *xp.0.add(i) };
+                for e in sched.ptr[i]..sched.ptr[i + 1] {
+                    let xj = unsafe { *xp.0.add(sched.cols[e] as usize) };
+                    if xj != 0.0 {
+                        acc -= vals[sched.vidx[e]] * xj;
+                    }
+                }
+                unsafe { *xp.0.add(i) = acc };
+                idx += ctx.threads;
+            }
+            if !ctx.sync() {
+                return;
+            }
+        }
+    });
+}
+
+/// Level-parallel backward substitution: `x ← U⁻¹ x` on `pool`,
+/// bit-identical to [`upper_solve`]. `sched` must be the upper schedule
+/// built from this `lu`'s pattern.
+pub fn upper_solve_par(lu: &Csc, sched: &RowSched, pool: &WorkerPool, x: &mut [f64]) {
+    let n = lu.ncols();
+    assert_eq!(x.len(), n);
+    assert_eq!(sched.ptr.len(), n + 1);
+    assert_eq!(sched.diag.len(), n, "upper schedule required");
+    let vals = lu.values();
+    let xp = SharedPtr(x.as_mut_ptr());
+    pool.run(&|ctx: &PoolCtx<'_>| {
+        for level in &sched.levels {
+            let mut idx = ctx.id;
+            while idx < level.len() {
+                let i = level[idx] as usize;
+                // SAFETY: as in the lower solve.
+                let mut acc = unsafe { *xp.0.add(i) };
+                // Descending column order mirrors the sequential backward
+                // substitution's term order exactly.
+                for e in (sched.ptr[i]..sched.ptr[i + 1]).rev() {
+                    let xj = unsafe { *xp.0.add(sched.cols[e] as usize) };
+                    if xj != 0.0 {
+                        acc -= vals[sched.vidx[e]] * xj;
+                    }
+                }
+                unsafe { *xp.0.add(i) = acc / vals[sched.diag[i]] };
+                idx += ctx.threads;
+            }
+            if !ctx.sync() {
+                return;
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
+    use super::*;
     use crate::numeric::{leftlook, residual};
     use crate::sparse::gen;
     use crate::symbolic::symbolic_fill;
+    use crate::util::Rng;
 
     #[test]
     fn solve_and_transpose_solve() {
@@ -103,6 +352,91 @@ mod tests {
             let b: Vec<f64> = (0..49).map(|i| ((i + s) % 5) as f64).collect();
             let x = lu.solve(&b);
             assert!(residual(&a, &x, &b) < 1e-12);
+        }
+    }
+
+    /// Random diagonally dominant matrix (the pivot-free GLU regime) with
+    /// `extra` random off-diagonal pairs.
+    fn random_dd(n: usize, extra: usize, rng: &mut Rng) -> crate::sparse::Csc {
+        use crate::sparse::Coo;
+        let mut coo = Coo::new(n, n);
+        let mut rowsum = vec![0.0f64; n];
+        for _ in 0..extra {
+            let i = rng.below(n);
+            let j = rng.below(n);
+            if i == j {
+                continue;
+            }
+            let v = rng.range_f64(-1.0, 1.0);
+            let w = rng.range_f64(-1.0, 1.0);
+            coo.push(i, j, v);
+            coo.push(j, i, w);
+            rowsum[i] += v.abs();
+            rowsum[j] += w.abs();
+        }
+        for i in 0..n {
+            coo.push(i, i, rowsum[i] + 1.0 + rng.f64());
+        }
+        coo.to_csc()
+    }
+
+    #[test]
+    fn parallel_trisolve_bit_identical_to_sequential() {
+        let mut rng = Rng::new(0x7215);
+        for trial in 0..6 {
+            let n = rng.range(40, 250);
+            let a = random_dd(n, n * 3, &mut rng);
+            let f = symbolic_fill(&a).unwrap();
+            let lu = leftlook::factor(&f).unwrap();
+            let sched = TriangularSchedule::build(&lu.lu);
+            let b: Vec<f64> = (0..n).map(|i| ((i * 31 + trial) % 17) as f64 - 8.0).collect();
+
+            let mut seq = b.clone();
+            super::lower_unit_solve(&lu.lu, &mut seq);
+            let mut seq_lower = seq.clone();
+            super::upper_solve(&lu.lu, &mut seq);
+
+            for threads in [1, 2, 4] {
+                let pool = crate::numeric::pool::WorkerPool::new(threads);
+                let mut par = b.clone();
+                lower_unit_solve_par(&lu.lu, &sched.lower, &pool, &mut par);
+                assert_eq!(par, seq_lower, "trial {trial} threads {threads}: lower");
+                upper_solve_par(&lu.lu, &sched.upper, &pool, &mut par);
+                assert_eq!(par, seq, "trial {trial} threads {threads}: upper");
+            }
+            // sanity: the parallel pipeline actually solves the system
+            std::mem::swap(&mut seq_lower, &mut seq);
+            assert!(residual(&a, &seq_lower, &b) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn schedule_levels_partition_rows_and_respect_dependencies() {
+        let a = gen::netlist(120, 6, 10, 0.08, 2, 0.2, 55);
+        let f = symbolic_fill(&a).unwrap();
+        let lu = leftlook::factor(&f).unwrap();
+        let sched = TriangularSchedule::build(&lu.lu);
+        for rs in [&sched.lower, &sched.upper] {
+            let total: usize = rs.levels.iter().map(|l| l.len()).sum();
+            assert_eq!(total, 120, "levels partition the rows");
+            assert!(rs.num_levels() >= 1);
+            let width = rs.mean_level_width();
+            assert!((width - 120.0 / rs.num_levels() as f64).abs() < 1e-12);
+            // every row's entries point at rows in strictly earlier levels
+            let mut level_of = vec![0u32; 120];
+            for (l, rows) in rs.levels.iter().enumerate() {
+                for &r in rows {
+                    level_of[r as usize] = l as u32;
+                }
+            }
+            for i in 0..120 {
+                for &j in &rs.cols[rs.ptr[i]..rs.ptr[i + 1]] {
+                    assert!(
+                        level_of[j as usize] < level_of[i],
+                        "row {i} depends on row {j} in the same/later level"
+                    );
+                }
+            }
         }
     }
 }

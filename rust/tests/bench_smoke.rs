@@ -1,0 +1,81 @@
+//! Smoke tests for the wall-clock numeric bench harness (`glu3 bench`):
+//! the JSON report covers every engine and validates, and on the
+//! acceptance fixture (100×100 AMD-ordered grid, 4 threads) the
+//! persistent-pool `parlu` beats the seed's per-level-spawn baseline by
+//! the required ≥ 2× wall-clock.
+
+use std::sync::Mutex;
+
+use glu3::bench_support::numeric::{run, spawn_vs_pool, validate_json_schema, BenchSpec};
+
+/// The two tests in this binary both measure wall-clock while spawning
+/// thread pools; run them serially so neither perturbs the other's timing
+/// (the harness otherwise runs same-binary tests in parallel).
+static BENCH_LOCK: Mutex<()> = Mutex::new(());
+
+#[test]
+fn bench_smoke_report_covers_all_engines_and_validates() {
+    let _serial = BENCH_LOCK.lock().unwrap();
+    let spec = BenchSpec::smoke();
+    let report = run(&spec).expect("smoke bench");
+
+    for engine in ["simulated-gpu", "leftlook", "rightlook", "parlu", "parrl"] {
+        let rows: Vec<_> = report.samples.iter().filter(|s| s.engine == engine).collect();
+        assert!(!rows.is_empty(), "engine {engine} missing from the report");
+        for r in rows {
+            assert!(
+                r.factor_ms.is_finite() && r.factor_ms >= 0.0,
+                "{engine}: factor_ms"
+            );
+            assert!(
+                r.refactor_ms.is_finite() && r.refactor_ms >= 0.0,
+                "{engine}: refactor_ms"
+            );
+            assert!(
+                r.solve_ms.is_finite() && r.solve_ms >= 0.0,
+                "{engine}: solve_ms"
+            );
+        }
+    }
+    // parallel engines appear once per requested thread count
+    for engine in ["parlu", "parrl"] {
+        let threads: Vec<usize> = report
+            .samples
+            .iter()
+            .filter(|s| s.engine == engine)
+            .map(|s| s.threads)
+            .collect();
+        assert_eq!(threads, spec.thread_counts, "{engine} thread sweep");
+    }
+
+    let json = report.to_json();
+    validate_json_schema(&json).expect("well-formed report");
+
+    // and the file artifact round-trips
+    let path = std::env::temp_dir().join("BENCH_numeric_smoke_test.json");
+    let path = path.to_str().expect("utf-8 temp path");
+    report.write_json(path).expect("write BENCH_numeric.json");
+    let back = std::fs::read_to_string(path).expect("read back");
+    assert_eq!(back, json);
+    validate_json_schema(&back).unwrap();
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn pool_parlu_beats_per_level_spawn_baseline_2x_on_acceptance_fixture() {
+    // 100×100 AMD-ordered grid2d at 4 threads: same schedule, same column
+    // kernel — the measured gap is the per-level spawn/join (plus its
+    // per-level workspace allocation) the persistent pool eliminates.
+    let _serial = BENCH_LOCK.lock().unwrap();
+    let spec = BenchSpec::acceptance();
+    assert_eq!(spec.thread_counts.iter().copied().max(), Some(4));
+    let baseline = spawn_vs_pool(&spec).expect("head-to-head");
+    assert_eq!(baseline.threads, 4);
+    assert!(
+        baseline.speedup() >= 2.0,
+        "persistent pool must beat per-level spawn ≥ 2x: spawn {:.2} ms vs pool {:.2} ms ({:.2}x)",
+        baseline.spawn_per_level_ms,
+        baseline.pool_ms,
+        baseline.speedup()
+    );
+}

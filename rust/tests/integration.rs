@@ -78,6 +78,7 @@ fn engines_agree_through_pipeline() {
         NumericEngine::LeftLookingCpu,
         NumericEngine::RightLookingCpu,
         NumericEngine::ParallelCpu { threads: 2 },
+        NumericEngine::ParallelRightLooking { threads: 4 },
     ] {
         let opts = GluOptions {
             engine,
