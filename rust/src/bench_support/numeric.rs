@@ -6,8 +6,12 @@
 //! worker pool: pool-based [`parlu::factor_with`] vs the seed's
 //! per-level-spawn baseline [`parlu::factor_spawn_per_level_with`] on the
 //! same precomputed schedule (so the measured difference is purely worker
-//! orchestration). Wired into the CLI as `glu3 bench` and into CI as a
-//! schema-validated smoke job; the perf trajectory lives in the emitted
+//! orchestration). The report also carries a `plan` block — the
+//! [`crate::plan::FactorPlan`]'s per-level mode histogram plus the
+//! preprocessing stage wall-clocks (symbolic / detect / levelize / plan
+//! build), making the paper's detection-speedup claim directly
+//! measurable per run. Wired into the CLI as `glu3 bench` and into CI as
+//! a schema-validated smoke job; the perf trajectory lives in the emitted
 //! JSON, not in a CI gate.
 //!
 //! All timings are medians (factor/refactor/solve) or minima (the
@@ -74,6 +78,31 @@ pub struct EngineSample {
     pub solve_ms: f64,
 }
 
+/// The plan block of the report: per-level kernel-mode histogram plus the
+/// preprocessing stage wall-clocks of one default-policy factorization —
+/// the data behind the paper's detection-speedup claim (Table II) and the
+/// Table III A/B/C distribution, now measured per bench run.
+#[derive(Debug, Clone)]
+pub struct PlanReport {
+    /// Levels in the schedule.
+    pub levels: usize,
+    /// Small-block (type A) levels.
+    pub modes_small: usize,
+    /// Large-block (type B) levels.
+    pub modes_large: usize,
+    /// Stream (type C) levels.
+    pub modes_stream: usize,
+    /// Plan build wall-clock, ms (`GluStats::plan_ms` of the profiled
+    /// factorization).
+    pub build_ms: f64,
+    /// Symbolic fill wall-clock, ms.
+    pub symbolic_ms: f64,
+    /// Dependency detection wall-clock, ms.
+    pub detect_ms: f64,
+    /// Levelization wall-clock, ms.
+    pub levelize_ms: f64,
+}
+
 /// The pool-vs-spawn head-to-head (same schedule, same arithmetic).
 #[derive(Debug, Clone)]
 pub struct SpawnBaseline {
@@ -100,6 +129,7 @@ pub struct BenchReport {
     pub host_threads: usize,
     pub samples: Vec<EngineSample>,
     pub baseline: SpawnBaseline,
+    pub plan: PlanReport,
 }
 
 /// Run the whole harness over `spec`.
@@ -126,6 +156,7 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
     }
 
     let mut samples = Vec::with_capacity(engines.len());
+    let mut plan: Option<PlanReport> = None;
     for (name, engine) in engines {
         let threads = engine.threads();
         let opts = GluOptions {
@@ -145,6 +176,12 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
             solver.solve(&b).expect("bench solve")
         })
         .median_ms();
+        // The plan block comes from the first solver the sweep builds (all
+        // engines share the default policy, so any solver's plan serves) —
+        // no extra factorization just for the report.
+        if plan.is_none() {
+            plan = Some(plan_report(&solver));
+        }
         samples.push(EngineSample {
             engine: name,
             threads,
@@ -155,6 +192,7 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
     }
 
     let baseline = spawn_vs_pool(spec)?;
+    let plan = plan.expect("at least one engine sampled");
 
     Ok(BenchReport {
         matrix: spec.label.clone(),
@@ -163,7 +201,25 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
         host_threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
         samples,
         baseline,
+        plan,
     })
+}
+
+/// Extract the report's plan block from an already-factored solver:
+/// per-level mode histogram plus the preprocessing stage timings.
+pub fn plan_report(solver: &GluSolver) -> PlanReport {
+    let st = solver.stats();
+    let (modes_small, modes_large, modes_stream) = solver.plan().mode_histogram();
+    PlanReport {
+        levels: solver.plan().num_levels(),
+        modes_small,
+        modes_large,
+        modes_stream,
+        build_ms: st.plan_ms,
+        symbolic_ms: st.symbolic_ms,
+        detect_ms: st.detect_ms,
+        levelize_ms: st.levelize_ms,
+    }
 }
 
 /// The isolated head-to-head: AMD-permute the matrix (the engines' default
@@ -225,11 +281,12 @@ fn json_str(s: &str) -> String {
 
 impl BenchReport {
     /// Hand-rolled JSON (no serde in the offline vendored crate set).
-    /// Schema `glu3-bench-numeric-v1`; validated by the CI smoke job.
+    /// Schema `glu3-bench-numeric-v2` (v2 added the `plan` block);
+    /// validated by the CI smoke job.
     pub fn to_json(&self) -> String {
         let mut s = String::new();
         s.push_str("{\n");
-        s.push_str("  \"schema\": \"glu3-bench-numeric-v1\",\n");
+        s.push_str("  \"schema\": \"glu3-bench-numeric-v2\",\n");
         s.push_str(&format!("  \"matrix\": \"{}\",\n", json_str(&self.matrix)));
         s.push_str(&format!("  \"n\": {},\n", self.n));
         s.push_str(&format!("  \"nnz\": {},\n", self.nnz));
@@ -251,11 +308,24 @@ impl BenchReport {
         s.push_str("  ],\n");
         s.push_str(&format!(
             "  \"spawn_baseline\": {{\"threads\": {}, \"spawn_per_level_ms\": {}, \
-             \"pool_ms\": {}, \"speedup\": {}}}\n",
+             \"pool_ms\": {}, \"speedup\": {}}},\n",
             self.baseline.threads,
             json_num(self.baseline.spawn_per_level_ms),
             json_num(self.baseline.pool_ms),
             json_num(self.baseline.speedup())
+        ));
+        s.push_str(&format!(
+            "  \"plan\": {{\"levels\": {}, \"mode_histogram\": {{\"small\": {}, \
+             \"large\": {}, \"stream\": {}}}, \"build_ms\": {}, \"symbolic_ms\": {}, \
+             \"detect_ms\": {}, \"levelize_ms\": {}}}\n",
+            self.plan.levels,
+            self.plan.modes_small,
+            self.plan.modes_large,
+            self.plan.modes_stream,
+            json_num(self.plan.build_ms),
+            json_num(self.plan.symbolic_ms),
+            json_num(self.plan.detect_ms),
+            json_num(self.plan.levelize_ms)
         ));
         s.push_str("}\n");
         s
@@ -268,12 +338,13 @@ impl BenchReport {
     }
 }
 
-/// Light structural validation of a `glu3-bench-numeric-v1` document:
-/// required keys present, braces/brackets balanced, at least one result
-/// row. (CI additionally runs it through a real JSON parser.)
+/// Light structural validation of a `glu3-bench-numeric-v2` document:
+/// required keys present (including the v2 `plan` block), braces/brackets
+/// balanced, at least one result row. (CI additionally runs it through a
+/// real JSON parser.)
 pub fn validate_json_schema(s: &str) -> anyhow::Result<()> {
     for key in [
-        "\"schema\": \"glu3-bench-numeric-v1\"",
+        "\"schema\": \"glu3-bench-numeric-v2\"",
         "\"matrix\"",
         "\"n\"",
         "\"nnz\"",
@@ -285,6 +356,16 @@ pub fn validate_json_schema(s: &str) -> anyhow::Result<()> {
         "\"solve_ms\"",
         "\"spawn_baseline\"",
         "\"speedup\"",
+        "\"plan\"",
+        "\"levels\"",
+        "\"mode_histogram\"",
+        "\"small\"",
+        "\"large\"",
+        "\"stream\"",
+        "\"build_ms\"",
+        "\"symbolic_ms\"",
+        "\"detect_ms\"",
+        "\"levelize_ms\"",
     ] {
         anyhow::ensure!(s.contains(key), "missing key {key}");
     }
@@ -324,6 +405,19 @@ pub fn validate_json_schema(s: &str) -> anyhow::Result<()> {
 mod tests {
     use super::*;
 
+    fn toy_plan() -> PlanReport {
+        PlanReport {
+            levels: 3,
+            modes_small: 1,
+            modes_large: 1,
+            modes_stream: 1,
+            build_ms: 0.25,
+            symbolic_ms: 0.5,
+            detect_ms: 0.125,
+            levelize_ms: 0.0625,
+        }
+    }
+
     #[test]
     fn json_roundtrip_is_wellformed() {
         let report = BenchReport {
@@ -352,11 +446,13 @@ mod tests {
                 spawn_per_level_ms: 10.0,
                 pool_ms: 2.0,
             },
+            plan: toy_plan(),
         };
         let json = report.to_json();
         validate_json_schema(&json).unwrap();
         assert!(json.contains("\"factor_ms\": null"));
         assert!(json.contains("\"speedup\": 5.000000"));
+        assert!(json.contains("\"mode_histogram\": {\"small\": 1, \"large\": 1, \"stream\": 1}"));
     }
 
     #[test]
@@ -378,6 +474,7 @@ mod tests {
                 spawn_per_level_ms: 1.0,
                 pool_ms: 1.0,
             },
+            plan: toy_plan(),
         };
         let json = report.to_json();
         validate_json_schema(&json).unwrap();
@@ -386,7 +483,19 @@ mod tests {
 
     #[test]
     fn validator_rejects_truncation() {
-        let report_json = "{\n  \"schema\": \"glu3-bench-numeric-v1\",\n  \"results\": [";
+        let report_json = "{\n  \"schema\": \"glu3-bench-numeric-v2\",\n  \"results\": [";
         assert!(validate_json_schema(report_json).is_err());
+    }
+
+    #[test]
+    fn plan_report_histogram_covers_all_levels() {
+        let a = gen::grid2d(20, 20, 7);
+        let solver = GluSolver::factor(&a, &GluOptions::default()).unwrap();
+        let p = plan_report(&solver);
+        assert!(p.levels > 1);
+        assert_eq!(p.modes_small + p.modes_large + p.modes_stream, p.levels);
+        for v in [p.build_ms, p.symbolic_ms, p.detect_ms, p.levelize_ms] {
+            assert!(v.is_finite() && v >= 0.0);
+        }
     }
 }

@@ -28,10 +28,12 @@
 //! numeric engine, including the pool-backed parallel ones
 //! ([`crate::glu::NumericEngine::ParallelCpu`] /
 //! [`crate::glu::NumericEngine::ParallelRightLooking`]). Each cached
-//! [`GluSolver`] then owns its persistent worker pool and cached level
-//! schedules (factorization *and* triangular-solve), so refactors and
-//! batched solves on a warm entry run level-parallel with no thread spawn
-//! on the hot path. Worker threads are parked (not spinning) between
+//! [`GluSolver`] owns its persistent worker pool and its mode-annotated
+//! [`crate::plan::FactorPlan`] (the levelized schedule with per-level
+//! kernel modes, CPU assignment strategies, and triangular-solve row
+//! schedules), so refactors and batched solves on a warm entry run
+//! level-parallel with no thread spawn — and **zero plan rebuilds**
+//! (`GluStats::plan_builds` stays at 1) — on the hot path. Worker threads are parked (not spinning) between
 //! checkouts; a cache with many parallel-engine entries therefore costs
 //! idle threads, not idle cycles — size `shards × capacity × threads`
 //! accordingly.

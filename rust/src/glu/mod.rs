@@ -1,12 +1,15 @@
 //! The GLU3.0 solver pipeline — the crate's primary public API.
 //!
-//! Mirrors the paper's Fig. 5 flow:
+//! Mirrors the paper's Fig. 5 flow, with the mode-annotated
+//! [`crate::plan::FactorPlan`] between schedule and execution:
 //!
 //! ```text
 //! A ──MC64 match+scale──► A₁ ──AMD──► A₂ ──symbolic fill──► As
 //!    ──dependency detection (GLU3.0 relaxed / GLU2.0 / GLU1.0)──► deps
-//!    ──levelization──► levels ──numeric kernel (3-mode, simulated GPU
-//!      or PJRT dense-batch path)──► L, U ──tri-solve──► x
+//!    ──levelization──► levels ──plan (per-level kernel mode + resource
+//!      binding + work estimates + trisolve schedules)──► FactorPlan
+//!    ──numeric kernel (3-mode, simulated GPU, worker-pool CPU, or PJRT
+//!      lowering)──► L, U ──tri-solve──► x
 //! ```
 //!
 //! Preprocessing and symbolic analysis run once on the CPU; the numeric

@@ -6,6 +6,7 @@ use crate::numeric::pool::WorkerPool;
 use crate::numeric::trisolve::TriangularSchedule;
 use crate::numeric::{leftlook, parlu, parrl, rightlook, LuFactors};
 use crate::order::{preprocess, FillOrdering, Preprocessed};
+use crate::plan::FactorPlan;
 use crate::symbolic::{symbolic_fill, SymbolicFill};
 use crate::util::Stopwatch;
 
@@ -108,8 +109,17 @@ pub struct GluStats {
     pub preprocess_ms: f64,
     /// Symbolic fill time, ms.
     pub symbolic_ms: f64,
+    /// Dependency detection time alone, ms — the stage Algorithm 4's
+    /// detection-speedup claim (Table II) is about.
+    pub detect_ms: f64,
+    /// Levelization time alone, ms.
+    pub levelize_ms: f64,
     /// Dependency detection + levelization time, ms (Table II's metric).
     pub levelization_ms: f64,
+    /// [`FactorPlan`] build time, ms (mode annotation + CPU step layout +
+    /// subcolumn/work views; the trisolve row schedules build lazily on
+    /// the first multi-threaded solve and are not counted here).
+    pub plan_ms: f64,
     /// Numeric factorization time, ms: simulated-GPU kernel time for the
     /// GPU engine, wall-clock for CPU engines.
     pub numeric_ms: f64,
@@ -124,12 +134,17 @@ pub struct GluStats {
     /// How many times the numeric kernel has run (1 for the initial factor
     /// plus one per [`GluSolver::refactor`]).
     pub numeric_runs: usize,
+    /// How many times a [`FactorPlan`] has been built for this solver —
+    /// always 1: refactors and solves reuse it, and the service layer
+    /// asserts cache hits never replan.
+    pub plan_builds: usize,
 }
 
 impl GluStats {
-    /// Total CPU-side time (the paper's "CPU time" column).
+    /// Total CPU-side time (the paper's "CPU time" column, plus the plan
+    /// build — all of it paid once per pattern and amortized by refactors).
     pub fn cpu_ms(&self) -> f64 {
-        self.preprocess_ms + self.symbolic_ms + self.levelization_ms
+        self.preprocess_ms + self.symbolic_ms + self.levelization_ms + self.plan_ms
     }
 }
 
@@ -147,24 +162,19 @@ struct NumericWorkspace {
     works: Vec<Vec<f64>>,
     /// Divide-phase scratch (right-looking engines).
     lvals: Vec<f64>,
-    /// Subcolumn (strict-upper row) view — right-looking engines.
-    urow: Option<Vec<Vec<u32>>>,
-    /// Per-column L lengths — the simulated-GPU timing model.
-    l_len: Option<Vec<usize>>,
     /// U-pattern level schedule — the parallel *left*-looking engine
-    /// (distinct from the solver's hazard-free right-looking schedule).
+    /// (distinct from the solver's hazard-free right-looking plan).
     ll_levels: Option<Levels>,
     /// Persistent worker pool (spawned once; parks between runs) for the
     /// parallel engines and the parallel triangular solves.
     pool: Option<WorkerPool>,
-    /// Row-oriented L/U level schedules for the parallel trisolve —
-    /// pattern-only (refactorization never invalidates it), and kept only
-    /// when wide enough for the parallel solves to beat the sequential
-    /// ones.
-    trisched: Option<TriangularSchedule>,
 }
 
 impl NumericWorkspace {
+    /// Engine-specific scratch only: every *pattern-derived* view the
+    /// right-looking engines used to cache here (subcolumn map, per-column
+    /// work, trisolve row schedules) now lives in the shared
+    /// [`FactorPlan`].
     fn new(engine: &NumericEngine, sym: &SymbolicFill) -> Self {
         let n = sym.filled.ncols();
         let threads = engine.threads();
@@ -183,42 +193,12 @@ impl NumericWorkspace {
             NumericEngine::ParallelCpu { .. } => Some(parlu::leftlook_levels(sym)),
             _ => None,
         };
-        let urow = match engine {
-            NumericEngine::SimulatedGpu
-            | NumericEngine::RightLookingCpu
-            | NumericEngine::ParallelRightLooking { .. } => Some(rightlook::upper_rows(sym)),
-            _ => None,
-        };
-        let l_len = match engine {
-            NumericEngine::SimulatedGpu => Some(
-                (0..n)
-                    .map(|j| {
-                        let (rows, _) = sym.filled.col(j);
-                        rows.len() - rows.partition_point(|&r| r <= j)
-                    })
-                    .collect(),
-            ),
-            _ => None,
-        };
-        // Build the trisolve schedule only to keep it when it will
-        // actually be used: on deep/narrow schedules the parallel solves
-        // lose to the sequential path, so retaining the (O(nnz)) row
-        // views would be dead weight in every cached solver.
-        let trisched = if threads > 1 {
-            let ts = TriangularSchedule::build(&sym.filled);
-            ts.parallel_worthwhile().then_some(ts)
-        } else {
-            None
-        };
         NumericWorkspace {
             fresh: vec![0.0f64; sym.filled.nnz()],
             works,
             lvals: Vec::new(),
-            urow,
-            l_len,
             ll_levels,
             pool,
-            trisched,
         }
     }
 }
@@ -229,7 +209,10 @@ pub struct GluSolver {
     opts: GluOptions,
     pre: Preprocessed,
     sym: SymbolicFill,
-    levels: Levels,
+    /// The mode-annotated schedule every backend consumes — built once at
+    /// factor time, reused allocation-free by `refactor`/`solve`, cached
+    /// with this solver by the [`crate::coordinator::SolverPool`].
+    plan: FactorPlan,
     factors: LuFactors,
     stats: GluStats,
     ws: NumericWorkspace,
@@ -257,39 +240,43 @@ impl GluSolver {
 
         let pre = sw.time("preprocess", || preprocess(a, opts.ordering, opts.scale))?;
         let sym = sw.time("symbolic", || symbolic_fill(&pre.a))?;
-        let (deps, levels) = sw.time("levelize", || {
-            let deps = detect(opts.detection, &sym);
-            let levels = levelize(&deps);
-            (deps, levels)
-        });
+        let deps = sw.time("detect", || detect(opts.detection, &sym));
+        let levels = sw.time("levelize", || levelize(&deps));
         drop(deps);
+        let plan = sw.time("plan", || {
+            FactorPlan::from_levels(&sym, levels, &opts.policy, &opts.device)
+        });
 
         let mut ws = NumericWorkspace::new(&opts.engine, &sym);
-        let (factors, sim, numeric_ms) =
-            run_engine(&opts.engine, &opts.policy, &opts.device, &sym, &levels, &mut ws)?;
+        let (factors, sim, numeric_ms) = run_engine(&opts.engine, &plan, &sym, &mut ws)?;
 
         let value_map = build_value_map(a, &pre, &sym);
 
+        let ms = |name: &str| sw.get(name).unwrap().as_secs_f64() * 1e3;
         let stats = GluStats {
             n: a.nrows(),
             nz: a.nnz(),
             nnz: sym.filled.nnz(),
-            num_levels: levels.num_levels(),
-            max_level_size: levels.max_level_size(),
-            preprocess_ms: sw.get("preprocess").unwrap().as_secs_f64() * 1e3,
-            symbolic_ms: sw.get("symbolic").unwrap().as_secs_f64() * 1e3,
-            levelization_ms: sw.get("levelize").unwrap().as_secs_f64() * 1e3,
+            num_levels: plan.num_levels(),
+            max_level_size: plan.levels().max_level_size(),
+            preprocess_ms: ms("preprocess"),
+            symbolic_ms: ms("symbolic"),
+            detect_ms: ms("detect"),
+            levelize_ms: ms("levelize"),
+            levelization_ms: ms("detect") + ms("levelize"),
+            plan_ms: ms("plan"),
             numeric_ms,
             sim,
             symbolic_runs: 1,
             numeric_runs: 1,
+            plan_builds: 1,
         };
 
         Ok(GluSolver {
             opts: opts.clone(),
             pre,
             sym,
-            levels,
+            plan,
             factors,
             stats,
             ws,
@@ -354,11 +341,14 @@ impl GluSolver {
         for (old, &new) in pr.iter().enumerate() {
             pb[new] = b[old] * self.pre.row_scale[old];
         }
-        // The schedule is cached only when wide enough for the parallel
-        // solves to win (see NumericWorkspace::new); narrow schedules take
-        // the sequential path — results are bit-identical either way.
-        match (&self.ws.pool, &self.ws.trisched) {
-            (Some(pool), Some(ts)) if pool.threads() > 1 => {
+        // The plan carries the row schedules (built lazily on the first
+        // multi-threaded solve); the parallel path is taken only when a
+        // pool exists and the schedule is wide enough for the per-level
+        // barriers to pay for themselves — results are bit-identical
+        // either way.
+        match &self.ws.pool {
+            Some(pool) if pool.threads() > 1 && self.plan.parallel_trisolve(&self.sym.filled) => {
+                let ts = self.plan.trisolve(&self.sym.filled);
                 crate::numeric::trisolve::lower_unit_solve_par(
                     &self.factors.lu,
                     &ts.lower,
@@ -419,10 +409,8 @@ impl GluSolver {
 
         match rerun_engine(
             &self.opts.engine,
-            &self.opts.policy,
-            &self.opts.device,
+            &self.plan,
             &mut self.factors.lu,
-            &self.levels,
             &mut self.ws,
         ) {
             Ok((sim, numeric_ms)) => {
@@ -448,7 +436,14 @@ impl GluSolver {
 
     /// The level schedule (Fig. 10 / Table III analysis).
     pub fn levels(&self) -> &Levels {
-        &self.levels
+        self.plan.levels()
+    }
+
+    /// The mode-annotated [`FactorPlan`] — the schedule IR every backend
+    /// (simulator, CPU engines, trisolves, PJRT lowering) consumes. Built
+    /// once at factor time; cloning it is cheap (shared `Arc`).
+    pub fn plan(&self) -> &FactorPlan {
+        &self.plan
     }
 
     /// The symbolic fill result.
@@ -461,12 +456,19 @@ impl GluSolver {
         &self.factors
     }
 
-    /// The cached L/U row-level schedules for the parallel triangular
-    /// solves — present when a multi-thread engine is configured *and* the
-    /// schedules are wide enough for the parallel path to win (narrow
-    /// schedules keep the sequential solves and cache nothing).
+    /// The L/U row-level schedules the parallel triangular solves run on —
+    /// `Some` when a multi-thread engine is configured *and* the schedules
+    /// are wide enough for the parallel path to win (narrow schedules keep
+    /// the sequential solves). The schedules live on the plan
+    /// ([`FactorPlan::trisolve`], built lazily); this accessor reports
+    /// whether the parallel path is active.
     pub fn triangular_schedule(&self) -> Option<&TriangularSchedule> {
-        self.ws.trisched.as_ref()
+        match &self.ws.pool {
+            Some(pool) if pool.threads() > 1 && self.plan.parallel_trisolve(&self.sym.filled) => {
+                Some(self.plan.trisolve(&self.sym.filled))
+            }
+            _ => None,
+        }
     }
 }
 
@@ -484,28 +486,20 @@ fn wall_ms(t0: std::time::Instant) -> f64 {
 }
 
 /// Initial factorization through the engine, using (and warming) the
-/// solver workspace.
+/// solver workspace. Every schedule-consuming engine reads the shared
+/// [`FactorPlan`]; only the U-pattern left-looking baseline keeps its own
+/// (different) schedule in the workspace.
 fn run_engine(
     engine: &NumericEngine,
-    policy: &Policy,
-    device: &DeviceConfig,
+    plan: &FactorPlan,
     sym: &SymbolicFill,
-    levels: &Levels,
     ws: &mut NumericWorkspace,
 ) -> anyhow::Result<(LuFactors, Option<SimReport>, f64)> {
     let t0 = std::time::Instant::now();
     match engine {
         NumericEngine::SimulatedGpu => {
             let mut lu = sym.filled.clone();
-            let report = simulate_refactorization(
-                &mut lu,
-                ws.urow.as_ref().expect("urow cached for the GPU engine"),
-                ws.l_len.as_ref().expect("l_len cached for the GPU engine"),
-                levels,
-                policy,
-                device,
-                &mut ws.lvals,
-            )?;
+            let report = simulate_refactorization(&mut lu, plan, &mut ws.lvals)?;
             let ms = report.kernel_ms();
             Ok((LuFactors { lu }, Some(report), ms))
         }
@@ -516,11 +510,7 @@ fn run_engine(
         }
         NumericEngine::RightLookingCpu => {
             let mut lu = sym.filled.clone();
-            rightlook::factor_in_place(
-                &mut lu,
-                ws.urow.as_ref().expect("urow cached for right-looking"),
-                &mut ws.lvals,
-            )?;
+            rightlook::factor_in_place(&mut lu, plan.urow(), &mut ws.lvals)?;
             Ok((LuFactors { lu }, None, wall_ms(t0)))
         }
         NumericEngine::ParallelCpu { .. } => {
@@ -535,8 +525,7 @@ fn run_engine(
         NumericEngine::ParallelRightLooking { .. } => {
             let factors = parrl::factor_with(
                 sym,
-                ws.urow.as_ref().expect("urow cached for right-looking"),
-                levels,
+                plan,
                 ws.pool.as_ref().expect("pool spawned for parallel engine"),
             )?;
             Ok((factors, None, wall_ms(t0)))
@@ -545,27 +534,18 @@ fn run_engine(
 }
 
 /// Refactorization through the engine, **in place** over `lu` (already
-/// stamped with the new values). No `O(nnz)` allocation on any path.
+/// stamped with the new values). No `O(nnz)` allocation on any path — the
+/// plan is reused as-is.
 fn rerun_engine(
     engine: &NumericEngine,
-    policy: &Policy,
-    device: &DeviceConfig,
+    plan: &FactorPlan,
     lu: &mut crate::sparse::Csc,
-    levels: &Levels,
     ws: &mut NumericWorkspace,
 ) -> anyhow::Result<(Option<SimReport>, f64)> {
     let t0 = std::time::Instant::now();
     match engine {
         NumericEngine::SimulatedGpu => {
-            let report = simulate_refactorization(
-                lu,
-                ws.urow.as_ref().expect("urow cached for the GPU engine"),
-                ws.l_len.as_ref().expect("l_len cached for the GPU engine"),
-                levels,
-                policy,
-                device,
-                &mut ws.lvals,
-            )?;
+            let report = simulate_refactorization(lu, plan, &mut ws.lvals)?;
             let ms = report.kernel_ms();
             Ok((Some(report), ms))
         }
@@ -574,11 +554,7 @@ fn rerun_engine(
             Ok((None, wall_ms(t0)))
         }
         NumericEngine::RightLookingCpu => {
-            rightlook::factor_in_place(
-                lu,
-                ws.urow.as_ref().expect("urow cached for right-looking"),
-                &mut ws.lvals,
-            )?;
+            rightlook::factor_in_place(lu, plan.urow(), &mut ws.lvals)?;
             Ok((None, wall_ms(t0)))
         }
         NumericEngine::ParallelCpu { .. } => {
@@ -593,8 +569,7 @@ fn rerun_engine(
         NumericEngine::ParallelRightLooking { .. } => {
             parrl::refactor_in_place(
                 lu,
-                ws.urow.as_ref().expect("urow cached for right-looking"),
-                levels,
+                plan,
                 ws.pool.as_ref().expect("pool spawned for parallel engine"),
             )?;
             Ok((None, wall_ms(t0)))
@@ -781,7 +756,29 @@ mod tests {
             }
             assert_eq!(s.stats().numeric_runs, 2);
             assert_eq!(s.stats().symbolic_runs, 1);
+            // the refactor reused the plan — no rebuild on any engine
+            assert_eq!(s.stats().plan_builds, 1);
         }
+    }
+
+    /// The solver's plan is the single source of mode decisions: the
+    /// simulated report's histogram equals the plan's, and the per-stage
+    /// preprocessing timings decompose consistently.
+    #[test]
+    fn plan_and_stage_timings_consistent() {
+        let a = gen::netlist(400, 6, 12, 0.05, 3, 0.2, 71);
+        let s = GluSolver::factor(&a, &GluOptions::default()).unwrap();
+        let st = s.stats();
+        let sim = st.sim.as_ref().expect("simulated engine");
+        assert_eq!(sim.level_distribution(), s.plan().mode_histogram());
+        assert_eq!(s.plan().num_levels(), st.num_levels);
+        assert!((st.levelization_ms - (st.detect_ms + st.levelize_ms)).abs() < 1e-9);
+        assert!(st.plan_ms >= 0.0);
+        assert!(
+            st.cpu_ms()
+                >= st.preprocess_ms + st.symbolic_ms + st.levelization_ms
+        );
+        assert_eq!(st.plan_builds, 1);
     }
 
     #[test]

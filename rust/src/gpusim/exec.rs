@@ -17,69 +17,10 @@ use super::device::DeviceConfig;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-/// The three GPU kernel modes of GLU3.0 (paper Fig. 11).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum KernelMode {
-    /// Type A levels: one block per column, few warps per block
-    /// (Eq. 4), one warp per subcolumn task.
-    SmallBlock {
-        /// Warps per block ∈ {2, 4, 8, 16}.
-        warps_per_block: usize,
-    },
-    /// Type B levels: one block per column, 32 warps (1024 threads),
-    /// one warp per subcolumn — the GLU1.0/2.0 kernel.
-    LargeBlock,
-    /// Type C levels: one kernel per column over 16 CUDA streams, one
-    /// *block* (1024 threads) per subcolumn.
-    Stream,
-}
-
-impl KernelMode {
-    /// Short label for reports.
-    pub fn label(&self) -> String {
-        match self {
-            KernelMode::SmallBlock { warps_per_block } => format!("small({warps_per_block}w)"),
-            KernelMode::LargeBlock => "large".to_string(),
-            KernelMode::Stream => "stream".to_string(),
-        }
-    }
-
-    /// Level-type letter for Table III's distribution columns.
-    pub fn level_type(&self) -> char {
-        match self {
-            KernelMode::SmallBlock { .. } => 'A',
-            KernelMode::LargeBlock => 'B',
-            KernelMode::Stream => 'C',
-        }
-    }
-}
-
-/// Select the GLU3.0 mode for a level (Eq. 4 + the stream threshold).
-pub fn select_mode(level_size: usize, stream_threshold: usize, device: &DeviceConfig) -> KernelMode {
-    if level_size <= stream_threshold {
-        return KernelMode::Stream;
-    }
-    let w = device.total_warps() / level_size.max(1);
-    if w >= 32 {
-        KernelMode::LargeBlock
-    } else {
-        // Round down to a power of two in {2, 4, 8, 16} (paper §III-B.1:
-        // "grows from 2 to 4, 8, and eventually to 32").
-        let w = w.max(2);
-        let w = 1usize << (usize::BITS - 1 - w.leading_zeros());
-        KernelMode::SmallBlock {
-            warps_per_block: w.clamp(2, 16),
-        }
-    }
-}
-
-/// Static work description of one column: `l_len` L entries (= length of
-/// every subcolumn update task) and `n_subcols` subcolumn tasks.
-#[derive(Debug, Clone, Copy)]
-pub struct ColumnWork {
-    pub l_len: usize,
-    pub n_subcols: usize,
-}
+// Mode selection and the per-column work description migrated to the shared
+// plan layer (`crate::plan` is the single source of mode decisions);
+// re-exported here so existing `gpusim::exec` callers keep compiling.
+pub use crate::plan::{select_mode, ColumnWork, KernelMode};
 
 /// Timing result for one level.
 #[derive(Debug, Clone)]
@@ -264,26 +205,6 @@ mod tests {
 
     fn dev() -> DeviceConfig {
         DeviceConfig::titan_x()
-    }
-
-    #[test]
-    fn mode_selection_follows_eq4() {
-        let d = dev();
-        // level size <= 16 -> stream
-        assert_eq!(select_mode(1, 16, &d), KernelMode::Stream);
-        assert_eq!(select_mode(16, 16, &d), KernelMode::Stream);
-        // 1536 total warps: level 48 -> W = 32 -> large
-        assert_eq!(select_mode(48, 16, &d), KernelMode::LargeBlock);
-        assert_eq!(select_mode(17, 16, &d), KernelMode::LargeBlock);
-        // level 100 -> W = 15 -> small(8); level 1000 -> W = 1 -> small(2)
-        assert_eq!(
-            select_mode(100, 16, &d),
-            KernelMode::SmallBlock { warps_per_block: 8 }
-        );
-        assert_eq!(
-            select_mode(1000, 16, &d),
-            KernelMode::SmallBlock { warps_per_block: 2 }
-        );
     }
 
     #[test]

@@ -14,8 +14,8 @@ use super::device::DeviceConfig;
 use super::exec::{simulate_level, ColumnWork, LevelTiming};
 use super::policy::Policy;
 use crate::depend::Levels;
-use crate::numeric::rightlook::upper_rows;
 use crate::numeric::LuFactors;
+use crate::plan::FactorPlan;
 use crate::symbolic::SymbolicFill;
 
 /// Timing + structure report of a simulated factorization.
@@ -76,67 +76,51 @@ impl SimReport {
 ///
 /// `levels` must be a hazard-free schedule (from GLU2.0 or GLU3.0
 /// dependency detection; [`crate::depend::levelize::validate_hazard_free`]
-/// is the independent checker).
+/// is the independent checker). Convenience wrapper over the plan-driven
+/// core: builds a throwaway [`FactorPlan`] — hot paths
+/// ([`crate::glu::GluSolver`]) build the plan once and call
+/// [`simulate_refactorization`] directly.
 pub fn simulate_factorization(
     sym: &SymbolicFill,
     levels: &Levels,
     policy: &Policy,
     device: &DeviceConfig,
 ) -> anyhow::Result<(LuFactors, SimReport)> {
-    let n = sym.filled.ncols();
+    let plan = FactorPlan::from_levels(sym, levels.clone(), policy, device);
     let mut lu = sym.filled.clone();
-    let urow = upper_rows(sym);
-
-    // Precompute per-column L lengths.
-    let l_len: Vec<usize> = (0..n)
-        .map(|j| {
-            let (rows, _) = lu.col(j);
-            rows.len() - rows.partition_point(|&r| r <= j)
-        })
-        .collect();
-
     let mut lvals = Vec::new();
-    let report =
-        simulate_refactorization(&mut lu, &urow, &l_len, levels, policy, device, &mut lvals)?;
+    let report = simulate_refactorization(&mut lu, &plan, &mut lvals)?;
     Ok((LuFactors { lu }, report))
 }
 
 /// The in-place core of [`simulate_factorization`]: `lu` holds the filled
 /// pattern with `A`'s values stamped in and is overwritten with the
-/// factors while cycles are accounted per level. `urow` and `l_len` are
-/// pattern-derived views the caller may cache across refactorizations
-/// (they never change for a fixed symbolic state), `lvals` is the reusable
-/// divide-phase scratch — the Newton-loop fast path reallocates none of
-/// the `O(nnz)` state.
+/// factors while cycles are accounted per level. The executor no longer
+/// decides anything — it *costs a given plan*: per-level modes, work
+/// descriptions, and the subcolumn map all come from the [`FactorPlan`]
+/// (built once per pattern and cached by the solver), `lvals` is the
+/// reusable divide-phase scratch — the Newton-loop fast path reallocates
+/// none of the `O(nnz)` state.
 pub fn simulate_refactorization(
     lu: &mut crate::sparse::Csc,
-    urow: &[Vec<u32>],
-    l_len: &[usize],
-    levels: &Levels,
-    policy: &Policy,
-    device: &DeviceConfig,
+    plan: &FactorPlan,
     lvals: &mut Vec<f64>,
 ) -> anyhow::Result<SimReport> {
     let n = lu.ncols();
-    anyhow::ensure!(
-        urow.len() == n && l_len.len() == n,
-        "pattern view dimension mismatch"
-    );
-    let mut per_level = Vec::with_capacity(levels.num_levels());
+    anyhow::ensure!(plan.n() == n, "plan dimension mismatch");
+    let (policy, device) = (plan.policy(), plan.device());
+    let urow = plan.urow();
+    let col_work = plan.col_work();
+    let mut per_level = Vec::with_capacity(plan.num_levels());
+    let mut work: Vec<ColumnWork> = Vec::new();
 
-    for level in &levels.levels {
-        // --- Timing. ---
-        let work: Vec<ColumnWork> = level
-            .iter()
-            .map(|&j| ColumnWork {
-                l_len: l_len[j as usize],
-                n_subcols: urow[j as usize].len(),
-            })
-            .collect();
-        let mode = policy.mode_for(level.len(), device);
+    for (li, level) in plan.levels().levels.iter().enumerate() {
+        // --- Timing: cost the level in the plan's mode. ---
+        work.clear();
+        work.extend(level.iter().map(|&j| col_work[j as usize]));
         let timing = simulate_level(
             &work,
-            mode,
+            plan.level_plan(li).mode,
             n,
             device,
             policy.launch_scale_for(level.len()),
@@ -233,6 +217,24 @@ mod tests {
         assert!(rep.total_ms() > rep.kernel_ms());
         let occ = rep.mean_occupancy();
         assert!((0.0..=1.0).contains(&occ));
+    }
+
+    /// The simulated report's per-level mode histogram is exactly the
+    /// plan's: the executor costs the plan, it never re-derives modes.
+    #[test]
+    fn report_distribution_matches_plan_histogram() {
+        let (_, f, lv) = setup(350, 5);
+        let d = DeviceConfig::titan_x();
+        for policy in [Policy::glu3(), Policy::glu2_fixed(), Policy::glu3_no_stream()] {
+            let plan = FactorPlan::from_levels(&f, lv.clone(), &policy, &d);
+            let (_, rep) = simulate_factorization(&f, &lv, &policy, &d).unwrap();
+            assert_eq!(rep.level_distribution(), plan.mode_histogram(), "{}", policy.name);
+            for (timing, lp) in rep.per_level.iter().zip(plan.level_plans()) {
+                assert_eq!(timing.mode, lp.mode);
+                assert_eq!(timing.columns, lp.columns);
+                assert_eq!(timing.max_subcols, lp.max_subcols);
+            }
+        }
     }
 
     #[test]

@@ -26,6 +26,11 @@
 //! - [`policy`] — solver policies: GLU3.0 adaptive, GLU2.0 fixed, Lee's
 //!   enhanced GLU2.0, and ablations (Table III's case 1 / case 2).
 //! - [`executor`] — level-ordered numeric factorization + timing report.
+//!
+//! Mode selection itself lives in [`crate::plan`]: the simulator *costs* a
+//! mode-annotated [`crate::plan::FactorPlan`] rather than re-deriving the
+//! per-level kernel mode (the pre-plan code kept one copy of the Eq. 4
+//! decision here and another in [`policy`]).
 
 pub mod cost;
 pub mod device;

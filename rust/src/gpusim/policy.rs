@@ -16,7 +16,7 @@
 //!   doubled per-launch cost).
 
 use super::device::DeviceConfig;
-use super::exec::{select_mode, KernelMode};
+use crate::plan::KernelMode;
 
 /// A named kernel-mode policy.
 #[derive(Debug, Clone, PartialEq)]
@@ -112,17 +112,11 @@ impl Policy {
         }
     }
 
-    /// Kernel mode for a level of `level_size` columns.
+    /// Kernel mode for a level of `level_size` columns. Thin delegate to
+    /// [`crate::plan::mode_for`] — the plan layer is the single source of
+    /// mode decisions (this used to duplicate the Eq. 4 gating inline).
     pub fn mode_for(&self, level_size: usize, device: &DeviceConfig) -> KernelMode {
-        if !self.adaptive {
-            return KernelMode::LargeBlock;
-        }
-        let mode = select_mode(level_size, self.stream_threshold, device);
-        match mode {
-            KernelMode::SmallBlock { .. } if !self.enable_small => KernelMode::LargeBlock,
-            KernelMode::Stream if !self.enable_stream => KernelMode::LargeBlock,
-            m => m,
-        }
+        crate::plan::mode_for(self, level_size, device)
     }
 
     /// Per-launch overhead scale for a level.

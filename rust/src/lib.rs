@@ -8,9 +8,17 @@
 //! 1. **Relaxed column dependency detection** ([`depend::glu3`], Algorithm 4)
 //!    replacing the O(n³) double-U search of GLU2.0 ([`depend::glu2`],
 //!    Algorithm 3).
-//! 2. **Adaptive three-mode numeric kernel** ([`glu::modes`]) — small-block /
-//!    large-block / stream — scheduling level-parallel column factorization
-//!    onto a warp-based execution substrate ([`gpusim`]).
+//! 2. **Adaptive three-mode numeric kernel** — small-block / large-block /
+//!    stream — computed once per pattern as a mode-annotated
+//!    [`plan::FactorPlan`] and consumed by every backend: the warp-based
+//!    cycle simulator ([`gpusim`]), the worker-pool CPU engines
+//!    ([`numeric`]), and the PJRT lowering path ([`runtime`]).
+//!
+//! The pipeline every solve flows through:
+//!
+//! ```text
+//! order → scale → symbolic → detect → levelize → plan → execute
+//! ```
 //!
 //! The crate also contains every substrate the paper depends on: sparse
 //! formats and Matrix Market I/O ([`sparse`]), MC64-style matching/scaling and
@@ -108,13 +116,49 @@
 //! against.
 //!
 //! Any multi-threaded engine also switches `solve`/`solve_many` to the
-//! level-scheduled parallel triangular solves (cached
-//! [`numeric::trisolve::TriangularSchedule`]), which are bit-identical to
-//! the sequential substitutions at every thread count — gated on the
-//! schedule being wide enough that the per-level barrier pays for itself
-//! (deep, narrow schedules keep the sequential path). The `glu3 bench`
-//! subcommand measures factor/refactor/solve wall-clock for every engine
-//! and writes `BENCH_numeric.json` — the recorded perf trajectory.
+//! level-scheduled parallel triangular solves (the
+//! [`numeric::trisolve::TriangularSchedule`] carried by the plan), which
+//! are bit-identical to the sequential substitutions at every thread
+//! count — gated on the schedule being wide enough that the per-level
+//! barrier pays for itself (deep, narrow schedules keep the sequential
+//! path). The `glu3 bench` subcommand measures factor/refactor/solve
+//! wall-clock for every engine and writes `BENCH_numeric.json` — the
+//! recorded perf trajectory, including a `plan` block (per-level mode
+//! histogram + preprocessing stage timings).
+//!
+//! ## Choosing a kernel mode
+//!
+//! You don't: the [`plan::FactorPlan`] does, per level, at plan-build
+//! time — this is the paper's second contribution and the knob-free core
+//! of GLU3.0. What you choose is the [`gpusim::Policy`] (and, for the
+//! simulator, a [`gpusim::DeviceConfig`]); the plan then annotates each
+//! level with the mode the policy's Eq. 4 arithmetic selects
+//! ([`plan::mode_for`] — the single source of mode decisions):
+//!
+//! - **Small-block** ([`plan::KernelMode::SmallBlock`], type A): wide
+//!   levels with more columns than the device has 32-warp slots. One
+//!   block per column with 2–16 warps, so more columns are resident at
+//!   once. CPU analogue: columns dealt round-robin across the worker pool
+//!   ([`plan::CpuAssignment::InterleavedColumns`]).
+//! - **Large-block** ([`plan::KernelMode::LargeBlock`], type B): mid-width
+//!   levels where every column can hold a full 32-warp block — the
+//!   GLU1.0/2.0 kernel shape. CPU analogue: too few columns to feed every
+//!   worker, so the level's `(column, subcolumn)` MAC tasks are sliced
+//!   across the pool ([`plan::CpuAssignment::SubcolumnSlices`]).
+//! - **Stream** ([`plan::KernelMode::Stream`], type C): tail levels of at
+//!   most `stream_threshold` (default 16) columns, launched one kernel
+//!   per column over CUDA streams with a block per subcolumn. CPU
+//!   analogue: runs of singleton levels execute as one sequential chain
+//!   with a single rendezvous ([`plan::CpuAssignment::ChainBatch`]).
+//!
+//! Policies tune the decision, not the mechanism: [`gpusim::Policy::glu3`]
+//! is the adaptive default, [`gpusim::Policy::glu3_with_threshold`] sweeps
+//! the stream cutoff (Fig. 12), [`gpusim::Policy::glu3_no_small`] /
+//! [`gpusim::Policy::glu3_no_stream`] are Table III's ablations, and
+//! [`gpusim::Policy::glu2_fixed`] pins every level to the fixed
+//! large-block kernel. [`runtime::lower_plan`] maps the same per-level
+//! annotations onto the AOT kernel ladder — the launch sequence the
+//! future GPU offload executes.
 
 pub mod bench_support;
 pub mod circuit;
@@ -124,6 +168,7 @@ pub mod glu;
 pub mod gpusim;
 pub mod numeric;
 pub mod order;
+pub mod plan;
 pub mod runtime;
 pub mod sparse;
 pub mod symbolic;

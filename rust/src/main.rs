@@ -197,17 +197,18 @@ fn cmd_factor(flags: &HashMap<String, String>, also_solve: bool) -> anyhow::Resu
     ]);
     t.row(vec!["preprocess (ms)".to_string(), ms(st.preprocess_ms)]);
     t.row(vec!["symbolic (ms)".to_string(), ms(st.symbolic_ms)]);
-    t.row(vec![
-        "levelization (ms)".to_string(),
-        ms(st.levelization_ms),
-    ]);
+    t.row(vec!["detect (ms)".to_string(), ms(st.detect_ms)]);
+    t.row(vec!["levelize (ms)".to_string(), ms(st.levelize_ms)]);
+    t.row(vec!["plan build (ms)".to_string(), ms(st.plan_ms)]);
     t.row(vec!["numeric (ms)".to_string(), ms(st.numeric_ms)]);
+    // Mode distribution comes from the plan (every engine has one), not
+    // from the simulator report.
+    let (da, db, dc) = solver.plan().mode_histogram();
+    t.row(vec![
+        "level types A/B/C".to_string(),
+        format!("{da}/{db}/{dc}"),
+    ]);
     if let Some(sim) = &st.sim {
-        let (da, db, dc) = sim.level_distribution();
-        t.row(vec![
-            "level types A/B/C".to_string(),
-            format!("{da}/{db}/{dc}"),
-        ]);
         t.row(vec![
             "mean warp occupancy".to_string(),
             format!("{:.2}", sim.mean_occupancy()),
@@ -441,6 +442,19 @@ fn cmd_bench(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         ms(report.baseline.pool_ms),
         ms(report.baseline.spawn_per_level_ms),
         ratio(report.baseline.speedup())
+    );
+    let p = &report.plan;
+    println!(
+        "plan: {} levels (A/B/C {}/{}/{}), build {} ms; preprocessing: symbolic {} ms, \
+         detect {} ms, levelize {} ms",
+        p.levels,
+        p.modes_small,
+        p.modes_large,
+        p.modes_stream,
+        ms(p.build_ms),
+        ms(p.symbolic_ms),
+        ms(p.detect_ms),
+        ms(p.levelize_ms)
     );
 
     let json = report.to_json();

@@ -1,13 +1,26 @@
 //! Parallel hybrid right-looking factorization on a hazard-free level
 //! schedule — the GLU3.0 execution model with **real CPU threads** instead
-//! of simulated GPU warps.
+//! of simulated GPU warps, executing the mode-annotated
+//! [`crate::plan::FactorPlan`].
 //!
-//! This is the first engine where the extra parallelism exposed by the
-//! relaxed dependency detection ([`crate::depend::glu3`], Algorithm 4) is
-//! measured in *wall-clock*, not simulated cycles: columns of one level are
-//! dealt round-robin across a persistent [`WorkerPool`], each worker runs
-//! the Algorithm 2 column pipeline (divide phase + subcolumn MAC updates),
-//! and levels meet at a spin barrier.
+//! This engine holds no assignment policy of its own: every level's
+//! worker-pool strategy comes from the plan's [`CpuAssignment`] — the CPU
+//! analogue of the paper's three adaptive kernel modes, decided once at
+//! plan-build time alongside the GPU geometry:
+//!
+//! - [`CpuAssignment::InterleavedColumns`] (small-mode levels — wide, many
+//!   independent columns): columns are dealt round-robin across the pool,
+//!   each worker runs the full Algorithm 2 column pipeline.
+//! - [`CpuAssignment::SubcolumnSlices`] (large-mode levels — too few
+//!   columns to feed every worker): two sub-phases per level. All divide
+//!   phases run column-interleaved, a barrier publishes the normalized L
+//!   values, then the level's flat `(column, subcolumn)` MAC task list is
+//!   dealt round-robin — the thread-chunk analogue of the GPU kernel
+//!   splitting a column's subcolumn tasks across warps.
+//! - [`CpuAssignment::ChainBatch`] (stream-mode singleton tails): a run of
+//!   consecutive size-1 levels executes as one sequential chain on worker
+//!   0 with a *single* end-of-run rendezvous, instead of paying one
+//!   barrier per level on a schedule with no parallelism to exploit.
 //!
 //! ## Safety model (why the schedule makes this sound)
 //!
@@ -19,7 +32,9 @@
 //!   work (`L(:,i)` non-empty) is ordered strictly before every column `k`
 //!   with `As(i,k) != 0`, so all MAC targets live in later levels. The
 //!   divide phase therefore writes its own column without interference,
-//!   with plain (non-atomic) accesses.
+//!   with plain (non-atomic) accesses — and in the sliced sub-phase the
+//!   MAC tasks may *read* any same-level column's L values plainly, since
+//!   no one writes them after the intra-level barrier.
 //! - **No read/write hazard on multipliers or L values** (the double-U
 //!   condition). What remains possible is two same-level columns
 //!   *accumulating* into the same element of a later column — the GPU
@@ -30,7 +45,10 @@
 //! Accumulation order into a shared element is therefore nondeterministic
 //! across threads — results match the simulated-GPU engine (which commits
 //! same-level columns in ascending order) to rounding, and are *identical*
-//! to it when the pool has one thread.
+//! to it when the pool has one thread, in **every** assignment mode: at
+//! one thread each strategy degenerates to ascending column order with
+//! divide-before-MAC per level, and reordering divides ahead of MACs
+//! within a level touches disjoint state (see the first bullet).
 //!
 //! GLU1.0's U-pattern schedule does **not** provide these guarantees
 //! (paper Fig. 9's counterexample); [`crate::glu::GluSolver`] refuses to
@@ -38,8 +56,8 @@
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
-use crate::depend::Levels;
 use crate::numeric::pool::{PoolCtx, SharedPtr, WorkerPool};
+use crate::plan::{CpuAssignment, FactorPlan};
 use crate::symbolic::SymbolicFill;
 
 use super::LuFactors;
@@ -73,53 +91,118 @@ fn atomic_sub(vals: *mut f64, idx: usize, delta: f64) {
     }
 }
 
-/// Factor `As` on `pool` under a **hazard-free** level schedule (GLU2.0 or
-/// GLU3.0 detection; never GLU1.0 — see module docs). `urow` is the
-/// subcolumn view from [`crate::numeric::rightlook::upper_rows`].
+/// Factor `As` on `pool` under a **hazard-free** plan (GLU2.0 or GLU3.0
+/// detection; never GLU1.0 — see module docs).
 pub fn factor_with(
     sym: &SymbolicFill,
-    urow: &[Vec<u32>],
-    levels: &Levels,
+    plan: &FactorPlan,
     pool: &WorkerPool,
 ) -> anyhow::Result<LuFactors> {
     let mut lu = sym.filled.clone();
-    refactor_in_place(&mut lu, urow, levels, pool)?;
+    refactor_in_place(&mut lu, plan, pool)?;
     Ok(LuFactors { lu })
 }
 
 /// Factor in place: `lu` holds the filled pattern with `A`'s values
-/// stamped in and is overwritten with the factors. Allocation-free apart
-/// from each worker's small divide-phase scratch (grown once, reused
-/// across levels).
+/// stamped in and is overwritten with the factors, level by level in the
+/// plan's [`CpuAssignment`] strategies. Allocation-free apart from each
+/// worker's small divide-phase scratch (grown once, reused across levels).
 pub fn refactor_in_place(
     lu: &mut crate::sparse::Csc,
-    urow: &[Vec<u32>],
-    levels: &Levels,
+    plan: &FactorPlan,
     pool: &WorkerPool,
 ) -> anyhow::Result<()> {
     let n = lu.ncols();
-    anyhow::ensure!(urow.len() == n, "subcolumn view dimension mismatch");
+    anyhow::ensure!(plan.n() == n, "plan dimension mismatch");
+    let urow = plan.urow();
+    let levels = plan.levels();
+    let steps = plan.cpu_steps();
     let (colptr, rowidx, values) = lu.split_mut();
     let shared = SharedPtr(values.as_mut_ptr());
     let failed = AtomicUsize::new(usize::MAX);
 
     pool.run(&|ctx: &PoolCtx<'_>| {
+        let ok = || failed.load(Ordering::Relaxed) == usize::MAX;
         let mut lvals: Vec<f64> = Vec::new();
-        for level in &levels.levels {
-            if failed.load(Ordering::Relaxed) == usize::MAX {
-                let mut idx = ctx.id;
-                while idx < level.len() {
-                    let j = level[idx] as usize;
-                    if !factor_column_par(j, colptr, rowidx, &shared, &urow[j], &mut lvals, &failed)
-                        || failed.load(Ordering::Relaxed) != usize::MAX
-                    {
-                        break;
+        for step in steps {
+            match step.assignment {
+                CpuAssignment::InterleavedColumns => {
+                    let level = &levels.levels[step.first_level];
+                    if ok() {
+                        let mut idx = ctx.id;
+                        while idx < level.len() {
+                            let j = level[idx] as usize;
+                            if !factor_column_par(
+                                j, colptr, rowidx, &shared, &urow[j], &mut lvals, &failed,
+                            ) || !ok()
+                            {
+                                break;
+                            }
+                            idx += ctx.threads;
+                        }
                     }
-                    idx += ctx.threads;
+                    if !ctx.sync() {
+                        return;
+                    }
                 }
-            }
-            if !ctx.sync() {
-                return;
+                CpuAssignment::SubcolumnSlices => {
+                    let level = &levels.levels[step.first_level];
+                    // Sub-phase 1: divide phases, column-interleaved (the
+                    // abort flag is re-checked between columns, as in the
+                    // interleaved strategy).
+                    if ok() {
+                        let mut idx = ctx.id;
+                        while idx < level.len() {
+                            if !divide_column_par(level[idx] as usize, colptr, rowidx, &shared, &failed)
+                                || !ok()
+                            {
+                                break;
+                            }
+                            idx += ctx.threads;
+                        }
+                    }
+                    // Publish the normalized L values to every worker.
+                    if !ctx.sync() {
+                        return;
+                    }
+                    // Sub-phase 2: the flat (column, subcolumn) MAC task
+                    // list, dealt round-robin across workers.
+                    if ok() {
+                        let mut base = 0usize;
+                        for &j in level.iter() {
+                            let j = j as usize;
+                            let subs = &urow[j];
+                            for (s, &k) in subs.iter().enumerate() {
+                                if (base + s) % ctx.threads == ctx.id {
+                                    mac_task(j, k as usize, colptr, rowidx, &shared);
+                                }
+                            }
+                            base += subs.len();
+                        }
+                    }
+                    if !ctx.sync() {
+                        return;
+                    }
+                }
+                CpuAssignment::ChainBatch => {
+                    // A sequential singleton chain: worker 0 walks the whole
+                    // run; everyone meets once at the end of the run.
+                    if ctx.id == 0 && ok() {
+                        'run: for li in step.first_level..step.first_level + step.level_count {
+                            for &j in &levels.levels[li] {
+                                let j = j as usize;
+                                if !factor_column_par(
+                                    j, colptr, rowidx, &shared, &urow[j], &mut lvals, &failed,
+                                ) {
+                                    break 'run;
+                                }
+                            }
+                        }
+                    }
+                    if !ctx.sync() {
+                        return;
+                    }
+                }
             }
         }
     });
@@ -192,16 +275,93 @@ fn factor_column_par(
     true
 }
 
+/// The divide phase alone (sub-phase 1 of a sliced level): normalize
+/// column `j`'s L entries by the pivot, in place. Plain accesses — this
+/// worker owns the column until the intra-level barrier.
+#[inline]
+fn divide_column_par(
+    j: usize,
+    colptr: &[usize],
+    rowidx: &[usize],
+    shared: &SharedPtr,
+    failed: &AtomicUsize,
+) -> bool {
+    let vals = shared.0;
+    let (s_j, e_j) = (colptr[j], colptr[j + 1]);
+    let rows_j = &rowidx[s_j..e_j];
+    let diag_pos = match rows_j.binary_search(&j) {
+        Ok(p) => p,
+        Err(_) => {
+            failed.fetch_min(j, Ordering::Relaxed);
+            return false;
+        }
+    };
+    // SAFETY: as in `factor_column_par`'s divide phase.
+    let pivot = unsafe { *vals.add(s_j + diag_pos) };
+    if pivot == 0.0 || !pivot.is_finite() {
+        failed.fetch_min(j, Ordering::Relaxed);
+        return false;
+    }
+    for idx in diag_pos + 1..rows_j.len() {
+        let v = unsafe { *vals.add(s_j + idx) } / pivot;
+        unsafe { *vals.add(s_j + idx) = v };
+    }
+    true
+}
+
+/// One `(column j, subcolumn k)` MAC task of a sliced level (sub-phase 2):
+/// apply the Eq. 3 rank-1 update of column `j` onto column `k`. Column
+/// `j`'s normalized L values are read plainly (published by the
+/// intra-level barrier, and no same-level MAC ever targets column `j`);
+/// commits into column `k` are atomic.
+#[inline]
+fn mac_task(j: usize, k: usize, colptr: &[usize], rowidx: &[usize], shared: &SharedPtr) {
+    let vals = shared.0;
+    let (s_j, e_j) = (colptr[j], colptr[j + 1]);
+    let rows_j = &rowidx[s_j..e_j];
+    let diag_pos = match rows_j.binary_search(&j) {
+        Ok(p) => p,
+        // A missing diagonal was already recorded by the divide sub-phase;
+        // the level aborts after the barrier.
+        Err(_) => return,
+    };
+    let lrows = &rows_j[diag_pos + 1..];
+    if lrows.is_empty() {
+        return;
+    }
+    let (s_k, e_k) = (colptr[k], colptr[k + 1]);
+    let rows_k = &rowidx[s_k..e_k];
+    let multiplier = match rows_k.binary_search(&j) {
+        Ok(p) => atomic_load(vals, s_k + p),
+        Err(_) => return,
+    };
+    if multiplier == 0.0 {
+        return;
+    }
+    let mut pos = rows_k.partition_point(|&r| r <= j);
+    for (off, &i) in lrows.iter().enumerate() {
+        // SAFETY: column j is read-only during this sub-phase (module docs).
+        let lij = unsafe { *vals.add(s_j + diag_pos + 1 + off) };
+        while rows_k[pos] != i {
+            pos += 1;
+        }
+        atomic_sub(vals, s_k + pos, lij * multiplier);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::depend::{glu2, glu3, levelize};
+    use crate::depend::{glu2, glu3, levelize, Levels};
     use crate::gpusim::{simulate_factorization, DeviceConfig, Policy};
-    use crate::numeric::rightlook::upper_rows;
     use crate::numeric::{leftlook, residual};
     use crate::sparse::gen;
     use crate::symbolic::symbolic_fill;
     use crate::util::Rng;
+
+    fn plan_for(f: &SymbolicFill, lv: &Levels) -> FactorPlan {
+        FactorPlan::from_levels(f, lv.clone(), &Policy::glu3(), &DeviceConfig::titan_x())
+    }
 
     #[test]
     fn matches_simulated_gpu_engine() {
@@ -211,12 +371,12 @@ mod tests {
             let a = gen::netlist(n, 6, 10, 0.08, 2, 0.2, 6200 + trial);
             let f = symbolic_fill(&a).unwrap();
             let lv = levelize(&glu3::detect(&f.filled));
-            let urow = upper_rows(&f);
+            let plan = plan_for(&f, &lv);
             let d = DeviceConfig::titan_x();
             let (sim, _) = simulate_factorization(&f, &lv, &Policy::glu3(), &d).unwrap();
             for threads in [1, 2, 4] {
                 let pool = WorkerPool::new(threads);
-                let par = factor_with(&f, &urow, &lv, &pool).unwrap();
+                let par = factor_with(&f, &plan, &pool).unwrap();
                 for (p, q) in par.lu.values().iter().zip(sim.lu.values()) {
                     assert!(
                         (p - q).abs() < 1e-9 * (1.0 + q.abs()),
@@ -224,7 +384,8 @@ mod tests {
                     );
                 }
                 if threads == 1 {
-                    // one thread == the simulator's ascending serialization
+                    // one thread == the simulator's ascending serialization,
+                    // in every assignment mode
                     assert_eq!(par.lu.values(), sim.lu.values());
                 }
             }
@@ -236,9 +397,9 @@ mod tests {
         let a = gen::netlist(150, 6, 10, 0.08, 2, 0.2, 404);
         let f = symbolic_fill(&a).unwrap();
         let lv = levelize(&glu2::detect(&f.filled));
-        let urow = upper_rows(&f);
+        let plan = plan_for(&f, &lv);
         let pool = WorkerPool::new(4);
-        let lu = factor_with(&f, &urow, &lv, &pool).unwrap();
+        let lu = factor_with(&f, &plan, &pool).unwrap();
         let oracle = leftlook::factor(&f).unwrap();
         for (p, q) in lu.lu.values().iter().zip(oracle.lu.values()) {
             assert!((p - q).abs() < 1e-9 * (1.0 + q.abs()));
@@ -252,12 +413,48 @@ mod tests {
         let a = g.permute(p.as_scatter(), p.as_scatter());
         let f = symbolic_fill(&a).unwrap();
         let lv = levelize(&glu3::detect(&f.filled));
-        let urow = upper_rows(&f);
+        let plan = plan_for(&f, &lv);
         let pool = WorkerPool::new(4);
-        let lu = factor_with(&f, &urow, &lv, &pool).unwrap();
+        let lu = factor_with(&f, &plan, &pool).unwrap();
         let b = vec![1.5; 400];
         let x = lu.solve(&b);
         assert!(residual(&a, &x, &b) < 1e-10);
+    }
+
+    /// Every assignment strategy is exercised on an AMD mesh (wide small
+    /// levels, narrow sliced levels, chain-batched singleton tail) under a
+    /// fixed-allocation policy too: the engine executes whatever the plan
+    /// says, with identical numerics.
+    #[test]
+    fn fixed_policy_plan_changes_strategies_not_values() {
+        let g = gen::grid2d(18, 18, 9);
+        let p = crate::order::amd::amd_order(&g).unwrap();
+        let a = g.permute(p.as_scatter(), p.as_scatter());
+        let f = symbolic_fill(&a).unwrap();
+        let lv = levelize(&glu3::detect(&f.filled));
+        let d = DeviceConfig::titan_x();
+        let adaptive = FactorPlan::from_levels(&f, lv.clone(), &Policy::glu3(), &d);
+        let fixed = FactorPlan::from_levels(&f, lv.clone(), &Policy::glu2_fixed(), &d);
+        // the two plans disagree on strategy somewhere...
+        assert_ne!(
+            adaptive
+                .level_plans()
+                .iter()
+                .map(|lp| lp.assignment)
+                .collect::<Vec<_>>(),
+            fixed
+                .level_plans()
+                .iter()
+                .map(|lp| lp.assignment)
+                .collect::<Vec<_>>()
+        );
+        // ...but factor to the same values on the same schedule
+        let pool = WorkerPool::new(3);
+        let x = factor_with(&f, &adaptive, &pool).unwrap();
+        let y = factor_with(&f, &fixed, &pool).unwrap();
+        for (p, q) in x.lu.values().iter().zip(y.lu.values()) {
+            assert!((p - q).abs() < 1e-11 * (1.0 + q.abs()), "{p} vs {q}");
+        }
     }
 
     #[test]
@@ -270,9 +467,40 @@ mod tests {
         coo.push(1, 1, 1.0); // U(1,1) cancels to zero
         let f = symbolic_fill(&coo.to_csc()).unwrap();
         let lv = levelize(&glu3::detect(&f.filled));
-        let urow = upper_rows(&f);
+        let plan = plan_for(&f, &lv);
         let pool = WorkerPool::new(2);
-        let err = factor_with(&f, &urow, &lv, &pool).unwrap_err();
+        let err = factor_with(&f, &plan, &pool).unwrap_err();
+        assert!(err.to_string().contains("pivot"), "{err}");
+    }
+
+    /// Pivot failure inside a *sliced* level (divide sub-phase) is caught
+    /// and the MAC sub-phase skipped.
+    #[test]
+    fn reports_zero_pivot_in_sliced_level() {
+        let a = gen::netlist(120, 6, 10, 0.08, 2, 0.2, 515);
+        let f = symbolic_fill(&a).unwrap();
+        let lv = levelize(&glu3::detect(&f.filled));
+        let plan = plan_for(&f, &lv);
+        // force a zero pivot in a level that the plan slices
+        let sliced = plan
+            .level_plans()
+            .iter()
+            .find(|lp| lp.assignment == CpuAssignment::SubcolumnSlices);
+        let Some(sliced) = sliced else {
+            return; // fixture produced no sliced level; nothing to test
+        };
+        let victim = plan.levels().levels[sliced.index][0] as usize;
+        let mut lu = f.filled.clone();
+        let (colptr, rowidx, values) = lu.split_mut();
+        let (s, e) = (colptr[victim], colptr[victim + 1]);
+        let dpos = rowidx[s..e].binary_search(&victim).unwrap();
+        values[s + dpos] = 0.0;
+        // also zero the column's U entries so no earlier update revives it
+        for idx in s..s + dpos {
+            values[idx] = 0.0;
+        }
+        let pool = WorkerPool::new(3);
+        let err = refactor_in_place(&mut lu, &plan, &pool).unwrap_err();
         assert!(err.to_string().contains("pivot"), "{err}");
     }
 }

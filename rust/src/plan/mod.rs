@@ -1,0 +1,630 @@
+//! The [`FactorPlan`]: a mode-annotated schedule IR shared by every backend.
+//!
+//! GLU3.0's second contribution — the three adaptive kernel modes selected
+//! per level as the available parallelism changes (paper §III-B, Fig. 11) —
+//! used to live inside the cycle simulator only: `gpusim::policy` picked a
+//! mode per level while the real CPU engines executed every level the same
+//! way and the PJRT runtime had no lowering target. This module makes the
+//! adaptive schedule a first-class artifact instead:
+//!
+//! ```text
+//! SymbolicFill + DepGraph + Policy + DeviceConfig
+//!         │ levelize + annotate (once, at factor time)
+//!         ▼
+//!     FactorPlan ──► gpusim::executor   (costs the plan's levels)
+//!         │      ──► numeric::parrl     (mode-adaptive worker-pool steps)
+//!         │      ──► GluSolver::solve   (cached trisolve row schedules)
+//!         └──────► runtime::lower_plan  (future kernel-launch sequence)
+//! ```
+//!
+//! Per level the plan records the [`KernelMode`] (the paper's Eq. 4 +
+//! stream-threshold decision, **the single source of truth** — both the
+//! simulator's former `select_mode` call site and `Policy::mode_for` now
+//! delegate here), the GPU [`ResourceBinding`] (blocks × warps or
+//! stream-dispatch geometry), the CPU [`CpuAssignment`] the worker-pool
+//! engine executes, and column work estimates. The plan also carries the
+//! pattern-derived views every numeric backend shares (subcolumn map,
+//! per-column work, and — lazily, on first multi-threaded solve — the
+//! triangular-solve row schedules), so
+//! [`crate::glu::GluSolver::refactor`] and the solves reuse it
+//! allocation-free and [`crate::coordinator::SolverPool`] caches it with
+//! the pattern-keyed symbolic state — a checkout hit never replans.
+//!
+//! [`FactorPlan`] is immutable after construction and cheap to clone (the
+//! heavy state sits behind one `Arc`).
+
+use std::sync::{Arc, OnceLock};
+
+use crate::depend::{levelize, DepGraph, Levels};
+use crate::gpusim::device::DeviceConfig;
+use crate::gpusim::policy::Policy;
+use crate::numeric::rightlook::upper_rows;
+use crate::numeric::trisolve::TriangularSchedule;
+use crate::symbolic::SymbolicFill;
+
+/// The three GPU kernel modes of GLU3.0 (paper Fig. 11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Type A levels: one block per column, few warps per block
+    /// (Eq. 4), one warp per subcolumn task.
+    SmallBlock {
+        /// Warps per block ∈ {2, 4, 8, 16}.
+        warps_per_block: usize,
+    },
+    /// Type B levels: one block per column, 32 warps (1024 threads),
+    /// one warp per subcolumn — the GLU1.0/2.0 kernel.
+    LargeBlock,
+    /// Type C levels: one kernel per column over 16 CUDA streams, one
+    /// *block* (1024 threads) per subcolumn.
+    Stream,
+}
+
+impl KernelMode {
+    /// Short label for reports.
+    pub fn label(&self) -> String {
+        match self {
+            KernelMode::SmallBlock { warps_per_block } => format!("small({warps_per_block}w)"),
+            KernelMode::LargeBlock => "large".to_string(),
+            KernelMode::Stream => "stream".to_string(),
+        }
+    }
+
+    /// Level-type letter for Table III's distribution columns.
+    pub fn level_type(&self) -> char {
+        match self {
+            KernelMode::SmallBlock { .. } => 'A',
+            KernelMode::LargeBlock => 'B',
+            KernelMode::Stream => 'C',
+        }
+    }
+}
+
+/// Select the raw GLU3.0 mode for a level (Eq. 4 + the stream threshold),
+/// before any policy ablation gates.
+pub fn select_mode(level_size: usize, stream_threshold: usize, device: &DeviceConfig) -> KernelMode {
+    if level_size <= stream_threshold {
+        return KernelMode::Stream;
+    }
+    let w = device.total_warps() / level_size.max(1);
+    if w >= 32 {
+        KernelMode::LargeBlock
+    } else {
+        // Round down to a power of two in {2, 4, 8, 16} (paper §III-B.1:
+        // "grows from 2 to 4, 8, and eventually to 32").
+        let w = w.max(2);
+        let w = 1usize << (usize::BITS - 1 - w.leading_zeros());
+        KernelMode::SmallBlock {
+            warps_per_block: w.clamp(2, 16),
+        }
+    }
+}
+
+/// Kernel mode for a level of `level_size` columns under `policy` — the
+/// deduplicated decision the simulator's `select_mode` call site and
+/// `Policy::mode_for` both used to make independently.
+pub fn mode_for(policy: &Policy, level_size: usize, device: &DeviceConfig) -> KernelMode {
+    if !policy.adaptive {
+        return KernelMode::LargeBlock;
+    }
+    let mode = select_mode(level_size, policy.stream_threshold, device);
+    match mode {
+        KernelMode::SmallBlock { .. } if !policy.enable_small => KernelMode::LargeBlock,
+        KernelMode::Stream if !policy.enable_stream => KernelMode::LargeBlock,
+        m => m,
+    }
+}
+
+/// Static work description of one column: `l_len` L entries (= length of
+/// every subcolumn update task) and `n_subcols` subcolumn tasks.
+#[derive(Debug, Clone, Copy)]
+pub struct ColumnWork {
+    pub l_len: usize,
+    pub n_subcols: usize,
+}
+
+impl ColumnWork {
+    /// Flop estimate: the divide pass plus one fused multiply-subtract per
+    /// L entry per subcolumn (Eq. 3).
+    pub fn flops(&self) -> u64 {
+        (self.l_len + 2 * self.l_len * self.n_subcols) as u64
+    }
+}
+
+/// GPU resource binding of one level, derived from its mode and the device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResourceBinding {
+    /// Small/large-block modes: one block per column.
+    Blocks {
+        blocks: usize,
+        warps_per_block: usize,
+    },
+    /// Stream mode: one kernel per column dispatched over CUDA streams,
+    /// one max-occupancy block per subcolumn.
+    Streams { streams: usize, kernels: usize },
+}
+
+/// How the CPU worker-pool engine executes one plan step — the
+/// thread-chunk analogue of the GPU geometry. Decided *here*, never in the
+/// engine: `numeric::parrl` only dispatches on what the plan says.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CpuAssignment {
+    /// Column-parallel: deal the level's columns round-robin across
+    /// workers (wide small-mode levels — many independent columns).
+    InterleavedColumns,
+    /// Task-parallel in two sub-phases: all divide phases (columns dealt
+    /// round-robin), one barrier, then the flat `(column, subcolumn)` MAC
+    /// task list dealt round-robin (narrow large-mode levels — too few
+    /// columns to feed every worker, but plenty of subcolumn tasks).
+    SubcolumnSlices,
+    /// A run of consecutive singleton stream-mode levels executed as one
+    /// sequential chain by a single worker with a single end-of-run
+    /// rendezvous — batching the deep narrow tail's barriers away.
+    ChainBatch,
+}
+
+/// One step of the CPU execution schedule: a contiguous range of levels
+/// sharing one assignment strategy (`level_count > 1` only for chain
+/// batches).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CpuStep {
+    pub first_level: usize,
+    pub level_count: usize,
+    pub assignment: CpuAssignment,
+}
+
+/// Per-level annotations of the plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LevelPlan {
+    /// Level index in schedule order.
+    pub index: usize,
+    /// Columns in the level.
+    pub columns: usize,
+    /// Kernel mode ([`mode_for`] — the single source of truth).
+    pub mode: KernelMode,
+    /// GPU launch geometry.
+    pub binding: ResourceBinding,
+    /// CPU worker-pool strategy.
+    pub assignment: CpuAssignment,
+    /// Max subcolumn tasks over the level's columns.
+    pub max_subcols: usize,
+    /// Total subcolumn tasks in the level.
+    pub total_subcols: usize,
+    /// Max L length over the level's columns (subcolumn task length).
+    pub max_l_len: usize,
+    /// Work estimate (sum of [`ColumnWork::flops`]).
+    pub work_flops: u64,
+}
+
+#[derive(Debug)]
+struct PlanInner {
+    n: usize,
+    policy: Policy,
+    device: DeviceConfig,
+    levels: Levels,
+    level_plans: Vec<LevelPlan>,
+    cpu_steps: Vec<CpuStep>,
+    col_work: Vec<ColumnWork>,
+    urow: Vec<Vec<u32>>,
+    /// Row-oriented L/U level schedules, built lazily on first use: the
+    /// `O(nnz)` row views would be dead weight in solvers that only ever
+    /// take the sequential solve path (single-threaded engines, narrow
+    /// schedules), so the plan stays immutable but pays for them only when
+    /// a parallel solve actually asks.
+    trisolve: OnceLock<TriangularSchedule>,
+    /// Cached [`TriangularSchedule::parallel_worthwhile`] verdict. Kept
+    /// separately so a *narrow* pattern's probe retains only this bool —
+    /// the transient schedule built to answer it is dropped, not parked in
+    /// every cached solver.
+    trisolve_worthwhile: OnceLock<bool>,
+}
+
+/// The mode-annotated factorization schedule — see the module docs.
+#[derive(Debug, Clone)]
+pub struct FactorPlan {
+    inner: Arc<PlanInner>,
+}
+
+impl FactorPlan {
+    /// Build the plan from a dependency graph (levelizes internally).
+    pub fn build(
+        sym: &SymbolicFill,
+        deps: &DepGraph,
+        policy: &Policy,
+        device: &DeviceConfig,
+    ) -> FactorPlan {
+        FactorPlan::from_levels(sym, levelize(deps), policy, device)
+    }
+
+    /// Build the plan from an already-levelized schedule (the solver path,
+    /// where levelization is timed as its own preprocessing stage).
+    pub fn from_levels(
+        sym: &SymbolicFill,
+        levels: Levels,
+        policy: &Policy,
+        device: &DeviceConfig,
+    ) -> FactorPlan {
+        let n = sym.filled.ncols();
+        let urow = upper_rows(sym);
+        let col_work: Vec<ColumnWork> = (0..n)
+            .map(|j| {
+                let (rows, _) = sym.filled.col(j);
+                ColumnWork {
+                    l_len: rows.len() - rows.partition_point(|&r| r <= j),
+                    n_subcols: urow[j].len(),
+                }
+            })
+            .collect();
+
+        let mut level_plans = Vec::with_capacity(levels.num_levels());
+        for (index, cols) in levels.levels.iter().enumerate() {
+            let mode = mode_for(policy, cols.len(), device);
+            let mut max_subcols = 0usize;
+            let mut total_subcols = 0usize;
+            let mut max_l_len = 0usize;
+            let mut work_flops = 0u64;
+            for &j in cols {
+                let cw = col_work[j as usize];
+                max_subcols = max_subcols.max(cw.n_subcols);
+                total_subcols += cw.n_subcols;
+                max_l_len = max_l_len.max(cw.l_len);
+                work_flops += cw.flops();
+            }
+            let binding = match mode {
+                KernelMode::SmallBlock { warps_per_block } => ResourceBinding::Blocks {
+                    blocks: cols.len(),
+                    warps_per_block,
+                },
+                KernelMode::LargeBlock => ResourceBinding::Blocks {
+                    blocks: cols.len(),
+                    warps_per_block: device.max_threads_per_block / device.warp_size,
+                },
+                KernelMode::Stream => ResourceBinding::Streams {
+                    streams: device.num_streams,
+                    kernels: cols.len(),
+                },
+            };
+            // CPU strategy: wide levels are column-parallel; narrow levels
+            // slice their subcolumn tasks; singleton stream tails are
+            // chain-batched below.
+            let assignment = match mode {
+                KernelMode::SmallBlock { .. } => CpuAssignment::InterleavedColumns,
+                KernelMode::LargeBlock | KernelMode::Stream => CpuAssignment::SubcolumnSlices,
+            };
+            level_plans.push(LevelPlan {
+                index,
+                columns: cols.len(),
+                mode,
+                binding,
+                assignment,
+                max_subcols,
+                total_subcols,
+                max_l_len,
+                work_flops,
+            });
+        }
+
+        // Fold maximal runs of singleton stream levels into chain batches
+        // (one rendezvous per run instead of one per level) and group the
+        // remaining levels into single-level steps.
+        let mut cpu_steps = Vec::new();
+        let mut li = 0usize;
+        while li < level_plans.len() {
+            let chainable = |lp: &LevelPlan| lp.mode == KernelMode::Stream && lp.columns == 1;
+            if chainable(&level_plans[li]) {
+                let mut end = li + 1;
+                while end < level_plans.len() && chainable(&level_plans[end]) {
+                    end += 1;
+                }
+                for lp in &mut level_plans[li..end] {
+                    lp.assignment = CpuAssignment::ChainBatch;
+                }
+                cpu_steps.push(CpuStep {
+                    first_level: li,
+                    level_count: end - li,
+                    assignment: CpuAssignment::ChainBatch,
+                });
+                li = end;
+            } else {
+                cpu_steps.push(CpuStep {
+                    first_level: li,
+                    level_count: 1,
+                    assignment: level_plans[li].assignment,
+                });
+                li += 1;
+            }
+        }
+
+        FactorPlan {
+            inner: Arc::new(PlanInner {
+                n,
+                policy: policy.clone(),
+                device: device.clone(),
+                levels,
+                level_plans,
+                cpu_steps,
+                col_work,
+                urow,
+                trisolve: OnceLock::new(),
+                trisolve_worthwhile: OnceLock::new(),
+            }),
+        }
+    }
+
+    /// Matrix dimension the plan was built for.
+    pub fn n(&self) -> usize {
+        self.inner.n
+    }
+
+    /// Number of levels.
+    pub fn num_levels(&self) -> usize {
+        self.inner.levels.num_levels()
+    }
+
+    /// The level schedule the plan annotates.
+    pub fn levels(&self) -> &Levels {
+        &self.inner.levels
+    }
+
+    /// Per-level annotations, in schedule order.
+    pub fn level_plans(&self) -> &[LevelPlan] {
+        &self.inner.level_plans
+    }
+
+    /// One level's annotations.
+    pub fn level_plan(&self, level: usize) -> &LevelPlan {
+        &self.inner.level_plans[level]
+    }
+
+    /// The CPU execution steps (levels grouped by assignment strategy).
+    pub fn cpu_steps(&self) -> &[CpuStep] {
+        &self.inner.cpu_steps
+    }
+
+    /// Per-column work descriptions, indexed by column.
+    pub fn col_work(&self) -> &[ColumnWork] {
+        &self.inner.col_work
+    }
+
+    /// Subcolumn map: for each row `j`, the columns `k > j` with
+    /// `As(j,k) ≠ 0` (shared by every right-looking backend).
+    pub fn urow(&self) -> &[Vec<u32>] {
+        &self.inner.urow
+    }
+
+    /// The triangular-solve row schedules for this pattern, built on first
+    /// use and cached in the plan. `filled` must be the filled pattern the
+    /// plan was built from (the caller keeps it — storing a pattern copy
+    /// here would cost the same `O(nnz)` the lazy build avoids).
+    pub fn trisolve(&self, filled: &crate::sparse::Csc) -> &TriangularSchedule {
+        debug_assert_eq!(filled.ncols(), self.inner.n, "pattern mismatch");
+        self.inner
+            .trisolve
+            .get_or_init(|| TriangularSchedule::build(filled))
+    }
+
+    /// Whether the level-parallel triangular solves are worth running on
+    /// this pattern (see [`TriangularSchedule::parallel_worthwhile`]).
+    /// The first probe builds the schedules; they are retained only on a
+    /// `true` verdict — a narrow pattern keeps the cached bool and drops
+    /// the `O(nnz)` row views (the pre-plan behavior).
+    pub fn parallel_trisolve(&self, filled: &crate::sparse::Csc) -> bool {
+        *self.inner.trisolve_worthwhile.get_or_init(|| {
+            if let Some(ts) = self.inner.trisolve.get() {
+                return ts.parallel_worthwhile();
+            }
+            let ts = TriangularSchedule::build(filled);
+            let worthwhile = ts.parallel_worthwhile();
+            if worthwhile {
+                // Another racing forced build may have set it first; either
+                // value is equivalent (pattern-only, deterministic).
+                let _ = self.inner.trisolve.set(ts);
+            }
+            worthwhile
+        })
+    }
+
+    /// The policy the plan was annotated under.
+    pub fn policy(&self) -> &Policy {
+        &self.inner.policy
+    }
+
+    /// The device model the plan was annotated under.
+    pub fn device(&self) -> &DeviceConfig {
+        &self.inner.device
+    }
+
+    /// Count of levels by mode family `(small, large, stream)` — the
+    /// Table III A/B/C distribution, now answerable without running the
+    /// simulator.
+    pub fn mode_histogram(&self) -> (usize, usize, usize) {
+        let mut dist = (0, 0, 0);
+        for lp in &self.inner.level_plans {
+            match lp.mode.level_type() {
+                'A' => dist.0 += 1,
+                'B' => dist.1 += 1,
+                _ => dist.2 += 1,
+            }
+        }
+        dist
+    }
+
+    /// Total estimated factorization flops across all levels.
+    pub fn total_work(&self) -> u64 {
+        self.inner.level_plans.iter().map(|lp| lp.work_flops).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::depend::glu3;
+    use crate::sparse::gen;
+    use crate::symbolic::symbolic_fill;
+    use crate::util::Rng;
+
+    fn amd_grid(nx: usize, ny: usize, seed: u64) -> SymbolicFill {
+        let g = gen::grid2d(nx, ny, seed);
+        let p = crate::order::amd::amd_order(&g).unwrap();
+        symbolic_fill(&g.permute(p.as_scatter(), p.as_scatter())).unwrap()
+    }
+
+    #[test]
+    fn mode_selection_follows_eq4() {
+        let d = DeviceConfig::titan_x();
+        // level size <= 16 -> stream
+        assert_eq!(select_mode(1, 16, &d), KernelMode::Stream);
+        assert_eq!(select_mode(16, 16, &d), KernelMode::Stream);
+        // 1536 total warps: level 48 -> W = 32 -> large
+        assert_eq!(select_mode(48, 16, &d), KernelMode::LargeBlock);
+        assert_eq!(select_mode(17, 16, &d), KernelMode::LargeBlock);
+        // level 100 -> W = 15 -> small(8); level 1000 -> W = 1 -> small(2)
+        assert_eq!(
+            select_mode(100, 16, &d),
+            KernelMode::SmallBlock { warps_per_block: 8 }
+        );
+        assert_eq!(
+            select_mode(1000, 16, &d),
+            KernelMode::SmallBlock { warps_per_block: 2 }
+        );
+    }
+
+    /// The dedupe regression test: the plan's per-level mode agrees with
+    /// both former call sites — `Policy::mode_for` (the policy layer) and
+    /// the raw `select_mode` the simulator used to call inline — on random
+    /// AMD-ordered grids under every policy.
+    #[test]
+    fn plan_mode_agrees_with_former_call_sites() {
+        let d = DeviceConfig::titan_x();
+        let mut rng = Rng::new(0x91A7);
+        for trial in 0..4 {
+            let nx = rng.range(10, 24);
+            let ny = rng.range(10, 24);
+            let sym = amd_grid(nx, ny, 40 + trial);
+            let deps = glu3::detect(&sym.filled);
+            for policy in [
+                Policy::glu3(),
+                Policy::glu2_fixed(),
+                Policy::glu3_no_small(),
+                Policy::glu3_no_stream(),
+                Policy::glu3_with_threshold(4),
+                Policy::lee_enhanced(),
+            ] {
+                let plan = FactorPlan::build(&sym, &deps, &policy, &d);
+                assert_eq!(plan.num_levels(), plan.level_plans().len());
+                for lp in plan.level_plans() {
+                    let size = plan.levels().levels[lp.index].len();
+                    assert_eq!(size, lp.columns);
+                    // former call site 1: the policy layer
+                    assert_eq!(
+                        lp.mode,
+                        policy.mode_for(size, &d),
+                        "trial {trial} policy {} level {}",
+                        policy.name,
+                        lp.index
+                    );
+                    // former call site 2: the simulator's raw Eq. 4 call
+                    // (only comparable when no ablation gate intervenes)
+                    if policy == Policy::glu3() {
+                        assert_eq!(lp.mode, select_mode(size, 16, &d));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_annotations_are_consistent() {
+        let sym = amd_grid(20, 20, 7);
+        let deps = glu3::detect(&sym.filled);
+        let plan = FactorPlan::build(&sym, &deps, &Policy::glu3(), &DeviceConfig::titan_x());
+
+        // levels partition the columns, and the per-level aggregates match
+        // a direct recomputation from the column work table
+        let total_cols: usize = plan.level_plans().iter().map(|lp| lp.columns).sum();
+        assert_eq!(total_cols, plan.n());
+        for lp in plan.level_plans() {
+            let cols = &plan.levels().levels[lp.index];
+            let max_sub = cols
+                .iter()
+                .map(|&j| plan.col_work()[j as usize].n_subcols)
+                .max()
+                .unwrap_or(0);
+            assert_eq!(max_sub, lp.max_subcols);
+            let flops: u64 = cols
+                .iter()
+                .map(|&j| plan.col_work()[j as usize].flops())
+                .sum();
+            assert_eq!(flops, lp.work_flops);
+            // binding geometry mirrors the mode
+            match (lp.mode, lp.binding) {
+                (KernelMode::SmallBlock { warps_per_block }, ResourceBinding::Blocks { blocks, warps_per_block: w }) => {
+                    assert_eq!(blocks, lp.columns);
+                    assert_eq!(w, warps_per_block);
+                }
+                (KernelMode::LargeBlock, ResourceBinding::Blocks { blocks, warps_per_block }) => {
+                    assert_eq!(blocks, lp.columns);
+                    assert_eq!(warps_per_block, 32);
+                }
+                (KernelMode::Stream, ResourceBinding::Streams { streams, kernels }) => {
+                    assert_eq!(streams, 16);
+                    assert_eq!(kernels, lp.columns);
+                }
+                (m, b) => panic!("mode {m:?} bound to {b:?}"),
+            }
+        }
+        let (a, b, c) = plan.mode_histogram();
+        assert_eq!(a + b + c, plan.num_levels());
+        assert!(plan.total_work() > 0);
+    }
+
+    #[test]
+    fn cpu_steps_cover_levels_and_batch_singleton_tails() {
+        let sym = amd_grid(24, 24, 3);
+        let deps = glu3::detect(&sym.filled);
+        let plan = FactorPlan::build(&sym, &deps, &Policy::glu3(), &DeviceConfig::titan_x());
+
+        // steps tile the level range exactly, in order
+        let mut next = 0usize;
+        for step in plan.cpu_steps() {
+            assert_eq!(step.first_level, next);
+            assert!(step.level_count >= 1);
+            if step.assignment != CpuAssignment::ChainBatch {
+                assert_eq!(step.level_count, 1);
+            }
+            for lp in &plan.level_plans()[step.first_level..step.first_level + step.level_count] {
+                assert_eq!(lp.assignment, step.assignment);
+                if step.assignment == CpuAssignment::ChainBatch {
+                    assert_eq!(lp.columns, 1);
+                    assert_eq!(lp.mode, KernelMode::Stream);
+                }
+            }
+            next = step.first_level + step.level_count;
+        }
+        assert_eq!(next, plan.num_levels());
+
+        // an AMD mesh tail ends in consecutive singleton stream levels —
+        // they must fold into a multi-level chain batch
+        let batched = plan
+            .cpu_steps()
+            .iter()
+            .any(|s| s.assignment == CpuAssignment::ChainBatch && s.level_count > 1);
+        assert!(batched, "singleton stream tail must be chain-batched");
+
+        // wide early levels are column-parallel
+        assert_eq!(
+            plan.level_plans()[0].assignment,
+            CpuAssignment::InterleavedColumns
+        );
+    }
+
+    #[test]
+    fn plan_clone_is_shallow() {
+        let sym = amd_grid(12, 12, 1);
+        let deps = glu3::detect(&sym.filled);
+        let plan = FactorPlan::build(&sym, &deps, &Policy::glu3(), &DeviceConfig::titan_x());
+        let clone = plan.clone();
+        // same backing allocation — cloning a cached plan is free
+        assert!(std::ptr::eq(plan.urow(), clone.urow()));
+        assert!(std::ptr::eq(plan.levels(), clone.levels()));
+    }
+}

@@ -12,6 +12,12 @@
 //! padded `s`/`u` entries are zero, and the dense-tail pad is an identity
 //! block).
 //!
+//! [`lower_plan`] maps a whole [`crate::plan::FactorPlan`] onto that
+//! ladder: each level becomes a [`PlannedLaunch`] (kernel variant, block
+//! geometry from the plan's resource binding, launch count with tiling),
+//! giving the GPU-offload work a concrete launch sequence to execute and
+//! the cycle simulator a measured counterpart to reconcile against.
+//!
 //! ## Feature gating
 //!
 //! The real implementation (`pjrt` module) needs the `xla` FFI bindings,
@@ -24,6 +30,8 @@
 //! `rust/Cargo.toml`, and building with `--features pjrt`.
 
 use std::path::PathBuf;
+
+use crate::plan::{FactorPlan, KernelMode, ResourceBinding};
 
 #[cfg(feature = "pjrt")]
 mod pjrt;
@@ -52,4 +60,183 @@ pub fn default_artifact_dir() -> PathBuf {
         return PathBuf::from(d);
     }
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// One planned kernel launch of the lowered factorization — a level of the
+/// [`FactorPlan`] mapped onto the AOT artifact ladder.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlannedLaunch {
+    /// Source level index in the plan.
+    pub level: usize,
+    /// Artifact name (`level_update_{B}x{N}` — must exist in the loaded
+    /// runtime to execute).
+    pub kernel: String,
+    /// Kernel invocations this level costs: one per `(column-tile,
+    /// width-tile)` pair for block modes, one per column per tile pair in
+    /// stream mode (dispatched over the plan's CUDA streams).
+    pub launches: u64,
+    /// Thread blocks per launch.
+    pub blocks: usize,
+    /// Threads per block (warps × warp size from the plan's binding).
+    pub threads_per_block: usize,
+    /// Columns factorized by the level.
+    pub columns: usize,
+}
+
+/// The kernel-launch sequence a [`FactorPlan`] lowers to — the bridge
+/// between the ROADMAP's "real GPU offload" item and the scheduling IR:
+/// walking the plan's levels in order yields exactly the launches the
+/// future device path will enqueue, so the cycle simulator and a measured
+/// kernel ladder can be reconciled level by level.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaunchSchedule {
+    /// Launches in level order (one entry per level).
+    pub launches: Vec<PlannedLaunch>,
+}
+
+impl LaunchSchedule {
+    /// Total kernel invocations across all levels.
+    pub fn total_launches(&self) -> u64 {
+        self.launches.iter().map(|l| l.launches).sum()
+    }
+
+    /// Distinct artifact names the schedule needs, sorted.
+    pub fn kernels_used(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.launches.iter().map(|l| l.kernel.as_str()).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+/// Lower a [`FactorPlan`] into its kernel-launch sequence against the
+/// static artifact ladder. Pure plan walk — needs no loaded runtime, so
+/// the default (stub) build can already answer "what would the GPU path
+/// launch"; `Runtime::lower_plan` additionally verifies the named
+/// artifacts are compiled.
+///
+/// Each level picks the smallest `level_update_{B}x{N}` variant that fits
+/// its `(columns, max L length)` batch geometry; oversize levels tile over
+/// both dimensions (columns in chunks of `B`, subcolumn length in chunks
+/// of `N`), so lowering never fails — it just costs more launches.
+pub fn lower_plan(plan: &FactorPlan) -> LaunchSchedule {
+    let warp = plan.device().warp_size;
+    let launches = plan
+        .level_plans()
+        .iter()
+        .map(|lp| {
+            let cols = lp.columns.max(1);
+            let width = lp.max_l_len.max(1);
+            // Stream-mode kernels handle exactly one column each, so only
+            // the width participates in variant selection and tiling; the
+            // block modes batch `cols` columns and tile over both axes.
+            let (lb, ln) = LEVEL_SIZES
+                .iter()
+                .copied()
+                .find(|&(b, n)| {
+                    width <= n && (matches!(lp.mode, KernelMode::Stream) || cols <= b)
+                })
+                .unwrap_or(LEVEL_SIZES[LEVEL_SIZES.len() - 1]);
+            let width_tiles = width.div_ceil(ln) as u64;
+            let (blocks, threads_per_block, launches) = match lp.binding {
+                ResourceBinding::Blocks {
+                    blocks,
+                    warps_per_block,
+                } => (
+                    blocks,
+                    warps_per_block * warp,
+                    cols.div_ceil(lb) as u64 * width_tiles,
+                ),
+                // Stream mode: one kernel per column (× width tiles), one
+                // max-occupancy block per subcolumn.
+                ResourceBinding::Streams { kernels, .. } => (
+                    lp.max_subcols.max(1),
+                    plan.device().max_threads_per_block,
+                    kernels as u64 * width_tiles,
+                ),
+            };
+            debug_assert!(matches!(
+                (lp.mode, lp.binding),
+                (KernelMode::Stream, ResourceBinding::Streams { .. })
+                    | (KernelMode::SmallBlock { .. }, ResourceBinding::Blocks { .. })
+                    | (KernelMode::LargeBlock, ResourceBinding::Blocks { .. })
+            ));
+            PlannedLaunch {
+                level: lp.index,
+                kernel: format!("level_update_{lb}x{ln}"),
+                launches,
+                blocks,
+                threads_per_block,
+                columns: lp.columns,
+            }
+        })
+        .collect();
+    LaunchSchedule { launches }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::depend::glu3;
+    use crate::gpusim::{DeviceConfig, Policy};
+    use crate::sparse::gen;
+    use crate::symbolic::symbolic_fill;
+
+    fn mesh_plan() -> FactorPlan {
+        let g = gen::grid2d(20, 20, 3);
+        let p = crate::order::amd::amd_order(&g).unwrap();
+        let a = g.permute(p.as_scatter(), p.as_scatter());
+        let sym = symbolic_fill(&a).unwrap();
+        let deps = glu3::detect(&sym.filled);
+        FactorPlan::build(&sym, &deps, &Policy::glu3(), &DeviceConfig::titan_x())
+    }
+
+    #[test]
+    fn lowering_walks_every_level_in_order() {
+        let plan = mesh_plan();
+        let sched = lower_plan(&plan);
+        assert_eq!(sched.launches.len(), plan.num_levels());
+        for (i, l) in sched.launches.iter().enumerate() {
+            assert_eq!(l.level, i);
+            assert!(l.launches >= 1);
+            assert!(l.threads_per_block >= 1);
+            assert_eq!(l.columns, plan.level_plan(i).columns);
+            // every kernel name resolves against the artifact ladder
+            assert!(
+                LEVEL_SIZES
+                    .iter()
+                    .any(|(b, n)| l.kernel == format!("level_update_{b}x{n}")),
+                "unknown kernel {}",
+                l.kernel
+            );
+        }
+        assert!(sched.total_launches() >= plan.num_levels() as u64);
+        assert!(!sched.kernels_used().is_empty());
+    }
+
+    #[test]
+    fn stream_levels_launch_per_column_and_wide_levels_tile() {
+        let plan = mesh_plan();
+        let sched = lower_plan(&plan);
+        for (lp, l) in plan.level_plans().iter().zip(&sched.launches) {
+            match lp.mode {
+                crate::plan::KernelMode::Stream => {
+                    // one kernel per column (× width tiles)
+                    assert!(l.launches >= lp.columns as u64, "{l:?}");
+                    assert_eq!(l.threads_per_block, 1024);
+                }
+                crate::plan::KernelMode::SmallBlock { warps_per_block } => {
+                    assert_eq!(l.threads_per_block, warps_per_block * 32);
+                    // a level wider than the biggest batch variant must tile
+                    let max_b = LEVEL_SIZES.iter().map(|&(b, _)| b).max().unwrap();
+                    if lp.columns > max_b {
+                        assert!(l.launches > 1, "{l:?}");
+                    }
+                }
+                crate::plan::KernelMode::LargeBlock => {
+                    assert_eq!(l.threads_per_block, 1024);
+                }
+            }
+        }
+    }
 }

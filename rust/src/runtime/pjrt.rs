@@ -169,6 +169,25 @@ impl Runtime {
         Ok((lu, x_full[..t].to_vec()))
     }
 
+    /// Lower a [`crate::plan::FactorPlan`] to its kernel-launch sequence
+    /// and verify every kernel it names is compiled in this runtime — the
+    /// executable half of the ROADMAP's GPU-offload path: the returned
+    /// schedule walks the plan's levels exactly as the device loop will.
+    pub fn lower_plan(
+        &self,
+        plan: &crate::plan::FactorPlan,
+    ) -> anyhow::Result<super::LaunchSchedule> {
+        let sched = super::lower_plan(plan);
+        for name in sched.kernels_used() {
+            anyhow::ensure!(
+                self.executables.contains_key(name),
+                "plan needs artifact {name}, not loaded (have {:?})",
+                self.names()
+            );
+        }
+        Ok(sched)
+    }
+
     /// The 2×2 quickstart smoke graph: `matmul(x, y) + 2`.
     pub fn quickstart(&self, x: [f32; 4], y: [f32; 4]) -> anyhow::Result<[f32; 4]> {
         let lx = xla::Literal::vec1(&x).reshape(&[2, 2])?;

@@ -51,6 +51,16 @@ impl Runtime {
     pub fn quickstart(&self, _x: [f32; 4], _y: [f32; 4]) -> anyhow::Result<[f32; 4]> {
         anyhow::bail!("pjrt feature disabled")
     }
+
+    /// Stubbed plan lowering. The pure walk is available without a runtime
+    /// as [`super::lower_plan`]; this method (which would additionally
+    /// verify the named artifacts are compiled) needs the `pjrt` feature.
+    pub fn lower_plan(
+        &self,
+        _plan: &crate::plan::FactorPlan,
+    ) -> anyhow::Result<super::LaunchSchedule> {
+        anyhow::bail!("pjrt feature disabled")
+    }
 }
 
 #[cfg(test)]

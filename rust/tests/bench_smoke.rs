@@ -48,8 +48,22 @@ fn bench_smoke_report_covers_all_engines_and_validates() {
         assert_eq!(threads, spec.thread_counts, "{engine} thread sweep");
     }
 
+    // the v2 plan block: histogram covers every level, timings are sane
+    let p = &report.plan;
+    assert!(p.levels > 1, "smoke fixture must be multi-level");
+    assert_eq!(
+        p.modes_small + p.modes_large + p.modes_stream,
+        p.levels,
+        "mode histogram must cover every level"
+    );
+    for v in [p.build_ms, p.symbolic_ms, p.detect_ms, p.levelize_ms] {
+        assert!(v.is_finite() && v >= 0.0, "plan timing {v}");
+    }
+
     let json = report.to_json();
     validate_json_schema(&json).expect("well-formed report");
+    assert!(json.contains("\"plan\""), "plan block must be emitted");
+    assert!(json.contains("\"mode_histogram\""));
 
     // and the file artifact round-trips
     let path = std::env::temp_dir().join("BENCH_numeric_smoke_test.json");

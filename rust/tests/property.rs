@@ -191,3 +191,83 @@ fn refactor_matches_fresh_factor() {
         assert!(d < 1e-10, "trial {trial}: scaled solutions diverged by {d}");
     }
 }
+
+/// The plan-driven parallel right-looking engine against the
+/// simulator-ordered engine, on a fixture engineered (by calibrating the
+/// stream threshold and device warp budget to the observed level widths)
+/// to hit all three kernel modes — and therefore all three CPU assignment
+/// strategies (interleaved columns, subcolumn slices, chain batches):
+/// bit-identical at 1 thread, within 1e-12 componentwise at 2/4 threads.
+#[test]
+fn plan_driven_parrl_matches_simulator_across_all_modes() {
+    use glu3::depend::{glu3 as det3, levelize};
+    use glu3::gpusim::{simulate_factorization, DeviceConfig, Policy};
+    use glu3::numeric::{parrl, WorkerPool};
+    use glu3::plan::{CpuAssignment, FactorPlan};
+    use glu3::symbolic::symbolic_fill;
+
+    let g = gen::grid2d(24, 24, 11);
+    let p = glu3::order::amd::amd_order(&g).unwrap();
+    let a = g.permute(p.as_scatter(), p.as_scatter());
+    let f = symbolic_fill(&a).unwrap();
+    let lv = levelize(&det3::detect(&f.filled));
+
+    // Calibrate: pick three distinct observed level widths s1 < s2 < s3 and
+    // shape the policy/device so s1 -> stream, s2 -> large (32*s2 warps /
+    // s2 columns = 32), s3 -> small (fewer than 32 warps per column).
+    let mut sizes: Vec<usize> = lv.levels.iter().map(|l| l.len()).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    assert!(sizes.len() >= 3, "fixture must offer 3 distinct level widths");
+    let (s1, s2, s3) = (sizes[0], sizes[sizes.len() / 2], sizes[sizes.len() - 1]);
+    assert!(s1 < s2 && s2 < s3);
+    let mut device = DeviceConfig::titan_x();
+    device.num_sms = s2;
+    device.max_warps_per_sm = 32;
+    let policy = Policy::glu3_with_threshold(s1);
+
+    let plan = FactorPlan::from_levels(&f, lv.clone(), &policy, &device);
+    let (hs, hl, hc) = plan.mode_histogram();
+    assert!(
+        hs > 0 && hl > 0 && hc > 0,
+        "fixture must hit all three modes, got A/B/C {hs}/{hl}/{hc}"
+    );
+    // ...and all three CPU strategies are actually scheduled
+    for want in [
+        CpuAssignment::InterleavedColumns,
+        CpuAssignment::SubcolumnSlices,
+        CpuAssignment::ChainBatch,
+    ] {
+        assert!(
+            plan.cpu_steps().iter().any(|s| s.assignment == want),
+            "strategy {want:?} missing from the plan"
+        );
+    }
+
+    let (sim, rep) = simulate_factorization(&f, &lv, &policy, &device).unwrap();
+    assert_eq!(rep.level_distribution(), (hs, hl, hc));
+
+    for threads in [1usize, 2, 4] {
+        let pool = WorkerPool::new(threads);
+        let par = parrl::factor_with(&f, &plan, &pool).unwrap();
+        for (i, (p, q)) in par.lu.values().iter().zip(sim.lu.values()).enumerate() {
+            if threads == 1 {
+                assert!(
+                    p == q,
+                    "1 thread must be bit-identical at entry {i}: {p} vs {q}"
+                );
+            } else {
+                assert!(
+                    (p - q).abs() <= 1e-12 * (1.0 + q.abs()),
+                    "threads {threads} entry {i}: {p} vs {q}"
+                );
+            }
+        }
+        // and the engine's factors actually solve the system
+        let b: Vec<f64> = (0..a.nrows()).map(|i| ((i % 7) as f64) - 3.0).collect();
+        let mut x = b.clone();
+        glu3::numeric::trisolve::lower_unit_solve(&par.lu, &mut x);
+        glu3::numeric::trisolve::upper_solve(&par.lu, &mut x);
+        assert!(residual(&a, &x, &b) < 1e-10, "threads {threads}");
+    }
+}

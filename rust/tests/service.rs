@@ -234,3 +234,29 @@ fn checkout_outcome_reporting() {
         assert_eq!(g.stats().numeric_runs, 2);
     }
 }
+
+/// Acceptance: checkout hits perform zero plan rebuilds — the cached
+/// solver's mode-annotated FactorPlan is part of the pattern-keyed
+/// symbolic state, so a hit reruns only the numeric kernel against it.
+#[test]
+fn checkout_hits_skip_plan_rebuilds() {
+    let pool = SolverPool::new(GluOptions::default());
+    let a = gen::netlist(180, 5, 10, 0.05, 2, 0.2, 909);
+    let mut rng = Rng::new(77);
+    let b = vec![1.0; 180];
+    for _ in 0..5 {
+        let m = restamp(&a, &mut rng);
+        pool.solve(&m, &b).unwrap();
+    }
+    let st = pool.stats();
+    assert_eq!((st.misses, st.hits), (1, 4));
+    let es = pool.entry_stats();
+    assert_eq!(es.len(), 1);
+    // one plan build at factor time, never again across 4 refactor hits
+    assert_eq!(es[0].1.plan_builds, 1);
+    assert_eq!(es[0].1.numeric_runs, 5);
+    assert_eq!(es[0].1.symbolic_runs, 1);
+    // and the per-stage preprocessing timings were recorded once
+    assert!(es[0].1.plan_ms >= 0.0);
+    assert!(es[0].1.detect_ms >= 0.0 && es[0].1.levelize_ms >= 0.0);
+}
