@@ -10,18 +10,24 @@
 //! [`crate::plan::FactorPlan`]'s per-level mode histogram plus the
 //! preprocessing stage wall-clocks (symbolic / detect / levelize / plan
 //! build), making the paper's detection-speedup claim directly
-//! measurable per run. Wired into the CLI as `glu3 bench` and into CI as
-//! a schema-validated smoke job; the perf trajectory lives in the emitted
-//! JSON, not in a CI gate.
+//! measurable per run — and, since schema v3, a `refactor_loop` block:
+//! N repeated refactorizations of one fixed pattern timed per iteration,
+//! the scatter-mapped indexed engine ([`parrl::refactor_in_place`])
+//! head-to-head against the search-based baseline
+//! ([`parrl::refactor_in_place_search`]) on the same plan and pool, plus
+//! the one-time scatter build cost being amortized. Wired into the CLI as
+//! `glu3 bench` and into CI as a schema-validated smoke job; the perf
+//! trajectory lives in the emitted JSON, not in a CI gate.
 //!
 //! All timings are medians (factor/refactor/solve) or minima (the
 //! spawn-vs-pool ratio, where min is the stable statistic) over
 //! `iters` runs after `warmup` discarded runs, in milliseconds.
 
 use crate::glu::{GluOptions, GluSolver, NumericEngine};
-use crate::numeric::{parlu, WorkerPool};
+use crate::numeric::{parlu, parrl, WorkerPool};
 use crate::sparse::{gen, Csc};
 use crate::symbolic::symbolic_fill;
+use crate::util::stats::percentile;
 use crate::util::timer::measure;
 
 /// What to bench: one matrix, several thread counts, a sampling plan.
@@ -103,6 +109,48 @@ pub struct PlanReport {
     pub levelize_ms: f64,
 }
 
+/// The refactor-loop head-to-head (schema v3): N repeated refactors of a
+/// fixed pattern, per-iteration wall-clock, the indexed scatter-mapped
+/// engine against the search-based baseline on the same plan, pool, and
+/// stamped values — the measured difference is exactly the per-refactor
+/// position searching and CAS traffic the [`crate::plan::ScatterMap`] and
+/// destination ownership remove.
+#[derive(Debug, Clone)]
+pub struct RefactorLoopReport {
+    /// Worker threads (the largest requested thread count).
+    pub threads: usize,
+    /// Recorded iterations per engine (warmup discarded).
+    pub iterations: usize,
+    /// One-time scatter map build, ms (the pattern-time cost amortized by
+    /// the loop).
+    pub scatter_build_ms: f64,
+    /// Per-iteration wall-clock of the indexed engine, ms.
+    pub indexed_ms: Vec<f64>,
+    /// Per-iteration wall-clock of the search-based baseline, ms.
+    pub search_ms: Vec<f64>,
+    /// MAC commits per refactor executed as plain stores instead of CAS
+    /// (the plan's ownership/chain levels).
+    pub atomic_commits_avoided: u64,
+}
+
+impl RefactorLoopReport {
+    /// Median indexed iteration, ms.
+    pub fn indexed_median_ms(&self) -> f64 {
+        percentile(&self.indexed_ms, 50.0)
+    }
+
+    /// Median search-based iteration, ms.
+    pub fn search_median_ms(&self) -> f64 {
+        percentile(&self.search_ms, 50.0)
+    }
+
+    /// How much the indexed path wins by (≥ 1.5 is the acceptance bar on
+    /// the 100×100 AMD grid at 4 threads).
+    pub fn speedup(&self) -> f64 {
+        self.search_median_ms() / self.indexed_median_ms().max(1e-9)
+    }
+}
+
 /// The pool-vs-spawn head-to-head (same schedule, same arithmetic).
 #[derive(Debug, Clone)]
 pub struct SpawnBaseline {
@@ -130,6 +178,7 @@ pub struct BenchReport {
     pub samples: Vec<EngineSample>,
     pub baseline: SpawnBaseline,
     pub plan: PlanReport,
+    pub refactor_loop: RefactorLoopReport,
 }
 
 /// Run the whole harness over `spec`.
@@ -192,6 +241,7 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
     }
 
     let baseline = spawn_vs_pool(spec)?;
+    let refactor_loop = refactor_loop(spec)?;
     let plan = plan.expect("at least one engine sampled");
 
     Ok(BenchReport {
@@ -202,6 +252,63 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
         samples,
         baseline,
         plan,
+        refactor_loop,
+    })
+}
+
+/// The refactor-loop head-to-head: AMD-permute the matrix, build one plan
+/// (and time its one-time scatter map build), then run `iterations`
+/// value-restamped refactors through the indexed engine and through the
+/// search-based baseline — same plan, same persistent pool, same stamped
+/// values, so the per-iteration gap is purely the removed position
+/// resolution and CAS traffic.
+pub fn refactor_loop(spec: &BenchSpec) -> anyhow::Result<RefactorLoopReport> {
+    use crate::depend::{glu3, levelize};
+    use crate::gpusim::{DeviceConfig, Policy};
+    use crate::plan::FactorPlan;
+
+    let threads = spec.thread_counts.iter().copied().max().unwrap_or(1);
+    let p = crate::order::amd::amd_order(&spec.a)?;
+    let a = spec.a.permute(p.as_scatter(), p.as_scatter());
+    let sym = symbolic_fill(&a)?;
+    let levels = levelize(&glu3::detect(&sym.filled));
+    let plan = FactorPlan::from_levels(&sym, levels, &Policy::glu3(), &DeviceConfig::titan_x());
+    let pool = WorkerPool::new(threads);
+
+    // The pattern-time cost the loop amortizes, paid exactly once.
+    let t0 = std::time::Instant::now();
+    let _ = plan.scatter(&sym.filled);
+    let scatter_build_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let mut lu = sym.filled.clone();
+    let baseline_vals = lu.values().to_vec();
+    let iterations = spec.iters.max(3);
+    let mut indexed_ms = Vec::with_capacity(iterations);
+    let mut search_ms = Vec::with_capacity(iterations);
+    for it in 0..spec.warmup + iterations {
+        lu.values_mut().copy_from_slice(&baseline_vals);
+        let t = std::time::Instant::now();
+        parrl::refactor_in_place(&mut lu, &plan, &pool)?;
+        if it >= spec.warmup {
+            indexed_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+    for it in 0..spec.warmup + iterations {
+        lu.values_mut().copy_from_slice(&baseline_vals);
+        let t = std::time::Instant::now();
+        parrl::refactor_in_place_search(&mut lu, &plan, &pool)?;
+        if it >= spec.warmup {
+            search_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+
+    Ok(RefactorLoopReport {
+        threads,
+        iterations,
+        scatter_build_ms,
+        indexed_ms,
+        search_ms,
+        atomic_commits_avoided: plan.atomic_commits_avoided(),
     })
 }
 
@@ -279,14 +386,20 @@ fn json_str(s: &str) -> String {
     out
 }
 
+/// Render a slice of ms samples as a JSON number array.
+fn json_num_array(xs: &[f64]) -> String {
+    let items: Vec<String> = xs.iter().map(|&v| json_num(v)).collect();
+    format!("[{}]", items.join(", "))
+}
+
 impl BenchReport {
     /// Hand-rolled JSON (no serde in the offline vendored crate set).
-    /// Schema `glu3-bench-numeric-v2` (v2 added the `plan` block);
-    /// validated by the CI smoke job.
+    /// Schema `glu3-bench-numeric-v3` (v2 added the `plan` block, v3 the
+    /// `refactor_loop` block); validated by the CI smoke job.
     pub fn to_json(&self) -> String {
         let mut s = String::new();
         s.push_str("{\n");
-        s.push_str("  \"schema\": \"glu3-bench-numeric-v2\",\n");
+        s.push_str("  \"schema\": \"glu3-bench-numeric-v3\",\n");
         s.push_str(&format!("  \"matrix\": \"{}\",\n", json_str(&self.matrix)));
         s.push_str(&format!("  \"n\": {},\n", self.n));
         s.push_str(&format!("  \"nnz\": {},\n", self.nnz));
@@ -317,7 +430,7 @@ impl BenchReport {
         s.push_str(&format!(
             "  \"plan\": {{\"levels\": {}, \"mode_histogram\": {{\"small\": {}, \
              \"large\": {}, \"stream\": {}}}, \"build_ms\": {}, \"symbolic_ms\": {}, \
-             \"detect_ms\": {}, \"levelize_ms\": {}}}\n",
+             \"detect_ms\": {}, \"levelize_ms\": {}}},\n",
             self.plan.levels,
             self.plan.modes_small,
             self.plan.modes_large,
@@ -326,6 +439,22 @@ impl BenchReport {
             json_num(self.plan.symbolic_ms),
             json_num(self.plan.detect_ms),
             json_num(self.plan.levelize_ms)
+        ));
+        let rl = &self.refactor_loop;
+        s.push_str(&format!(
+            "  \"refactor_loop\": {{\"threads\": {}, \"iterations\": {}, \
+             \"scatter_build_ms\": {}, \"atomic_commits_avoided\": {}, \
+             \"indexed_ms\": {}, \"search_ms\": {}, \"indexed_median_ms\": {}, \
+             \"search_median_ms\": {}, \"speedup\": {}}}\n",
+            rl.threads,
+            rl.iterations,
+            json_num(rl.scatter_build_ms),
+            rl.atomic_commits_avoided,
+            json_num_array(&rl.indexed_ms),
+            json_num_array(&rl.search_ms),
+            json_num(rl.indexed_median_ms()),
+            json_num(rl.search_median_ms()),
+            json_num(rl.speedup())
         ));
         s.push_str("}\n");
         s
@@ -338,13 +467,13 @@ impl BenchReport {
     }
 }
 
-/// Light structural validation of a `glu3-bench-numeric-v2` document:
-/// required keys present (including the v2 `plan` block), braces/brackets
-/// balanced, at least one result row. (CI additionally runs it through a
-/// real JSON parser.)
+/// Light structural validation of a `glu3-bench-numeric-v3` document:
+/// required keys present (including the v2 `plan` and v3 `refactor_loop`
+/// blocks), braces/brackets balanced, at least one result row. (CI
+/// additionally runs it through a real JSON parser.)
 pub fn validate_json_schema(s: &str) -> anyhow::Result<()> {
     for key in [
-        "\"schema\": \"glu3-bench-numeric-v2\"",
+        "\"schema\": \"glu3-bench-numeric-v3\"",
         "\"matrix\"",
         "\"n\"",
         "\"nnz\"",
@@ -366,6 +495,14 @@ pub fn validate_json_schema(s: &str) -> anyhow::Result<()> {
         "\"symbolic_ms\"",
         "\"detect_ms\"",
         "\"levelize_ms\"",
+        "\"refactor_loop\"",
+        "\"iterations\"",
+        "\"scatter_build_ms\"",
+        "\"atomic_commits_avoided\"",
+        "\"indexed_ms\"",
+        "\"search_ms\"",
+        "\"indexed_median_ms\"",
+        "\"search_median_ms\"",
     ] {
         anyhow::ensure!(s.contains(key), "missing key {key}");
     }
@@ -418,6 +555,17 @@ mod tests {
         }
     }
 
+    fn toy_refactor_loop() -> RefactorLoopReport {
+        RefactorLoopReport {
+            threads: 4,
+            iterations: 3,
+            scatter_build_ms: 0.5,
+            indexed_ms: vec![1.0, 2.0, 3.0],
+            search_ms: vec![4.0, 6.0, 8.0],
+            atomic_commits_avoided: 128,
+        }
+    }
+
     #[test]
     fn json_roundtrip_is_wellformed() {
         let report = BenchReport {
@@ -447,12 +595,28 @@ mod tests {
                 pool_ms: 2.0,
             },
             plan: toy_plan(),
+            refactor_loop: toy_refactor_loop(),
         };
         let json = report.to_json();
         validate_json_schema(&json).unwrap();
         assert!(json.contains("\"factor_ms\": null"));
         assert!(json.contains("\"speedup\": 5.000000"));
         assert!(json.contains("\"mode_histogram\": {\"small\": 1, \"large\": 1, \"stream\": 1}"));
+        // the refactor-loop block: per-iteration arrays + medians
+        assert!(json.contains("\"indexed_ms\": [1.000000, 2.000000, 3.000000]"));
+        assert!(json.contains("\"search_ms\": [4.000000, 6.000000, 8.000000]"));
+        assert!(json.contains("\"indexed_median_ms\": 2.000000"));
+        assert!(json.contains("\"search_median_ms\": 6.000000"));
+        assert!(json.contains("\"speedup\": 3.000000"));
+        assert!(json.contains("\"atomic_commits_avoided\": 128"));
+    }
+
+    #[test]
+    fn refactor_loop_medians_and_speedup() {
+        let rl = toy_refactor_loop();
+        assert_eq!(rl.indexed_median_ms(), 2.0);
+        assert_eq!(rl.search_median_ms(), 6.0);
+        assert!((rl.speedup() - 3.0).abs() < 1e-12);
     }
 
     #[test]
@@ -475,6 +639,7 @@ mod tests {
                 pool_ms: 1.0,
             },
             plan: toy_plan(),
+            refactor_loop: toy_refactor_loop(),
         };
         let json = report.to_json();
         validate_json_schema(&json).unwrap();
@@ -483,7 +648,7 @@ mod tests {
 
     #[test]
     fn validator_rejects_truncation() {
-        let report_json = "{\n  \"schema\": \"glu3-bench-numeric-v2\",\n  \"results\": [";
+        let report_json = "{\n  \"schema\": \"glu3-bench-numeric-v3\",\n  \"results\": [";
         assert!(validate_json_schema(report_json).is_err());
     }
 

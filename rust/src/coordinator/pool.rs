@@ -30,10 +30,12 @@
 //! [`crate::glu::NumericEngine::ParallelRightLooking`]). Each cached
 //! [`GluSolver`] owns its persistent worker pool and its mode-annotated
 //! [`crate::plan::FactorPlan`] (the levelized schedule with per-level
-//! kernel modes, CPU assignment strategies, and triangular-solve row
-//! schedules), so refactors and batched solves on a warm entry run
-//! level-parallel with no thread spawn — and **zero plan rebuilds**
-//! (`GluStats::plan_builds` stays at 1) — on the hot path. Worker threads are parked (not spinning) between
+//! kernel modes, CPU assignment strategies, destination-ownership groups,
+//! the pattern-time [`crate::plan::ScatterMap`] of the indexed MAC loop,
+//! and triangular-solve row schedules), so refactors and batched solves
+//! on a warm entry run level-parallel with no thread spawn — and **zero
+//! plan or scatter-map rebuilds** (`GluStats::plan_builds` and
+//! `GluStats::scatter_builds` stay at 1) — on the hot path. Worker threads are parked (not spinning) between
 //! checkouts; a cache with many parallel-engine entries therefore costs
 //! idle threads, not idle cycles — size `shards × capacity × threads`
 //! accordingly.

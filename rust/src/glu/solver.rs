@@ -138,6 +138,17 @@ pub struct GluStats {
     /// always 1: refactors and solves reuse it, and the service layer
     /// asserts cache hits never replan.
     pub plan_builds: usize,
+    /// How many times the pattern-time [`crate::plan::ScatterMap`] has
+    /// been built for this solver — 0 until a scatter-consuming engine
+    /// (the indexed parallel right-looking path) first runs, 1 ever after:
+    /// refactors and pool checkout hits reuse the cached map, and the
+    /// service layer asserts it.
+    pub scatter_builds: usize,
+    /// MAC element commits per numeric run executed with plain stores
+    /// instead of CAS loops (destination-ownership and chain-batch levels
+    /// of the plan) — the atomic traffic the ownership-aware partitioning
+    /// removes from the hot loop.
+    pub atomic_commits_avoided: u64,
 }
 
 impl GluStats {
@@ -270,6 +281,8 @@ impl GluSolver {
             symbolic_runs: 1,
             numeric_runs: 1,
             plan_builds: 1,
+            scatter_builds: plan.scatter_builds(),
+            atomic_commits_avoided: plan.atomic_commits_avoided(),
         };
 
         Ok(GluSolver {
@@ -418,6 +431,9 @@ impl GluSolver {
                 self.stats.numeric_ms = numeric_ms;
                 self.stats.sim = sim;
                 self.stats.numeric_runs += 1;
+                // Stays 1 forever after the first scatter-consuming run —
+                // the refactor fast path never rebuilds the map.
+                self.stats.scatter_builds = self.plan.scatter_builds();
                 Ok(())
             }
             Err(e) => {
@@ -779,6 +795,36 @@ mod tests {
                 >= st.preprocess_ms + st.symbolic_ms + st.levelization_ms
         );
         assert_eq!(st.plan_builds, 1);
+    }
+
+    /// The pattern-time scatter map is built exactly once per solver by
+    /// the indexed engine and reused by every refactor; engines that never
+    /// consume it never pay for it.
+    #[test]
+    fn scatter_map_built_once_for_indexed_engine() {
+        let a = gen::grid2d(20, 20, 7);
+        let opts = GluOptions {
+            engine: NumericEngine::ParallelRightLooking { threads: 2 },
+            ..Default::default()
+        };
+        let mut s = GluSolver::factor(&a, &opts).unwrap();
+        assert_eq!(s.stats().scatter_builds, 1);
+        assert!(
+            s.stats().atomic_commits_avoided > 0,
+            "AMD mesh must have ownership/chain levels"
+        );
+        let mut a2 = a.clone();
+        for v in a2.values_mut() {
+            *v *= 1.2;
+        }
+        s.refactor(&a2).unwrap();
+        s.refactor(&a).unwrap();
+        assert_eq!(s.stats().numeric_runs, 3);
+        assert_eq!(s.stats().scatter_builds, 1, "refactors must reuse the map");
+
+        // the simulated engine never consumes the map — stays lazy
+        let sim = GluSolver::factor(&a, &GluOptions::default()).unwrap();
+        assert_eq!(sim.stats().scatter_builds, 0);
     }
 
     #[test]

@@ -17,16 +17,30 @@
 //! `mem_latency / min(resident_warps_per_sm, MLP_CAP)` — Little's-law
 //! latency hiding capped by the SM's memory-level parallelism.
 
-/// Issue cycles per MAC iteration of one warp (ld multiplier, ld/st target,
-/// ld row index, FMA, loop bookkeeping — Maxwell dual-issue averaged).
+/// Issue cycles per MAC iteration of one warp when positions are resolved
+/// at run time (ld multiplier, ld/st target, ld row index plus the
+/// row-match compare/branch, FMA, loop bookkeeping — Maxwell dual-issue
+/// averaged).
 pub const MAC_ISSUE_CYCLES: u64 = 8;
+
+/// Issue cycles per MAC iteration when the kernel consumes the
+/// pattern-time [`crate::plan::ScatterMap`] as its gather/scatter index
+/// buffers: the row-match compare/branch disappears — ld destination
+/// index, ld multiplier·L, ld/st target, FMA.
+pub const MAC_ISSUE_CYCLES_INDEXED: u64 = 6;
 
 /// Issue cycles per divide iteration of one warp.
 pub const DIV_ISSUE_CYCLES: u64 = 6;
 
-/// Fixed overhead per subcolumn task (pointer setup, multiplier broadcast,
-/// warp-level reduction of the loop bound).
+/// Fixed overhead per subcolumn task when positions are resolved at run
+/// time (pointer setup, multiplier broadcast, the multiplier's binary
+/// search, warp-level reduction of the loop bound).
 pub const SUBCOL_OVERHEAD_CYCLES: u64 = 48;
+
+/// Fixed overhead per subcolumn task with precomputed indices: the
+/// multiplier position and run bounds come straight from the map —
+/// pointer setup and broadcast only.
+pub const SUBCOL_OVERHEAD_CYCLES_INDEXED: u64 = 24;
 
 /// Fixed overhead per column (pivot broadcast + block-level sync between
 /// divide and update phases).
@@ -54,13 +68,20 @@ pub fn div_bytes_per_elem(bytes_per_value: usize) -> u64 {
 }
 
 /// Cycles for one subcolumn of `len` update targets processed by `threads`
-/// threads, with `stall` effective stall cycles per iteration.
-pub fn subcol_cycles(len: usize, threads: usize, stall: u64) -> u64 {
+/// threads, with `stall` effective stall cycles per iteration. `indexed`
+/// credits the pattern-time scatter map (no multiplier search, no
+/// row-match scan — see the `_INDEXED` constants).
+pub fn subcol_cycles(len: usize, threads: usize, stall: u64, indexed: bool) -> u64 {
     if len == 0 {
         return 0;
     }
+    let (overhead, issue) = if indexed {
+        (SUBCOL_OVERHEAD_CYCLES_INDEXED, MAC_ISSUE_CYCLES_INDEXED)
+    } else {
+        (SUBCOL_OVERHEAD_CYCLES, MAC_ISSUE_CYCLES)
+    };
     let iters = len.div_ceil(threads.max(1)) as u64;
-    SUBCOL_OVERHEAD_CYCLES + iters * (MAC_ISSUE_CYCLES + stall)
+    overhead + iters * (issue + stall)
 }
 
 /// Cycles for the divide phase of a column with `len` L entries, `threads`
@@ -84,25 +105,41 @@ mod tests {
     fn subcol_scaling() {
         // 64 elements on one warp: 2 iterations, no stall.
         assert_eq!(
-            subcol_cycles(64, 32, 0),
+            subcol_cycles(64, 32, 0, false),
             SUBCOL_OVERHEAD_CYCLES + 2 * MAC_ISSUE_CYCLES
         );
         // 64 elements on 1024 threads: 1 iteration.
         assert_eq!(
-            subcol_cycles(64, 1024, 0),
+            subcol_cycles(64, 1024, 0, false),
             SUBCOL_OVERHEAD_CYCLES + MAC_ISSUE_CYCLES
         );
-        assert_eq!(subcol_cycles(0, 32, 10), 0);
+        assert_eq!(subcol_cycles(0, 32, 10, false), 0);
+        assert_eq!(subcol_cycles(0, 32, 10, true), 0);
     }
 
     #[test]
     fn more_threads_never_slower() {
         for len in [1usize, 31, 32, 33, 1000, 5000] {
-            let mut prev = u64::MAX;
-            for threads in [32, 64, 128, 256, 512, 1024] {
-                let c = subcol_cycles(len, threads, 25);
-                assert!(c <= prev, "len {len} threads {threads}");
-                prev = c;
+            for indexed in [false, true] {
+                let mut prev = u64::MAX;
+                for threads in [32, 64, 128, 256, 512, 1024] {
+                    let c = subcol_cycles(len, threads, 25, indexed);
+                    assert!(c <= prev, "len {len} threads {threads}");
+                    prev = c;
+                }
+            }
+        }
+    }
+
+    /// The indexed kernel is credited for the removed search work: never
+    /// more expensive, strictly cheaper on any nonzero task.
+    #[test]
+    fn indexed_credit_is_monotone() {
+        for len in [1usize, 32, 1000] {
+            for stall in [0u64, 25, 400] {
+                let search = subcol_cycles(len, 32, stall, false);
+                let indexed = subcol_cycles(len, 32, stall, true);
+                assert!(indexed < search, "len {len} stall {stall}");
             }
         }
     }

@@ -55,7 +55,11 @@ fn greedy_makespan(durations: impl Iterator<Item = u64>, slots: usize) -> u64 {
 
 /// Simulate one level in the given mode. `n` is the matrix dimension
 /// (for the Eq. 5 cap); `launch_scale` discounts launch overhead
-/// (Lee's dynamic parallelism batches launches, scale < 1).
+/// (Lee's dynamic parallelism batches launches, scale < 1); `indexed`
+/// costs the kernel that consumes the pattern-time
+/// [`crate::plan::ScatterMap`] as its gather/scatter index buffers
+/// (no multiplier search, no row-match scan — the refactorization hot
+/// path), keeping the simulator reconciled with the indexed CPU twin.
 pub fn simulate_level(
     cols: &[ColumnWork],
     mode: KernelMode,
@@ -63,6 +67,7 @@ pub fn simulate_level(
     device: &DeviceConfig,
     launch_scale: f64,
     compute_scale: f64,
+    indexed: bool,
 ) -> LevelTiming {
     let bpv = device.bytes_per_value;
     let total_bytes: u64 = cols
@@ -105,8 +110,8 @@ pub fn simulate_level(
             let durations = cols.iter().map(|c| {
                 let div = cost::divide_cycles(c.l_len, threads, stall);
                 let per_warp_tasks = c.n_subcols.div_ceil(w);
-                let upd =
-                    per_warp_tasks as u64 * cost::subcol_cycles(c.l_len, device.warp_size, stall);
+                let upd = per_warp_tasks as u64
+                    * cost::subcol_cycles(c.l_len, device.warp_size, stall, indexed);
                 div + upd
             });
             // Pipeline-fill latency is paid once per level: back-to-back
@@ -118,7 +123,7 @@ pub fn simulate_level(
                 .map(|c| {
                     let div = cost::divide_cycles(c.l_len, threads, stall) * w as u64;
                     let upd = c.n_subcols as u64
-                        * cost::subcol_cycles(c.l_len, device.warp_size, stall);
+                        * cost::subcol_cycles(c.l_len, device.warp_size, stall, indexed);
                     div + upd
                 })
                 .sum();
@@ -140,7 +145,7 @@ pub fn simulate_level(
             let stall = cost::iter_stall_cycles(device.mem_latency_cycles, hiding);
             let block_durations = cols.iter().flat_map(|c| {
                 std::iter::repeat_n(
-                    cost::subcol_cycles(c.l_len, threads, stall),
+                    cost::subcol_cycles(c.l_len, threads, stall, indexed),
                     c.n_subcols.max(1),
                 )
             });
@@ -158,7 +163,9 @@ pub fn simulate_level(
             let busy: u64 = cols
                 .iter()
                 .map(|c| {
-                    (c.n_subcols as u64) * cost::subcol_cycles(c.l_len, threads, stall) * w as u64
+                    (c.n_subcols as u64)
+                        * cost::subcol_cycles(c.l_len, threads, stall, indexed)
+                        * w as u64
                         + cost::divide_cycles(c.l_len, threads, stall)
                 })
                 .sum();
@@ -232,8 +239,9 @@ mod tests {
             &d,
             1.0,
             1.0,
+            false,
         );
-        let large = simulate_level(&cols, KernelMode::LargeBlock, 50_000, &d, 1.0, 1.0);
+        let large = simulate_level(&cols, KernelMode::LargeBlock, 50_000, &d, 1.0, 1.0, false);
         assert!(
             small.cycles < large.cycles,
             "small {} vs large {}",
@@ -253,8 +261,8 @@ mod tests {
                 n_subcols: 400,
             })
             .collect();
-        let stream = simulate_level(&cols, KernelMode::Stream, 50_000, &d, 1.0, 1.0);
-        let large = simulate_level(&cols, KernelMode::LargeBlock, 50_000, &d, 1.0, 1.0);
+        let stream = simulate_level(&cols, KernelMode::Stream, 50_000, &d, 1.0, 1.0, false);
+        let large = simulate_level(&cols, KernelMode::LargeBlock, 50_000, &d, 1.0, 1.0, false);
         assert!(
             stream.cycles < large.cycles,
             "stream {} vs large {}",
@@ -281,6 +289,7 @@ mod tests {
             &d,
             1.0,
             1.0,
+            false,
         );
         let small_huge_n = simulate_level(
             &cols,
@@ -289,6 +298,7 @@ mod tests {
             &d,
             1.0,
             1.0,
+            false,
         );
         assert!(
             small_huge_n.cycles > small_small_n.cycles * 3,
@@ -305,9 +315,40 @@ mod tests {
             l_len: 100,
             n_subcols: 4,
         }];
-        let t = simulate_level(&cols, KernelMode::LargeBlock, 10_000, &d, 1.0, 1.0);
+        let t = simulate_level(&cols, KernelMode::LargeBlock, 10_000, &d, 1.0, 1.0, false);
         // update: 100*4*28 bytes + divide: 100*16 bytes
         assert_eq!(t.bytes, 100 * 4 * 28 + 100 * 16);
+    }
+
+    /// The indexed (scatter-mapped) kernel is credited for the removed
+    /// search work in every mode: fewer cycles, identical DRAM accounting.
+    /// (Uniform columns, so the greedy placement is identical for both
+    /// variants and the cycle comparison is strictly monotone.)
+    #[test]
+    fn indexed_kernel_is_cheaper_in_every_mode() {
+        let d = dev();
+        let cols: Vec<ColumnWork> = (0..200)
+            .map(|_| ColumnWork {
+                l_len: 24,
+                n_subcols: 4,
+            })
+            .collect();
+        for mode in [
+            KernelMode::SmallBlock { warps_per_block: 4 },
+            KernelMode::LargeBlock,
+            KernelMode::Stream,
+        ] {
+            let search = simulate_level(&cols, mode, 10_000, &d, 1.0, 1.0, false);
+            let indexed = simulate_level(&cols, mode, 10_000, &d, 1.0, 1.0, true);
+            assert!(
+                indexed.cycles < search.cycles,
+                "{mode:?}: indexed {} vs search {}",
+                indexed.cycles,
+                search.cycles
+            );
+            assert_eq!(indexed.bytes, search.bytes);
+            assert_eq!(indexed.launches, search.launches);
+        }
     }
 
     #[test]
@@ -324,7 +365,7 @@ mod tests {
             KernelMode::LargeBlock,
             KernelMode::Stream,
         ] {
-            let t = simulate_level(&cols, mode, 10_000, &d, 1.0, 1.0);
+            let t = simulate_level(&cols, mode, 10_000, &d, 1.0, 1.0, false);
             assert!((0.0..=1.0).contains(&t.occupancy), "{mode:?}: {}", t.occupancy);
         }
     }

@@ -118,6 +118,11 @@ pub fn simulate_refactorization(
         // --- Timing: cost the level in the plan's mode. ---
         work.clear();
         work.extend(level.iter().map(|&j| col_work[j as usize]));
+        // The modeled kernel consumes the pattern-time ScatterMap as its
+        // gather/scatter index buffers (`indexed = true`): the cost model
+        // credits the removed multiplier searches and row-match scans, so
+        // the simulator stays reconciled with the indexed CPU twin
+        // (`numeric::parrl::refactor_in_place`).
         let timing = simulate_level(
             &work,
             plan.level_plan(li).mode,
@@ -125,6 +130,7 @@ pub fn simulate_refactorization(
             device,
             policy.launch_scale_for(level.len()),
             policy.compute_scale,
+            true,
         );
         per_level.push(timing);
 

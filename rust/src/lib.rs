@@ -126,6 +126,41 @@
 //! recorded perf trajectory, including a `plan` block (per-level mode
 //! histogram + preprocessing stage timings).
 //!
+//! ## The refactorization hot path
+//!
+//! Circuit simulation refactors the *same pattern* thousands of times, so
+//! the engineering rule the whole crate follows is: **anything computable
+//! from the pattern is paid once at pattern time; the numeric hot loop
+//! only streams values.** Pattern time (per [`glu::GluSolver::factor`] /
+//! pool miss) produces the ordering, the fill, the dependency levels, the
+//! mode-annotated [`plan::FactorPlan`] — and, for the indexed engine, two
+//! further artifacts:
+//!
+//! - the [`plan::ScatterMap`]: for every `(source, destination)` MAC task,
+//!   the multiplier's value index plus a flat run of destination value
+//!   indices aligned with the source column's L rows. The numeric inner
+//!   loop is then pure `vals[dst[i]] -= l[i] * mult` — the per-refactor
+//!   `binary_search`/`partition_point`/row-match scans are gone. (A real
+//!   GPU offload would upload the same runs once as its gather/scatter
+//!   index buffers; the cycle simulator already costs that kernel.)
+//! - the destination-ownership groups ([`plan::FactorPlan::dest_groups`]):
+//!   each sliced level's tasks grouped by destination column, so one
+//!   worker owns each destination and commits with **plain stores** — no
+//!   CAS — falling back to source-major CAS slicing only where a dominant
+//!   destination would serialize
+//!   ([`plan::CpuAssignment::OwnedDestinations`] vs
+//!   [`plan::CpuAssignment::SubcolumnSlices`]).
+//!
+//! Numeric time ([`glu::GluSolver::refactor`], the Newton/transient inner
+//! loop) then allocates nothing, searches nothing, and atomically commits
+//! only where two same-level sources can actually collide.
+//! [`glu::GluStats::scatter_builds`] proves the map is built once per
+//! pattern (pool checkout hits never rebuild it) and
+//! [`glu::GluStats::atomic_commits_avoided`] counts the CAS traffic the
+//! ownership partitioning removes; `glu3 bench` measures the win as the
+//! `refactor_loop` block of `BENCH_numeric.json` (indexed vs search-based
+//! head-to-head on the same plan and pool).
+//!
 //! ## Choosing a kernel mode
 //!
 //! You don't: the [`plan::FactorPlan`] does, per level, at plan-build
@@ -143,8 +178,11 @@
 //! - **Large-block** ([`plan::KernelMode::LargeBlock`], type B): mid-width
 //!   levels where every column can hold a full 32-warp block — the
 //!   GLU1.0/2.0 kernel shape. CPU analogue: too few columns to feed every
-//!   worker, so the level's `(column, subcolumn)` MAC tasks are sliced
-//!   across the pool ([`plan::CpuAssignment::SubcolumnSlices`]).
+//!   worker, so the level's MAC tasks are dealt across the pool — whole
+//!   destination-column groups per worker with plain stores
+//!   ([`plan::CpuAssignment::OwnedDestinations`]), or source-major with
+//!   CAS commits when one destination dominates
+//!   ([`plan::CpuAssignment::SubcolumnSlices`]).
 //! - **Stream** ([`plan::KernelMode::Stream`], type C): tail levels of at
 //!   most `stream_threshold` (default 16) columns, launched one kernel
 //!   per column over CUDA streams with a block per subcolumn. CPU

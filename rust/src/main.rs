@@ -201,6 +201,14 @@ fn cmd_factor(flags: &HashMap<String, String>, also_solve: bool) -> anyhow::Resu
     t.row(vec!["levelize (ms)".to_string(), ms(st.levelize_ms)]);
     t.row(vec!["plan build (ms)".to_string(), ms(st.plan_ms)]);
     t.row(vec!["numeric (ms)".to_string(), ms(st.numeric_ms)]);
+    t.row(vec![
+        "scatter builds".to_string(),
+        st.scatter_builds.to_string(),
+    ]);
+    t.row(vec![
+        "atomic commits avoided".to_string(),
+        st.atomic_commits_avoided.to_string(),
+    ]);
     // Mode distribution comes from the plan (every engine has one), not
     // from the simulator report.
     let (da, db, dc) = solver.plan().mode_histogram();
@@ -455,6 +463,18 @@ fn cmd_bench(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         ms(p.symbolic_ms),
         ms(p.detect_ms),
         ms(p.levelize_ms)
+    );
+    let rl = &report.refactor_loop;
+    println!(
+        "refactor loop @{} threads x{}: indexed {} ms vs search {} ms ({} speedup); \
+         scatter build {} ms (once per pattern), {} atomic commits avoided per refactor",
+        rl.threads,
+        rl.iterations,
+        ms(rl.indexed_median_ms()),
+        ms(rl.search_median_ms()),
+        ratio(rl.speedup()),
+        ms(rl.scatter_build_ms),
+        rl.atomic_commits_avoided
     );
 
     let json = report.to_json();

@@ -3,24 +3,44 @@
 //! of simulated GPU warps, executing the mode-annotated
 //! [`crate::plan::FactorPlan`].
 //!
+//! ## The indexed hot loop
+//!
+//! Refactorization runs the same pattern thousands of times, so every
+//! position the MAC loop needs is resolved **once per pattern** into the
+//! plan's [`ScatterMap`]: the multiplier's value index and a flat run of
+//! destination value indices per `(source, destination)` task. The numeric
+//! inner loop is therefore pure `vals[dst[i]] -= l[i] * mult` — no
+//! `binary_search`, no `partition_point`, no row-match scan, ever. The
+//! pre-map implementation is retained as [`refactor_in_place_search`] /
+//! [`factor_with_search`] — the head-to-head baseline the
+//! `BENCH_numeric.json` `refactor_loop` block measures against.
+//!
 //! This engine holds no assignment policy of its own: every level's
-//! worker-pool strategy comes from the plan's [`CpuAssignment`] — the CPU
-//! analogue of the paper's three adaptive kernel modes, decided once at
-//! plan-build time alongside the GPU geometry:
+//! worker-pool strategy comes from the plan's [`CpuAssignment`], decided
+//! once at plan-build time alongside the GPU geometry:
 //!
 //! - [`CpuAssignment::InterleavedColumns`] (small-mode levels — wide, many
 //!   independent columns): columns are dealt round-robin across the pool,
-//!   each worker runs the full Algorithm 2 column pipeline.
-//! - [`CpuAssignment::SubcolumnSlices`] (large-mode levels — too few
-//!   columns to feed every worker): two sub-phases per level. All divide
-//!   phases run column-interleaved, a barrier publishes the normalized L
-//!   values, then the level's flat `(column, subcolumn)` MAC task list is
-//!   dealt round-robin — the thread-chunk analogue of the GPU kernel
-//!   splitting a column's subcolumn tasks across warps.
+//!   each worker runs the full Algorithm 2 column pipeline; MAC commits
+//!   into later-level columns are CAS (two sources may share targets).
+//! - [`CpuAssignment::OwnedDestinations`] (narrow sliced levels, the
+//!   default): two sub-phases per level. All divide phases run
+//!   column-interleaved, a barrier publishes the normalized L values, then
+//!   the level's MAC tasks — grouped by **destination column** at plan
+//!   time ([`crate::plan::DestGroups`]) — are dealt to workers one whole
+//!   group at a time. One owner per destination column means **plain
+//!   (non-atomic) stores**, and since each group keeps ascending source
+//!   order, the result is bit-identical to the simulator's serialization
+//!   at *every* thread count.
+//! - [`CpuAssignment::SubcolumnSlices`] (sliced levels where one
+//!   destination group dominates): the flat `(column, subcolumn)` task
+//!   list is dealt round-robin source-major instead, spreading the
+//!   dominant destination's work across the pool at the price of CAS
+//!   commits.
 //! - [`CpuAssignment::ChainBatch`] (stream-mode singleton tails): a run of
 //!   consecutive size-1 levels executes as one sequential chain on worker
-//!   0 with a *single* end-of-run rendezvous, instead of paying one
-//!   barrier per level on a schedule with no parallelism to exploit.
+//!   0 with a *single* end-of-run rendezvous — plain stores, since nothing
+//!   else runs during the chain.
 //!
 //! ## Safety model (why the schedule makes this sound)
 //!
@@ -32,23 +52,24 @@
 //!   work (`L(:,i)` non-empty) is ordered strictly before every column `k`
 //!   with `As(i,k) != 0`, so all MAC targets live in later levels. The
 //!   divide phase therefore writes its own column without interference,
-//!   with plain (non-atomic) accesses — and in the sliced sub-phase the
-//!   MAC tasks may *read* any same-level column's L values plainly, since
-//!   no one writes them after the intra-level barrier.
+//!   with plain accesses — and MAC tasks may *read* any same-level
+//!   column's L values plainly after the intra-level barrier, since no one
+//!   writes them. The same argument shows a same-level multiplier element
+//!   `As(j,k)` is never itself a same-level MAC target.
 //! - **No read/write hazard on multipliers or L values** (the double-U
 //!   condition). What remains possible is two same-level columns
-//!   *accumulating* into the same element of a later column — the GPU
-//!   resolves that with atomics, and so do we: MAC updates go through a
-//!   compare-and-swap `f64` subtract, and multiplier loads are relaxed
-//!   atomic loads.
+//!   *accumulating* into the same element of a later column. The
+//!   interleaved and source-major strategies resolve that the GPU way —
+//!   CAS commits, relaxed-atomic multiplier loads — while the ownership
+//!   strategy removes the collision entirely: all tasks targeting one
+//!   destination column run on one worker, so its reads and writes are
+//!   plain, published by the end-of-level barrier.
 //!
-//! Accumulation order into a shared element is therefore nondeterministic
-//! across threads — results match the simulated-GPU engine (which commits
-//! same-level columns in ascending order) to rounding, and are *identical*
-//! to it when the pool has one thread, in **every** assignment mode: at
-//! one thread each strategy degenerates to ascending column order with
-//! divide-before-MAC per level, and reordering divides ahead of MACs
-//! within a level touches disjoint state (see the first bullet).
+//! Accumulation order into a shared element is nondeterministic only in
+//! the CAS strategies — results match the simulated-GPU engine (which
+//! commits same-level columns in ascending order) to rounding, and are
+//! *identical* to it when the pool has one thread, in **every** assignment
+//! mode; ownership and chain levels are bit-identical at any thread count.
 //!
 //! GLU1.0's U-pattern schedule does **not** provide these guarantees
 //! (paper Fig. 9's counterexample); [`crate::glu::GluSolver`] refuses to
@@ -57,15 +78,15 @@
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use crate::numeric::pool::{PoolCtx, SharedPtr, WorkerPool};
-use crate::plan::{CpuAssignment, FactorPlan};
+use crate::plan::{CpuAssignment, FactorPlan, ScatterMap};
 use crate::symbolic::SymbolicFill;
 
 use super::LuFactors;
 
-/// Relaxed atomic load of `vals[idx]` (the multiplier read: the schedule
-/// proves no concurrent *semantic* writer, but sibling columns may be
-/// CAS-updating neighbouring elements of the same column, so the access
-/// must be atomic to be race-free).
+/// Relaxed atomic load of `vals[idx]` (the multiplier read in the CAS
+/// strategies: the schedule proves no concurrent *semantic* writer, but
+/// sibling columns may be CAS-updating neighbouring elements of the same
+/// column, so the access stays atomic).
 #[inline]
 fn atomic_load(vals: *mut f64, idx: usize) -> f64 {
     // SAFETY: `vals` points into a live, 8-aligned f64 buffer; every
@@ -75,8 +96,8 @@ fn atomic_load(vals: *mut f64, idx: usize) -> f64 {
     f64::from_bits(a.load(Ordering::Relaxed))
 }
 
-/// Atomic `vals[idx] -= delta` via a CAS loop — the MAC-update commit, the
-/// CPU analogue of the GPU kernel's atomic add.
+/// Atomic `vals[idx] -= delta` via a CAS loop — the MAC-update commit of
+/// the CAS strategies, the CPU analogue of the GPU kernel's atomic add.
 #[inline]
 fn atomic_sub(vals: *mut f64, idx: usize, delta: f64) {
     // SAFETY: as in `atomic_load`.
@@ -92,7 +113,8 @@ fn atomic_sub(vals: *mut f64, idx: usize, delta: f64) {
 }
 
 /// Factor `As` on `pool` under a **hazard-free** plan (GLU2.0 or GLU3.0
-/// detection; never GLU1.0 — see module docs).
+/// detection; never GLU1.0 — see module docs), through the indexed
+/// scatter-mapped hot loop.
 pub fn factor_with(
     sym: &SymbolicFill,
     plan: &FactorPlan,
@@ -103,11 +125,250 @@ pub fn factor_with(
     Ok(LuFactors { lu })
 }
 
-/// Factor in place: `lu` holds the filled pattern with `A`'s values
-/// stamped in and is overwritten with the factors, level by level in the
-/// plan's [`CpuAssignment`] strategies. Allocation-free apart from each
-/// worker's small divide-phase scratch (grown once, reused across levels).
+/// Search-based twin of [`factor_with`] (the pre-[`ScatterMap`] engine,
+/// kept as the bench baseline).
+pub fn factor_with_search(
+    sym: &SymbolicFill,
+    plan: &FactorPlan,
+    pool: &WorkerPool,
+) -> anyhow::Result<LuFactors> {
+    let mut lu = sym.filled.clone();
+    refactor_in_place_search(&mut lu, plan, pool)?;
+    Ok(LuFactors { lu })
+}
+
+/// Factor in place through the indexed hot loop: `lu` holds the filled
+/// pattern with `A`'s values stamped in and is overwritten with the
+/// factors, level by level in the plan's [`CpuAssignment`] strategies.
+/// Allocation-free — every position comes from the plan's cached
+/// [`ScatterMap`] (built on first call, validated once in debug builds).
 pub fn refactor_in_place(
+    lu: &mut crate::sparse::Csc,
+    plan: &FactorPlan,
+    pool: &WorkerPool,
+) -> anyhow::Result<()> {
+    let n = lu.ncols();
+    anyhow::ensure!(plan.n() == n, "plan dimension mismatch");
+    let sm = plan.scatter(&*lu);
+    anyhow::ensure!(
+        sm.nnz == lu.nnz(),
+        "scatter map does not match this pattern"
+    );
+    let levels = plan.levels();
+    let steps = plan.cpu_steps();
+    let (_, _, values) = lu.split_mut();
+    let shared = SharedPtr(values.as_mut_ptr());
+    let failed = AtomicUsize::new(usize::MAX);
+
+    pool.run(&|ctx: &PoolCtx<'_>| {
+        let ok = || failed.load(Ordering::Relaxed) == usize::MAX;
+        for step in steps {
+            match step.assignment {
+                CpuAssignment::InterleavedColumns => {
+                    let level = &levels.levels[step.first_level];
+                    if ok() {
+                        let mut idx = ctx.id;
+                        while idx < level.len() {
+                            let j = level[idx] as usize;
+                            if !factor_column_indexed(j, sm, &shared, &failed) || !ok() {
+                                break;
+                            }
+                            idx += ctx.threads;
+                        }
+                    }
+                    if !ctx.sync() {
+                        return;
+                    }
+                }
+                CpuAssignment::SubcolumnSlices | CpuAssignment::OwnedDestinations => {
+                    let level = &levels.levels[step.first_level];
+                    // Sub-phase 1: divide phases, column-interleaved (the
+                    // abort flag is re-checked between columns).
+                    if ok() {
+                        let mut idx = ctx.id;
+                        while idx < level.len() {
+                            if !divide_indexed(level[idx] as usize, sm, &shared, &failed)
+                                || !ok()
+                            {
+                                break;
+                            }
+                            idx += ctx.threads;
+                        }
+                    }
+                    // Publish the normalized L values to every worker.
+                    if !ctx.sync() {
+                        return;
+                    }
+                    // Sub-phase 2: the level's MAC tasks.
+                    if ok() {
+                        if step.assignment == CpuAssignment::OwnedDestinations {
+                            // Whole destination groups per worker: plain
+                            // stores, no collisions by construction.
+                            let groups = plan.dest_groups(step.first_level);
+                            let mut g = ctx.id;
+                            while g < groups.num_groups() {
+                                for t in groups.group(g) {
+                                    mac_task_plain(t.src as usize, t.task as usize, sm, &shared);
+                                }
+                                g += ctx.threads;
+                            }
+                        } else {
+                            // Source-major round-robin over the flat task
+                            // list: CAS commits.
+                            let mut base = 0usize;
+                            for &j in level.iter() {
+                                let j = j as usize;
+                                let (t0, t1) =
+                                    (sm.task_ptr[j] as usize, sm.task_ptr[j + 1] as usize);
+                                for t in t0..t1 {
+                                    if (base + (t - t0)) % ctx.threads == ctx.id {
+                                        mac_task_atomic(j, t, sm, &shared);
+                                    }
+                                }
+                                base += t1 - t0;
+                            }
+                        }
+                    }
+                    if !ctx.sync() {
+                        return;
+                    }
+                }
+                CpuAssignment::ChainBatch => {
+                    // A sequential singleton chain: worker 0 walks the whole
+                    // run with plain stores; everyone meets once at the end.
+                    if ctx.id == 0 && ok() {
+                        'run: for li in step.first_level..step.first_level + step.level_count {
+                            for &j in &levels.levels[li] {
+                                if !factor_column_chain(j as usize, sm, &shared, &failed) {
+                                    break 'run;
+                                }
+                            }
+                        }
+                    }
+                    if !ctx.sync() {
+                        return;
+                    }
+                }
+            }
+        }
+    });
+
+    let f = failed.load(Ordering::Relaxed);
+    anyhow::ensure!(f == usize::MAX, "zero/non-finite pivot at column {f}");
+    Ok(())
+}
+
+/// The divide phase of column `j` through the map: normalize the L run
+/// (contiguous after the precomputed diagonal index) by the pivot. Plain
+/// accesses — this worker owns the column until the next barrier.
+#[inline]
+fn divide_indexed(j: usize, sm: &ScatterMap, shared: &SharedPtr, failed: &AtomicUsize) -> bool {
+    let vals = shared.0;
+    let d = sm.diag_idx[j] as usize;
+    // SAFETY: only this worker touches column j's value range during this
+    // level; earlier-level values were published by the inter-level
+    // barrier (see module docs).
+    let pivot = unsafe { *vals.add(d) };
+    if pivot == 0.0 || !pivot.is_finite() {
+        failed.fetch_min(j, Ordering::Relaxed);
+        return false;
+    }
+    for idx in d + 1..=d + sm.l_len[j] as usize {
+        let v = unsafe { *vals.add(idx) } / pivot;
+        unsafe { *vals.add(idx) = v };
+    }
+    true
+}
+
+/// One MAC task with atomic commits (interleaved / source-major sliced
+/// strategies): `vals[dst[i]] -= l[i] * mult` over the precomputed
+/// destination run. Column `j`'s L values are read plainly (own writes, or
+/// published by the intra-level barrier).
+#[inline]
+fn mac_task_atomic(j: usize, t: usize, sm: &ScatterMap, shared: &SharedPtr) {
+    let vals = shared.0;
+    let mult = atomic_load(vals, sm.mult_idx[t] as usize);
+    if mult == 0.0 {
+        return;
+    }
+    let ls = sm.diag_idx[j] as usize + 1;
+    let off = sm.dst_off[t] as usize;
+    let run = &sm.dst[off..off + sm.l_len[j] as usize];
+    for (i, &d) in run.iter().enumerate() {
+        // SAFETY: see module docs — L reads are race-free, commits atomic.
+        let lij = unsafe { *vals.add(ls + i) };
+        atomic_sub(vals, d as usize, lij * mult);
+    }
+}
+
+/// One MAC task with plain stores (ownership / chain strategies): this
+/// worker is the only one touching the destination column this level.
+#[inline]
+fn mac_task_plain(j: usize, t: usize, sm: &ScatterMap, shared: &SharedPtr) {
+    let vals = shared.0;
+    // SAFETY: the destination column — multiplier included — is owned by
+    // this worker for the sub-phase (module docs), so plain accesses are
+    // race-free; the end-of-level barrier publishes them.
+    let mult = unsafe { *vals.add(sm.mult_idx[t] as usize) };
+    if mult == 0.0 {
+        return;
+    }
+    let ls = sm.diag_idx[j] as usize + 1;
+    let off = sm.dst_off[t] as usize;
+    let run = &sm.dst[off..off + sm.l_len[j] as usize];
+    for (i, &d) in run.iter().enumerate() {
+        let lij = unsafe { *vals.add(ls + i) };
+        unsafe { *vals.add(d as usize) -= lij * mult };
+    }
+}
+
+/// Full column pipeline for interleaved levels: indexed divide, then the
+/// column's MAC tasks with atomic commits.
+#[inline]
+fn factor_column_indexed(
+    j: usize,
+    sm: &ScatterMap,
+    shared: &SharedPtr,
+    failed: &AtomicUsize,
+) -> bool {
+    if !divide_indexed(j, sm, shared, failed) {
+        return false;
+    }
+    for t in sm.task_ptr[j] as usize..sm.task_ptr[j + 1] as usize {
+        mac_task_atomic(j, t, sm, shared);
+    }
+    true
+}
+
+/// Full column pipeline for chain batches: single worker, plain stores.
+#[inline]
+fn factor_column_chain(
+    j: usize,
+    sm: &ScatterMap,
+    shared: &SharedPtr,
+    failed: &AtomicUsize,
+) -> bool {
+    if !divide_indexed(j, sm, shared, failed) {
+        return false;
+    }
+    for t in sm.task_ptr[j] as usize..sm.task_ptr[j + 1] as usize {
+        mac_task_plain(j, t, sm, shared);
+    }
+    true
+}
+
+// ---------------------------------------------------------------------------
+// The search-based baseline: the pre-ScatterMap engine, preserved verbatim
+// so the indexed win stays measurable (`glu3 bench` refactor_loop) and the
+// property tests can pin both paths to the simulator. It treats ownership
+// levels as source-major slices — exactly the old execution.
+// ---------------------------------------------------------------------------
+
+/// Factor in place re-deriving every position numerically (binary search
+/// per multiplier, `partition_point` + row-match scan per destination run,
+/// CAS everywhere) — the baseline [`refactor_in_place`] is measured
+/// against.
+pub fn refactor_in_place_search(
     lu: &mut crate::sparse::Csc,
     plan: &FactorPlan,
     pool: &WorkerPool,
@@ -132,7 +393,7 @@ pub fn refactor_in_place(
                         let mut idx = ctx.id;
                         while idx < level.len() {
                             let j = level[idx] as usize;
-                            if !factor_column_par(
+                            if !factor_column_search(
                                 j, colptr, rowidx, &shared, &urow[j], &mut lvals, &failed,
                             ) || !ok()
                             {
@@ -145,28 +406,27 @@ pub fn refactor_in_place(
                         return;
                     }
                 }
-                CpuAssignment::SubcolumnSlices => {
+                CpuAssignment::SubcolumnSlices | CpuAssignment::OwnedDestinations => {
                     let level = &levels.levels[step.first_level];
-                    // Sub-phase 1: divide phases, column-interleaved (the
-                    // abort flag is re-checked between columns, as in the
-                    // interleaved strategy).
                     if ok() {
                         let mut idx = ctx.id;
                         while idx < level.len() {
-                            if !divide_column_par(level[idx] as usize, colptr, rowidx, &shared, &failed)
-                                || !ok()
+                            if !divide_column_search(
+                                level[idx] as usize,
+                                colptr,
+                                rowidx,
+                                &shared,
+                                &failed,
+                            ) || !ok()
                             {
                                 break;
                             }
                             idx += ctx.threads;
                         }
                     }
-                    // Publish the normalized L values to every worker.
                     if !ctx.sync() {
                         return;
                     }
-                    // Sub-phase 2: the flat (column, subcolumn) MAC task
-                    // list, dealt round-robin across workers.
                     if ok() {
                         let mut base = 0usize;
                         for &j in level.iter() {
@@ -174,7 +434,7 @@ pub fn refactor_in_place(
                             let subs = &urow[j];
                             for (s, &k) in subs.iter().enumerate() {
                                 if (base + s) % ctx.threads == ctx.id {
-                                    mac_task(j, k as usize, colptr, rowidx, &shared);
+                                    mac_task_search(j, k as usize, colptr, rowidx, &shared);
                                 }
                             }
                             base += subs.len();
@@ -185,13 +445,11 @@ pub fn refactor_in_place(
                     }
                 }
                 CpuAssignment::ChainBatch => {
-                    // A sequential singleton chain: worker 0 walks the whole
-                    // run; everyone meets once at the end of the run.
                     if ctx.id == 0 && ok() {
                         'run: for li in step.first_level..step.first_level + step.level_count {
                             for &j in &levels.levels[li] {
                                 let j = j as usize;
-                                if !factor_column_par(
+                                if !factor_column_search(
                                     j, colptr, rowidx, &shared, &urow[j], &mut lvals, &failed,
                                 ) {
                                     break 'run;
@@ -212,11 +470,12 @@ pub fn refactor_in_place(
     Ok(())
 }
 
-/// One column of the Algorithm 2 pipeline: divide phase (plain accesses —
-/// the column is owned by this worker for the level), then the subcolumn
-/// MAC updates (atomic commits into later-level columns).
+/// One column of the Algorithm 2 pipeline, search-based: divide phase
+/// (plain accesses — the column is owned by this worker for the level),
+/// then the subcolumn MAC updates (atomic commits into later-level
+/// columns).
 #[inline]
-fn factor_column_par(
+fn factor_column_search(
     j: usize,
     colptr: &[usize],
     rowidx: &[usize],
@@ -275,11 +534,9 @@ fn factor_column_par(
     true
 }
 
-/// The divide phase alone (sub-phase 1 of a sliced level): normalize
-/// column `j`'s L entries by the pivot, in place. Plain accesses — this
-/// worker owns the column until the intra-level barrier.
+/// The search-based divide phase alone (sub-phase 1 of a sliced level).
 #[inline]
-fn divide_column_par(
+fn divide_column_search(
     j: usize,
     colptr: &[usize],
     rowidx: &[usize],
@@ -296,7 +553,7 @@ fn divide_column_par(
             return false;
         }
     };
-    // SAFETY: as in `factor_column_par`'s divide phase.
+    // SAFETY: as in `factor_column_search`'s divide phase.
     let pivot = unsafe { *vals.add(s_j + diag_pos) };
     if pivot == 0.0 || !pivot.is_finite() {
         failed.fetch_min(j, Ordering::Relaxed);
@@ -309,13 +566,11 @@ fn divide_column_par(
     true
 }
 
-/// One `(column j, subcolumn k)` MAC task of a sliced level (sub-phase 2):
-/// apply the Eq. 3 rank-1 update of column `j` onto column `k`. Column
-/// `j`'s normalized L values are read plainly (published by the
-/// intra-level barrier, and no same-level MAC ever targets column `j`);
-/// commits into column `k` are atomic.
+/// One `(column j, subcolumn k)` MAC task, search-based (sub-phase 2 of a
+/// sliced level): re-derives the multiplier position and every destination
+/// position, commits with CAS.
 #[inline]
-fn mac_task(j: usize, k: usize, colptr: &[usize], rowidx: &[usize], shared: &SharedPtr) {
+fn mac_task_search(j: usize, k: usize, colptr: &[usize], rowidx: &[usize], shared: &SharedPtr) {
     let vals = shared.0;
     let (s_j, e_j) = (colptr[j], colptr[j + 1]);
     let rows_j = &rowidx[s_j..e_j];
@@ -377,16 +632,28 @@ mod tests {
             for threads in [1, 2, 4] {
                 let pool = WorkerPool::new(threads);
                 let par = factor_with(&f, &plan, &pool).unwrap();
-                for (p, q) in par.lu.values().iter().zip(sim.lu.values()) {
+                let search = factor_with_search(&f, &plan, &pool).unwrap();
+                for ((p, s), q) in par
+                    .lu
+                    .values()
+                    .iter()
+                    .zip(search.lu.values())
+                    .zip(sim.lu.values())
+                {
                     assert!(
                         (p - q).abs() < 1e-9 * (1.0 + q.abs()),
-                        "trial {trial} threads {threads}: {p} vs {q}"
+                        "trial {trial} threads {threads}: indexed {p} vs sim {q}"
+                    );
+                    assert!(
+                        (s - q).abs() < 1e-9 * (1.0 + q.abs()),
+                        "trial {trial} threads {threads}: search {s} vs sim {q}"
                     );
                 }
                 if threads == 1 {
                     // one thread == the simulator's ascending serialization,
-                    // in every assignment mode
+                    // in every assignment mode, on both paths
                     assert_eq!(par.lu.values(), sim.lu.values());
+                    assert_eq!(search.lu.values(), sim.lu.values());
                 }
             }
         }
@@ -414,11 +681,71 @@ mod tests {
         let f = symbolic_fill(&a).unwrap();
         let lv = levelize(&glu3::detect(&f.filled));
         let plan = plan_for(&f, &lv);
+        // the mesh plan must exercise the ownership strategy
+        assert!(plan
+            .cpu_steps()
+            .iter()
+            .any(|s| s.assignment == CpuAssignment::OwnedDestinations));
         let pool = WorkerPool::new(4);
         let lu = factor_with(&f, &plan, &pool).unwrap();
         let b = vec![1.5; 400];
         let x = lu.solve(&b);
         assert!(residual(&a, &x, &b) < 1e-10);
+    }
+
+    /// The arrow fixture forces the dominant-destination CAS path
+    /// (source-major slicing) and both engines still agree with the
+    /// oracle.
+    #[test]
+    fn dominant_destination_cas_path_is_correct() {
+        use crate::sparse::Coo;
+        let m = 8usize;
+        let mut coo = Coo::new(m + 1, m + 1);
+        for j in 0..=m {
+            coo.push(j, j, 4.0);
+        }
+        for j in 0..m {
+            coo.push(m, j, -1.0);
+            coo.push(j, m, -1.0);
+        }
+        let a = coo.to_csc();
+        let f = symbolic_fill(&a).unwrap();
+        let lv = levelize(&glu3::detect(&f.filled));
+        let plan = plan_for(&f, &lv);
+        assert!(plan
+            .cpu_steps()
+            .iter()
+            .any(|s| s.assignment == CpuAssignment::SubcolumnSlices));
+        let oracle = leftlook::factor(&f).unwrap();
+        for threads in [1, 3] {
+            let pool = WorkerPool::new(threads);
+            let lu = factor_with(&f, &plan, &pool).unwrap();
+            for (p, q) in lu.lu.values().iter().zip(oracle.lu.values()) {
+                assert!((p - q).abs() < 1e-12 * (1.0 + q.abs()), "threads {threads}");
+            }
+        }
+    }
+
+    /// Cheap stability invariants: 1-thread runs are bit-stable across
+    /// repeats, and a 4-thread run (ownership levels deterministic, CAS
+    /// levels reordered) agrees with 1 thread to rounding.
+    #[test]
+    fn repeated_runs_are_stable() {
+        let g = gen::grid2d(16, 16, 2);
+        let p = crate::order::amd::amd_order(&g).unwrap();
+        let a = g.permute(p.as_scatter(), p.as_scatter());
+        let f = symbolic_fill(&a).unwrap();
+        let lv = levelize(&glu3::detect(&f.filled));
+        let plan = plan_for(&f, &lv);
+        let pool1 = WorkerPool::new(1);
+        let x = factor_with(&f, &plan, &pool1).unwrap();
+        let y = factor_with(&f, &plan, &pool1).unwrap();
+        assert_eq!(x.lu.values(), y.lu.values());
+        let pool4 = WorkerPool::new(4);
+        let u = factor_with(&f, &plan, &pool4).unwrap();
+        for (p, q) in u.lu.values().iter().zip(x.lu.values()) {
+            assert!((p - q).abs() < 1e-11 * (1.0 + q.abs()));
+        }
     }
 
     /// Every assignment strategy is exercised on an AMD mesh (wide small
@@ -474,7 +801,7 @@ mod tests {
     }
 
     /// Pivot failure inside a *sliced* level (divide sub-phase) is caught
-    /// and the MAC sub-phase skipped.
+    /// and the MAC sub-phase skipped — on both MAC strategies.
     #[test]
     fn reports_zero_pivot_in_sliced_level() {
         let a = gen::netlist(120, 6, 10, 0.08, 2, 0.2, 515);
@@ -482,10 +809,12 @@ mod tests {
         let lv = levelize(&glu3::detect(&f.filled));
         let plan = plan_for(&f, &lv);
         // force a zero pivot in a level that the plan slices
-        let sliced = plan
-            .level_plans()
-            .iter()
-            .find(|lp| lp.assignment == CpuAssignment::SubcolumnSlices);
+        let sliced = plan.level_plans().iter().find(|lp| {
+            matches!(
+                lp.assignment,
+                CpuAssignment::SubcolumnSlices | CpuAssignment::OwnedDestinations
+            )
+        });
         let Some(sliced) = sliced else {
             return; // fixture produced no sliced level; nothing to test
         };

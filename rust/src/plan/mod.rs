@@ -22,10 +22,15 @@
 //! simulator's former `select_mode` call site and `Policy::mode_for` now
 //! delegate here), the GPU [`ResourceBinding`] (blocks × warps or
 //! stream-dispatch geometry), the CPU [`CpuAssignment`] the worker-pool
-//! engine executes, and column work estimates. The plan also carries the
-//! pattern-derived views every numeric backend shares (subcolumn map,
-//! per-column work, and — lazily, on first multi-threaded solve — the
-//! triangular-solve row schedules), so
+//! engine executes, and column work estimates. Sliced levels additionally
+//! carry their MAC tasks grouped by destination column
+//! ([`FactorPlan::dest_groups`]) so the ownership-aware engine can hand
+//! whole destination groups to single owners and commit with plain
+//! stores. The plan also carries the pattern-derived views every numeric
+//! backend shares (subcolumn map, per-column work, the lazily built
+//! [`ScatterMap`] that resolves every MAC position at pattern time, and —
+//! lazily, on first multi-threaded solve — the triangular-solve row
+//! schedules), so
 //! [`crate::glu::GluSolver::refactor`] and the solves reuse it
 //! allocation-free and [`crate::coordinator::SolverPool`] caches it with
 //! the pattern-keyed symbolic state — a checkout hit never replans.
@@ -33,6 +38,9 @@
 //! [`FactorPlan`] is immutable after construction and cheap to clone (the
 //! heavy state sits behind one `Arc`).
 
+pub mod scatter;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock};
 
 use crate::depend::{levelize, DepGraph, Levels};
@@ -41,6 +49,8 @@ use crate::gpusim::policy::Policy;
 use crate::numeric::rightlook::upper_rows;
 use crate::numeric::trisolve::TriangularSchedule;
 use crate::symbolic::SymbolicFill;
+
+pub use scatter::ScatterMap;
 
 /// The three GPU kernel modes of GLU3.0 (paper Fig. 11).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -153,13 +163,145 @@ pub enum CpuAssignment {
     InterleavedColumns,
     /// Task-parallel in two sub-phases: all divide phases (columns dealt
     /// round-robin), one barrier, then the flat `(column, subcolumn)` MAC
-    /// task list dealt round-robin (narrow large-mode levels — too few
-    /// columns to feed every worker, but plenty of subcolumn tasks).
+    /// task list dealt round-robin **source-major** (narrow large-mode
+    /// levels — too few columns to feed every worker, but plenty of
+    /// subcolumn tasks). Two workers may target the same destination
+    /// column, so commits must be atomic (CAS). Kept only for sliced
+    /// levels where one destination group dominates the level's MAC work
+    /// and ownership would serialize it — see
+    /// [`CpuAssignment::OwnedDestinations`].
     SubcolumnSlices,
+    /// Task-parallel in two sub-phases like
+    /// [`CpuAssignment::SubcolumnSlices`], but the MAC task list is
+    /// grouped **by destination column** ([`FactorPlan::dest_groups`]) and
+    /// whole groups are dealt to workers: one owner per destination column
+    /// per level means plain (non-atomic) writes, and — because tasks
+    /// within a group stay in ascending source order — results that are
+    /// bit-identical to the simulator's serialization at *every* thread
+    /// count, not just one. The default for sliced levels whenever no
+    /// single destination group carries more than half the MAC work.
+    OwnedDestinations,
     /// A run of consecutive singleton stream-mode levels executed as one
     /// sequential chain by a single worker with a single end-of-run
-    /// rendezvous — batching the deep narrow tail's barriers away.
+    /// rendezvous — batching the deep narrow tail's barriers away (plain
+    /// writes: nothing else runs during the chain).
     ChainBatch,
+}
+
+/// One MAC task of a destination-ownership group: the source column and
+/// the task's global id in the pattern's task enumeration — the same
+/// enumeration [`ScatterMap`] uses, so `task` indexes straight into the
+/// map's `mult_idx`/`dst_off` arrays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MacTaskRef {
+    /// Source column `j`.
+    pub src: u32,
+    /// Global task id (`task_base[j] + position of k in urow[j]`).
+    pub task: u32,
+}
+
+/// A sliced level's MAC tasks grouped by destination column, for
+/// [`CpuAssignment::OwnedDestinations`]: group `g` spans
+/// `tasks[group_ptr[g]..group_ptr[g+1]]`, every task in a group shares one
+/// destination column, and tasks within a group are in ascending source
+/// order (the simulator's serialization — per-element accumulation order
+/// is therefore identical no matter which worker owns the group). Groups
+/// are stored in descending estimated-work order so round-robin dealing
+/// approximates longest-processing-time balance.
+#[derive(Debug, Clone, Default)]
+pub struct DestGroups {
+    /// Flat task refs, grouped by destination.
+    pub tasks: Vec<MacTaskRef>,
+    /// Group boundaries into `tasks` (len `num_groups + 1`).
+    pub group_ptr: Vec<u32>,
+}
+
+impl DestGroups {
+    /// Number of destination groups.
+    pub fn num_groups(&self) -> usize {
+        self.group_ptr.len().saturating_sub(1)
+    }
+
+    /// The tasks of group `g`.
+    pub fn group(&self, g: usize) -> &[MacTaskRef] {
+        &self.tasks[self.group_ptr[g] as usize..self.group_ptr[g + 1] as usize]
+    }
+}
+
+/// The ownership decision for a sliced level: destination grouping wins
+/// unless a single destination group carries more than half the level's
+/// MAC work — a dominant group would serialize on its one owner, while
+/// source-major CAS slicing spreads even one destination's tasks across
+/// the pool.
+fn ownership_wins(max_group_flops: u64, total_flops: u64) -> bool {
+    max_group_flops * 2 <= total_flops || total_flops == 0
+}
+
+/// Sort one level's MAC tasks by `(destination, source)` and compute the
+/// per-destination group boundaries with their flop estimates — the data
+/// the ownership decision needs, without materializing the groups.
+/// Returns the sorted pairs, the `(flops, start, end)` boundaries, and the
+/// largest-group / level-total MAC flop estimates.
+#[allow(clippy::type_complexity)]
+fn dest_task_bounds(
+    cols: &[u32],
+    urow: &[Vec<u32>],
+    task_base: &[u32],
+    col_work: &[ColumnWork],
+) -> (Vec<(u32, MacTaskRef)>, Vec<(u64, usize, usize)>, u64, u64) {
+    let mut pairs: Vec<(u32, MacTaskRef)> = Vec::new();
+    for &j in cols {
+        let ju = j as usize;
+        for (s, &k) in urow[ju].iter().enumerate() {
+            pairs.push((
+                k,
+                MacTaskRef {
+                    src: j,
+                    task: task_base[ju] + s as u32,
+                },
+            ));
+        }
+    }
+    pairs.sort_unstable_by_key(|&(k, r)| (k, r.src));
+
+    let mut bounds: Vec<(u64, usize, usize)> = Vec::new();
+    let mut start = 0usize;
+    let mut total = 0u64;
+    let mut max = 0u64;
+    while start < pairs.len() {
+        let k = pairs[start].0;
+        let mut end = start;
+        let mut flops = 0u64;
+        while end < pairs.len() && pairs[end].0 == k {
+            flops += col_work[pairs[end].1.src as usize].l_len as u64;
+            end += 1;
+        }
+        total += flops;
+        max = max.max(flops);
+        bounds.push((flops, start, end));
+        start = end;
+    }
+    (pairs, bounds, max, total)
+}
+
+/// Materialize the destination-ownership groups (descending work, ascending
+/// source within each group) — only called once ownership has won, so
+/// losing levels never pay for the copy or the second sort.
+fn build_dest_groups(
+    pairs: &[(u32, MacTaskRef)],
+    mut bounds: Vec<(u64, usize, usize)>,
+) -> DestGroups {
+    bounds.sort_unstable_by_key(|&(flops, start, _)| (std::cmp::Reverse(flops), start));
+    let mut groups = DestGroups {
+        tasks: Vec::with_capacity(pairs.len()),
+        group_ptr: Vec::with_capacity(bounds.len() + 1),
+    };
+    groups.group_ptr.push(0);
+    for &(_, s, e) in &bounds {
+        groups.tasks.extend(pairs[s..e].iter().map(|&(_, r)| r));
+        groups.group_ptr.push(groups.tasks.len() as u32);
+    }
+    groups
 }
 
 /// One step of the CPU execution schedule: a contiguous range of levels
@@ -205,6 +347,20 @@ struct PlanInner {
     cpu_steps: Vec<CpuStep>,
     col_work: Vec<ColumnWork>,
     urow: Vec<Vec<u32>>,
+    /// Per level: the destination-ownership groups (empty unless the
+    /// level's assignment is [`CpuAssignment::OwnedDestinations`]).
+    dest_groups: Vec<DestGroups>,
+    /// MAC element commits per factorization that the ownership/chain
+    /// strategies perform with plain stores instead of CAS loops.
+    atomic_commits_avoided: u64,
+    /// The pattern-time [`ScatterMap`], built lazily on first numeric use
+    /// (only the indexed right-looking engines consume it) and cached with
+    /// the plan — a pooled solver therefore never rebuilds it on a
+    /// checkout hit.
+    scatter: OnceLock<ScatterMap>,
+    /// How many times the scatter map has been built (0 or 1 — exposed so
+    /// the service layer can assert hits never rebuild).
+    scatter_builds: AtomicUsize,
     /// Row-oriented L/U level schedules, built lazily on first use: the
     /// `O(nnz)` row views would be dead weight in solvers that only ever
     /// take the sequential solve path (single-threaded engines, narrow
@@ -304,9 +460,7 @@ impl FactorPlan {
         }
 
         // Fold maximal runs of singleton stream levels into chain batches
-        // (one rendezvous per run instead of one per level) and group the
-        // remaining levels into single-level steps.
-        let mut cpu_steps = Vec::new();
+        // (one rendezvous per run instead of one per level).
         let mut li = 0usize;
         while li < level_plans.len() {
             let chainable = |lp: &LevelPlan| lp.mode == KernelMode::Stream && lp.columns == 1;
@@ -318,20 +472,74 @@ impl FactorPlan {
                 for lp in &mut level_plans[li..end] {
                     lp.assignment = CpuAssignment::ChainBatch;
                 }
-                cpu_steps.push(CpuStep {
-                    first_level: li,
-                    level_count: end - li,
-                    assignment: CpuAssignment::ChainBatch,
-                });
                 li = end;
             } else {
-                cpu_steps.push(CpuStep {
-                    first_level: li,
-                    level_count: 1,
-                    assignment: level_plans[li].assignment,
-                });
                 li += 1;
             }
+        }
+
+        // Ownership pass: for every remaining sliced level, group its MAC
+        // tasks by destination column and hand the level to the atomic-free
+        // ownership strategy unless one destination group dominates (see
+        // `ownership_wins`). Chain batches run single-worker, so their
+        // commits are plain stores too — both count toward the
+        // atomic-commits-avoided estimate.
+        let task_base: Vec<u32> = {
+            let mut base = Vec::with_capacity(n + 1);
+            let mut acc = 0u32;
+            for u in &urow {
+                base.push(acc);
+                acc += u.len() as u32;
+            }
+            base
+        };
+        let mac_elems = |cols: &[u32]| -> u64 {
+            cols.iter()
+                .map(|&j| {
+                    let cw = col_work[j as usize];
+                    (cw.l_len * cw.n_subcols) as u64
+                })
+                .sum()
+        };
+        let mut dest_groups: Vec<DestGroups> = vec![DestGroups::default(); level_plans.len()];
+        let mut atomic_commits_avoided = 0u64;
+        for lp in &mut level_plans {
+            let cols = &levels.levels[lp.index];
+            match lp.assignment {
+                CpuAssignment::SubcolumnSlices => {
+                    let (pairs, bounds, max_flops, total_flops) =
+                        dest_task_bounds(cols, &urow, &task_base, &col_work);
+                    if ownership_wins(max_flops, total_flops) {
+                        lp.assignment = CpuAssignment::OwnedDestinations;
+                        atomic_commits_avoided += mac_elems(cols);
+                        dest_groups[lp.index] = build_dest_groups(&pairs, bounds);
+                    }
+                }
+                CpuAssignment::ChainBatch => atomic_commits_avoided += mac_elems(cols),
+                _ => {}
+            }
+        }
+
+        // Group the final assignments into execution steps: one step per
+        // level, except chain runs which fold into one multi-level step.
+        let mut cpu_steps = Vec::new();
+        let mut li = 0usize;
+        while li < level_plans.len() {
+            let assignment = level_plans[li].assignment;
+            let mut end = li + 1;
+            if assignment == CpuAssignment::ChainBatch {
+                while end < level_plans.len()
+                    && level_plans[end].assignment == CpuAssignment::ChainBatch
+                {
+                    end += 1;
+                }
+            }
+            cpu_steps.push(CpuStep {
+                first_level: li,
+                level_count: end - li,
+                assignment,
+            });
+            li = end;
         }
 
         FactorPlan {
@@ -344,6 +552,10 @@ impl FactorPlan {
                 cpu_steps,
                 col_work,
                 urow,
+                dest_groups,
+                atomic_commits_avoided,
+                scatter: OnceLock::new(),
+                scatter_builds: AtomicUsize::new(0),
                 trisolve: OnceLock::new(),
                 trisolve_worthwhile: OnceLock::new(),
             }),
@@ -389,6 +601,44 @@ impl FactorPlan {
     /// `As(j,k) ≠ 0` (shared by every right-looking backend).
     pub fn urow(&self) -> &[Vec<u32>] {
         &self.inner.urow
+    }
+
+    /// The destination-ownership groups of one level — non-empty exactly
+    /// when the level's assignment is
+    /// [`CpuAssignment::OwnedDestinations`].
+    pub fn dest_groups(&self, level: usize) -> &DestGroups {
+        &self.inner.dest_groups[level]
+    }
+
+    /// The pattern-time [`ScatterMap`] for this pattern, built on first
+    /// use and cached in the plan (a pooled solver's checkout hits never
+    /// rebuild it — [`FactorPlan::scatter_builds`] proves it). `filled`
+    /// must carry the filled pattern the plan was built from; debug builds
+    /// validate the freshly built map against it once
+    /// ([`ScatterMap::validate`]).
+    pub fn scatter(&self, filled: &crate::sparse::Csc) -> &ScatterMap {
+        debug_assert_eq!(filled.ncols(), self.inner.n, "pattern mismatch");
+        self.inner.scatter.get_or_init(|| {
+            self.inner.scatter_builds.fetch_add(1, Ordering::Relaxed);
+            let sm = ScatterMap::build(filled, &self.inner.urow);
+            #[cfg(debug_assertions)]
+            sm.validate(filled, &self.inner.urow)
+                .expect("freshly built scatter map must validate");
+            sm
+        })
+    }
+
+    /// How many times the scatter map has been built for this plan (0
+    /// until a scatter-consuming engine runs, 1 ever after).
+    pub fn scatter_builds(&self) -> usize {
+        self.inner.scatter_builds.load(Ordering::Relaxed)
+    }
+
+    /// MAC element commits per factorization executed with plain stores
+    /// instead of CAS loops, thanks to destination ownership and chain
+    /// batching.
+    pub fn atomic_commits_avoided(&self) -> u64 {
+        self.inner.atomic_commits_avoided
     }
 
     /// The triangular-solve row schedules for this pattern, built on first
@@ -615,6 +865,154 @@ mod tests {
             plan.level_plans()[0].assignment,
             CpuAssignment::InterleavedColumns
         );
+    }
+
+    #[test]
+    fn ownership_decision_rule() {
+        // balanced groups -> ownership; a dominant group -> CAS slicing
+        assert!(ownership_wins(5, 10));
+        assert!(ownership_wins(1, 100));
+        assert!(!ownership_wins(6, 10));
+        assert!(!ownership_wins(10, 10));
+        // a level with no MAC work needs no atomics either way
+        assert!(ownership_wins(0, 0));
+    }
+
+    /// Sliced levels on an AMD mesh get destination-ownership groups that
+    /// exactly partition the level's MAC tasks: one destination per group,
+    /// ascending source within a group, task ids matching the pattern's
+    /// global task enumeration, groups in descending work order.
+    #[test]
+    fn ownership_groups_partition_sliced_levels() {
+        let sym = amd_grid(24, 24, 3);
+        let deps = glu3::detect(&sym.filled);
+        let plan = FactorPlan::build(&sym, &deps, &Policy::glu3(), &DeviceConfig::titan_x());
+        let urow = plan.urow();
+        let task_base: Vec<u32> = {
+            let mut base = Vec::new();
+            let mut acc = 0u32;
+            for u in urow {
+                base.push(acc);
+                acc += u.len() as u32;
+            }
+            base
+        };
+
+        let mut owned_levels = 0usize;
+        for lp in plan.level_plans() {
+            let groups = plan.dest_groups(lp.index);
+            if lp.assignment != CpuAssignment::OwnedDestinations {
+                assert_eq!(groups.num_groups(), 0, "level {}", lp.index);
+                continue;
+            }
+            owned_levels += 1;
+            let cols = &plan.levels().levels[lp.index];
+            let expected_tasks: usize = cols.iter().map(|&j| urow[j as usize].len()).sum();
+            assert_eq!(groups.tasks.len(), expected_tasks, "level {}", lp.index);
+
+            let level_cols: std::collections::HashSet<u32> = cols.iter().copied().collect();
+            let mut seen = std::collections::HashSet::new();
+            let mut prev_flops = u64::MAX;
+            for g in 0..groups.num_groups() {
+                let tasks = groups.group(g);
+                assert!(!tasks.is_empty());
+                // one destination per group, never a same-level column
+                let s = (tasks[0].task - task_base[tasks[0].src as usize]) as usize;
+                let dest = urow[tasks[0].src as usize][s];
+                assert!(!level_cols.contains(&dest), "MAC target inside its own level");
+                let mut flops = 0u64;
+                for w in tasks.windows(2) {
+                    assert!(w[0].src < w[1].src, "group not in ascending source order");
+                }
+                for t in tasks {
+                    assert!(level_cols.contains(&t.src), "task source outside the level");
+                    let s = (t.task - task_base[t.src as usize]) as usize;
+                    assert_eq!(urow[t.src as usize][s], dest, "mixed destinations in a group");
+                    assert!(seen.insert(t.task), "task dealt twice");
+                    flops += plan.col_work()[t.src as usize].l_len as u64;
+                }
+                assert!(flops <= prev_flops, "groups not in descending work order");
+                prev_flops = flops;
+            }
+        }
+        assert!(owned_levels > 0, "mesh must produce ownership levels");
+    }
+
+    /// A level whose MAC tasks all target one destination column keeps the
+    /// source-major CAS slicing — handing the single group to one owner
+    /// would serialize the level.
+    #[test]
+    fn dominant_destination_keeps_cas_slicing() {
+        use crate::sparse::Coo;
+        // Arrow matrix: columns 0..m are independent (level 0), each with
+        // one L entry in row m and one subcolumn m — a single dominant
+        // destination.
+        let m = 8usize;
+        let mut coo = Coo::new(m + 1, m + 1);
+        for j in 0..=m {
+            coo.push(j, j, 4.0);
+        }
+        for j in 0..m {
+            coo.push(m, j, -1.0);
+            coo.push(j, m, -1.0);
+        }
+        let sym = crate::symbolic::symbolic_fill(&coo.to_csc()).unwrap();
+        let deps = glu3::detect(&sym.filled);
+        let plan = FactorPlan::build(&sym, &deps, &Policy::glu3(), &DeviceConfig::titan_x());
+        let lp0 = &plan.level_plans()[0];
+        assert_eq!(lp0.columns, m);
+        assert_eq!(
+            lp0.assignment,
+            CpuAssignment::SubcolumnSlices,
+            "dominant single destination must keep the CAS path"
+        );
+        assert_eq!(plan.dest_groups(0).num_groups(), 0);
+    }
+
+    /// The atomic-commits-avoided estimate equals a direct recomputation
+    /// over the ownership/chain levels.
+    #[test]
+    fn atomic_commits_avoided_matches_recomputation() {
+        let sym = amd_grid(20, 20, 5);
+        let deps = glu3::detect(&sym.filled);
+        let plan = FactorPlan::build(&sym, &deps, &Policy::glu3(), &DeviceConfig::titan_x());
+        let want: u64 = plan
+            .level_plans()
+            .iter()
+            .filter(|lp| {
+                matches!(
+                    lp.assignment,
+                    CpuAssignment::OwnedDestinations | CpuAssignment::ChainBatch
+                )
+            })
+            .map(|lp| {
+                plan.levels().levels[lp.index]
+                    .iter()
+                    .map(|&j| {
+                        let cw = plan.col_work()[j as usize];
+                        (cw.l_len * cw.n_subcols) as u64
+                    })
+                    .sum::<u64>()
+            })
+            .sum();
+        assert_eq!(plan.atomic_commits_avoided(), want);
+        assert!(want > 0, "mesh must avoid some atomic commits");
+    }
+
+    /// The scatter map is built lazily, exactly once, and cached in the
+    /// plan (clones share it).
+    #[test]
+    fn scatter_map_builds_once_and_is_shared() {
+        let sym = amd_grid(12, 12, 9);
+        let deps = glu3::detect(&sym.filled);
+        let plan = FactorPlan::build(&sym, &deps, &Policy::glu3(), &DeviceConfig::titan_x());
+        assert_eq!(plan.scatter_builds(), 0, "lazy: no build until first use");
+        let clone = plan.clone();
+        let a = plan.scatter(&sym.filled) as *const ScatterMap;
+        let b = clone.scatter(&sym.filled) as *const ScatterMap;
+        assert_eq!(a, b, "clones share one cached map");
+        assert_eq!(plan.scatter_builds(), 1);
+        assert_eq!(clone.scatter_builds(), 1);
     }
 
     #[test]

@@ -1,0 +1,304 @@
+//! The [`ScatterMap`]: pattern-time position resolution for the
+//! refactorization hot loop.
+//!
+//! GLU's amortization argument says anything computable from the sparsity
+//! pattern should be paid **once per pattern**, not once per refactor — yet
+//! the numeric MAC loop used to re-derive every position on every Newton
+//! restamp: a `binary_search` per multiplier, a `partition_point` plus a
+//! linear row-match scan per destination element. This module moves all of
+//! that into the symbolic phase (CKTSO and HYLU make the same trade): for
+//! every `(source column j, destination column k)` MAC task the map stores
+//! the multiplier's value index and a flat run of destination value
+//! indices aligned one-to-one with column `j`'s L rows, so the numeric
+//! inner loop degenerates to `vals[dst[i]] -= l[i] * mult` with **zero
+//! searching**. The same index runs are exactly the gather/scatter buffers
+//! a real GPU offload would upload once per pattern.
+//!
+//! Layout (all indices point into the filled pattern's value array):
+//!
+//! ```text
+//! column j:  diag_idx[j]                 value index of U(j,j)
+//!            l_len[j]                    L entries (contiguous after diag)
+//!            tasks task_ptr[j]..task_ptr[j+1]   one per subcolumn k of j
+//! task t:    mult_idx[t]                 value index of As(j,k)
+//!            dst[dst_off[t] .. dst_off[t] + l_len[j]]
+//!                                        value index of As(i,k) per L row i
+//! ```
+//!
+//! Task `t` of column `j` corresponds to `urow[j][t - task_ptr[j]]` — the
+//! same enumeration [`crate::plan::FactorPlan`] uses for its
+//! destination-ownership groups, so a group's stored task ids index
+//! straight into this map.
+//!
+//! The fields are public for inspection and for adversarial tests; they
+//! must be treated as read-only. The numeric engines only ever consume a
+//! map built (and, in debug builds, [`ScatterMap::validate`]d) internally
+//! by [`crate::plan::FactorPlan::scatter`], never a caller-supplied one —
+//! the unchecked indexed stores in the hot loop rely on that provenance.
+
+use crate::sparse::Csc;
+
+/// Precomputed value-index map for the right-looking MAC loop — see the
+/// module docs for the layout.
+#[derive(Debug, Clone)]
+pub struct ScatterMap {
+    /// `nnz` of the filled pattern the indices point into.
+    pub nnz: usize,
+    /// Per column: value index of the diagonal (the L run follows it).
+    pub diag_idx: Vec<u32>,
+    /// Per column: number of L entries (= length of every MAC task run).
+    pub l_len: Vec<u32>,
+    /// Per column: task range `task_ptr[j]..task_ptr[j+1]` (len `n + 1`).
+    pub task_ptr: Vec<u32>,
+    /// Per task: value index of the multiplier `As(j,k)`.
+    pub mult_idx: Vec<u32>,
+    /// Per task: start of its destination run in [`ScatterMap::dst`].
+    pub dst_off: Vec<u32>,
+    /// Flat destination value indices, `l_len[j]` per task of column `j`.
+    pub dst: Vec<u32>,
+}
+
+impl ScatterMap {
+    /// Build the map from a filled pattern and its subcolumn view (`urow`
+    /// as produced by [`crate::numeric::rightlook::upper_rows`]). Pure
+    /// pattern work — `O(total MAC elements)`, the cost of roughly one
+    /// numeric refactorization, paid once per pattern.
+    ///
+    /// Panics if the pattern misses a diagonal entry (symbolic fill
+    /// guarantees it) or exceeds `u32` indexing (≥ 4G nonzeros).
+    pub fn build(filled: &Csc, urow: &[Vec<u32>]) -> ScatterMap {
+        let n = filled.ncols();
+        assert_eq!(urow.len(), n, "subcolumn view dimension mismatch");
+        let nnz = filled.nnz();
+        assert!(nnz <= u32::MAX as usize, "pattern exceeds u32 indexing");
+        let (colptr, rowidx) = (filled.colptr(), filled.rowidx());
+
+        let mut diag_idx = Vec::with_capacity(n);
+        let mut l_len = Vec::with_capacity(n);
+        for j in 0..n {
+            let rows = &rowidx[colptr[j]..colptr[j + 1]];
+            let d = rows.binary_search(&j).expect("full diagonal");
+            diag_idx.push((colptr[j] + d) as u32);
+            l_len.push((rows.len() - d - 1) as u32);
+        }
+
+        let total_tasks: usize = urow.iter().map(|u| u.len()).sum();
+        let total_dst: usize = (0..n)
+            .map(|j| l_len[j] as usize * urow[j].len())
+            .sum();
+        assert!(total_dst <= u32::MAX as usize, "MAC volume exceeds u32 indexing");
+        let mut task_ptr = Vec::with_capacity(n + 1);
+        task_ptr.push(0u32);
+        let mut mult_idx = Vec::with_capacity(total_tasks);
+        let mut dst_off = Vec::with_capacity(total_tasks);
+        let mut dst: Vec<u32> = Vec::with_capacity(total_dst);
+
+        for j in 0..n {
+            let ls = diag_idx[j] as usize + 1;
+            let lrows = &rowidx[ls..ls + l_len[j] as usize];
+            for &k in &urow[j] {
+                let k = k as usize;
+                let (s_k, e_k) = (colptr[k], colptr[k + 1]);
+                let rows_k = &rowidx[s_k..e_k];
+                // Merged scan: j and every L row are present in column k
+                // (the fill closure guarantees containment), in order.
+                // Real asserts (release too): if the caller's pattern does
+                // not match the subcolumn view — same n and nnz but a
+                // different structure — these trip at build time with a
+                // diagnostic instead of caching a silently wrong map.
+                let mut pos = rows_k.partition_point(|&r| r < j);
+                assert!(
+                    pos < rows_k.len() && rows_k[pos] == j,
+                    "pattern mismatch: column {k} has no multiplier entry at row {j}"
+                );
+                mult_idx.push((s_k + pos) as u32);
+                dst_off.push(dst.len() as u32);
+                pos += 1;
+                for &i in lrows {
+                    while pos < rows_k.len() && rows_k[pos] != i {
+                        pos += 1;
+                    }
+                    assert!(
+                        pos < rows_k.len(),
+                        "pattern mismatch: column {k} is missing update target row {i}"
+                    );
+                    dst.push((s_k + pos) as u32);
+                    pos += 1;
+                }
+            }
+            task_ptr.push(mult_idx.len() as u32);
+        }
+
+        ScatterMap {
+            nnz,
+            diag_idx,
+            l_len,
+            task_ptr,
+            mult_idx,
+            dst_off,
+            dst,
+        }
+    }
+
+    /// Total MAC tasks across all columns.
+    pub fn num_tasks(&self) -> usize {
+        self.mult_idx.len()
+    }
+
+    /// Full structural coherence check against the pattern the map claims
+    /// to index: every run boundary, multiplier position, and destination
+    /// index is re-derived from `filled`/`urow` and compared. `O(total MAC
+    /// elements)` — debug builds run it once per map build
+    /// ([`crate::plan::FactorPlan::scatter`]); a corrupted or mismatched
+    /// map is rejected here before any indexed store can go wrong.
+    pub fn validate(&self, filled: &Csc, urow: &[Vec<u32>]) -> anyhow::Result<()> {
+        let n = filled.ncols();
+        let (colptr, rowidx) = (filled.colptr(), filled.rowidx());
+        anyhow::ensure!(self.nnz == filled.nnz(), "nnz mismatch");
+        anyhow::ensure!(urow.len() == n, "subcolumn view dimension mismatch");
+        anyhow::ensure!(
+            self.diag_idx.len() == n && self.l_len.len() == n && self.task_ptr.len() == n + 1,
+            "per-column array length mismatch"
+        );
+        anyhow::ensure!(self.task_ptr[0] == 0, "task_ptr must start at 0");
+        let ntasks = self.mult_idx.len();
+        anyhow::ensure!(
+            self.dst_off.len() == ntasks && self.task_ptr[n] as usize == ntasks,
+            "task array length mismatch"
+        );
+        let mut expect_dst = 0usize;
+        for j in 0..n {
+            let rows = &rowidx[colptr[j]..colptr[j + 1]];
+            let d = rows
+                .binary_search(&j)
+                .map_err(|_| anyhow::anyhow!("column {j} has no diagonal"))?;
+            anyhow::ensure!(
+                self.diag_idx[j] as usize == colptr[j] + d,
+                "column {j}: diag_idx corrupt"
+            );
+            let ll = rows.len() - d - 1;
+            anyhow::ensure!(self.l_len[j] as usize == ll, "column {j}: l_len corrupt");
+            let (t0, t1) = (self.task_ptr[j] as usize, self.task_ptr[j + 1] as usize);
+            anyhow::ensure!(
+                t1 >= t0 && t1 - t0 == urow[j].len(),
+                "column {j}: task count disagrees with the subcolumn view"
+            );
+            let lrows = &rows[d + 1..];
+            for (s, &k) in urow[j].iter().enumerate() {
+                let t = t0 + s;
+                let k = k as usize;
+                anyhow::ensure!(k < n, "task {t}: destination out of range");
+                let (s_k, e_k) = (colptr[k], colptr[k + 1]);
+                let m = self.mult_idx[t] as usize;
+                anyhow::ensure!(
+                    (s_k..e_k).contains(&m) && rowidx[m] == j,
+                    "task {t}: multiplier index does not address As({j},{k})"
+                );
+                let off = self.dst_off[t] as usize;
+                anyhow::ensure!(
+                    off == expect_dst,
+                    "task {t}: destination run is not contiguous"
+                );
+                anyhow::ensure!(
+                    off + ll <= self.dst.len(),
+                    "task {t}: destination run out of bounds"
+                );
+                for (i, &row) in lrows.iter().enumerate() {
+                    let d_idx = self.dst[off + i] as usize;
+                    anyhow::ensure!(
+                        (s_k..e_k).contains(&d_idx) && rowidx[d_idx] == row,
+                        "task {t}: destination {i} does not address As({row},{k})"
+                    );
+                }
+                expect_dst += ll;
+            }
+        }
+        anyhow::ensure!(
+            expect_dst == self.dst.len(),
+            "trailing destination entries beyond the last task"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::rightlook::upper_rows;
+    use crate::sparse::gen;
+    use crate::symbolic::symbolic_fill;
+    use crate::util::Rng;
+
+    #[test]
+    fn build_validates_on_random_patterns() {
+        let mut rng = Rng::new(0x5CA7);
+        for trial in 0..6 {
+            let n = rng.range(20, 150);
+            let a = gen::netlist(n, 6, 10, 0.08, 2, 0.2, 7100 + trial);
+            let f = symbolic_fill(&a).unwrap();
+            let urow = upper_rows(&f);
+            let sm = ScatterMap::build(&f.filled, &urow);
+            sm.validate(&f.filled, &urow)
+                .unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+            assert_eq!(sm.num_tasks(), urow.iter().map(|u| u.len()).sum::<usize>());
+            // every destination run length matches its source's L length
+            let total: usize = (0..n)
+                .map(|j| sm.l_len[j] as usize * urow[j].len())
+                .sum();
+            assert_eq!(sm.dst.len(), total);
+        }
+    }
+
+    #[test]
+    fn map_addresses_match_binary_search() {
+        let a = gen::grid2d(12, 12, 3);
+        let f = symbolic_fill(&a).unwrap();
+        let urow = upper_rows(&f);
+        let sm = ScatterMap::build(&f.filled, &urow);
+        for j in 0..f.filled.ncols() {
+            assert_eq!(
+                sm.diag_idx[j] as usize,
+                f.filled.entry_index(j, j).unwrap(),
+                "column {j} diagonal"
+            );
+            for (s, &k) in urow[j].iter().enumerate() {
+                let t = sm.task_ptr[j] as usize + s;
+                assert_eq!(
+                    sm.mult_idx[t] as usize,
+                    f.filled.entry_index(j, k as usize).unwrap()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_corruption() {
+        let a = gen::netlist(80, 5, 8, 0.1, 2, 0.2, 99);
+        let f = symbolic_fill(&a).unwrap();
+        let urow = upper_rows(&f);
+        let sm = ScatterMap::build(&f.filled, &urow);
+        assert!(!sm.dst.is_empty(), "fixture must have MAC work");
+
+        // a destination pointing at the wrong element
+        let mut bad = sm.clone();
+        let last = bad.dst.len() - 1;
+        bad.dst[last] = bad.diag_idx[0];
+        assert!(bad.validate(&f.filled, &urow).is_err());
+
+        // a multiplier pointing at the wrong row
+        let mut bad = sm.clone();
+        bad.mult_idx[0] += 1;
+        assert!(bad.validate(&f.filled, &urow).is_err());
+
+        // truncated destination array
+        let mut bad = sm.clone();
+        bad.dst.pop();
+        assert!(bad.validate(&f.filled, &urow).is_err());
+
+        // and a mismatched pattern (different structure, honest map)
+        let other = symbolic_fill(&gen::netlist(80, 5, 8, 0.1, 2, 0.2, 100)).unwrap();
+        if other.filled.nnz() != f.filled.nnz() {
+            assert!(sm.validate(&other.filled, &upper_rows(&other)).is_err());
+        }
+    }
+}

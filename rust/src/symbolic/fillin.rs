@@ -92,20 +92,29 @@ pub fn symbolic_fill(a: &Csc) -> anyhow::Result<SymbolicFill> {
         }
         pattern.sort_unstable();
 
-        // Record column j of the filled matrix and its L pattern.
+        // Record column j of the filled matrix and its L pattern. `A(:,j)`
+        // is a sorted subset of the (sorted) reachable pattern — every
+        // structural row seeds a DFS — so a single merged scan replaces
+        // the former per-entry `get` + `has_entry` pair (two binary
+        // searches per output nonzero).
+        let (arows, avals) = a.col(j);
+        let mut ai = 0usize;
         let mut lcol: Vec<u32> = Vec::new();
         for &r in &pattern {
             let r_ = r as usize;
             rowidx.push(r_);
-            let v = a.get(r_, j);
-            if !a.has_entry(r_, j) {
+            if ai < arows.len() && arows[ai] == r_ {
+                values.push(avals[ai]);
+                ai += 1;
+            } else {
+                values.push(0.0);
                 fill_count += 1;
             }
-            values.push(v);
             if r > ju {
                 lcol.push(r);
             }
         }
+        debug_assert_eq!(ai, arows.len(), "structural entry missing from pattern");
         lower.push(lcol);
         colptr.push(rowidx.len());
     }

@@ -6,11 +6,13 @@
 
 use std::sync::Mutex;
 
-use glu3::bench_support::numeric::{run, spawn_vs_pool, validate_json_schema, BenchSpec};
+use glu3::bench_support::numeric::{
+    refactor_loop, run, spawn_vs_pool, validate_json_schema, BenchSpec,
+};
 
-/// The two tests in this binary both measure wall-clock while spawning
-/// thread pools; run them serially so neither perturbs the other's timing
-/// (the harness otherwise runs same-binary tests in parallel).
+/// The tests in this binary all measure wall-clock while spawning thread
+/// pools; run them serially so none perturbs the others' timing (the
+/// harness otherwise runs same-binary tests in parallel).
 static BENCH_LOCK: Mutex<()> = Mutex::new(());
 
 #[test]
@@ -60,10 +62,28 @@ fn bench_smoke_report_covers_all_engines_and_validates() {
         assert!(v.is_finite() && v >= 0.0, "plan timing {v}");
     }
 
+    // the v3 refactor_loop block: per-iteration arrays the right length,
+    // sane timings, the head-to-head medians present
+    let rl = &report.refactor_loop;
+    assert_eq!(rl.threads, *spec.thread_counts.iter().max().unwrap());
+    assert!(rl.iterations >= 1);
+    assert_eq!(rl.indexed_ms.len(), rl.iterations);
+    assert_eq!(rl.search_ms.len(), rl.iterations);
+    for v in rl
+        .indexed_ms
+        .iter()
+        .chain(&rl.search_ms)
+        .chain([rl.scatter_build_ms].iter())
+    {
+        assert!(v.is_finite() && *v >= 0.0, "refactor_loop timing {v}");
+    }
+    assert!(rl.indexed_median_ms() >= 0.0 && rl.search_median_ms() >= 0.0);
+
     let json = report.to_json();
     validate_json_schema(&json).expect("well-formed report");
     assert!(json.contains("\"plan\""), "plan block must be emitted");
     assert!(json.contains("\"mode_histogram\""));
+    assert!(json.contains("\"refactor_loop\""), "v3 block must be emitted");
 
     // and the file artifact round-trips
     let path = std::env::temp_dir().join("BENCH_numeric_smoke_test.json");
@@ -91,5 +111,30 @@ fn pool_parlu_beats_per_level_spawn_baseline_2x_on_acceptance_fixture() {
         baseline.spawn_per_level_ms,
         baseline.pool_ms,
         baseline.speedup()
+    );
+}
+
+/// The PR-4 acceptance bar: on the 100×100 AMD-ordered grid at 4 threads,
+/// repeated refactorizations through the scatter-mapped indexed engine run
+/// ≥ 1.5× faster than the search-based baseline — same plan, same pool,
+/// same values; the gap is purely the removed per-refactor position
+/// searching and the CAS traffic the ownership partitioning eliminates.
+#[test]
+fn indexed_refactor_beats_search_baseline_on_acceptance_fixture() {
+    let _serial = BENCH_LOCK.lock().unwrap();
+    let spec = BenchSpec::acceptance();
+    let rl = refactor_loop(&spec).expect("refactor loop");
+    assert_eq!(rl.threads, 4);
+    assert!(
+        rl.atomic_commits_avoided > 0,
+        "the grid plan must schedule ownership/chain levels"
+    );
+    assert!(
+        rl.speedup() >= 1.5,
+        "indexed refactor must beat the search baseline ≥ 1.5x: \
+         indexed {:.2} ms vs search {:.2} ms ({:.2}x)",
+        rl.indexed_median_ms(),
+        rl.search_median_ms(),
+        rl.speedup()
     );
 }

@@ -192,12 +192,14 @@ fn refactor_matches_fresh_factor() {
     }
 }
 
-/// The plan-driven parallel right-looking engine against the
+/// The plan-driven parallel right-looking engine — both the scatter-mapped
+/// indexed hot path and the search-based baseline — against the
 /// simulator-ordered engine, on a fixture engineered (by calibrating the
 /// stream threshold and device warp budget to the observed level widths)
-/// to hit all three kernel modes — and therefore all three CPU assignment
-/// strategies (interleaved columns, subcolumn slices, chain batches):
-/// bit-identical at 1 thread, within 1e-12 componentwise at 2/4 threads.
+/// to hit all three kernel modes and the interleaved / ownership /
+/// chain-batch CPU strategies: bit-identical at 1 thread, within 1e-12
+/// componentwise at 2/4 threads. (The dominant-destination CAS strategy
+/// has its own engineered fixtures in the `plan` and `parrl` unit tests.)
 #[test]
 fn plan_driven_parrl_matches_simulator_across_all_modes() {
     use glu3::depend::{glu3 as det3, levelize};
@@ -232,10 +234,11 @@ fn plan_driven_parrl_matches_simulator_across_all_modes() {
         hs > 0 && hl > 0 && hc > 0,
         "fixture must hit all three modes, got A/B/C {hs}/{hl}/{hc}"
     );
-    // ...and all three CPU strategies are actually scheduled
+    // ...and the CPU strategies are actually scheduled: interleaved wide
+    // levels, ownership-grouped sliced levels, chain-batched tails
     for want in [
         CpuAssignment::InterleavedColumns,
-        CpuAssignment::SubcolumnSlices,
+        CpuAssignment::OwnedDestinations,
         CpuAssignment::ChainBatch,
     ] {
         assert!(
@@ -249,25 +252,87 @@ fn plan_driven_parrl_matches_simulator_across_all_modes() {
 
     for threads in [1usize, 2, 4] {
         let pool = WorkerPool::new(threads);
-        let par = parrl::factor_with(&f, &plan, &pool).unwrap();
-        for (i, (p, q)) in par.lu.values().iter().zip(sim.lu.values()).enumerate() {
+        let indexed = parrl::factor_with(&f, &plan, &pool).unwrap();
+        let search = parrl::factor_with_search(&f, &plan, &pool).unwrap();
+        for (i, ((p, s), q)) in indexed
+            .lu
+            .values()
+            .iter()
+            .zip(search.lu.values())
+            .zip(sim.lu.values())
+            .enumerate()
+        {
             if threads == 1 {
                 assert!(
                     p == q,
-                    "1 thread must be bit-identical at entry {i}: {p} vs {q}"
+                    "1 thread indexed must be bit-identical at entry {i}: {p} vs {q}"
+                );
+                assert!(
+                    s == q,
+                    "1 thread search must be bit-identical at entry {i}: {s} vs {q}"
                 );
             } else {
                 assert!(
                     (p - q).abs() <= 1e-12 * (1.0 + q.abs()),
-                    "threads {threads} entry {i}: {p} vs {q}"
+                    "threads {threads} entry {i}: indexed {p} vs {q}"
+                );
+                assert!(
+                    (s - q).abs() <= 1e-12 * (1.0 + q.abs()),
+                    "threads {threads} entry {i}: search {s} vs {q}"
                 );
             }
         }
         // and the engine's factors actually solve the system
         let b: Vec<f64> = (0..a.nrows()).map(|i| ((i % 7) as f64) - 3.0).collect();
         let mut x = b.clone();
-        glu3::numeric::trisolve::lower_unit_solve(&par.lu, &mut x);
-        glu3::numeric::trisolve::upper_solve(&par.lu, &mut x);
+        glu3::numeric::trisolve::lower_unit_solve(&indexed.lu, &mut x);
+        glu3::numeric::trisolve::upper_solve(&indexed.lu, &mut x);
         assert!(residual(&a, &x, &b) < 1e-10, "threads {threads}");
     }
+}
+
+/// Adversarial: a corrupted ScatterMap — destinations rerouted, multiplier
+/// indices shifted, runs truncated — is rejected by the debug-mode
+/// validation pass before any indexed store could land on the wrong
+/// element.
+#[test]
+fn corrupted_scatter_map_is_rejected() {
+    use glu3::depend::{glu3 as det3, levelize};
+    use glu3::gpusim::{DeviceConfig, Policy};
+    use glu3::plan::FactorPlan;
+    use glu3::symbolic::symbolic_fill;
+
+    let a = gen::netlist(150, 5, 10, 0.08, 2, 0.2, 1234);
+    let f = symbolic_fill(&a).unwrap();
+    let lv = levelize(&det3::detect(&f.filled));
+    let plan =
+        FactorPlan::from_levels(&f, lv, &Policy::glu3(), &DeviceConfig::titan_x());
+    let urow = plan.urow();
+    let sm = plan.scatter(&f.filled);
+    sm.validate(&f.filled, urow).expect("honest map validates");
+    assert!(!sm.dst.is_empty(), "fixture must have MAC work");
+
+    // Reroute one destination onto a neighbouring value slot: the row it
+    // now addresses no longer matches the source's L row.
+    let mut bad = sm.clone();
+    bad.dst[bad.dst.len() / 2] = bad.diag_idx[0];
+    assert!(bad.validate(&f.filled, urow).is_err());
+
+    // Shift a multiplier index off its row.
+    let mut bad = sm.clone();
+    bad.mult_idx[0] = bad.mult_idx[0].wrapping_add(1);
+    assert!(bad.validate(&f.filled, urow).is_err());
+
+    // Truncate the destination runs.
+    let mut bad = sm.clone();
+    bad.dst.truncate(bad.dst.len() - 1);
+    assert!(bad.validate(&f.filled, urow).is_err());
+
+    // Lie about a column's L length (runs would overlap).
+    let mut bad = sm.clone();
+    let j = (0..bad.l_len.len())
+        .find(|&j| bad.l_len[j] > 0)
+        .expect("some column has L entries");
+    bad.l_len[j] -= 1;
+    assert!(bad.validate(&f.filled, urow).is_err());
 }

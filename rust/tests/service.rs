@@ -4,7 +4,7 @@
 //! Tier layout: see `rust/tests/README.md`.
 
 use glu3::coordinator::{pattern_key, Checkout, SolverPool};
-use glu3::glu::{GluOptions, GluSolver};
+use glu3::glu::{GluOptions, GluSolver, NumericEngine};
 use glu3::numeric::residual;
 use glu3::sparse::gen::{self, restamp_columns as restamp};
 use glu3::sparse::Csc;
@@ -259,4 +259,40 @@ fn checkout_hits_skip_plan_rebuilds() {
     // and the per-stage preprocessing timings were recorded once
     assert!(es[0].1.plan_ms >= 0.0);
     assert!(es[0].1.detect_ms >= 0.0 && es[0].1.levelize_ms >= 0.0);
+}
+
+/// Acceptance: the pattern-time ScatterMap is part of the cached symbolic
+/// state — across repeated pool checkouts of the same pattern the indexed
+/// engine builds it exactly once (`GluStats::scatter_builds == 1`), every
+/// hit refactoring through the cached map.
+#[test]
+fn scatter_map_built_once_across_pool_checkouts() {
+    let opts = GluOptions {
+        engine: NumericEngine::ParallelRightLooking { threads: 2 },
+        ..Default::default()
+    };
+    let pool = SolverPool::new(opts);
+    let base = gen::grid2d(16, 16, 5);
+    let mut rng = Rng::new(91);
+    let b = vec![1.0; 256];
+    for _ in 0..5 {
+        let m = restamp(&base, &mut rng);
+        let x = pool.solve(&m, &b).unwrap();
+        assert!(residual(&m, &x, &b) < 1e-7);
+    }
+    let st = pool.stats();
+    assert_eq!((st.misses, st.hits), (1, 4));
+    let es = pool.entry_stats();
+    assert_eq!(es.len(), 1);
+    let stats = &es[0].1;
+    assert_eq!(
+        stats.scatter_builds, 1,
+        "checkout hits must never rebuild the scatter map"
+    );
+    assert_eq!(stats.plan_builds, 1);
+    assert_eq!(stats.numeric_runs, 5);
+    assert!(
+        stats.atomic_commits_avoided > 0,
+        "AMD mesh must have ownership/chain levels"
+    );
 }
