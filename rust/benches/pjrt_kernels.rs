@@ -10,7 +10,7 @@ use glu3::util::timer::measure;
 
 fn main() {
     if !glu3::runtime::PJRT_ENABLED {
-        println!("pjrt_kernels: built without the pjrt feature — skipping");
+        println!("pjrt_kernels: built without the xla runtime feature — skipping");
         return;
     }
     let dir = default_artifact_dir();

@@ -23,7 +23,7 @@
 //! spawn-vs-pool ratio, where min is the stable statistic) over
 //! `iters` runs after `warmup` discarded runs, in milliseconds.
 
-use crate::glu::{GluOptions, GluSolver, NumericEngine};
+use crate::glu::{ExecBackend, GluOptions, GluSolver, NumericEngine};
 use crate::numeric::{parlu, parrl, WorkerPool};
 use crate::sparse::{gen, Csc};
 use crate::symbolic::symbolic_fill;
@@ -151,6 +151,63 @@ impl RefactorLoopReport {
     }
 }
 
+/// The schedule block (schema v4): the lowered [`crate::runtime::LaunchSchedule`]
+/// executed through the [`crate::runtime::executor::VirtualDevice`]
+/// backend, with per-level executed-vs-simulated cycle reconciliation —
+/// `simulated_cycles` is the full gpusim latency model (exactly what the
+/// simulated engine charges), `executed_cycles` the issue-only makespan of
+/// the same launch geometry; the per-level delta is the model's
+/// latency/launch-overhead prediction, recorded per bench run.
+#[derive(Debug, Clone)]
+pub struct ScheduleReport {
+    /// Levels (one planned launch per level).
+    pub levels: usize,
+    /// Total kernel invocations across the schedule (tiling included).
+    pub total_launches: u64,
+    /// Distinct artifact names the schedule dispatches.
+    pub kernels: Vec<String>,
+    /// Per-level issue-only cycles.
+    pub executed_cycles: Vec<u64>,
+    /// Per-level full-model cycles.
+    pub simulated_cycles: Vec<u64>,
+}
+
+impl ScheduleReport {
+    /// Total issue-only cycles.
+    pub fn executed_total(&self) -> u64 {
+        self.executed_cycles.iter().sum()
+    }
+
+    /// Total full-model cycles.
+    pub fn simulated_total(&self) -> u64 {
+        self.simulated_cycles.iter().sum()
+    }
+
+    /// Total simulated-minus-executed delta.
+    pub fn cycle_delta(&self) -> i64 {
+        self.simulated_total() as i64 - self.executed_total() as i64
+    }
+}
+
+/// Extract the schedule block from a factored schedule-engine solver
+/// (`None` for any other engine — its stats carry no execution report).
+pub fn schedule_report(solver: &GluSolver) -> Option<ScheduleReport> {
+    let exec = solver.stats().exec.as_ref()?;
+    Some(ScheduleReport {
+        levels: exec.per_launch.len(),
+        total_launches: exec.total_launches(),
+        kernels: solver
+            .plan()
+            .launch_schedule()
+            .kernels_used()
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        executed_cycles: exec.per_launch.iter().map(|l| l.executed_cycles).collect(),
+        simulated_cycles: exec.per_launch.iter().map(|l| l.simulated_cycles).collect(),
+    })
+}
+
 /// The pool-vs-spawn head-to-head (same schedule, same arithmetic).
 #[derive(Debug, Clone)]
 pub struct SpawnBaseline {
@@ -179,6 +236,7 @@ pub struct BenchReport {
     pub baseline: SpawnBaseline,
     pub plan: PlanReport,
     pub refactor_loop: RefactorLoopReport,
+    pub schedule: ScheduleReport,
 }
 
 /// Run the whole harness over `spec`.
@@ -195,6 +253,12 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
         ("simulated-gpu".into(), NumericEngine::SimulatedGpu),
         ("leftlook".into(), NumericEngine::LeftLookingCpu),
         ("rightlook".into(), NumericEngine::RightLookingCpu),
+        (
+            "schedule".into(),
+            NumericEngine::Schedule {
+                backend: ExecBackend::Virtual,
+            },
+        ),
     ];
     for &t in &spec.thread_counts {
         engines.push(("parlu".to_string(), NumericEngine::ParallelCpu { threads: t }));
@@ -206,6 +270,7 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
 
     let mut samples = Vec::with_capacity(engines.len());
     let mut plan: Option<PlanReport> = None;
+    let mut schedule: Option<ScheduleReport> = None;
     for (name, engine) in engines {
         let threads = engine.threads();
         let opts = GluOptions {
@@ -231,6 +296,11 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
         if plan.is_none() {
             plan = Some(plan_report(&solver));
         }
+        // The schedule block comes from the schedule-engine solver (the
+        // only one whose stats carry a per-launch execution report).
+        if schedule.is_none() {
+            schedule = schedule_report(&solver);
+        }
         samples.push(EngineSample {
             engine: name,
             threads,
@@ -243,6 +313,7 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
     let baseline = spawn_vs_pool(spec)?;
     let refactor_loop = refactor_loop(spec)?;
     let plan = plan.expect("at least one engine sampled");
+    let schedule = schedule.expect("schedule engine sampled");
 
     Ok(BenchReport {
         matrix: spec.label.clone(),
@@ -253,6 +324,7 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
         baseline,
         plan,
         refactor_loop,
+        schedule,
     })
 }
 
@@ -392,14 +464,27 @@ fn json_num_array(xs: &[f64]) -> String {
     format!("[{}]", items.join(", "))
 }
 
+/// Render a slice of cycle counts as a JSON integer array.
+fn json_u64_array(xs: &[u64]) -> String {
+    let items: Vec<String> = xs.iter().map(|v| v.to_string()).collect();
+    format!("[{}]", items.join(", "))
+}
+
+/// Render a slice of strings as a JSON string array.
+fn json_str_array(xs: &[String]) -> String {
+    let items: Vec<String> = xs.iter().map(|s| format!("\"{}\"", json_str(s))).collect();
+    format!("[{}]", items.join(", "))
+}
+
 impl BenchReport {
     /// Hand-rolled JSON (no serde in the offline vendored crate set).
-    /// Schema `glu3-bench-numeric-v3` (v2 added the `plan` block, v3 the
-    /// `refactor_loop` block); validated by the CI smoke job.
+    /// Schema `glu3-bench-numeric-v4` (v2 added the `plan` block, v3 the
+    /// `refactor_loop` block, v4 the `schedule` block); validated by the
+    /// CI smoke job.
     pub fn to_json(&self) -> String {
         let mut s = String::new();
         s.push_str("{\n");
-        s.push_str("  \"schema\": \"glu3-bench-numeric-v3\",\n");
+        s.push_str("  \"schema\": \"glu3-bench-numeric-v4\",\n");
         s.push_str(&format!("  \"matrix\": \"{}\",\n", json_str(&self.matrix)));
         s.push_str(&format!("  \"n\": {},\n", self.n));
         s.push_str(&format!("  \"nnz\": {},\n", self.nnz));
@@ -445,7 +530,7 @@ impl BenchReport {
             "  \"refactor_loop\": {{\"threads\": {}, \"iterations\": {}, \
              \"scatter_build_ms\": {}, \"atomic_commits_avoided\": {}, \
              \"indexed_ms\": {}, \"search_ms\": {}, \"indexed_median_ms\": {}, \
-             \"search_median_ms\": {}, \"speedup\": {}}}\n",
+             \"search_median_ms\": {}, \"speedup\": {}}},\n",
             rl.threads,
             rl.iterations,
             json_num(rl.scatter_build_ms),
@@ -455,6 +540,20 @@ impl BenchReport {
             json_num(rl.indexed_median_ms()),
             json_num(rl.search_median_ms()),
             json_num(rl.speedup())
+        ));
+        let sc = &self.schedule;
+        s.push_str(&format!(
+            "  \"schedule\": {{\"levels\": {}, \"total_launches\": {}, \
+             \"kernels\": {}, \"executed_cycles\": {}, \"simulated_cycles\": {}, \
+             \"executed_total\": {}, \"simulated_total\": {}, \"cycle_delta\": {}}}\n",
+            sc.levels,
+            sc.total_launches,
+            json_str_array(&sc.kernels),
+            json_u64_array(&sc.executed_cycles),
+            json_u64_array(&sc.simulated_cycles),
+            sc.executed_total(),
+            sc.simulated_total(),
+            sc.cycle_delta()
         ));
         s.push_str("}\n");
         s
@@ -467,13 +566,13 @@ impl BenchReport {
     }
 }
 
-/// Light structural validation of a `glu3-bench-numeric-v3` document:
-/// required keys present (including the v2 `plan` and v3 `refactor_loop`
-/// blocks), braces/brackets balanced, at least one result row. (CI
-/// additionally runs it through a real JSON parser.)
+/// Light structural validation of a `glu3-bench-numeric-v4` document:
+/// required keys present (including the v2 `plan`, v3 `refactor_loop`,
+/// and v4 `schedule` blocks), braces/brackets balanced, at least one
+/// result row. (CI additionally runs it through a real JSON parser.)
 pub fn validate_json_schema(s: &str) -> anyhow::Result<()> {
     for key in [
-        "\"schema\": \"glu3-bench-numeric-v3\"",
+        "\"schema\": \"glu3-bench-numeric-v4\"",
         "\"matrix\"",
         "\"n\"",
         "\"nnz\"",
@@ -503,6 +602,14 @@ pub fn validate_json_schema(s: &str) -> anyhow::Result<()> {
         "\"search_ms\"",
         "\"indexed_median_ms\"",
         "\"search_median_ms\"",
+        "\"schedule\"",
+        "\"total_launches\"",
+        "\"kernels\"",
+        "\"executed_cycles\"",
+        "\"simulated_cycles\"",
+        "\"executed_total\"",
+        "\"simulated_total\"",
+        "\"cycle_delta\"",
     ] {
         anyhow::ensure!(s.contains(key), "missing key {key}");
     }
@@ -566,6 +673,16 @@ mod tests {
         }
     }
 
+    fn toy_schedule() -> ScheduleReport {
+        ScheduleReport {
+            levels: 3,
+            total_launches: 5,
+            kernels: vec!["level_update_64x256".into()],
+            executed_cycles: vec![100, 200, 300],
+            simulated_cycles: vec![150, 250, 450],
+        }
+    }
+
     #[test]
     fn json_roundtrip_is_wellformed() {
         let report = BenchReport {
@@ -596,6 +713,7 @@ mod tests {
             },
             plan: toy_plan(),
             refactor_loop: toy_refactor_loop(),
+            schedule: toy_schedule(),
         };
         let json = report.to_json();
         validate_json_schema(&json).unwrap();
@@ -609,6 +727,28 @@ mod tests {
         assert!(json.contains("\"search_median_ms\": 6.000000"));
         assert!(json.contains("\"speedup\": 3.000000"));
         assert!(json.contains("\"atomic_commits_avoided\": 128"));
+        // the v4 schedule block: per-level cycle arrays + totals + delta
+        assert!(json.contains("\"kernels\": [\"level_update_64x256\"]"));
+        assert!(json.contains("\"executed_cycles\": [100, 200, 300]"));
+        assert!(json.contains("\"simulated_cycles\": [150, 250, 450]"));
+        assert!(json.contains("\"executed_total\": 600"));
+        assert!(json.contains("\"simulated_total\": 850"));
+        assert!(json.contains("\"cycle_delta\": 250"));
+    }
+
+    #[test]
+    fn schedule_report_totals_and_delta() {
+        let sc = toy_schedule();
+        assert_eq!(sc.executed_total(), 600);
+        assert_eq!(sc.simulated_total(), 850);
+        assert_eq!(sc.cycle_delta(), 250);
+        // a negative delta (executed > simulated) must serialize fine too
+        let inv = ScheduleReport {
+            executed_cycles: vec![900],
+            simulated_cycles: vec![100],
+            ..sc
+        };
+        assert_eq!(inv.cycle_delta(), -800);
     }
 
     #[test]
@@ -640,6 +780,7 @@ mod tests {
             },
             plan: toy_plan(),
             refactor_loop: toy_refactor_loop(),
+            schedule: toy_schedule(),
         };
         let json = report.to_json();
         validate_json_schema(&json).unwrap();
@@ -648,7 +789,7 @@ mod tests {
 
     #[test]
     fn validator_rejects_truncation() {
-        let report_json = "{\n  \"schema\": \"glu3-bench-numeric-v3\",\n  \"results\": [";
+        let report_json = "{\n  \"schema\": \"glu3-bench-numeric-v4\",\n  \"results\": [";
         assert!(validate_json_schema(report_json).is_err());
     }
 

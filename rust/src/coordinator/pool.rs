@@ -34,8 +34,10 @@
 //! the pattern-time [`crate::plan::ScatterMap`] of the indexed MAC loop,
 //! and triangular-solve row schedules), so refactors and batched solves
 //! on a warm entry run level-parallel with no thread spawn — and **zero
-//! plan or scatter-map rebuilds** (`GluStats::plan_builds` and
-//! `GluStats::scatter_builds` stay at 1) — on the hot path. Worker threads are parked (not spinning) between
+//! plan, scatter-map, or launch-schedule rebuilds** (`GluStats::plan_builds`,
+//! `GluStats::scatter_builds`, and `GluStats::schedule_builds` stay at 1;
+//! the schedule engine's executor likewise keeps its uploaded device
+//! buffers across checkouts) — on the hot path. Worker threads are parked (not spinning) between
 //! checkouts; a cache with many parallel-engine entries therefore costs
 //! idle threads, not idle cycles — size `shards × capacity × threads`
 //! accordingly.

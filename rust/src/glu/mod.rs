@@ -8,8 +8,9 @@
 //!    ──dependency detection (GLU3.0 relaxed / GLU2.0 / GLU1.0)──► deps
 //!    ──levelization──► levels ──plan (per-level kernel mode + resource
 //!      binding + work estimates + trisolve schedules)──► FactorPlan
-//!    ──numeric kernel (3-mode, simulated GPU, worker-pool CPU, or PJRT
-//!      lowering)──► L, U ──tri-solve──► x
+//!    ──numeric kernel (3-mode, simulated GPU, worker-pool CPU, or the
+//!      lowered LaunchSchedule through a DeviceExecutor backend)──►
+//!      L, U ──tri-solve──► x
 //! ```
 //!
 //! Preprocessing and symbolic analysis run once on the CPU; the numeric
@@ -22,4 +23,4 @@ pub mod profile;
 pub mod solver;
 
 pub use profile::{amortization_profile, parallelism_profile, AmortizationProfile, LevelProfile};
-pub use solver::{Detection, GluOptions, GluSolver, GluStats, NumericEngine};
+pub use solver::{Detection, ExecBackend, GluOptions, GluSolver, GluStats, NumericEngine};

@@ -7,8 +7,11 @@ use crate::numeric::trisolve::TriangularSchedule;
 use crate::numeric::{leftlook, parlu, parrl, rightlook, LuFactors};
 use crate::order::{preprocess, FillOrdering, Preprocessed};
 use crate::plan::FactorPlan;
+use crate::runtime::executor::{create_backend, DeviceExecutor, ExecReport};
 use crate::symbolic::{symbolic_fill, SymbolicFill};
 use crate::util::Stopwatch;
+
+pub use crate::runtime::executor::ExecBackend;
 
 /// Which dependency detection algorithm to run (paper Fig. 9).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -51,6 +54,20 @@ pub enum NumericEngine {
     /// schedule has read/write hazards; [`GluSolver::factor`] refuses it).
     ParallelRightLooking {
         threads: usize,
+    },
+    /// Execute the lowered kernel-launch schedule
+    /// ([`crate::runtime::LaunchSchedule`], cached on the plan) through a
+    /// [`crate::runtime::executor::DeviceExecutor`] backend:
+    /// [`ExecBackend::Virtual`] interprets every launch with the real
+    /// launch geometry and the uploaded scatter index buffers
+    /// (bit-identical to [`NumericEngine::SimulatedGpu`]'s numerics),
+    /// [`ExecBackend::Pjrt`] dispatches the AOT artifact ladder
+    /// (`--features pjrt`; real execution additionally needs the vendored
+    /// `xla` bindings). Per-launch counts and simulated-vs-executed cycle
+    /// deltas land in [`GluStats::exec`]. Like the parallel right-looking
+    /// engine, refuses [`Detection::Glu1`]'s hazardous schedule.
+    Schedule {
+        backend: ExecBackend,
     },
 }
 
@@ -149,6 +166,15 @@ pub struct GluStats {
     /// of the plan) — the atomic traffic the ownership-aware partitioning
     /// removes from the hot loop.
     pub atomic_commits_avoided: u64,
+    /// How many times the [`crate::runtime::LaunchSchedule`] has been
+    /// lowered for this solver — 0 until the schedule engine first runs,
+    /// 1 ever after: refactors and pool checkout hits execute the cached
+    /// schedule, and the service layer asserts it.
+    pub schedule_builds: usize,
+    /// Per-launch execution report of the schedule engine's last run
+    /// (`None` for every other engine): launch counts plus
+    /// executed-vs-simulated cycles per level.
+    pub exec: Option<ExecReport>,
 }
 
 impl GluStats {
@@ -179,6 +205,11 @@ struct NumericWorkspace {
     /// Persistent worker pool (spawned once; parks between runs) for the
     /// parallel engines and the parallel triangular solves.
     pool: Option<WorkerPool>,
+    /// Schedule-executor backend (the [`NumericEngine::Schedule`] engine),
+    /// created at factor time; holds the uploaded pattern (device-resident
+    /// index buffers) after the first run, so refactors re-execute the
+    /// cached schedule with zero re-uploads.
+    executor: Option<Box<dyn DeviceExecutor>>,
 }
 
 impl NumericWorkspace {
@@ -186,7 +217,7 @@ impl NumericWorkspace {
     /// right-looking engines used to cache here (subcolumn map, per-column
     /// work, trisolve row schedules) now lives in the shared
     /// [`FactorPlan`].
-    fn new(engine: &NumericEngine, sym: &SymbolicFill) -> Self {
+    fn new(engine: &NumericEngine, sym: &SymbolicFill) -> anyhow::Result<Self> {
         let n = sym.filled.ncols();
         let threads = engine.threads();
         let pool = match engine {
@@ -204,13 +235,18 @@ impl NumericWorkspace {
             NumericEngine::ParallelCpu { .. } => Some(parlu::leftlook_levels(sym)),
             _ => None,
         };
-        NumericWorkspace {
+        let executor = match engine {
+            NumericEngine::Schedule { backend } => Some(create_backend(*backend)?),
+            _ => None,
+        };
+        Ok(NumericWorkspace {
             fresh: vec![0.0f64; sym.filled.nnz()],
             works,
             lvals: Vec::new(),
             ll_levels,
             pool,
-        }
+            executor,
+        })
     }
 }
 
@@ -239,10 +275,13 @@ impl GluSolver {
     /// Run the full pipeline on `a`.
     pub fn factor(a: &crate::sparse::Csc, opts: &GluOptions) -> anyhow::Result<Self> {
         anyhow::ensure!(a.nrows() == a.ncols(), "matrix must be square");
-        if matches!(opts.engine, NumericEngine::ParallelRightLooking { .. }) {
+        if matches!(
+            opts.engine,
+            NumericEngine::ParallelRightLooking { .. } | NumericEngine::Schedule { .. }
+        ) {
             anyhow::ensure!(
                 opts.detection != Detection::Glu1,
-                "ParallelRightLooking requires a hazard-free schedule: GLU1.0's \
+                "this engine requires a hazard-free schedule: GLU1.0's \
                  U-pattern detection misses double-U read/write hazards (paper \
                  Fig. 9) — use Detection::Glu2 or Detection::Glu3"
             );
@@ -258,8 +297,8 @@ impl GluSolver {
             FactorPlan::from_levels(&sym, levels, &opts.policy, &opts.device)
         });
 
-        let mut ws = NumericWorkspace::new(&opts.engine, &sym);
-        let (factors, sim, numeric_ms) = run_engine(&opts.engine, &plan, &sym, &mut ws)?;
+        let mut ws = NumericWorkspace::new(&opts.engine, &sym)?;
+        let (factors, sim, numeric_ms, exec) = run_engine(&opts.engine, &plan, &sym, &mut ws)?;
 
         let value_map = build_value_map(a, &pre, &sym);
 
@@ -283,6 +322,8 @@ impl GluSolver {
             plan_builds: 1,
             scatter_builds: plan.scatter_builds(),
             atomic_commits_avoided: plan.atomic_commits_avoided(),
+            schedule_builds: plan.schedule_builds(),
+            exec,
         };
 
         Ok(GluSolver {
@@ -426,14 +467,17 @@ impl GluSolver {
             &mut self.factors.lu,
             &mut self.ws,
         ) {
-            Ok((sim, numeric_ms)) => {
+            Ok((sim, numeric_ms, exec)) => {
                 self.poisoned = false;
                 self.stats.numeric_ms = numeric_ms;
                 self.stats.sim = sim;
+                self.stats.exec = exec;
                 self.stats.numeric_runs += 1;
-                // Stays 1 forever after the first scatter-consuming run —
-                // the refactor fast path never rebuilds the map.
+                // Stay 1 forever after the first consuming run — the
+                // refactor fast path rebuilds neither the scatter map nor
+                // the lowered schedule.
                 self.stats.scatter_builds = self.plan.scatter_builds();
+                self.stats.schedule_builds = self.plan.schedule_builds();
                 Ok(())
             }
             Err(e) => {
@@ -510,24 +554,24 @@ fn run_engine(
     plan: &FactorPlan,
     sym: &SymbolicFill,
     ws: &mut NumericWorkspace,
-) -> anyhow::Result<(LuFactors, Option<SimReport>, f64)> {
+) -> anyhow::Result<(LuFactors, Option<SimReport>, f64, Option<ExecReport>)> {
     let t0 = std::time::Instant::now();
     match engine {
         NumericEngine::SimulatedGpu => {
             let mut lu = sym.filled.clone();
             let report = simulate_refactorization(&mut lu, plan, &mut ws.lvals)?;
             let ms = report.kernel_ms();
-            Ok((LuFactors { lu }, Some(report), ms))
+            Ok((LuFactors { lu }, Some(report), ms, None))
         }
         NumericEngine::LeftLookingCpu => {
             let mut lu = sym.filled.clone();
             leftlook::factor_in_place(&mut lu, &mut ws.works[0])?;
-            Ok((LuFactors { lu }, None, wall_ms(t0)))
+            Ok((LuFactors { lu }, None, wall_ms(t0), None))
         }
         NumericEngine::RightLookingCpu => {
             let mut lu = sym.filled.clone();
             rightlook::factor_in_place(&mut lu, plan.urow(), &mut ws.lvals)?;
-            Ok((LuFactors { lu }, None, wall_ms(t0)))
+            Ok((LuFactors { lu }, None, wall_ms(t0), None))
         }
         NumericEngine::ParallelCpu { .. } => {
             let factors = parlu::factor_with(
@@ -536,7 +580,7 @@ fn run_engine(
                 ws.pool.as_ref().expect("pool spawned for parallel engine"),
                 &mut ws.works,
             )?;
-            Ok((factors, None, wall_ms(t0)))
+            Ok((factors, None, wall_ms(t0), None))
         }
         NumericEngine::ParallelRightLooking { .. } => {
             let factors = parrl::factor_with(
@@ -544,7 +588,17 @@ fn run_engine(
                 plan,
                 ws.pool.as_ref().expect("pool spawned for parallel engine"),
             )?;
-            Ok((factors, None, wall_ms(t0)))
+            Ok((factors, None, wall_ms(t0), None))
+        }
+        NumericEngine::Schedule { .. } => {
+            let executor = ws.executor.as_mut().expect("executor created for schedule engine");
+            // Pattern time, paid once: build/fetch the scatter map, bind
+            // it on the device, lower the schedule (cached on the plan).
+            executor.upload_pattern(plan, plan.scatter(&sym.filled))?;
+            let sched = plan.launch_schedule();
+            let mut lu = sym.filled.clone();
+            let report = executor.execute(sched, lu.values_mut())?;
+            Ok((LuFactors { lu }, None, wall_ms(t0), Some(report)))
         }
     }
 }
@@ -557,21 +611,21 @@ fn rerun_engine(
     plan: &FactorPlan,
     lu: &mut crate::sparse::Csc,
     ws: &mut NumericWorkspace,
-) -> anyhow::Result<(Option<SimReport>, f64)> {
+) -> anyhow::Result<(Option<SimReport>, f64, Option<ExecReport>)> {
     let t0 = std::time::Instant::now();
     match engine {
         NumericEngine::SimulatedGpu => {
             let report = simulate_refactorization(lu, plan, &mut ws.lvals)?;
             let ms = report.kernel_ms();
-            Ok((Some(report), ms))
+            Ok((Some(report), ms, None))
         }
         NumericEngine::LeftLookingCpu => {
             leftlook::factor_in_place(lu, &mut ws.works[0])?;
-            Ok((None, wall_ms(t0)))
+            Ok((None, wall_ms(t0), None))
         }
         NumericEngine::RightLookingCpu => {
             rightlook::factor_in_place(lu, plan.urow(), &mut ws.lvals)?;
-            Ok((None, wall_ms(t0)))
+            Ok((None, wall_ms(t0), None))
         }
         NumericEngine::ParallelCpu { .. } => {
             parlu::refactor_in_place(
@@ -580,7 +634,7 @@ fn rerun_engine(
                 ws.pool.as_ref().expect("pool spawned for parallel engine"),
                 &mut ws.works,
             )?;
-            Ok((None, wall_ms(t0)))
+            Ok((None, wall_ms(t0), None))
         }
         NumericEngine::ParallelRightLooking { .. } => {
             parrl::refactor_in_place(
@@ -588,7 +642,14 @@ fn rerun_engine(
                 plan,
                 ws.pool.as_ref().expect("pool spawned for parallel engine"),
             )?;
-            Ok((None, wall_ms(t0)))
+            Ok((None, wall_ms(t0), None))
+        }
+        NumericEngine::Schedule { .. } => {
+            let executor = ws.executor.as_mut().expect("executor created for schedule engine");
+            // The pattern is already device-resident and the schedule
+            // cached — the refactor hot path is a pure re-execution.
+            let report = executor.execute(plan.launch_schedule(), lu.values_mut())?;
+            Ok((None, wall_ms(t0), Some(report)))
         }
     }
 }
@@ -649,6 +710,9 @@ mod tests {
             NumericEngine::RightLookingCpu,
             NumericEngine::ParallelCpu { threads: 3 },
             NumericEngine::ParallelRightLooking { threads: 3 },
+            NumericEngine::Schedule {
+                backend: ExecBackend::Virtual,
+            },
         ] {
             let opts = GluOptions {
                 engine,
@@ -748,6 +812,9 @@ mod tests {
             NumericEngine::RightLookingCpu,
             NumericEngine::ParallelCpu { threads: 4 },
             NumericEngine::ParallelRightLooking { threads: 4 },
+            NumericEngine::Schedule {
+                backend: ExecBackend::Virtual,
+            },
         ] {
             let opts = GluOptions {
                 engine: engine.clone(),
@@ -825,6 +892,81 @@ mod tests {
         // the simulated engine never consumes the map — stays lazy
         let sim = GluSolver::factor(&a, &GluOptions::default()).unwrap();
         assert_eq!(sim.stats().scatter_builds, 0);
+    }
+
+    /// The schedule engine through the VirtualDevice backend reproduces
+    /// the simulated-GPU engine's factors bit for bit, its per-launch
+    /// report reconciles with the simulator's cycle charges, and refactors
+    /// re-execute the cached schedule (no re-lowering, no re-upload).
+    #[test]
+    fn schedule_engine_is_bit_identical_to_simulated_gpu() {
+        let a = gen::grid2d(16, 16, 3);
+        let mut sim = GluSolver::factor(&a, &GluOptions::default()).unwrap();
+        let opts = GluOptions {
+            engine: NumericEngine::Schedule {
+                backend: ExecBackend::Virtual,
+            },
+            ..Default::default()
+        };
+        let mut sched = GluSolver::factor(&a, &opts).unwrap();
+        assert_eq!(sched.factors().lu.values(), sim.factors().lu.values());
+        {
+            let st = sched.stats();
+            assert_eq!(st.schedule_builds, 1);
+            assert_eq!(st.scatter_builds, 1);
+            let exec = st.exec.as_ref().expect("schedule engine must report");
+            assert_eq!(exec.backend, "virtual");
+            assert_eq!(exec.per_launch.len(), st.num_levels);
+            assert!(exec.total_launches() >= st.num_levels as u64);
+            let simrep = sim.stats().sim.as_ref().unwrap();
+            assert_eq!(exec.simulated_cycles(), simrep.kernel_cycles);
+            assert_eq!(exec.mode_histogram(), sim.plan().mode_histogram());
+        }
+
+        let mut a2 = a.clone();
+        for v in a2.values_mut() {
+            *v *= 1.3;
+        }
+        sched.refactor(&a2).unwrap();
+        sim.refactor(&a2).unwrap();
+        assert_eq!(sched.factors().lu.values(), sim.factors().lu.values());
+        assert_eq!(sched.stats().schedule_builds, 1, "refactor must not re-lower");
+        assert_eq!(sched.stats().scatter_builds, 1);
+        assert_eq!(sched.stats().numeric_runs, 2);
+        assert!(sched.stats().exec.is_some());
+
+        let b = vec![1.0; 256];
+        let x = sched.solve(&b).unwrap();
+        assert!(residual(&a2, &x, &b) < 1e-10);
+    }
+
+    #[test]
+    fn schedule_engine_rejects_glu1_schedule() {
+        let a = gen::netlist(100, 5, 8, 0.1, 1, 0.2, 7);
+        let opts = GluOptions {
+            detection: Detection::Glu1,
+            engine: NumericEngine::Schedule {
+                backend: ExecBackend::Virtual,
+            },
+            ..Default::default()
+        };
+        let err = GluSolver::factor(&a, &opts).unwrap_err();
+        assert!(err.to_string().contains("hazard"), "{err}");
+    }
+
+    /// Without the `xla` runtime the PJRT backend fails at factor time —
+    /// cleanly, before any numeric work.
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn schedule_pjrt_backend_fails_cleanly_without_runtime() {
+        let a = gen::grid2d(8, 8, 1);
+        let opts = GluOptions {
+            engine: NumericEngine::Schedule {
+                backend: ExecBackend::Pjrt,
+            },
+            ..Default::default()
+        };
+        assert!(GluSolver::factor(&a, &opts).is_err());
     }
 
     #[test]

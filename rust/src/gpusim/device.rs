@@ -78,6 +78,22 @@ impl DeviceConfig {
     pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
         cycles as f64 / (self.clock_ghz * 1e6)
     }
+
+    /// The same device with every latency and overhead term zeroed —
+    /// memory latency, kernel-launch cost, one-time setup — leaving the
+    /// geometry (SMs, warps, block slots, cache caps) intact. The
+    /// schedule executor ([`crate::runtime::executor`]) costs each
+    /// *executed* launch against this device: the pure issue makespan of
+    /// the real launch geometry, so the simulated-minus-executed cycle
+    /// delta isolates exactly the model's latency and launch terms.
+    pub fn issue_only(&self) -> DeviceConfig {
+        DeviceConfig {
+            mem_latency_cycles: 0,
+            kernel_launch_cycles: 0,
+            setup_cycles: 0,
+            ..self.clone()
+        }
+    }
 }
 
 #[cfg(test)]
@@ -90,6 +106,46 @@ mod tests {
         assert_eq!(d.total_warps(), 1536);
         assert_eq!(d.max_threads_per_block / d.warp_size, 32);
         assert!((d.cycles_to_ms(1_000_000) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn issue_only_zeroes_latency_terms_and_keeps_geometry() {
+        let d = DeviceConfig::titan_x();
+        let io = d.issue_only();
+        assert_eq!(io.mem_latency_cycles, 0);
+        assert_eq!(io.kernel_launch_cycles, 0);
+        assert_eq!(io.setup_cycles, 0);
+        assert_eq!(io.num_sms, d.num_sms);
+        assert_eq!(io.max_warps_per_sm, d.max_warps_per_sm);
+        assert_eq!(io.total_warps(), d.total_warps());
+        // a level costed on the issue-only device charges no stall: fewer
+        // cycles than the full latency model on identical work
+        let cols: Vec<crate::plan::ColumnWork> = (0..64)
+            .map(|_| crate::plan::ColumnWork {
+                l_len: 20,
+                n_subcols: 3,
+            })
+            .collect();
+        let full = crate::gpusim::exec::simulate_level(
+            &cols,
+            crate::plan::KernelMode::LargeBlock,
+            5_000,
+            &d,
+            1.0,
+            1.0,
+            true,
+        );
+        let issue = crate::gpusim::exec::simulate_level(
+            &cols,
+            crate::plan::KernelMode::LargeBlock,
+            5_000,
+            &io,
+            1.0,
+            1.0,
+            true,
+        );
+        assert!(issue.cycles < full.cycles, "{} vs {}", issue.cycles, full.cycles);
+        assert!(issue.cycles > 0);
     }
 
     #[test]

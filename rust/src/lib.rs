@@ -14,10 +14,19 @@
 //!    cycle simulator ([`gpusim`]), the worker-pool CPU engines
 //!    ([`numeric`]), and the PJRT lowering path ([`runtime`]).
 //!
-//! The pipeline every solve flows through:
+//! The pipeline every solve flows through — the `execute` stage now
+//! dispatches to a backend:
 //!
 //! ```text
-//! order → scale → symbolic → detect → levelize → plan → execute
+//! order → scale → symbolic → detect → levelize → plan ──► execute
+//!                                                  │
+//!                              ┌───────────────────┼──────────────────┐
+//!                       gpusim (costed)   numeric engines (CPU)   lower_plan
+//!                                                                    │
+//!                                                              LaunchSchedule
+//!                                                                    │
+//!                                                     DeviceExecutor backend:
+//!                                                     VirtualDevice | PjrtDevice
 //! ```
 //!
 //! The crate also contains every substrate the paper depends on: sparse
@@ -196,7 +205,32 @@
 //! [`gpusim::Policy::glu2_fixed`] pins every level to the fixed
 //! large-block kernel. [`runtime::lower_plan`] maps the same per-level
 //! annotations onto the AOT kernel ladder — the launch sequence the
-//! future GPU offload executes.
+//! execution layer runs.
+//!
+//! ## Executing a plan
+//!
+//! The execution layer closes the loop from scheduling IR to device:
+//! [`runtime::lower_plan`] lowers the plan to a
+//! [`runtime::LaunchSchedule`] (cached on the plan, like the scatter
+//! map), and a [`runtime::executor::DeviceExecutor`] backend runs it —
+//! `upload_pattern` binds the [`plan::ScatterMap`] as device-resident
+//! `u32` index buffers once per pattern, `execute` walks the
+//! `PlannedLaunch`es level by level against the value buffer. Two
+//! backends exist: the default-build [`runtime::VirtualDevice`]
+//! interprets each launch with its real geometry (bit-identical L/U
+//! values to the cycle simulator and the 1-thread parallel engine — the
+//! conformance tier, `rust/tests/conformance.rs`, holds that three-way
+//! matrix), and the `pjrt`-feature [`runtime::executor::PjrtDevice`]
+//! dispatches the AOT artifact ladder. Select it with
+//! [`glu::NumericEngine::Schedule`]; per-launch counts and the
+//! executed-vs-simulated cycle reconciliation (the gpusim latency model
+//! against the issue-only cost of the same geometry,
+//! [`gpusim::DeviceConfig::issue_only`]) surface in [`glu::GluStats`],
+//! `glu3 factor`, and the `schedule` block of `BENCH_numeric.json`.
+//! Both backends validate the schedule against the uploaded pattern —
+//! level order, column counts, kernel names, buffer lengths, every
+//! scatter index — before touching a single value, so a corrupted or
+//! foreign schedule is rejected whole.
 
 pub mod bench_support;
 pub mod circuit;

@@ -19,7 +19,8 @@ use std::process::ExitCode;
 use glu3::bench_support::table::{ms, ratio, Table};
 use glu3::coordinator::SolverPool;
 use glu3::glu::{
-    amortization_profile, parallelism_profile, Detection, GluOptions, GluSolver, NumericEngine,
+    amortization_profile, parallelism_profile, Detection, ExecBackend, GluOptions, GluSolver,
+    NumericEngine,
 };
 use glu3::gpusim::Policy;
 use glu3::numeric::residual;
@@ -66,7 +67,7 @@ fn print_usage() {
          commands:\n\
          \x20 factor  --matrix <name|file.mtx> [--policy glu3|glu2|lee|nosmall|nostream]\n\
          \x20         [--detect glu1|glu2|glu3] [--ordering amd|rcm|natural]\n\
-         \x20         [--engine gpu|left|right|parcpu|parrl] [--threads T]\n\
+         \x20         [--engine gpu|left|right|parcpu|parrl|sched|sched-pjrt] [--threads T]\n\
          \x20 solve   same options, also solves (--rhs ones|ramp)\n\
          \x20 suite   [--set small|all] [--policy ...]   run the whole suite\n\
          \x20 profile --matrix <...>   per-level parallelism profile (Fig. 10)\n\
@@ -167,6 +168,12 @@ fn options_from(flags: &HashMap<String, String>) -> anyhow::Result<GluOptions> {
             "right" => NumericEngine::RightLookingCpu,
             "parcpu" => NumericEngine::ParallelCpu { threads },
             "parrl" => NumericEngine::ParallelRightLooking { threads },
+            "sched" => NumericEngine::Schedule {
+                backend: ExecBackend::Virtual,
+            },
+            "sched-pjrt" => NumericEngine::Schedule {
+                backend: ExecBackend::Pjrt,
+            },
             other => anyhow::bail!("unknown engine {other}"),
         };
     }
@@ -209,6 +216,26 @@ fn cmd_factor(flags: &HashMap<String, String>, also_solve: bool) -> anyhow::Resu
         "atomic commits avoided".to_string(),
         st.atomic_commits_avoided.to_string(),
     ]);
+    // The schedule engine's per-launch execution report: launch counts
+    // plus the simulated-vs-executed cycle reconciliation.
+    if let Some(exec) = &st.exec {
+        t.row(vec![
+            "schedule launches".to_string(),
+            exec.total_launches().to_string(),
+        ]);
+        t.row(vec![
+            "executed cycles".to_string(),
+            exec.executed_cycles().to_string(),
+        ]);
+        t.row(vec![
+            "simulated cycles".to_string(),
+            exec.simulated_cycles().to_string(),
+        ]);
+        t.row(vec![
+            "sim - exec cycle delta".to_string(),
+            exec.cycle_delta().to_string(),
+        ]);
+    }
     // Mode distribution comes from the plan (every engine has one), not
     // from the simulator report.
     let (da, db, dc) = solver.plan().mode_histogram();
@@ -475,6 +502,25 @@ fn cmd_bench(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         ratio(rl.speedup()),
         ms(rl.scatter_build_ms),
         rl.atomic_commits_avoided
+    );
+    let sc = &report.schedule;
+    let max_delta = sc
+        .simulated_cycles
+        .iter()
+        .zip(&sc.executed_cycles)
+        .map(|(&s, &e)| s as i64 - e as i64)
+        .max()
+        .unwrap_or(0);
+    println!(
+        "schedule: {} launches over {} levels via {:?}; executed {} vs simulated {} cycles \
+         (delta {} total, {} max per level)",
+        sc.total_launches,
+        sc.levels,
+        sc.kernels,
+        sc.executed_total(),
+        sc.simulated_total(),
+        sc.cycle_delta(),
+        max_delta
     );
 
     let json = report.to_json();

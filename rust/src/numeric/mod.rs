@@ -14,7 +14,11 @@
 //!   persistent [`pool::WorkerPool`].
 //! - [`parrl`] — parallel hybrid right-looking on the hazard-free
 //!   GLU2.0/GLU3.0 schedule: the paper's execution model with real CPU
-//!   threads (wall-clock, not simulated cycles).
+//!   threads (wall-clock, not simulated cycles). Its 1-thread run is one
+//!   corner of the conformance triangle with
+//!   [`crate::gpusim::executor::simulate_refactorization`] and the
+//!   schedule executor ([`crate::runtime::executor::VirtualDevice`]) —
+//!   see `rust/tests/conformance.rs`.
 //! - [`pool`] — the spawn-once worker pool + spin barrier all the
 //!   real-parallel paths (including the parallel triangular solves) share.
 //! - [`trisolve`] — sparse forward/backward substitution over the factors,

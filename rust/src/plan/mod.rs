@@ -14,7 +14,8 @@
 //!     FactorPlan ──► gpusim::executor   (costs the plan's levels)
 //!         │      ──► numeric::parrl     (mode-adaptive worker-pool steps)
 //!         │      ──► GluSolver::solve   (cached trisolve row schedules)
-//!         └──────► runtime::lower_plan  (future kernel-launch sequence)
+//!         └──────► runtime::lower_plan  (kernel-launch sequence, cached
+//!                  on the plan and run by runtime::executor backends)
 //! ```
 //!
 //! Per level the plan records the [`KernelMode`] (the paper's Eq. 4 +
@@ -361,6 +362,12 @@ struct PlanInner {
     /// How many times the scatter map has been built (0 or 1 — exposed so
     /// the service layer can assert hits never rebuild).
     scatter_builds: AtomicUsize,
+    /// The lowered [`crate::runtime::LaunchSchedule`], built lazily on the
+    /// schedule engine's first run and cached with the plan — like the
+    /// scatter map, a pooled solver's checkout hit never re-lowers.
+    schedule: OnceLock<crate::runtime::LaunchSchedule>,
+    /// How many times the schedule has been lowered (0 or 1).
+    schedule_builds: AtomicUsize,
     /// Row-oriented L/U level schedules, built lazily on first use: the
     /// `O(nnz)` row views would be dead weight in solvers that only ever
     /// take the sequential solve path (single-threaded engines, narrow
@@ -556,6 +563,8 @@ impl FactorPlan {
                 atomic_commits_avoided,
                 scatter: OnceLock::new(),
                 scatter_builds: AtomicUsize::new(0),
+                schedule: OnceLock::new(),
+                schedule_builds: AtomicUsize::new(0),
                 trisolve: OnceLock::new(),
                 trisolve_worthwhile: OnceLock::new(),
             }),
@@ -632,6 +641,24 @@ impl FactorPlan {
     /// until a scatter-consuming engine runs, 1 ever after).
     pub fn scatter_builds(&self) -> usize {
         self.inner.scatter_builds.load(Ordering::Relaxed)
+    }
+
+    /// The lowered kernel-launch schedule for this plan
+    /// ([`crate::runtime::lower_plan`]), built on first use and cached —
+    /// the schedule engine re-executes the cached sequence on every
+    /// refactor, and a pooled solver's checkout hits never re-lower
+    /// ([`FactorPlan::schedule_builds`] proves it).
+    pub fn launch_schedule(&self) -> &crate::runtime::LaunchSchedule {
+        self.inner.schedule.get_or_init(|| {
+            self.inner.schedule_builds.fetch_add(1, Ordering::Relaxed);
+            crate::runtime::lower_plan(self)
+        })
+    }
+
+    /// How many times the launch schedule has been lowered for this plan
+    /// (0 until the schedule engine runs, 1 ever after).
+    pub fn schedule_builds(&self) -> usize {
+        self.inner.schedule_builds.load(Ordering::Relaxed)
     }
 
     /// MAC element commits per factorization executed with plain stores
@@ -1013,6 +1040,23 @@ mod tests {
         assert_eq!(a, b, "clones share one cached map");
         assert_eq!(plan.scatter_builds(), 1);
         assert_eq!(clone.scatter_builds(), 1);
+    }
+
+    /// The launch schedule is lowered lazily, exactly once, and cached in
+    /// the plan (clones share it) — the same contract as the scatter map.
+    #[test]
+    fn launch_schedule_lowers_once_and_is_shared() {
+        let sym = amd_grid(12, 12, 4);
+        let deps = glu3::detect(&sym.filled);
+        let plan = FactorPlan::build(&sym, &deps, &Policy::glu3(), &DeviceConfig::titan_x());
+        assert_eq!(plan.schedule_builds(), 0, "lazy: no lowering until first use");
+        let clone = plan.clone();
+        let a = plan.launch_schedule() as *const crate::runtime::LaunchSchedule;
+        let b = clone.launch_schedule() as *const crate::runtime::LaunchSchedule;
+        assert_eq!(a, b, "clones share one cached schedule");
+        assert_eq!(plan.schedule_builds(), 1);
+        assert_eq!(clone.schedule_builds(), 1);
+        assert_eq!(plan.launch_schedule().launches.len(), plan.num_levels());
     }
 
     #[test]

@@ -18,35 +18,54 @@
 //! giving the GPU-offload work a concrete launch sequence to execute and
 //! the cycle simulator a measured counterpart to reconcile against.
 //!
+//! [`executor`] then *runs* a lowered schedule: the
+//! [`executor::DeviceExecutor`] trait dispatches either the default-build
+//! [`executor::VirtualDevice`] interpreter or the `pjrt`-feature
+//! [`executor::PjrtDevice`] artifact path, with per-launch cycle
+//! accounting reconciled against the gpusim model.
+//!
 //! ## Feature gating
 //!
-//! The real implementation (`pjrt` module) needs the `xla` FFI bindings,
-//! which the offline vendored crate set does not carry. The default build
-//! ships a stub with the identical public API whose [`Runtime::load`]
-//! returns an error; callers (the `pjrt_kernels` bench, the PJRT
-//! integration test) guard on [`PJRT_ENABLED`] *and* the artifact
-//! directory existing, so they skip cleanly either way. Enabling the real
-//! path means vendoring `xla`, adding it to `[dependencies]` in
-//! `rust/Cargo.toml`, and building with `--features pjrt`.
+//! Two features split the stack:
+//!
+//! - `pjrt` — the executor backend plumbing ([`executor::PjrtDevice`] and
+//!   friends). Compiles offline; CI keeps it green with
+//!   `cargo test -q --features pjrt` (the *stub path*: runtime loads fail
+//!   gracefully, artifact-dependent tests self-skip).
+//! - `xla` (implies `pjrt`) — the real PJRT FFI. The offline vendored
+//!   crate set does not carry the `xla` bindings, so the default build
+//!   (and the `pjrt`-only build) ships a stub with the identical public
+//!   API whose [`Runtime::load`] returns an error; callers (the
+//!   `pjrt_kernels` bench, the PJRT integration test) guard on
+//!   [`PJRT_ENABLED`] *and* the artifact directory existing, so they skip
+//!   cleanly either way. Enabling the real path means vendoring `xla`,
+//!   adding it to `[dependencies]` in `rust/Cargo.toml`, and building
+//!   with `--features xla`.
 
 use std::path::PathBuf;
 
 use crate::plan::{FactorPlan, KernelMode, ResourceBinding};
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "xla")]
 mod pjrt;
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "xla")]
 pub use pjrt::Runtime;
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "xla"))]
 mod stub;
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "xla"))]
 pub use stub::Runtime;
 
-/// Whether this build carries the real PJRT runtime. Callers that gate on
-/// artifacts existing must gate on this too — with the stub, `load` errors
-/// even when artifacts are present.
-pub const PJRT_ENABLED: bool = cfg!(feature = "pjrt");
+pub mod executor;
+
+#[cfg(feature = "pjrt")]
+pub use executor::PjrtDevice;
+pub use executor::{DeviceExecutor, ExecBackend, ExecReport, LaunchExec, UploadInfo, VirtualDevice};
+
+/// Whether this build carries the real PJRT runtime (the `xla` FFI
+/// bindings). Callers that gate on artifacts existing must gate on this
+/// too — with the stub, `load` errors even when artifacts are present.
+pub const PJRT_ENABLED: bool = cfg!(feature = "xla");
 
 /// Shape ladder for `level_update_{B}x{N}` (must match `aot.py`).
 pub const LEVEL_SIZES: [(usize, usize); 2] = [(64, 256), (256, 2048)];
@@ -100,7 +119,9 @@ impl LaunchSchedule {
         self.launches.iter().map(|l| l.launches).sum()
     }
 
-    /// Distinct artifact names the schedule needs, sorted.
+    /// Distinct artifact names the schedule needs, sorted and deduplicated
+    /// — consecutive levels routinely share a ladder variant, so the raw
+    /// launch list repeats names; this never does.
     pub fn kernels_used(&self) -> Vec<&str> {
         let mut v: Vec<&str> = self.launches.iter().map(|l| l.kernel.as_str()).collect();
         v.sort_unstable();
@@ -212,6 +233,26 @@ mod tests {
         }
         assert!(sched.total_launches() >= plan.num_levels() as u64);
         assert!(!sched.kernels_used().is_empty());
+    }
+
+    /// Consecutive levels sharing an artifact must not repeat in
+    /// `kernels_used`: strictly sorted, no duplicates, and never more
+    /// names than the ladder has variants.
+    #[test]
+    fn kernels_used_dedups_shared_artifacts() {
+        let plan = mesh_plan();
+        let sched = lower_plan(&plan);
+        assert!(
+            sched.launches.len() > LEVEL_SIZES.len(),
+            "mesh must have more levels than ladder variants"
+        );
+        let used = sched.kernels_used();
+        assert!(!used.is_empty());
+        assert!(used.len() <= LEVEL_SIZES.len());
+        assert!(
+            used.windows(2).all(|w| w[0] < w[1]),
+            "kernels_used must be strictly sorted (duplicate-free): {used:?}"
+        );
     }
 
     #[test]

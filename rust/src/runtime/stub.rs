@@ -1,8 +1,11 @@
 //! Default-build stand-in for the PJRT runtime (`xla` bindings absent).
 //!
-//! Same public surface as the `pjrt` implementation; [`Runtime::load`] always
+//! Same public surface as the real implementation; [`Runtime::load`] always
 //! errors, so every caller that guards on artifacts being built (the bench
 //! and the integration test do) skips before touching the other methods.
+//! This stub is what the `pjrt`-feature *stub path* builds against too:
+//! the [`super::executor::PjrtDevice`] dispatch code compiles, and its
+//! construction fails here, at runtime load.
 
 use std::path::Path;
 
@@ -11,12 +14,12 @@ use std::path::Path;
 pub struct Runtime {}
 
 impl Runtime {
-    /// Always fails: the `pjrt` feature (and the vendored `xla` crate) is
-    /// required for artifact execution.
+    /// Always fails: the `xla` FFI bindings (vendored, plus
+    /// `--features xla`) are required for artifact execution.
     pub fn load(_dir: impl AsRef<Path>) -> anyhow::Result<Self> {
         anyhow::bail!(
-            "glu3 was built without the `pjrt` feature; vendor the `xla` \
-             bindings and rebuild with `--features pjrt` to load artifacts"
+            "glu3 was built without the `xla` bindings; vendor the `xla` \
+             crate and rebuild with `--features xla` to load PJRT artifacts"
         )
     }
 
@@ -34,7 +37,7 @@ impl Runtime {
         _b: usize,
         _n: usize,
     ) -> anyhow::Result<Vec<f32>> {
-        anyhow::bail!("pjrt feature disabled")
+        anyhow::bail!("xla feature disabled")
     }
 
     /// Stubbed `dense_tail_solve` (see the `pjrt` module when enabled).
@@ -44,22 +47,22 @@ impl Runtime {
         _rhs: &[f32],
         _t: usize,
     ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
-        anyhow::bail!("pjrt feature disabled")
+        anyhow::bail!("xla feature disabled")
     }
 
     /// Stubbed `quickstart` (see the `pjrt` module when enabled).
     pub fn quickstart(&self, _x: [f32; 4], _y: [f32; 4]) -> anyhow::Result<[f32; 4]> {
-        anyhow::bail!("pjrt feature disabled")
+        anyhow::bail!("xla feature disabled")
     }
 
     /// Stubbed plan lowering. The pure walk is available without a runtime
     /// as [`super::lower_plan`]; this method (which would additionally
-    /// verify the named artifacts are compiled) needs the `pjrt` feature.
+    /// verify the named artifacts are compiled) needs the `xla` feature.
     pub fn lower_plan(
         &self,
         _plan: &crate::plan::FactorPlan,
     ) -> anyhow::Result<super::LaunchSchedule> {
-        anyhow::bail!("pjrt feature disabled")
+        anyhow::bail!("xla feature disabled")
     }
 }
 
@@ -70,6 +73,6 @@ mod tests {
     #[test]
     fn stub_load_reports_missing_feature() {
         let err = Runtime::load(super::super::default_artifact_dir()).unwrap_err();
-        assert!(format!("{err}").contains("pjrt"));
+        assert!(format!("{err}").contains("xla"));
     }
 }

@@ -21,7 +21,7 @@ fn bench_smoke_report_covers_all_engines_and_validates() {
     let spec = BenchSpec::smoke();
     let report = run(&spec).expect("smoke bench");
 
-    for engine in ["simulated-gpu", "leftlook", "rightlook", "parlu", "parrl"] {
+    for engine in ["simulated-gpu", "leftlook", "rightlook", "schedule", "parlu", "parrl"] {
         let rows: Vec<_> = report.samples.iter().filter(|s| s.engine == engine).collect();
         assert!(!rows.is_empty(), "engine {engine} missing from the report");
         for r in rows {
@@ -79,11 +79,28 @@ fn bench_smoke_report_covers_all_engines_and_validates() {
     }
     assert!(rl.indexed_median_ms() >= 0.0 && rl.search_median_ms() >= 0.0);
 
+    // the v4 schedule block: one entry per level, cycle arrays aligned,
+    // totals consistent — the executed-vs-simulated reconciliation the
+    // executor feeds back per level
+    let sc = &report.schedule;
+    assert_eq!(sc.levels, p.levels, "schedule covers every plan level");
+    assert_eq!(sc.executed_cycles.len(), sc.levels);
+    assert_eq!(sc.simulated_cycles.len(), sc.levels);
+    assert!(sc.total_launches >= sc.levels as u64);
+    assert!(!sc.kernels.is_empty(), "schedule must name its artifacts");
+    assert_eq!(sc.executed_total(), sc.executed_cycles.iter().sum::<u64>());
+    assert_eq!(
+        sc.cycle_delta(),
+        sc.simulated_total() as i64 - sc.executed_total() as i64
+    );
+    assert!(sc.executed_total() > 0 && sc.simulated_total() > 0);
+
     let json = report.to_json();
     validate_json_schema(&json).expect("well-formed report");
     assert!(json.contains("\"plan\""), "plan block must be emitted");
     assert!(json.contains("\"mode_histogram\""));
     assert!(json.contains("\"refactor_loop\""), "v3 block must be emitted");
+    assert!(json.contains("\"schedule\""), "v4 block must be emitted");
 
     // and the file artifact round-trips
     let path = std::env::temp_dir().join("BENCH_numeric_smoke_test.json");

@@ -1,0 +1,332 @@
+//! Conformance tier: the three-way differential matrix that keeps every
+//! backend of the execution layer honest, plus golden-pattern regression
+//! fixtures pinning the symbolic pipeline.
+//!
+//! The three paths that must agree on L/U values:
+//!
+//! 1. [`glu3::gpusim::simulate_factorization`] — the cycle simulator's
+//!    level-ordered numerics (the reference serialization);
+//! 2. [`glu3::runtime::VirtualDevice`] — the schedule executor
+//!    interpreting the lowered [`glu3::runtime::LaunchSchedule`] from the
+//!    uploaded scatter index buffers (**bit-identical** to 1, always);
+//! 3. [`glu3::numeric::parrl`] — the indexed worker-pool engine
+//!    (bit-identical at 1 thread, ≤ 1e-12 componentwise at 2/4 threads).
+//!
+//! The matrix runs across {AMD-ordered grid with a policy/device
+//! calibrated to hit all three kernel modes, RCM-ordered band,
+//! random diagonally dominant} × {1, 2, 4} threads, and also asserts the
+//! per-level mode histogram is identical across all three paths.
+//!
+//! Tier layout: see `rust/tests/README.md`.
+
+use std::collections::BTreeMap;
+
+use glu3::depend::{glu3 as det3, levelize};
+use glu3::gpusim::{simulate_factorization, DeviceConfig, Policy};
+use glu3::numeric::{parrl, residual, WorkerPool};
+use glu3::plan::FactorPlan;
+use glu3::runtime::{lower_plan, DeviceExecutor, VirtualDevice};
+use glu3::sparse::{Coo, Csc};
+use glu3::symbolic::symbolic_fill;
+use glu3::util::Rng;
+
+/// Explicit RNG seed for the random-DD fixture — appears in assertion
+/// messages via the fixture name so failures replay exactly.
+const RANDOM_DD_SEED: u64 = 0xC0DE_0001;
+
+/// Random sparse matrix with unique coordinates and a column diagonally
+/// dominant diagonal (the pivot-free GLU regime).
+fn random_dd(n: usize, extra: usize, rng: &mut Rng) -> Csc {
+    let mut coo = Coo::new(n, n);
+    let mut colsum = vec![0.0f64; n];
+    let mut used = std::collections::HashSet::new();
+    let mut placed = 0usize;
+    while placed < extra {
+        let r = rng.below(n);
+        let c = rng.below(n);
+        if r == c || !used.insert((r, c)) {
+            continue;
+        }
+        let v = rng.range_f64(-1.0, 1.0);
+        coo.push(r, c, v);
+        colsum[c] += v.abs();
+        placed += 1;
+    }
+    for d in 0..n {
+        coo.push(d, d, colsum[d] + rng.range_f64(0.5, 1.5));
+    }
+    coo.to_csc()
+}
+
+struct Fixture {
+    name: &'static str,
+    a: Csc,
+    policy: Policy,
+    device: DeviceConfig,
+    /// The calibrated fixture must exercise all three kernel modes.
+    require_all_modes: bool,
+}
+
+fn fixtures() -> Vec<Fixture> {
+    let mut out = Vec::new();
+
+    // AMD-ordered mesh with the policy/device calibrated to the observed
+    // level widths so the plan hits all three kernel modes (the same
+    // calibration trick as tests/property.rs): the smallest width becomes
+    // the stream threshold, the median width gets exactly 32 warps per
+    // column (large), wider levels get fewer (small).
+    {
+        let g = glu3::sparse::gen::grid2d(24, 24, 11);
+        let p = glu3::order::amd::amd_order(&g).unwrap();
+        let a = g.permute(p.as_scatter(), p.as_scatter());
+        let f = symbolic_fill(&a).unwrap();
+        let lv = levelize(&det3::detect(&f.filled));
+        let mut sizes: Vec<usize> = lv.levels.iter().map(|l| l.len()).collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        assert!(sizes.len() >= 3, "mesh must offer 3 distinct level widths");
+        let (s1, s2) = (sizes[0], sizes[sizes.len() / 2]);
+        let mut device = DeviceConfig::titan_x();
+        device.num_sms = s2;
+        device.max_warps_per_sm = 32;
+        out.push(Fixture {
+            name: "amd-grid-24x24",
+            a,
+            policy: Policy::glu3_with_threshold(s1),
+            device,
+            require_all_modes: true,
+        });
+    }
+
+    // RCM-ordered band: a long, narrow profile — deep schedules, heavy
+    // stream/chain tails under the default policy.
+    {
+        let g = glu3::sparse::gen::grid2d(18, 18, 7);
+        let p = glu3::order::rcm::rcm_order(&g).unwrap();
+        let a = g.permute(p.as_scatter(), p.as_scatter());
+        out.push(Fixture {
+            name: "rcm-band-18x18",
+            a,
+            policy: Policy::glu3(),
+            device: DeviceConfig::titan_x(),
+            require_all_modes: false,
+        });
+    }
+
+    // Random diagonally dominant: irregular structure, no ordering.
+    {
+        let mut rng = Rng::new(RANDOM_DD_SEED);
+        let a = random_dd(160, 640, &mut rng);
+        out.push(Fixture {
+            name: "random-dd-160",
+            a,
+            policy: Policy::glu3(),
+            device: DeviceConfig::titan_x(),
+            require_all_modes: false,
+        });
+    }
+
+    out
+}
+
+/// The differential matrix: VirtualDevice executor vs `parrl` indexed vs
+/// the cycle simulator, on every fixture × {1, 2, 4} threads.
+#[test]
+fn three_way_matrix_executor_vs_parrl_vs_simulator() {
+    for fx in fixtures() {
+        let f = symbolic_fill(&fx.a).unwrap();
+        let lv = levelize(&det3::detect(&f.filled));
+        let plan = FactorPlan::from_levels(&f, lv.clone(), &fx.policy, &fx.device);
+        if fx.require_all_modes {
+            let (hs, hl, hc) = plan.mode_histogram();
+            assert!(
+                hs > 0 && hl > 0 && hc > 0,
+                "{}: fixture must hit all three modes, got A/B/C {hs}/{hl}/{hc}",
+                fx.name
+            );
+        }
+
+        // Path 1: the cycle simulator (the reference serialization).
+        let (sim, simrep) = simulate_factorization(&f, &lv, &fx.policy, &fx.device).unwrap();
+
+        // Path 2: the schedule executor on the VirtualDevice backend.
+        let mut dev = VirtualDevice::new();
+        dev.upload_pattern(&plan, plan.scatter(&f.filled)).unwrap();
+        let mut exec_lu = f.filled.clone();
+        let exec_rep = dev.execute(plan.launch_schedule(), exec_lu.values_mut()).unwrap();
+        assert_eq!(
+            exec_lu.values(),
+            sim.lu.values(),
+            "{}: executor must be bit-identical to the simulator",
+            fx.name
+        );
+
+        // The per-level mode histogram is identical across all three
+        // paths (parrl executes the same plan, so its histogram is the
+        // plan's by construction).
+        assert_eq!(
+            plan.mode_histogram(),
+            simrep.level_distribution(),
+            "{}: plan vs simulator histogram",
+            fx.name
+        );
+        assert_eq!(
+            plan.mode_histogram(),
+            exec_rep.mode_histogram(),
+            "{}: plan vs executor histogram",
+            fx.name
+        );
+        // and the executor's full-model cycle side reconciles exactly
+        assert_eq!(exec_rep.simulated_cycles(), simrep.kernel_cycles, "{}", fx.name);
+
+        // Path 3: the indexed worker-pool engine across thread counts.
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let par = parrl::factor_with(&f, &plan, &pool).unwrap();
+            for (i, (p, q)) in par.lu.values().iter().zip(exec_lu.values()).enumerate() {
+                if threads == 1 {
+                    assert!(
+                        p == q,
+                        "{} (seed {RANDOM_DD_SEED:#x}) threads 1 entry {i}: \
+                         parrl {p} vs executor {q} must be bit-identical",
+                        fx.name
+                    );
+                } else {
+                    assert!(
+                        (p - q).abs() <= 1e-12 * (1.0 + q.abs()),
+                        "{} (seed {RANDOM_DD_SEED:#x}) threads {threads} entry {i}: \
+                         parrl {p} vs executor {q}",
+                        fx.name
+                    );
+                }
+            }
+        }
+
+        // The executed factors genuinely solve the fixture's system.
+        let n = fx.a.nrows();
+        let b: Vec<f64> = (0..n).map(|i| ((i % 7) as f64) - 3.0).collect();
+        let mut x = b.clone();
+        glu3::numeric::trisolve::lower_unit_solve(&exec_lu, &mut x);
+        glu3::numeric::trisolve::upper_solve(&exec_lu, &mut x);
+        assert!(residual(&fx.a, &x, &b) < 1e-7, "{}", fx.name);
+    }
+}
+
+/// Integration-level adversarial check (the executor's own unit tests
+/// cover more shapes): a corrupted schedule — launches out of level
+/// order — is rejected whole, with the value buffer untouched.
+#[test]
+fn corrupted_schedule_rejected_before_values_change() {
+    let a = glu3::sparse::io::read_matrix_market(fixture_dir().join("tridiag_8.mtx")).unwrap();
+    let f = symbolic_fill(&a).unwrap();
+    let lv = levelize(&det3::detect(&f.filled));
+    let plan = FactorPlan::from_levels(&f, lv, &Policy::glu3(), &DeviceConfig::titan_x());
+    let mut dev = VirtualDevice::new();
+    dev.upload_pattern(&plan, plan.scatter(&f.filled)).unwrap();
+
+    let mut bad = plan.launch_schedule().clone();
+    assert!(bad.launches.len() >= 2);
+    bad.launches.swap(0, 1);
+    let mut lu = f.filled.clone();
+    let before = lu.values().to_vec();
+    let err = dev.execute(&bad, lu.values_mut()).unwrap_err();
+    assert!(err.to_string().contains("order"), "{err}");
+    assert_eq!(lu.values(), &before[..], "values must be untouched");
+
+    // the honest schedule still runs afterwards
+    dev.execute(plan.launch_schedule(), lu.values_mut()).unwrap();
+}
+
+fn fixture_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+fn parse_golden(text: &str) -> BTreeMap<String, u64> {
+    let mut map = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (k, v) = line.split_once('=').expect("golden line must be `key = value`");
+        map.insert(
+            k.trim().to_string(),
+            v.trim().parse::<u64>().expect("golden value must be an integer"),
+        );
+    }
+    map
+}
+
+/// Golden-pattern regression fixtures: three checked-in matrices with the
+/// expected L/U nnz, level count, mode histogram, and launch count of the
+/// natural-ordering pattern pipeline (symbolic fill → glu3 detect →
+/// levelize → plan under `Policy::glu3` on the TITAN X model →
+/// `lower_plan`). Any drift in fill, levelization, mode selection, or
+/// lowering fails with a field-by-field diff.
+#[test]
+fn golden_pattern_fixtures_pin_lowering_and_levelization() {
+    for name in ["tridiag_8", "diag_20", "grid_3x3"] {
+        let dir = fixture_dir();
+        let a = glu3::sparse::io::read_matrix_market(dir.join(format!("{name}.mtx")))
+            .unwrap_or_else(|e| panic!("{name}: reading fixture: {e}"));
+        let golden_text = std::fs::read_to_string(dir.join(format!("{name}.golden")))
+            .unwrap_or_else(|e| panic!("{name}: reading golden file: {e}"));
+        let golden = parse_golden(&golden_text);
+
+        let f = symbolic_fill(&a).unwrap();
+        let lv = levelize(&det3::detect(&f.filled));
+        let plan = FactorPlan::from_levels(&f, lv, &Policy::glu3(), &DeviceConfig::titan_x());
+        let sched = lower_plan(&plan);
+        let (hs, hl, hc) = plan.mode_histogram();
+        let l_nnz: u64 = (0..f.filled.ncols())
+            .map(|c| {
+                let (rows, _) = f.filled.col(c);
+                rows.iter().filter(|&&r| r > c).count() as u64
+            })
+            .sum();
+
+        let got: Vec<(&str, u64)> = vec![
+            ("n", a.nrows() as u64),
+            ("nnz_filled", f.filled.nnz() as u64),
+            ("l_nnz", l_nnz),
+            ("u_nnz", f.filled.nnz() as u64 - l_nnz),
+            ("levels", plan.num_levels() as u64),
+            ("modes_small", hs as u64),
+            ("modes_large", hl as u64),
+            ("modes_stream", hc as u64),
+            ("total_launches", sched.total_launches()),
+        ];
+        let mut diffs = Vec::new();
+        for (k, g) in &got {
+            match golden.get(*k) {
+                Some(w) if w == g => {}
+                Some(w) => diffs.push(format!("  {k}: got {g}, golden expects {w}")),
+                None => diffs.push(format!("  {k}: got {g}, missing from golden file")),
+            }
+        }
+        for k in golden.keys() {
+            if !got.iter().any(|(gk, _)| gk == k) {
+                diffs.push(format!("  {k}: in golden file but not measured"));
+            }
+        }
+        assert!(
+            diffs.is_empty(),
+            "{name}: pattern pipeline drifted from the golden fixture:\n{}\n\
+             (regenerate {name}.golden only for an intentional fill/\
+             levelization/lowering change)",
+            diffs.join("\n")
+        );
+
+        // the fixture also factors and solves through the executor
+        let mut dev = VirtualDevice::new();
+        dev.upload_pattern(&plan, plan.scatter(&f.filled)).unwrap();
+        let mut lu = f.filled.clone();
+        dev.execute(plan.launch_schedule(), lu.values_mut()).unwrap();
+        let n = a.nrows();
+        let b = vec![1.0; n];
+        let mut x = b.clone();
+        glu3::numeric::trisolve::lower_unit_solve(&lu, &mut x);
+        glu3::numeric::trisolve::upper_solve(&lu, &mut x);
+        assert!(residual(&a, &x, &b) < 1e-10, "{name}: factors must solve");
+    }
+}

@@ -4,7 +4,7 @@
 
 use glu3::depend::levelize::validate_hazard_free;
 use glu3::depend::{glu2, glu3 as g3, levelize};
-use glu3::glu::{Detection, GluOptions, GluSolver, NumericEngine};
+use glu3::glu::{Detection, ExecBackend, GluOptions, GluSolver, NumericEngine};
 use glu3::gpusim::{simulate_factorization, DeviceConfig, Policy};
 use glu3::numeric::{leftlook, residual};
 use glu3::order::{preprocess, FillOrdering};
@@ -79,6 +79,9 @@ fn engines_agree_through_pipeline() {
         NumericEngine::RightLookingCpu,
         NumericEngine::ParallelCpu { threads: 2 },
         NumericEngine::ParallelRightLooking { threads: 4 },
+        NumericEngine::Schedule {
+            backend: ExecBackend::Virtual,
+        },
     ] {
         let opts = GluOptions {
             engine,
@@ -128,7 +131,7 @@ fn matrix_market_roundtrip_pipeline() {
 #[test]
 fn pjrt_dense_tail_vs_native() {
     if !glu3::runtime::PJRT_ENABLED {
-        eprintln!("skipping: built without the pjrt feature");
+        eprintln!("skipping: built without the xla runtime feature");
         return;
     }
     let dir = glu3::runtime::default_artifact_dir();

@@ -11,6 +11,13 @@ use glu3::sparse::{gen, Coo, Csc};
 use glu3::util::stats::rel_linf;
 use glu3::util::Rng;
 
+/// Explicit RNG seeds, one per property — named so they appear in failure
+/// messages and a failing trial replays exactly with `Rng::new(SEED)`.
+const SEED_ROUNDTRIP: u64 = 0xC5C_0001;
+const SEED_DUPLICATES: u64 = 0xC5C_0002;
+const SEED_RANDOM_DD: u64 = 0xDD_0001;
+const SEED_REFACTOR: u64 = 0xDD_0002;
+
 /// Random sparse matrix with unique coordinates and a full, column
 /// diagonally dominant diagonal (the pivot-free GLU regime).
 fn random_dd(n: usize, extra: usize, rng: &mut Rng) -> Csc {
@@ -40,7 +47,7 @@ fn random_dd(n: usize, extra: usize, rng: &mut Rng) -> Csc {
 /// invented.
 #[test]
 fn coo_csc_roundtrip_preserves_structure() {
-    let mut rng = Rng::new(0xC5C_0001);
+    let mut rng = Rng::new(SEED_ROUNDTRIP);
     for trial in 0..20 {
         let nrows = rng.range(1, 40);
         let ncols = rng.range(1, 40);
@@ -95,7 +102,7 @@ fn coo_csc_roundtrip_preserves_structure() {
 /// Duplicate COO entries are summed on conversion (MNA stamping semantics).
 #[test]
 fn coo_duplicates_sum_on_conversion() {
-    let mut rng = Rng::new(0xC5C_0002);
+    let mut rng = Rng::new(SEED_DUPLICATES);
     for trial in 0..10 {
         let n = rng.range(2, 20);
         let stamps = rng.range(1, 60);
@@ -126,17 +133,21 @@ fn coo_duplicates_sum_on_conversion() {
 /// residual < 1e-7.
 #[test]
 fn random_dd_factor_solve_residual() {
-    let mut rng = Rng::new(0xDD_0001);
+    let mut rng = Rng::new(SEED_RANDOM_DD);
     for trial in 0..10 {
         let n = rng.range(30, 200);
         let extra = n * rng.range(2, 6);
         let a = random_dd(n, extra, &mut rng);
         let b: Vec<f64> = (0..n).map(|i| ((i % 13) as f64) - 6.0).collect();
-        let mut s = GluSolver::factor(&a, &GluOptions::default())
-            .unwrap_or_else(|e| panic!("trial {trial} (n={n}): factor failed: {e}"));
+        let mut s = GluSolver::factor(&a, &GluOptions::default()).unwrap_or_else(|e| {
+            panic!("seed {SEED_RANDOM_DD:#x} trial {trial} (n={n}): factor failed: {e}")
+        });
         let x = s.solve(&b).unwrap();
         let r = residual(&a, &x, &b);
-        assert!(r < 1e-7, "trial {trial} (n={n}): residual {r}");
+        assert!(
+            r < 1e-7,
+            "seed {SEED_RANDOM_DD:#x} trial {trial} (n={n}): residual {r}"
+        );
     }
 }
 
@@ -144,7 +155,7 @@ fn random_dd_factor_solve_residual() {
 /// matrix to 1e-10 — both in the LU values and in the solutions.
 #[test]
 fn refactor_matches_fresh_factor() {
-    let mut rng = Rng::new(0xDD_0002);
+    let mut rng = Rng::new(SEED_REFACTOR);
     for trial in 0..8 {
         let n = rng.range(30, 150);
         let extra = n * rng.range(2, 5);

@@ -4,7 +4,7 @@
 //! Tier layout: see `rust/tests/README.md`.
 
 use glu3::coordinator::{pattern_key, Checkout, SolverPool};
-use glu3::glu::{GluOptions, GluSolver, NumericEngine};
+use glu3::glu::{ExecBackend, GluOptions, GluSolver, NumericEngine};
 use glu3::numeric::residual;
 use glu3::sparse::gen::{self, restamp_columns as restamp};
 use glu3::sparse::Csc;
@@ -295,4 +295,43 @@ fn scatter_map_built_once_across_pool_checkouts() {
         stats.atomic_commits_avoided > 0,
         "AMD mesh must have ownership/chain levels"
     );
+}
+
+/// Acceptance: the lowered `LaunchSchedule` (and the executor's uploaded
+/// device buffers) are part of the cached per-pattern state — across
+/// repeated pool checkouts the schedule engine lowers the schedule and
+/// uploads the pattern exactly once (`GluStats::schedule_builds == 1`),
+/// every hit re-executing the cached launch sequence.
+#[test]
+fn launch_schedule_lowered_once_across_pool_checkouts() {
+    let opts = GluOptions {
+        engine: NumericEngine::Schedule {
+            backend: ExecBackend::Virtual,
+        },
+        ..Default::default()
+    };
+    let pool = SolverPool::new(opts);
+    let base = gen::grid2d(14, 14, 5);
+    let mut rng = Rng::new(101);
+    let b = vec![1.0; 196];
+    for _ in 0..4 {
+        let m = restamp(&base, &mut rng);
+        let x = pool.solve(&m, &b).unwrap();
+        assert!(residual(&m, &x, &b) < 1e-7);
+    }
+    let st = pool.stats();
+    assert_eq!((st.misses, st.hits), (1, 3));
+    let es = pool.entry_stats();
+    assert_eq!(es.len(), 1);
+    let stats = &es[0].1;
+    assert_eq!(
+        stats.schedule_builds, 1,
+        "checkout hits must never re-lower the schedule"
+    );
+    assert_eq!(stats.scatter_builds, 1);
+    assert_eq!(stats.plan_builds, 1);
+    assert_eq!(stats.numeric_runs, 4);
+    let exec = stats.exec.as_ref().expect("schedule engine must carry a per-launch report");
+    assert_eq!(exec.per_launch.len(), stats.num_levels);
+    assert!(exec.total_launches() >= stats.num_levels as u64);
 }
