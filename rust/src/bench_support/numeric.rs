@@ -15,7 +15,11 @@
 //! the scatter-mapped indexed engine ([`parrl::refactor_in_place`])
 //! head-to-head against the search-based baseline
 //! ([`parrl::refactor_in_place_search`]) on the same plan and pool, plus
-//! the one-time scatter build cost being amortized. Wired into the CLI as
+//! the one-time scatter build cost being amortized. Schema v5 adds a
+//! `robustness` block: the numeric-repair-ladder counters (perturbations,
+//! refinement steps, escalations, accepted probe residual) from one
+//! deterministic singular refactor, proving the in-place repair path per
+//! run. Wired into the CLI as
 //! `glu3 bench` and into CI as a schema-validated smoke job; the perf
 //! trajectory lives in the emitted JSON, not in a CI gate.
 //!
@@ -24,7 +28,7 @@
 //! `iters` runs after `warmup` discarded runs, in milliseconds.
 
 use crate::glu::{ExecBackend, GluOptions, GluSolver, NumericEngine};
-use crate::numeric::{parlu, parrl, WorkerPool};
+use crate::numeric::{parlu, parrl, PivotMonitor, WorkerPool};
 use crate::sparse::{gen, Csc};
 use crate::symbolic::symbolic_fill;
 use crate::util::stats::percentile;
@@ -208,6 +212,74 @@ pub fn schedule_report(solver: &GluSolver) -> Option<ScheduleReport> {
     })
 }
 
+/// The robustness block (schema v5): the numeric-repair ladder driven
+/// once per bench run on a deterministic singular refactor — healthy
+/// tridiagonal pattern factored, then restamped with its first pivot
+/// zeroed ([`gen::weaken_diagonal`]) so the diagonal-perturbation +
+/// iterative-refinement rung must fire. The recorded counters prove,
+/// per run, that a zero pivot is repaired *in place* (no symbolic
+/// rerun) within the probe tolerance.
+#[derive(Debug, Clone)]
+pub struct RobustnessReport {
+    /// Element growth proxy of the repaired run.
+    pub pivot_growth: f64,
+    /// Condition proxy (max/min pivot magnitude) of the repaired run.
+    pub condition_estimate: f64,
+    /// Diagonal-perturbation attempts the ladder spent.
+    pub perturbations: u64,
+    /// Iterative-refinement correction steps applied.
+    pub refine_iters: u64,
+    /// Escalations to a fresh re-equilibration on the fixed pattern.
+    pub escalations: u64,
+    /// Refactors that would have failed outright but were repaired.
+    pub repairs: u64,
+    /// Scaled probe residual the accepted repair achieved.
+    pub probe_residual: f64,
+}
+
+/// Drive the repair ladder on the deterministic singular-refactor fixture
+/// and capture the counters. Natural ordering and no scaling keep the
+/// MC64 matching at identity on the diagonally dominant tridiagonal, so
+/// the zeroed entry is *guaranteed* to land on a pivot.
+pub fn robustness_report() -> anyhow::Result<RobustnessReport> {
+    use crate::order::FillOrdering;
+    use crate::sparse::Coo;
+
+    let n = 64;
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        coo.push(i, i, 4.0);
+        if i + 1 < n {
+            coo.push(i, i + 1, -1.0);
+            coo.push(i + 1, i, -1.0);
+        }
+    }
+    let a = coo.to_csc();
+    let bad = gen::weaken_diagonal(&a, n, 0.0); // A(0,0) = 0
+    let opts = GluOptions {
+        ordering: FillOrdering::Natural,
+        scale: false,
+        ..Default::default()
+    };
+    let mut solver = GluSolver::factor(&a, &opts)?;
+    solver.refactor(&bad)?;
+    let st = solver.stats();
+    anyhow::ensure!(
+        st.symbolic_runs == 1,
+        "the repair must reuse the cached symbolic state"
+    );
+    let r = &st.robustness;
+    Ok(RobustnessReport {
+        pivot_growth: r.pivot_growth,
+        condition_estimate: r.condition_estimate,
+        perturbations: r.perturbations,
+        refine_iters: r.refine_iters,
+        escalations: r.escalations,
+        repairs: r.repairs,
+        probe_residual: r.last_residual,
+    })
+}
+
 /// The pool-vs-spawn head-to-head (same schedule, same arithmetic).
 #[derive(Debug, Clone)]
 pub struct SpawnBaseline {
@@ -237,6 +309,7 @@ pub struct BenchReport {
     pub plan: PlanReport,
     pub refactor_loop: RefactorLoopReport,
     pub schedule: ScheduleReport,
+    pub robustness: RobustnessReport,
 }
 
 /// Run the whole harness over `spec`.
@@ -312,6 +385,7 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
 
     let baseline = spawn_vs_pool(spec)?;
     let refactor_loop = refactor_loop(spec)?;
+    let robustness = robustness_report()?;
     let plan = plan.expect("at least one engine sampled");
     let schedule = schedule.expect("schedule engine sampled");
 
@@ -325,6 +399,7 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
         plan,
         refactor_loop,
         schedule,
+        robustness,
     })
 }
 
@@ -360,7 +435,7 @@ pub fn refactor_loop(spec: &BenchSpec) -> anyhow::Result<RefactorLoopReport> {
     for it in 0..spec.warmup + iterations {
         lu.values_mut().copy_from_slice(&baseline_vals);
         let t = std::time::Instant::now();
-        parrl::refactor_in_place(&mut lu, &plan, &pool)?;
+        parrl::refactor_in_place(&mut lu, &plan, &pool, &mut PivotMonitor::new())?;
         if it >= spec.warmup {
             indexed_ms.push(t.elapsed().as_secs_f64() * 1e3);
         }
@@ -368,7 +443,7 @@ pub fn refactor_loop(spec: &BenchSpec) -> anyhow::Result<RefactorLoopReport> {
     for it in 0..spec.warmup + iterations {
         lu.values_mut().copy_from_slice(&baseline_vals);
         let t = std::time::Instant::now();
-        parrl::refactor_in_place_search(&mut lu, &plan, &pool)?;
+        parrl::refactor_in_place_search(&mut lu, &plan, &pool, &mut PivotMonitor::new())?;
         if it >= spec.warmup {
             search_ms.push(t.elapsed().as_secs_f64() * 1e3);
         }
@@ -440,6 +515,18 @@ fn json_num(v: f64) -> String {
     }
 }
 
+/// Scientific-notation variant for quantities spanning many decades
+/// (growth factors, condition proxies, probe residuals), where fixed
+/// 6-decimal formatting would flatten e.g. `1e-12` to `0.000000`.
+/// Rust's `{:e}` output (`1.5e-12`, `2e0`) is valid JSON number syntax.
+fn json_num_sci(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:e}")
+    } else {
+        "null".to_string()
+    }
+}
+
 /// Escape a string for embedding in a JSON document (labels come from the
 /// CLI's `--matrix` argument, which can be an arbitrary file path).
 fn json_str(s: &str) -> String {
@@ -478,13 +565,13 @@ fn json_str_array(xs: &[String]) -> String {
 
 impl BenchReport {
     /// Hand-rolled JSON (no serde in the offline vendored crate set).
-    /// Schema `glu3-bench-numeric-v4` (v2 added the `plan` block, v3 the
-    /// `refactor_loop` block, v4 the `schedule` block); validated by the
-    /// CI smoke job.
+    /// Schema `glu3-bench-numeric-v5` (v2 added the `plan` block, v3 the
+    /// `refactor_loop` block, v4 the `schedule` block, v5 the
+    /// `robustness` block); validated by the CI smoke job.
     pub fn to_json(&self) -> String {
         let mut s = String::new();
         s.push_str("{\n");
-        s.push_str("  \"schema\": \"glu3-bench-numeric-v4\",\n");
+        s.push_str("  \"schema\": \"glu3-bench-numeric-v5\",\n");
         s.push_str(&format!("  \"matrix\": \"{}\",\n", json_str(&self.matrix)));
         s.push_str(&format!("  \"n\": {},\n", self.n));
         s.push_str(&format!("  \"nnz\": {},\n", self.nnz));
@@ -545,7 +632,7 @@ impl BenchReport {
         s.push_str(&format!(
             "  \"schedule\": {{\"levels\": {}, \"total_launches\": {}, \
              \"kernels\": {}, \"executed_cycles\": {}, \"simulated_cycles\": {}, \
-             \"executed_total\": {}, \"simulated_total\": {}, \"cycle_delta\": {}}}\n",
+             \"executed_total\": {}, \"simulated_total\": {}, \"cycle_delta\": {}}},\n",
             sc.levels,
             sc.total_launches,
             json_str_array(&sc.kernels),
@@ -554,6 +641,19 @@ impl BenchReport {
             sc.executed_total(),
             sc.simulated_total(),
             sc.cycle_delta()
+        ));
+        let rb = &self.robustness;
+        s.push_str(&format!(
+            "  \"robustness\": {{\"pivot_growth\": {}, \"condition_estimate\": {}, \
+             \"perturbations\": {}, \"refine_iters\": {}, \"escalations\": {}, \
+             \"repairs\": {}, \"probe_residual\": {}}}\n",
+            json_num_sci(rb.pivot_growth),
+            json_num_sci(rb.condition_estimate),
+            rb.perturbations,
+            rb.refine_iters,
+            rb.escalations,
+            rb.repairs,
+            json_num_sci(rb.probe_residual)
         ));
         s.push_str("}\n");
         s
@@ -566,13 +666,14 @@ impl BenchReport {
     }
 }
 
-/// Light structural validation of a `glu3-bench-numeric-v4` document:
+/// Light structural validation of a `glu3-bench-numeric-v5` document:
 /// required keys present (including the v2 `plan`, v3 `refactor_loop`,
-/// and v4 `schedule` blocks), braces/brackets balanced, at least one
-/// result row. (CI additionally runs it through a real JSON parser.)
+/// v4 `schedule`, and v5 `robustness` blocks), braces/brackets balanced,
+/// at least one result row. (CI additionally runs it through a real JSON
+/// parser.)
 pub fn validate_json_schema(s: &str) -> anyhow::Result<()> {
     for key in [
-        "\"schema\": \"glu3-bench-numeric-v4\"",
+        "\"schema\": \"glu3-bench-numeric-v5\"",
         "\"matrix\"",
         "\"n\"",
         "\"nnz\"",
@@ -610,6 +711,14 @@ pub fn validate_json_schema(s: &str) -> anyhow::Result<()> {
         "\"executed_total\"",
         "\"simulated_total\"",
         "\"cycle_delta\"",
+        "\"robustness\"",
+        "\"pivot_growth\"",
+        "\"condition_estimate\"",
+        "\"perturbations\"",
+        "\"refine_iters\"",
+        "\"escalations\"",
+        "\"repairs\"",
+        "\"probe_residual\"",
     ] {
         anyhow::ensure!(s.contains(key), "missing key {key}");
     }
@@ -683,6 +792,18 @@ mod tests {
         }
     }
 
+    fn toy_robustness() -> RobustnessReport {
+        RobustnessReport {
+            pivot_growth: 2.0,
+            condition_estimate: 8.0,
+            perturbations: 1,
+            refine_iters: 2,
+            escalations: 0,
+            repairs: 1,
+            probe_residual: 1e-12,
+        }
+    }
+
     #[test]
     fn json_roundtrip_is_wellformed() {
         let report = BenchReport {
@@ -714,6 +835,7 @@ mod tests {
             plan: toy_plan(),
             refactor_loop: toy_refactor_loop(),
             schedule: toy_schedule(),
+            robustness: toy_robustness(),
         };
         let json = report.to_json();
         validate_json_schema(&json).unwrap();
@@ -734,6 +856,14 @@ mod tests {
         assert!(json.contains("\"executed_total\": 600"));
         assert!(json.contains("\"simulated_total\": 850"));
         assert!(json.contains("\"cycle_delta\": 250"));
+        // the v5 robustness block: ladder counters + probe residual kept
+        // in scientific notation so tiny residuals survive serialization
+        assert!(json.contains("\"pivot_growth\": 2e0"));
+        assert!(json.contains("\"perturbations\": 1"));
+        assert!(json.contains("\"refine_iters\": 2"));
+        assert!(json.contains("\"escalations\": 0"));
+        assert!(json.contains("\"repairs\": 1"));
+        assert!(json.contains("\"probe_residual\": 1e-12"));
     }
 
     #[test]
@@ -781,6 +911,7 @@ mod tests {
             plan: toy_plan(),
             refactor_loop: toy_refactor_loop(),
             schedule: toy_schedule(),
+            robustness: toy_robustness(),
         };
         let json = report.to_json();
         validate_json_schema(&json).unwrap();
@@ -789,8 +920,23 @@ mod tests {
 
     #[test]
     fn validator_rejects_truncation() {
-        let report_json = "{\n  \"schema\": \"glu3-bench-numeric-v4\",\n  \"results\": [";
+        let report_json = "{\n  \"schema\": \"glu3-bench-numeric-v5\",\n  \"results\": [";
         assert!(validate_json_schema(report_json).is_err());
+    }
+
+    #[test]
+    fn robustness_report_records_an_in_place_repair() {
+        let rb = robustness_report().unwrap();
+        assert!(rb.repairs >= 1, "the zeroed pivot must trigger a repair");
+        assert!(rb.perturbations >= 1, "rung 1 must fire");
+        assert_eq!(rb.escalations, 0, "the well-conditioned fixture must not escalate");
+        assert!(
+            rb.probe_residual.is_finite() && rb.probe_residual <= 1e-9,
+            "accepted repair above probe tolerance: {}",
+            rb.probe_residual
+        );
+        assert!(rb.pivot_growth.is_finite() && rb.pivot_growth > 0.0);
+        assert!(rb.condition_estimate >= 1.0);
     }
 
     #[test]

@@ -296,9 +296,18 @@ impl SolverPool {
                 // always equals checkout calls).
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 if let Err(e) = shard.entries[i].solver.refactor(a) {
-                    // A failed refactor (numerically singular values) leaves
-                    // the entry's factors stale — drop it rather than serve
-                    // them.
+                    if e.downcast_ref::<crate::numeric::GluError>().is_some() {
+                        // Numerically singular *values* — the symbolic
+                        // pattern, plan, scatter map and schedule are all
+                        // still valid, and the next Newton iterate will
+                        // usually stamp healthy values. Keep the entry (its
+                        // solver is poisoned until a refactor succeeds) so
+                        // the cached symbolic state survives the bad stamp.
+                        shard.entries[i].last_used = self.tick();
+                        return Err(e);
+                    }
+                    // Structural failure: the entry's cached state itself is
+                    // suspect — drop it rather than serve it again.
                     shard.entries.swap_remove(i);
                     return Err(e);
                 }
@@ -523,6 +532,51 @@ mod tests {
         assert!(pool.is_empty());
         let g = pool.checkout(&a).unwrap();
         assert_eq!(g.outcome(), Checkout::Factored);
+    }
+
+    #[test]
+    fn numeric_failure_retains_cached_pattern() {
+        // good -> singular -> good on one pattern: the singular stamp must
+        // not evict the entry, so the third checkout reuses the cached
+        // symbolic state (symbolic_runs stays 1) and refactors in place.
+        let a = gen::netlist(120, 5, 8, 0.1, 1, 0.2, 42);
+        let pool = SolverPool::new(GluOptions::default());
+
+        let g = pool.checkout(&a).unwrap();
+        assert_eq!(g.outcome(), Checkout::Factored);
+        drop(g);
+
+        // Same pattern, all-zero values: numerically singular beyond what
+        // the robustness ladder can repair (every rung sees zero pivots and
+        // a zero residual denominator), but structurally fine.
+        let mut zeroed = a.clone();
+        for v in zeroed.values_mut() {
+            *v = 0.0;
+        }
+        let err = pool.checkout(&zeroed).unwrap_err();
+        assert!(
+            err.downcast_ref::<crate::numeric::GluError>().is_some(),
+            "expected a typed numeric error, got: {err:#}"
+        );
+        assert_eq!(pool.len(), 1, "numeric failure must not evict the entry");
+
+        // Healthy values again: hit + refactor, zero extra symbolic runs.
+        let g = pool.checkout(&a).unwrap();
+        assert_eq!(g.outcome(), Checkout::Refactored);
+        assert_eq!(g.stats().symbolic_runs, 1);
+        drop(g);
+
+        let st = pool.stats();
+        assert_eq!(st.misses, 1);
+        assert_eq!(st.hits, 2);
+        assert_eq!(st.factors, 1);
+        // only the successful repair counts as a refactor
+        assert_eq!(st.refactors, 1);
+
+        // and the repaired solver actually solves
+        let b = vec![1.0; 120];
+        let x = pool.solve(&a, &b).unwrap();
+        assert!(residual(&a, &x, &b) < 1e-7);
     }
 
     #[test]

@@ -23,4 +23,6 @@ pub mod profile;
 pub mod solver;
 
 pub use profile::{amortization_profile, parallelism_profile, AmortizationProfile, LevelProfile};
-pub use solver::{Detection, ExecBackend, GluOptions, GluSolver, GluStats, NumericEngine};
+pub use solver::{
+    Detection, ExecBackend, GluOptions, GluSolver, GluStats, NumericEngine, RobustnessStats,
+};

@@ -4,7 +4,7 @@ use crate::depend::{glu1, glu2, glu3, levelize, DepGraph, Levels};
 use crate::gpusim::{simulate_refactorization, DeviceConfig, Policy, SimReport};
 use crate::numeric::pool::WorkerPool;
 use crate::numeric::trisolve::TriangularSchedule;
-use crate::numeric::{leftlook, parlu, parrl, rightlook, LuFactors};
+use crate::numeric::{leftlook, parlu, parrl, rightlook, GluError, LuFactors, PivotMonitor};
 use crate::order::{preprocess, FillOrdering, Preprocessed};
 use crate::plan::FactorPlan;
 use crate::runtime::executor::{create_backend, DeviceExecutor, ExecReport};
@@ -69,6 +69,20 @@ pub enum NumericEngine {
     Schedule {
         backend: ExecBackend,
     },
+    /// CKTSO-style adaptive choice: pick the engine *per pattern* from the
+    /// [`FactorPlan`]'s statistics (level depth, mode histogram, average
+    /// level width) once the symbolic analysis is done. Deep, narrow,
+    /// stream-dominated schedules route to the sequential left-looking
+    /// oracle (per-level launches are pure overhead there); wide schedules
+    /// with multiple threads route to the pool-backed parallel
+    /// right-looking engine; everything in between executes the lowered
+    /// launch schedule on the virtual device. The resolved choice is
+    /// recorded in [`GluStats::resolved_engine`] and queryable via
+    /// [`GluSolver::engine`]. With [`Detection::Glu1`] the only safe
+    /// engine — the left-looking oracle — is chosen.
+    Auto {
+        threads: usize,
+    },
 }
 
 impl NumericEngine {
@@ -76,9 +90,43 @@ impl NumericEngine {
     pub fn threads(&self) -> usize {
         match self {
             NumericEngine::ParallelCpu { threads }
-            | NumericEngine::ParallelRightLooking { threads } => (*threads).max(1),
+            | NumericEngine::ParallelRightLooking { threads }
+            | NumericEngine::Auto { threads } => (*threads).max(1),
             _ => 1,
         }
+    }
+}
+
+/// Resolve [`NumericEngine::Auto`] against the pattern's plan statistics;
+/// every concrete engine resolves to itself. Average level width (columns
+/// per barrier) is the dominant signal — it decides whether per-level
+/// orchestration amortizes — with the plan's stream-mode share breaking
+/// near-sequential schedules toward the oracle.
+fn resolve_engine(
+    requested: &NumericEngine,
+    detection: Detection,
+    plan: &FactorPlan,
+) -> NumericEngine {
+    let NumericEngine::Auto { threads } = requested else {
+        return requested.clone();
+    };
+    let threads = (*threads).max(1);
+    if detection == Detection::Glu1 {
+        // The U-pattern schedule has double-U hazards: only the
+        // left-looking engine may consume it.
+        return NumericEngine::LeftLookingCpu;
+    }
+    let levels = plan.num_levels().max(1);
+    let avg_width = plan.n() as f64 / levels as f64;
+    let (_, _, stream) = plan.mode_histogram();
+    if avg_width < 2.0 || stream * 2 >= levels {
+        return NumericEngine::LeftLookingCpu;
+    }
+    if threads > 1 && avg_width >= 16.0 {
+        return NumericEngine::ParallelRightLooking { threads };
+    }
+    NumericEngine::Schedule {
+        backend: ExecBackend::Virtual,
     }
 }
 
@@ -110,6 +158,36 @@ impl Default for GluOptions {
             device: DeviceConfig::titan_x(),
         }
     }
+}
+
+/// Numeric-health estimates and robustness-ladder counters, updated by
+/// every [`GluSolver::factor`] / [`GluSolver::refactor`] run. The estimates
+/// are the cheap kernel-threaded kind (pivot extrema — two compares per
+/// column, never on the MAC hot loop), not true condition numbers.
+#[derive(Debug, Clone, Default)]
+pub struct RobustnessStats {
+    /// Element growth proxy of the last successful run:
+    /// `max |pivot| / max |stamped value|`.
+    pub pivot_growth: f64,
+    /// Condition proxy of the last successful run:
+    /// `max |pivot| / min |pivot|`.
+    pub condition_estimate: f64,
+    /// Smallest pivot magnitude seen in the last successful run.
+    pub min_abs_pivot: f64,
+    /// Scaled probe residual of the last *repaired* run (0.0 while the
+    /// factors are exact and no repair was needed).
+    pub last_residual: f64,
+    /// Diagonal-perturbation attempts (ladder rung 1) over this solver's
+    /// lifetime.
+    pub perturbations: u64,
+    /// Iterative-refinement correction steps applied (probe + solve).
+    pub refine_iters: u64,
+    /// Escalations to a fresh re-equilibration on the fixed pattern
+    /// (ladder rung 2).
+    pub escalations: u64,
+    /// Refactor calls that would have failed outright but were repaired in
+    /// place by the ladder.
+    pub repairs: u64,
 }
 
 /// Phase timings and structural statistics of one factorization.
@@ -175,6 +253,11 @@ pub struct GluStats {
     /// (`None` for every other engine): launch counts plus
     /// executed-vs-simulated cycles per level.
     pub exec: Option<ExecReport>,
+    /// Numeric-health estimates and robustness-ladder counters.
+    pub robustness: RobustnessStats,
+    /// Debug label of the engine actually running the kernels — equals the
+    /// configured engine unless [`NumericEngine::Auto`] resolved it.
+    pub resolved_engine: String,
 }
 
 impl GluStats {
@@ -263,12 +346,28 @@ pub struct GluSolver {
     factors: LuFactors,
     stats: GluStats,
     ws: NumericWorkspace,
+    /// The engine actually running the kernels: `opts.engine` unless
+    /// [`NumericEngine::Auto`] was requested, in which case the per-pattern
+    /// resolution made at factor time.
+    engine: NumericEngine,
     /// Set when an in-place refactorization failed partway: the factors
     /// are garbage until a refactor succeeds, and solves are refused.
     poisoned: bool,
     /// Map: position in the *original* matrix's CSC value array → position
     /// in the filled pattern's value array (for fast refactorization).
     value_map: Vec<usize>,
+    /// Filled-pattern value index of each diagonal entry (`usize::MAX` if
+    /// structurally absent — a case the symbolic phase rejects anyway).
+    /// Precomputed so the ladder's diagonal perturbation is a flat sweep.
+    diag_map: Vec<usize>,
+    /// Whether stamping applies `pre.row_scale`/`pre.col_scale`. Starts as
+    /// `opts.scale`; the escalation rung forces it on after installing
+    /// fresh Ruiz scales.
+    apply_scales: bool,
+    /// Magnitude of the diagonal perturbation baked into the current
+    /// factors (0.0 = factors are exact). While nonzero, every solve runs
+    /// iterative refinement against the true values held in `ws.fresh`.
+    perturb_eps: f64,
 }
 
 impl GluSolver {
@@ -297,8 +396,19 @@ impl GluSolver {
             FactorPlan::from_levels(&sym, levels, &opts.policy, &opts.device)
         });
 
-        let mut ws = NumericWorkspace::new(&opts.engine, &sym)?;
-        let (factors, sim, numeric_ms, exec) = run_engine(&opts.engine, &plan, &sym, &mut ws)?;
+        let engine = resolve_engine(&opts.engine, opts.detection, &plan);
+        let mut ws = NumericWorkspace::new(&engine, &sym)?;
+        let mut mon = PivotMonitor::new();
+        let (factors, sim, numeric_ms, exec) = run_engine(&engine, &plan, &sym, &mut ws, &mut mon)?;
+
+        // Keep the true stamped values around: the robustness ladder's
+        // iterative refinement corrects against them, and refactors reuse
+        // the buffer as scatter scratch.
+        ws.fresh.copy_from_slice(sym.filled.values());
+        let max_stamp = max_abs(&ws.fresh);
+        let diag_map = (0..sym.filled.ncols())
+            .map(|j| sym.filled.entry_index(j, j).unwrap_or(usize::MAX))
+            .collect();
 
         let value_map = build_value_map(a, &pre, &sym);
 
@@ -324,8 +434,20 @@ impl GluSolver {
             atomic_commits_avoided: plan.atomic_commits_avoided(),
             schedule_builds: plan.schedule_builds(),
             exec,
+            robustness: RobustnessStats {
+                pivot_growth: mon.growth(max_stamp),
+                condition_estimate: mon.condition_estimate(),
+                min_abs_pivot: if mon.min_abs_pivot.is_finite() {
+                    mon.min_abs_pivot
+                } else {
+                    0.0
+                },
+                ..Default::default()
+            },
+            resolved_engine: format!("{engine:?}"),
         };
 
+        let apply_scales = opts.scale;
         Ok(GluSolver {
             opts: opts.clone(),
             pre,
@@ -334,9 +456,19 @@ impl GluSolver {
             factors,
             stats,
             ws,
+            engine,
             poisoned: false,
             value_map,
+            diag_map,
+            apply_scales,
+            perturb_eps: 0.0,
         })
+    }
+
+    /// The engine actually running the kernels (the Auto resolution when
+    /// [`NumericEngine::Auto`] was requested).
+    pub fn engine(&self) -> &NumericEngine {
+        &self.engine
     }
 
     /// Solve `A x = b` using the current factors.
@@ -388,8 +520,10 @@ impl GluSolver {
     /// With a multi-thread engine configured, the triangular solves run
     /// level-parallel on the persistent worker pool over the cached
     /// [`TriangularSchedule`]; results are bit-identical to the sequential
-    /// path at any thread count.
-    fn solve_into(&self, b: &[f64], pb: &mut [f64], x: &mut [f64]) {
+    /// path at any thread count. While the factors carry a diagonal
+    /// perturbation (ladder rung 1), the solution is polished by iterative
+    /// refinement against the true values in `ws.fresh` before the gather.
+    fn solve_into(&mut self, b: &[f64], pb: &mut [f64], x: &mut [f64]) {
         // b' = Dr * b permuted by the row permutation.
         let pr = self.pre.row_perm.as_scatter();
         for (old, &new) in pr.iter().enumerate() {
@@ -416,6 +550,16 @@ impl GluSolver {
                 crate::numeric::trisolve::upper_solve(&self.factors.lu, pb);
             }
         }
+        // Perturbed factors are a preconditioner, not an inverse: refine
+        // the permuted-domain solution against the true stamped values.
+        if self.perturb_eps > 0.0 {
+            // re-derive the scattered rhs (pb was overwritten in place)
+            let mut b0 = vec![0.0; pb.len()];
+            for (old, &new) in pr.iter().enumerate() {
+                b0[new] = b[old] * self.pre.row_scale[old];
+            }
+            self.refine_in_place(&b0, pb, REFINE_MAX_SOLVE);
+        }
         // x = Dc * (P_colᵀ x').
         let pc = self.pre.col_perm.as_scatter();
         for (old, &new) in pc.iter().enumerate() {
@@ -423,70 +567,278 @@ impl GluSolver {
         }
     }
 
+    /// `out[r] = (As · y)[r]` over the filled pattern with the *true*
+    /// stamped values (`ws.fresh`) — the matvec iterative refinement needs.
+    fn matvec_fresh(&self, y: &[f64], out: &mut [f64]) {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let filled = &self.sym.filled;
+        let mut pos = 0usize;
+        for c in 0..filled.ncols() {
+            let (rows, _) = filled.col(c);
+            let yc = y[c];
+            for &r in rows {
+                out[r] += self.ws.fresh[pos] * yc;
+                pos += 1;
+            }
+        }
+    }
+
+    /// Iterative refinement in the permuted/scaled domain: polish `y`
+    /// (current solution of `As y = b0`) with up to `max_iters` correction
+    /// solves through the (possibly perturbed) factors. Returns the final
+    /// scaled residual `‖b0 − As·y‖∞ / (‖As‖_F ‖y‖∞ + ‖b0‖∞)`.
+    fn refine_in_place(&mut self, b0: &[f64], y: &mut [f64], max_iters: usize) -> f64 {
+        let n = b0.len();
+        let mut r = vec![0.0; n];
+        let fro = self.ws.fresh.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let bnorm = b0.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        let mut rel = f64::INFINITY;
+        for iter in 0..=max_iters {
+            self.matvec_fresh(y, &mut r);
+            for (ri, &bi) in r.iter_mut().zip(b0) {
+                *ri = bi - *ri;
+            }
+            let rnorm = r.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+            let ynorm = y.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+            let denom = fro * ynorm + bnorm;
+            rel = if denom > 0.0 { rnorm / denom } else { rnorm };
+            if rel <= PROBE_TOL || iter == max_iters || !rel.is_finite() {
+                break;
+            }
+            crate::numeric::trisolve::lower_unit_solve(&self.factors.lu, &mut r);
+            crate::numeric::trisolve::upper_solve(&self.factors.lu, &mut r);
+            for (yi, &di) in y.iter_mut().zip(r.iter()) {
+                *yi += di;
+            }
+            self.stats.robustness.refine_iters += 1;
+        }
+        rel
+    }
+
+    /// Repair probe: factor-quality check used by the ladder. Solves a
+    /// fixed all-ones rhs through the current factors and refines it
+    /// against the true stamped values; the returned scaled residual says
+    /// whether the (perturbed/re-equilibrated) factors reproduce the
+    /// actual matrix to acceptance.
+    fn probe_residual(&mut self) -> f64 {
+        let n = self.stats.n;
+        let b0 = vec![1.0; n];
+        let mut y = b0.clone();
+        crate::numeric::trisolve::lower_unit_solve(&self.factors.lu, &mut y);
+        crate::numeric::trisolve::upper_solve(&self.factors.lu, &mut y);
+        self.refine_in_place(&b0, &mut y, REFINE_MAX_PROBE)
+    }
+
     /// Refactor with new values on the *same sparsity pattern* (the
     /// Newton–Raphson iteration pattern). Preprocessing, symbolic analysis
     /// and levelization are all reused; only the numeric kernel reruns —
     /// **in place** over the existing factor storage, through solver-owned
     /// scratch, so the hot loop performs no `O(nnz)` allocation.
+    ///
+    /// Singular or badly-grown values do **not** discard the solver: the
+    /// numeric robustness ladder repairs them in place, keeping every
+    /// piece of symbolic state (plan, scatter map, launch schedule):
+    ///
+    /// 1. plain refactorization with pivot-growth monitoring;
+    /// 2. on a zero/tiny pivot or excessive growth, a small diagonal
+    ///    perturbation plus an iterative-refinement probe against the true
+    ///    values (refinement then stays active for subsequent solves);
+    /// 3. if refinement stalls, escalation: fresh Ruiz equilibration of
+    ///    the new values on the *fixed* permutations, then one more
+    ///    attempt (plain, then perturbed);
+    /// 4. only then a typed [`GluError::NumericallySingular`] — the solver
+    ///    stays poisoned until a later refactor succeeds, but its symbolic
+    ///    state remains reusable.
     pub fn refactor(&mut self, a: &crate::sparse::Csc) -> anyhow::Result<()> {
         anyhow::ensure!(
             a.nnz() == self.value_map.len() && a.nrows() == self.stats.n,
             "refactor requires the original sparsity pattern"
         );
-        // Reset the solver-owned scatter buffer: zero everywhere (fill
-        // positions stay zero), then scatter A's scaled values through the
-        // precomputed map.
+        self.stamp_fresh(a);
+        let mut max_stamp = max_abs(&self.ws.fresh);
+        let mut bad_col = 0usize;
+
+        // Rung 0: plain refactorization, growth-monitored.
+        let mut mon = PivotMonitor::new();
+        match self.run_numeric(0.0, &mut mon) {
+            Ok(run) => {
+                if mon.growth(max_stamp) <= GROWTH_LIMIT
+                    && mon.condition_estimate() <= COND_LIMIT
+                {
+                    self.perturb_eps = 0.0; // clean factors: refinement off
+                    self.finish_run(run, &mon, max_stamp, 0.0);
+                    return Ok(());
+                }
+                // Factored, but the monitor flagged the run — repair.
+            }
+            Err(e) => match e.downcast_ref::<GluError>() {
+                Some(GluError::NumericallySingular { col }) => bad_col = *col,
+                // Structural failure (not values): the ladder cannot help.
+                None => return Err(self.fail_numeric(e)),
+            },
+        }
+
+        // Rung 1: diagonal perturbation + iterative-refinement probe.
+        if let Some((run, rel)) = self.try_perturbed(max_stamp, &mut mon, &mut bad_col) {
+            self.finish_run(run, &mon, max_stamp, rel);
+            return Ok(());
+        }
+
+        // Rung 2: escalation — re-equilibrate the new values on the fixed
+        // permutations (the pattern, plan and schedules stay untouched).
+        self.stats.robustness.escalations += 1;
+        let (rs, cs) = crate::order::mc64::ruiz_scale(a, 5);
+        self.pre.row_scale = sanitize_scales(rs);
+        self.pre.col_scale = sanitize_scales(cs);
+        self.apply_scales = true;
+        self.stamp_fresh(a);
+        max_stamp = max_abs(&self.ws.fresh);
+
+        mon = PivotMonitor::new();
+        match self.run_numeric(0.0, &mut mon) {
+            Ok(run) => {
+                let rel = self.probe_residual();
+                if rel <= PROBE_TOL {
+                    self.perturb_eps = 0.0;
+                    self.stats.robustness.repairs += 1;
+                    self.finish_run(run, &mon, max_stamp, rel);
+                    return Ok(());
+                }
+            }
+            Err(e) => match e.downcast_ref::<GluError>() {
+                Some(GluError::NumericallySingular { col }) => bad_col = *col,
+                None => return Err(self.fail_numeric(e)),
+            },
+        }
+        if let Some((run, rel)) = self.try_perturbed(max_stamp, &mut mon, &mut bad_col) {
+            self.finish_run(run, &mon, max_stamp, rel);
+            return Ok(());
+        }
+
+        // Rung 3: the ladder is exhausted. Typed, so callers (the pool)
+        // can tell repairable-numeric from structural and keep the cached
+        // symbolic state for the next refactor.
+        let col = bad_col;
+        Err(self.fail_numeric(anyhow::Error::with_payload(
+            format!(
+                "numeric robustness ladder exhausted: zero/non-finite pivot at \
+                 column {col} persisted through diagonal perturbation and \
+                 re-equilibration"
+            ),
+            GluError::NumericallySingular { col },
+        )))
+    }
+
+    /// Ladder rung 1 (shared with rung 2's second attempt): refactor with a
+    /// relative diagonal perturbation, probe with iterative refinement, and
+    /// accept only when the probe residual meets [`PROBE_TOL`]. On success
+    /// the perturbation magnitude is recorded so solves keep refining.
+    fn try_perturbed(
+        &mut self,
+        max_stamp: f64,
+        mon: &mut PivotMonitor,
+        bad_col: &mut usize,
+    ) -> Option<(EngineRun, f64)> {
+        self.stats.robustness.perturbations += 1;
+        let eps = PERTURB_REL * max_stamp.max(f64::MIN_POSITIVE);
+        *mon = PivotMonitor::new();
+        match self.run_numeric(eps, mon) {
+            Ok(run) => {
+                let rel = self.probe_residual();
+                if rel <= PROBE_TOL {
+                    self.perturb_eps = eps;
+                    self.stats.robustness.repairs += 1;
+                    return Some((run, rel));
+                }
+                None
+            }
+            Err(e) => {
+                if let Some(GluError::NumericallySingular { col }) = e.downcast_ref::<GluError>()
+                {
+                    *bad_col = *col;
+                }
+                None
+            }
+        }
+    }
+
+    /// Zero the solver-owned scatter buffer and restamp `a`'s (optionally
+    /// scaled) values through the precomputed map — fill positions stay
+    /// zero.
+    fn stamp_fresh(&mut self, a: &crate::sparse::Csc) {
         for v in self.ws.fresh.iter_mut() {
             *v = 0.0;
         }
-        {
-            let fresh = &mut self.ws.fresh;
-            let rs = &self.pre.row_scale;
-            let cs = &self.pre.col_scale;
-            let mut pos = 0usize;
-            for c in 0..a.ncols() {
-                let (rows, vals) = a.col(c);
-                for (&r, &v) in rows.iter().zip(vals) {
-                    let scaled = if self.opts.scale {
-                        v * rs[r] * cs[c]
-                    } else {
-                        v
-                    };
-                    fresh[self.value_map[pos]] += scaled;
-                    pos += 1;
+        let fresh = &mut self.ws.fresh;
+        let rs = &self.pre.row_scale;
+        let cs = &self.pre.col_scale;
+        let apply = self.apply_scales;
+        let mut pos = 0usize;
+        for c in 0..a.ncols() {
+            let (rows, vals) = a.col(c);
+            for (&r, &v) in rows.iter().zip(vals) {
+                let scaled = if apply { v * rs[r] * cs[c] } else { v };
+                fresh[self.value_map[pos]] += scaled;
+                pos += 1;
+            }
+        }
+    }
+
+    /// Stamp the factor storage from `ws.fresh` (plus an optional diagonal
+    /// perturbation of magnitude `eps`, signed to reinforce the stamped
+    /// diagonal) and rerun the engine in place.
+    fn run_numeric(&mut self, eps: f64, mon: &mut PivotMonitor) -> anyhow::Result<EngineRun> {
+        self.factors.lu.values_mut().copy_from_slice(&self.ws.fresh);
+        if eps > 0.0 {
+            let vals = self.factors.lu.values_mut();
+            for &idx in &self.diag_map {
+                if idx != usize::MAX {
+                    let d = vals[idx];
+                    vals[idx] = if d >= 0.0 { d + eps } else { d - eps };
                 }
             }
         }
-        // Stamp straight into the factor storage and rerun the kernel in
-        // place (no clone of the filled pattern).
-        self.factors.lu.values_mut().copy_from_slice(&self.ws.fresh);
-
-        match rerun_engine(
-            &self.opts.engine,
+        rerun_engine(
+            &self.engine,
             &self.plan,
             &mut self.factors.lu,
             &mut self.ws,
-        ) {
-            Ok((sim, numeric_ms, exec)) => {
-                self.poisoned = false;
-                self.stats.numeric_ms = numeric_ms;
-                self.stats.sim = sim;
-                self.stats.exec = exec;
-                self.stats.numeric_runs += 1;
-                // Stay 1 forever after the first consuming run — the
-                // refactor fast path rebuilds neither the scatter map nor
-                // the lowered schedule.
-                self.stats.scatter_builds = self.plan.scatter_builds();
-                self.stats.schedule_builds = self.plan.schedule_builds();
-                Ok(())
-            }
-            Err(e) => {
-                // The in-place kernel may have left the factors partially
-                // updated; refuse solves until a refactor succeeds.
-                self.poisoned = true;
-                Err(e)
-            }
-        }
+            mon,
+        )
+    }
+
+    /// Commit a successful numeric run into the stats block.
+    fn finish_run(&mut self, run: EngineRun, mon: &PivotMonitor, max_stamp: f64, rel: f64) {
+        let (sim, numeric_ms, exec) = run;
+        self.poisoned = false;
+        self.stats.numeric_ms = numeric_ms;
+        self.stats.sim = sim;
+        self.stats.exec = exec;
+        self.stats.numeric_runs += 1;
+        // Stay 1 forever after the first consuming run — the refactor fast
+        // path rebuilds neither the scatter map nor the lowered schedule.
+        self.stats.scatter_builds = self.plan.scatter_builds();
+        self.stats.schedule_builds = self.plan.schedule_builds();
+        self.stats.robustness.pivot_growth = mon.growth(max_stamp);
+        self.stats.robustness.condition_estimate = mon.condition_estimate();
+        self.stats.robustness.min_abs_pivot = if mon.min_abs_pivot.is_finite() {
+            mon.min_abs_pivot
+        } else {
+            0.0
+        };
+        self.stats.robustness.last_residual = rel;
+    }
+
+    /// Terminal numeric failure: the in-place kernel may have left the
+    /// factors partially updated — refuse solves until a refactor succeeds,
+    /// and scrub the run-scoped stats so a poisoned solver never reports
+    /// stale kernel timings as if they described the current factors.
+    fn fail_numeric(&mut self, e: anyhow::Error) -> anyhow::Error {
+        self.poisoned = true;
+        self.stats.numeric_ms = f64::NAN;
+        self.stats.sim = None;
+        self.stats.exec = None;
+        e
     }
 
     /// Factorization statistics.
@@ -545,32 +897,82 @@ fn wall_ms(t0: std::time::Instant) -> f64 {
     t0.elapsed().as_secs_f64() * 1e3
 }
 
+/// Ladder thresholds. Growth and condition limits are deliberately loose —
+/// they exist to catch runs that are numerically *doomed* (exact or
+/// near-exact cancellation), not to second-guess moderately conditioned
+/// circuit matrices the no-pivot regime handles fine.
+const GROWTH_LIMIT: f64 = 1e12;
+const COND_LIMIT: f64 = 1e14;
+/// Relative diagonal perturbation (× max |stamped value|) — SuperLU's
+/// `√ε·‖A‖` neighborhood: big enough that perturbed pivots divide safely,
+/// small enough that refinement converges when the matrix itself is fine.
+const PERTURB_REL: f64 = 1e-8;
+/// Probe acceptance: scaled residual the repaired factors must reach.
+const PROBE_TOL: f64 = 1e-9;
+/// Refinement iteration caps (probe at repair time / every solve after).
+const REFINE_MAX_PROBE: usize = 10;
+const REFINE_MAX_SOLVE: usize = 6;
+
+/// What one engine run returns beyond the factors themselves.
+type EngineRun = (Option<SimReport>, f64, Option<ExecReport>);
+
+/// Largest magnitude in a value buffer (0.0 for all-zero input).
+fn max_abs(vals: &[f64]) -> f64 {
+    vals.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+}
+
+/// Replace non-finite or non-positive equilibration factors with 1.0 —
+/// Ruiz on degenerate values (zero rows/columns) must never install a
+/// scale that poisons every later stamp.
+fn sanitize_scales(mut s: Vec<f64>) -> Vec<f64> {
+    for v in s.iter_mut() {
+        if !v.is_finite() || *v <= 0.0 {
+            *v = 1.0;
+        }
+    }
+    s
+}
+
+/// The left-looking engines check pivots inline but never see them twice;
+/// feed the factored diagonal through the monitor after the fact so the
+/// ladder's growth/condition gates work identically on every engine.
+fn observe_diagonal(lu: &crate::sparse::Csc, mon: &mut PivotMonitor) {
+    for j in 0..lu.ncols() {
+        let (rows, vals) = lu.col(j);
+        if let Ok(p) = rows.binary_search(&j) {
+            mon.observe(vals[p]);
+        }
+    }
+}
+
 /// Initial factorization through the engine, using (and warming) the
 /// solver workspace. Every schedule-consuming engine reads the shared
 /// [`FactorPlan`]; only the U-pattern left-looking baseline keeps its own
-/// (different) schedule in the workspace.
+/// (different) schedule in the workspace. `mon` collects the pivot extrema
+/// for the robustness ladder on every path.
 fn run_engine(
     engine: &NumericEngine,
     plan: &FactorPlan,
     sym: &SymbolicFill,
     ws: &mut NumericWorkspace,
+    mon: &mut PivotMonitor,
 ) -> anyhow::Result<(LuFactors, Option<SimReport>, f64, Option<ExecReport>)> {
     let t0 = std::time::Instant::now();
     match engine {
         NumericEngine::SimulatedGpu => {
             let mut lu = sym.filled.clone();
-            let report = simulate_refactorization(&mut lu, plan, &mut ws.lvals)?;
+            let report = simulate_refactorization(&mut lu, plan, &mut ws.lvals, mon)?;
             let ms = report.kernel_ms();
             Ok((LuFactors { lu }, Some(report), ms, None))
         }
         NumericEngine::LeftLookingCpu => {
             let mut lu = sym.filled.clone();
-            leftlook::factor_in_place(&mut lu, &mut ws.works[0])?;
+            leftlook::factor_in_place(&mut lu, &mut ws.works[0], mon)?;
             Ok((LuFactors { lu }, None, wall_ms(t0), None))
         }
         NumericEngine::RightLookingCpu => {
             let mut lu = sym.filled.clone();
-            rightlook::factor_in_place(&mut lu, plan.urow(), &mut ws.lvals)?;
+            rightlook::factor_in_place(&mut lu, plan.urow(), &mut ws.lvals, mon)?;
             Ok((LuFactors { lu }, None, wall_ms(t0), None))
         }
         NumericEngine::ParallelCpu { .. } => {
@@ -580,6 +982,7 @@ fn run_engine(
                 ws.pool.as_ref().expect("pool spawned for parallel engine"),
                 &mut ws.works,
             )?;
+            observe_diagonal(&factors.lu, mon);
             Ok((factors, None, wall_ms(t0), None))
         }
         NumericEngine::ParallelRightLooking { .. } => {
@@ -588,6 +991,7 @@ fn run_engine(
                 plan,
                 ws.pool.as_ref().expect("pool spawned for parallel engine"),
             )?;
+            observe_diagonal(&factors.lu, mon);
             Ok((factors, None, wall_ms(t0), None))
         }
         NumericEngine::Schedule { .. } => {
@@ -597,34 +1001,36 @@ fn run_engine(
             executor.upload_pattern(plan, plan.scatter(&sym.filled))?;
             let sched = plan.launch_schedule();
             let mut lu = sym.filled.clone();
-            let report = executor.execute(sched, lu.values_mut())?;
+            let report = executor.execute(sched, lu.values_mut(), mon)?;
             Ok((LuFactors { lu }, None, wall_ms(t0), Some(report)))
         }
+        NumericEngine::Auto { .. } => unreachable!("Auto is resolved before the workspace exists"),
     }
 }
 
 /// Refactorization through the engine, **in place** over `lu` (already
 /// stamped with the new values). No `O(nnz)` allocation on any path — the
-/// plan is reused as-is.
+/// plan is reused as-is. `mon` collects pivot extrema for the ladder.
 fn rerun_engine(
     engine: &NumericEngine,
     plan: &FactorPlan,
     lu: &mut crate::sparse::Csc,
     ws: &mut NumericWorkspace,
-) -> anyhow::Result<(Option<SimReport>, f64, Option<ExecReport>)> {
+    mon: &mut PivotMonitor,
+) -> anyhow::Result<EngineRun> {
     let t0 = std::time::Instant::now();
     match engine {
         NumericEngine::SimulatedGpu => {
-            let report = simulate_refactorization(lu, plan, &mut ws.lvals)?;
+            let report = simulate_refactorization(lu, plan, &mut ws.lvals, mon)?;
             let ms = report.kernel_ms();
             Ok((Some(report), ms, None))
         }
         NumericEngine::LeftLookingCpu => {
-            leftlook::factor_in_place(lu, &mut ws.works[0])?;
+            leftlook::factor_in_place(lu, &mut ws.works[0], mon)?;
             Ok((None, wall_ms(t0), None))
         }
         NumericEngine::RightLookingCpu => {
-            rightlook::factor_in_place(lu, plan.urow(), &mut ws.lvals)?;
+            rightlook::factor_in_place(lu, plan.urow(), &mut ws.lvals, mon)?;
             Ok((None, wall_ms(t0), None))
         }
         NumericEngine::ParallelCpu { .. } => {
@@ -634,6 +1040,7 @@ fn rerun_engine(
                 ws.pool.as_ref().expect("pool spawned for parallel engine"),
                 &mut ws.works,
             )?;
+            observe_diagonal(lu, mon);
             Ok((None, wall_ms(t0), None))
         }
         NumericEngine::ParallelRightLooking { .. } => {
@@ -641,6 +1048,7 @@ fn rerun_engine(
                 lu,
                 plan,
                 ws.pool.as_ref().expect("pool spawned for parallel engine"),
+                mon,
             )?;
             Ok((None, wall_ms(t0), None))
         }
@@ -648,9 +1056,10 @@ fn rerun_engine(
             let executor = ws.executor.as_mut().expect("executor created for schedule engine");
             // The pattern is already device-resident and the schedule
             // cached — the refactor hot path is a pure re-execution.
-            let report = executor.execute(plan.launch_schedule(), lu.values_mut())?;
+            let report = executor.execute(plan.launch_schedule(), lu.values_mut(), mon)?;
             Ok((None, wall_ms(t0), Some(report)))
         }
+        NumericEngine::Auto { .. } => unreachable!("Auto is resolved before the workspace exists"),
     }
 }
 
@@ -991,6 +1400,232 @@ mod tests {
         s.refactor(&a).unwrap();
         let x = s.solve(&b).unwrap();
         assert!(residual(&a, &x, &b) < 1e-10);
+    }
+
+    /// Tridiagonal DD fixture for the ladder tests: MC64's greedy matching
+    /// and `FillOrdering::Natural` both resolve to the identity on it, so a
+    /// value zeroed at `A(0,0)` at *refactor* time is guaranteed to land on
+    /// the pivot of column 0 — no permutation can route around it. The
+    /// matrix with the zeroed corner stays nonsingular (its determinant is
+    /// minus the trailing block's), which is exactly the repairable case.
+    fn tridiag(n: usize) -> crate::sparse::Csc {
+        let mut coo = crate::sparse::Coo::new(n, n);
+        for i in 0..n {
+            coo.push(i, i, 4.0);
+            if i + 1 < n {
+                coo.push(i, i + 1, -1.0);
+                coo.push(i + 1, i, -1.0);
+            }
+        }
+        coo.to_csc()
+    }
+
+    fn ladder_opts() -> GluOptions {
+        GluOptions {
+            ordering: FillOrdering::Natural,
+            scale: false,
+            ..Default::default()
+        }
+    }
+
+    /// The tentpole end-to-end: good → singular → good on one cached
+    /// pattern. The zero pivot is repaired *in place* by rung 1 (diagonal
+    /// perturbation + refinement probe) — zero extra symbolic runs, zero
+    /// plan rebuilds, and the solve on the repaired factors meets the
+    /// acceptance residual.
+    #[test]
+    fn ladder_repairs_zero_pivot_in_place() {
+        let a = tridiag(64);
+        let mut s = GluSolver::factor(&a, &ladder_opts()).unwrap();
+        let b = vec![1.0; 64];
+        let x_good = s.solve(&b).unwrap();
+        assert!(residual(&a, &x_good, &b) < 1e-10);
+        assert_eq!(s.stats().robustness.perturbations, 0);
+
+        // Newton hands back the same pattern with A(0,0) == 0.
+        let bad = gen::weaken_diagonal(&a, 64, 0.0);
+        s.refactor(&bad).unwrap();
+        let st = s.stats();
+        assert_eq!(st.symbolic_runs, 1, "repair must not rerun symbolic");
+        assert_eq!(st.plan_builds, 1, "repair must not replan");
+        assert_eq!(st.numeric_runs, 2);
+        assert_eq!(st.robustness.perturbations, 1);
+        assert_eq!(st.robustness.repairs, 1);
+        assert_eq!(st.robustness.escalations, 0);
+        assert!(
+            st.robustness.last_residual <= 1e-9,
+            "probe residual {}",
+            st.robustness.last_residual
+        );
+
+        // The repaired solve refines through the perturbed factors and
+        // meets the acceptance bar against the *bad* matrix.
+        let x_bad = s.solve(&b).unwrap();
+        assert!(
+            residual(&bad, &x_bad, &b) <= 1e-8,
+            "repaired residual {}",
+            residual(&bad, &x_bad, &b)
+        );
+
+        // Healthy values again: clean rung-0 run, refinement off.
+        s.refactor(&a).unwrap();
+        let st = s.stats();
+        assert_eq!(st.numeric_runs, 3);
+        assert_eq!(st.symbolic_runs, 1);
+        assert_eq!(st.robustness.last_residual, 0.0);
+        // lifetime counters persist
+        assert_eq!(st.robustness.perturbations, 1);
+        let x_again = s.solve(&b).unwrap();
+        for (p, q) in x_again.iter().zip(&x_good) {
+            assert!((p - q).abs() < 1e-9 * (1.0 + q.abs()));
+        }
+    }
+
+    /// Rung-2 coverage: one row mis-scaled by 1e100 trips the condition
+    /// gate, the relative diagonal perturbation (~1e92) drowns the healthy
+    /// rows so the refinement probe stalls, and the ladder escalates to a
+    /// fresh Ruiz equilibration on the fixed permutations — which fixes
+    /// the stamp outright.
+    #[test]
+    fn ladder_escalates_to_reequilibration() {
+        let a = tridiag(64);
+        let mut s = GluSolver::factor(&a, &ladder_opts()).unwrap();
+
+        let bad = gen::misscale_rows(&a, 64, 1e100);
+        s.refactor(&bad).unwrap();
+        let st = s.stats();
+        assert_eq!(st.robustness.escalations, 1, "must reach rung 2");
+        assert_eq!(st.robustness.perturbations, 1, "rung 1 tried and failed");
+        assert_eq!(st.robustness.repairs, 1);
+        assert_eq!(st.symbolic_runs, 1);
+        assert_eq!(st.plan_builds, 1);
+
+        let b = vec![1.0; 64];
+        let x = s.solve(&b).unwrap();
+        assert!(
+            residual(&bad, &x, &b) <= 1e-8,
+            "escalated residual {}",
+            residual(&bad, &x, &b)
+        );
+    }
+
+    /// Rung-3 coverage: an all-zero stamp exhausts every rung. The error
+    /// must be the *typed* numeric classification (so the pool keeps the
+    /// entry), and the failure path must scrub the run-scoped stats — a
+    /// poisoned solver never reports stale kernel timings.
+    #[test]
+    fn ladder_exhaustion_is_typed_and_scrubs_stats() {
+        let a = tridiag(48);
+        let mut s = GluSolver::factor(&a, &ladder_opts()).unwrap();
+        assert!(s.stats().numeric_ms.is_finite());
+
+        let bad = gen::weaken_diagonal(&a, 1, 0.0); // every diagonal zeroed
+        let err = s.refactor(&gen::misscale_rows(&bad, 1, 0.0)).unwrap_err();
+        let glu = err
+            .downcast_ref::<GluError>()
+            .expect("ladder exhaustion must carry the typed payload");
+        assert!(matches!(glu, GluError::NumericallySingular { .. }));
+        assert!(err.to_string().contains("ladder exhausted"), "{err}");
+
+        // satellite: failed refactor resets the run-scoped stats
+        let st = s.stats();
+        assert!(st.numeric_ms.is_nan(), "stale numeric_ms survived failure");
+        assert!(st.sim.is_none());
+        assert!(st.exec.is_none());
+        // the ladder tried everything before giving up
+        assert!(st.robustness.perturbations >= 2);
+        assert!(st.robustness.escalations >= 1);
+        assert_eq!(st.robustness.repairs, 0);
+
+        // the cached symbolic state is still viable: repair with values
+        let _ = s.solve(&vec![1.0; 48]).unwrap_err(); // poisoned
+        s.refactor(&a).unwrap();
+        assert!(s.stats().numeric_ms.is_finite());
+        assert_eq!(s.stats().symbolic_runs, 1);
+        let x = s.solve(&vec![1.0; 48]).unwrap();
+        assert!(residual(&a, &x, &vec![1.0; 48]) < 1e-8);
+    }
+
+    /// `NumericEngine::Auto` picks a concrete engine per pattern from the
+    /// plan statistics and records it. The chain fixture is analytically
+    /// pinned (width-1 schedule → the sequential oracle); the mesh and
+    /// band fixtures are pinned against the documented decision rule
+    /// evaluated on their own (deterministic) plans.
+    #[test]
+    fn auto_engine_resolves_per_pattern() {
+        // A pure chain schedule: average level width 1 — per-level
+        // launches are pure overhead, Auto must pick the oracle.
+        let chain = tridiag(96);
+        let opts = GluOptions {
+            ordering: FillOrdering::Natural,
+            scale: false,
+            engine: NumericEngine::Auto { threads: 4 },
+            ..Default::default()
+        };
+        let mut s = GluSolver::factor(&chain, &opts).unwrap();
+        assert!(
+            matches!(s.engine(), NumericEngine::LeftLookingCpu),
+            "chain must resolve to the oracle, got {:?}",
+            s.engine()
+        );
+        assert_eq!(s.stats().resolved_engine, "LeftLookingCpu");
+
+        // Glu1 detection: the only hazard-safe engine is the oracle.
+        let g1 = GluOptions {
+            detection: Detection::Glu1,
+            engine: NumericEngine::Auto { threads: 4 },
+            ..Default::default()
+        };
+        let s1 = GluSolver::factor(&gen::netlist(100, 5, 8, 0.1, 1, 0.2, 7), &g1).unwrap();
+        assert!(matches!(s1.engine(), NumericEngine::LeftLookingCpu));
+
+        // Mesh and band fixtures: the resolution must match the documented
+        // rule applied to the pattern's own plan, must never be Auto
+        // itself, and must respect the thread budget.
+        for (label, a, threads) in [
+            ("amd-mesh", gen::grid2d(32, 32, 7), 4usize),
+            ("amd-mesh-1t", gen::grid2d(32, 32, 7), 1usize),
+            ("band", gen::ladder(256, 16, 32, 5), 2usize),
+            ("random-dd", gen::netlist(400, 6, 12, 0.05, 3, 0.2, 71), 4usize),
+        ] {
+            let opts = GluOptions {
+                engine: NumericEngine::Auto { threads },
+                ..Default::default()
+            };
+            let mut s = GluSolver::factor(&a, &opts).unwrap();
+            let plan = s.plan();
+            let levels = plan.num_levels().max(1);
+            let avg_width = plan.n() as f64 / levels as f64;
+            let (_, _, stream) = plan.mode_histogram();
+            let expect = if avg_width < 2.0 || stream * 2 >= levels {
+                "LeftLookingCpu".to_string()
+            } else if threads > 1 && avg_width >= 16.0 {
+                format!("ParallelRightLooking {{ threads: {threads} }}")
+            } else {
+                "Schedule { backend: Virtual }".to_string()
+            };
+            assert_eq!(
+                s.stats().resolved_engine, expect,
+                "{label}: avg_width {avg_width:.1}, {stream}/{levels} stream"
+            );
+            assert!(!matches!(s.engine(), NumericEngine::Auto { .. }));
+            assert!(s.engine().threads() <= threads.max(1));
+
+            // the resolved engine is a fully working solver, refactor
+            // included
+            let n = a.nrows();
+            let b = vec![1.0; n];
+            let x = s.solve(&b).unwrap();
+            assert!(residual(&a, &x, &b) < 1e-7, "{label}");
+            let mut a2 = a.clone();
+            for v in a2.values_mut() {
+                *v *= 1.2;
+            }
+            s.refactor(&a2).unwrap();
+            assert_eq!(s.stats().symbolic_runs, 1);
+            let x2 = s.solve(&b).unwrap();
+            assert!(residual(&a2, &x2, &b) < 1e-7, "{label} refactor");
+        }
     }
 
     #[test]

@@ -14,7 +14,7 @@ use super::device::DeviceConfig;
 use super::exec::{simulate_level, ColumnWork, LevelTiming};
 use super::policy::Policy;
 use crate::depend::Levels;
-use crate::numeric::LuFactors;
+use crate::numeric::{LuFactors, PivotMonitor};
 use crate::plan::FactorPlan;
 use crate::symbolic::SymbolicFill;
 
@@ -89,7 +89,8 @@ pub fn simulate_factorization(
     let plan = FactorPlan::from_levels(sym, levels.clone(), policy, device);
     let mut lu = sym.filled.clone();
     let mut lvals = Vec::new();
-    let report = simulate_refactorization(&mut lu, &plan, &mut lvals)?;
+    let report =
+        simulate_refactorization(&mut lu, &plan, &mut lvals, &mut PivotMonitor::new())?;
     Ok((LuFactors { lu }, report))
 }
 
@@ -105,6 +106,7 @@ pub fn simulate_refactorization(
     lu: &mut crate::sparse::Csc,
     plan: &FactorPlan,
     lvals: &mut Vec<f64>,
+    mon: &mut PivotMonitor,
 ) -> anyhow::Result<SimReport> {
     let n = lu.ncols();
     anyhow::ensure!(plan.n() == n, "plan dimension mismatch");
@@ -138,7 +140,7 @@ pub fn simulate_refactorization(
         // the column pipeline shared with `numeric::rightlook`. ---
         for &j in level {
             let j = j as usize;
-            crate::numeric::rightlook::factor_column(lu, &urow[j], j, lvals)?;
+            crate::numeric::rightlook::factor_column(lu, &urow[j], j, lvals, mon)?;
         }
     }
 

@@ -124,6 +124,16 @@
 //! are the correctness anchors the test pyramid compares everything
 //! against.
 //!
+//! If you don't want to choose at all, [`glu::NumericEngine::Auto`]
+//! resolves an engine *per pattern* from the factored plan's own level
+//! statistics (CKTSO-style adaptivity): deep, narrow schedules — chains,
+//! `Glu1` detection, stream-dominated plans — take the sequential
+//! left-looking oracle; wide level schedules with a thread budget take
+//! the pool-backed right-looking engine; everything else runs the lowered
+//! `LaunchSchedule` on the virtual device. The resolved choice is
+//! recorded in [`glu::GluStats::resolved_engine`], and the `glu3` CLI
+//! defaults to `--engine auto`.
+//!
 //! Any multi-threaded engine also switches `solve`/`solve_many` to the
 //! level-scheduled parallel triangular solves (the
 //! [`numeric::trisolve::TriangularSchedule`] carried by the plan), which
@@ -169,6 +179,48 @@
 //! ownership partitioning removes; `glu3 bench` measures the win as the
 //! `refactor_loop` block of `BENCH_numeric.json` (indexed vs search-based
 //! head-to-head on the same plan and pool).
+//!
+//! ## Surviving ugly matrices
+//!
+//! A Newton/transient loop occasionally hands the solver a restamp whose
+//! values are numerically hostile — a pivot driven to zero through a
+//! region of the operating curve, a device model that mis-scales a row by
+//! decades. Because GLU-style factorization pivots *statically* (the
+//! order is fixed at pattern time), the numeric phase cannot swap rows to
+//! save itself; the classic response is to throw away the cached symbolic
+//! state and refactor from scratch, which is exactly the cost the whole
+//! crate exists to amortize. Instead, [`glu::GluSolver::refactor`] climbs
+//! a **repair ladder** on the fixed pattern:
+//!
+//! 1. Every numeric kernel threads a [`numeric::PivotMonitor`] through
+//!    the factorization, so each run yields an element-growth proxy and a
+//!    max/min pivot condition estimate for free. A clean run inside the
+//!    gates is accepted as-is — the hot path pays two comparisons.
+//! 2. On a zero/non-finite pivot (or a gate trip), the ladder retries
+//!    with a small static **diagonal perturbation** (scaled to the
+//!    stamped magnitudes) and runs **iterative refinement** against the
+//!    true values; the repair is accepted only if the scaled probe
+//!    residual meets tolerance. Subsequent `solve` calls keep refining
+//!    against the unperturbed matrix, so answers converge to the true
+//!    system, not the perturbed one.
+//! 3. If refinement stalls — values so mis-scaled the perturbation
+//!    swamps healthy rows — the ladder **escalates**: a fresh Ruiz
+//!    equilibration of the new values on the *same* permutations, then
+//!    the perturbed retry again. Ordering, fill, dependency levels, plan,
+//!    scatter map, and launch schedule are all reused at every rung.
+//! 4. Only when every rung fails does `refactor` return an error — a
+//!    typed [`numeric::GluError::NumericallySingular`] carried in the
+//!    `anyhow` chain — with the stats scrubbed so stale timings can't be
+//!    mistaken for a successful run.
+//!
+//! [`glu::RobustnessStats`] (on [`glu::GluStats`]) counts perturbations,
+//! refinement steps, escalations, and repairs, and records the growth /
+//! condition proxies and the accepted probe residual; `glu3 factor`
+//! prints them and `glu3 bench` emits them as the `robustness` block of
+//! `BENCH_numeric.json`. The serving tier leans on the same split:
+//! [`coordinator::SolverPool`] keeps a cached pattern when a checkout's
+//! refactor fails *numerically* (the next restamp will likely repair) and
+//! evicts only on structural failure.
 //!
 //! ## Choosing a kernel mode
 //!

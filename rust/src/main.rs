@@ -67,7 +67,8 @@ fn print_usage() {
          commands:\n\
          \x20 factor  --matrix <name|file.mtx> [--policy glu3|glu2|lee|nosmall|nostream]\n\
          \x20         [--detect glu1|glu2|glu3] [--ordering amd|rcm|natural]\n\
-         \x20         [--engine gpu|left|right|parcpu|parrl|sched|sched-pjrt] [--threads T]\n\
+         \x20         [--engine auto|gpu|left|right|parcpu|parrl|sched|sched-pjrt] [--threads T]\n\
+         \x20         (default: auto — per-pattern engine selection from the plan)\n\
          \x20 solve   same options, also solves (--rhs ones|ramp)\n\
          \x20 suite   [--set small|all] [--policy ...]   run the whole suite\n\
          \x20 profile --matrix <...>   per-level parallelism profile (Fig. 10)\n\
@@ -151,32 +152,34 @@ fn options_from(flags: &HashMap<String, String>) -> anyhow::Result<GluOptions> {
             other => anyhow::bail!("unknown ordering {other}"),
         };
     }
-    if let Some(e) = flags.get("engine") {
-        // --threads overrides the default (host parallelism) for the
-        // pool-backed engines.
-        let threads = match flags.get("threads") {
-            Some(t) => t.parse::<usize>().map_err(|_| {
-                anyhow::anyhow!("--threads must be a single integer with --engine")
-            })?,
-            None => std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1),
-        };
-        opts.engine = match e.as_str() {
-            "gpu" => NumericEngine::SimulatedGpu,
-            "left" => NumericEngine::LeftLookingCpu,
-            "right" => NumericEngine::RightLookingCpu,
-            "parcpu" => NumericEngine::ParallelCpu { threads },
-            "parrl" => NumericEngine::ParallelRightLooking { threads },
-            "sched" => NumericEngine::Schedule {
-                backend: ExecBackend::Virtual,
-            },
-            "sched-pjrt" => NumericEngine::Schedule {
-                backend: ExecBackend::Pjrt,
-            },
-            other => anyhow::bail!("unknown engine {other}"),
-        };
-    }
+    // --threads overrides the default (host parallelism) for the
+    // pool-backed and auto-resolved engines.
+    let threads = match flags.get("threads") {
+        Some(t) => t
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("--threads must be a single integer with --engine"))?,
+        None => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+    };
+    // The CLI defaults to the auto engine — CKTSO-style per-pattern
+    // selection from the factor plan's level statistics. (The library
+    // default `GluOptions::default()` stays the simulated GPU engine.)
+    opts.engine = match flags.get("engine").map(|s| s.as_str()) {
+        None | Some("auto") => NumericEngine::Auto { threads },
+        Some("gpu") => NumericEngine::SimulatedGpu,
+        Some("left") => NumericEngine::LeftLookingCpu,
+        Some("right") => NumericEngine::RightLookingCpu,
+        Some("parcpu") => NumericEngine::ParallelCpu { threads },
+        Some("parrl") => NumericEngine::ParallelRightLooking { threads },
+        Some("sched") => NumericEngine::Schedule {
+            backend: ExecBackend::Virtual,
+        },
+        Some("sched-pjrt") => NumericEngine::Schedule {
+            backend: ExecBackend::Pjrt,
+        },
+        Some(other) => anyhow::bail!("unknown engine {other}"),
+    };
     Ok(opts)
 }
 
@@ -194,6 +197,7 @@ fn cmd_factor(flags: &HashMap<String, String>, also_solve: bool) -> anyhow::Resu
     let mut solver = GluSolver::factor(&a, &opts)?;
     let st = solver.stats();
     let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["engine".to_string(), st.resolved_engine.clone()]);
     t.row(vec!["rows".to_string(), st.n.to_string()]);
     t.row(vec!["nz (before fill)".to_string(), st.nz.to_string()]);
     t.row(vec!["nnz (after fill)".to_string(), st.nnz.to_string()]);
@@ -249,6 +253,29 @@ fn cmd_factor(flags: &HashMap<String, String>, also_solve: bool) -> anyhow::Resu
             format!("{:.2}", sim.mean_occupancy()),
         ]);
     }
+    // Robustness-ladder health of the numeric run: growth and condition
+    // proxies from the pivot monitor, plus the repair counters (all zero
+    // on a clean factorization).
+    let rb = &st.robustness;
+    t.row(vec![
+        "pivot growth".to_string(),
+        format!("{:.3e}", rb.pivot_growth),
+    ]);
+    t.row(vec![
+        "condition estimate".to_string(),
+        format!("{:.3e}", rb.condition_estimate),
+    ]);
+    t.row(vec![
+        "min |pivot|".to_string(),
+        format!("{:.3e}", rb.min_abs_pivot),
+    ]);
+    t.row(vec![
+        "ladder perturb/refine/escalate/repair".to_string(),
+        format!(
+            "{}/{}/{}/{}",
+            rb.perturbations, rb.refine_iters, rb.escalations, rb.repairs
+        ),
+    ]);
     print!("{}", t.render());
 
     if also_solve {
@@ -521,6 +548,18 @@ fn cmd_bench(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         sc.simulated_total(),
         sc.cycle_delta(),
         max_delta
+    );
+    let rb = &report.robustness;
+    println!(
+        "robustness ladder: {} repair(s) via {} perturbation(s), {} refinement step(s), \
+         {} escalation(s); probe residual {:.2e} (growth {:.2e}, cond est {:.2e})",
+        rb.repairs,
+        rb.perturbations,
+        rb.refine_iters,
+        rb.escalations,
+        rb.probe_residual,
+        rb.pivot_growth,
+        rb.condition_estimate
     );
 
     let json = report.to_json();

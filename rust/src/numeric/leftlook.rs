@@ -1,7 +1,7 @@
 //! Algorithm 1: sequential Gilbert–Peierls left-looking factorization over a
 //! static filled pattern. The crate's sparse correctness oracle.
 
-use super::LuFactors;
+use super::{LuFactors, PivotMonitor};
 use crate::symbolic::SymbolicFill;
 
 /// Factor `As` (filled pattern with original values) left-looking.
@@ -14,7 +14,7 @@ use crate::symbolic::SymbolicFill;
 pub fn factor(sym: &SymbolicFill) -> anyhow::Result<LuFactors> {
     let mut lu = sym.filled.clone();
     let mut work = vec![0.0f64; sym.filled.ncols()];
-    factor_in_place(&mut lu, &mut work)?;
+    factor_in_place(&mut lu, &mut work, &mut PivotMonitor::new())?;
     Ok(LuFactors { lu })
 }
 
@@ -22,8 +22,13 @@ pub fn factor(sym: &SymbolicFill) -> anyhow::Result<LuFactors> {
 /// in and is overwritten with the factors. `work` is a zeroed length-`n`
 /// dense workspace, returned zeroed (even on the error path) so callers can
 /// keep it hot across refactorizations — the Newton-loop fast path
-/// allocates nothing.
-pub fn factor_in_place(lu: &mut crate::sparse::Csc, work: &mut [f64]) -> anyhow::Result<()> {
+/// allocates nothing. `mon` records the pivot extrema for the robustness
+/// ladder's growth/condition estimates.
+pub fn factor_in_place(
+    lu: &mut crate::sparse::Csc,
+    work: &mut [f64],
+    mon: &mut PivotMonitor,
+) -> anyhow::Result<()> {
     let n = lu.ncols();
     anyhow::ensure!(work.len() == n, "workspace must have length n");
     let (colptr, rowidx, values) = lu.split_mut();
@@ -55,8 +60,9 @@ pub fn factor_in_place(lu: &mut crate::sparse::Csc, work: &mut [f64]) -> anyhow:
             for &r in rows_j {
                 work[r] = 0.0;
             }
-            anyhow::bail!("zero/non-finite pivot at column {j}");
+            return Err(super::singular_pivot(j));
         }
+        mon.observe(pivot);
         for (idx, &r) in rows_j.iter().enumerate() {
             let v = if r > j { work[r] / pivot } else { work[r] };
             values[s + idx] = v;

@@ -38,6 +38,114 @@ pub use pool::WorkerPool;
 
 use crate::sparse::Csc;
 
+/// Typed numeric-failure classification, carried as the payload of the
+/// `anyhow::Error` every engine raises on a bad pivot (recover it with
+/// `err.downcast_ref::<GluError>()`). The robustness ladder and the
+/// [`crate::coordinator::SolverPool`] use it to tell a *values*-level
+/// singularity (repairable: the symbolic state is still viable, retry with
+/// perturbation/re-equilibration or fresh values) from a structural
+/// failure (not repairable on this pattern).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GluError {
+    /// The factorization hit a zero / non-finite pivot at column `col`:
+    /// the *values* are singular under the static pivot order, the
+    /// pattern and schedule remain valid.
+    NumericallySingular { col: usize },
+}
+
+impl std::fmt::Display for GluError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GluError::NumericallySingular { col } => {
+                write!(f, "zero/non-finite pivot at column {col}")
+            }
+        }
+    }
+}
+
+/// The error every engine raises on a zero / non-finite pivot: the
+/// classic message (so diagnostics — and anything matching on "pivot" —
+/// stay unchanged) with a typed [`GluError::NumericallySingular`] payload
+/// underneath.
+pub(crate) fn singular_pivot(col: usize) -> anyhow::Error {
+    let e = GluError::NumericallySingular { col };
+    anyhow::Error::with_payload(e, e)
+}
+
+/// Cheap pivot-growth monitor threaded through every factorization
+/// kernel: a running max/min of `|pivot|` across the columns the kernel
+/// divides by. Two scalar compares per column — nothing on the MAC hot
+/// loop — yet enough for the robustness ladder's two estimates:
+///
+/// - **pivot growth** `max|pivot| / max|A_s|` (against the stamped-value
+///   max the caller measures at scatter time): the classic element-growth
+///   proxy — explosive growth means the static pivot order is numerically
+///   degrading even when no pivot is exactly zero;
+/// - **condition estimate** `max|pivot| / min|pivot|`: the diagonal-ratio
+///   lower bound on `κ(U)`.
+#[derive(Debug, Clone, Copy)]
+pub struct PivotMonitor {
+    /// Largest `|pivot|` seen (0.0 until a column is factored).
+    pub max_abs_pivot: f64,
+    /// Smallest `|pivot|` seen (`+inf` until a column is factored).
+    pub min_abs_pivot: f64,
+}
+
+impl Default for PivotMonitor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PivotMonitor {
+    /// A monitor that has observed nothing.
+    pub fn new() -> Self {
+        PivotMonitor {
+            max_abs_pivot: 0.0,
+            min_abs_pivot: f64::INFINITY,
+        }
+    }
+
+    /// Observe one column's pivot (called once per divide phase).
+    #[inline]
+    pub fn observe(&mut self, pivot: f64) {
+        let p = pivot.abs();
+        if p > self.max_abs_pivot {
+            self.max_abs_pivot = p;
+        }
+        if p < self.min_abs_pivot {
+            self.min_abs_pivot = p;
+        }
+    }
+
+    /// Merge another monitor's extrema (parallel engines merge per-worker
+    /// locals through this).
+    pub fn merge(&mut self, other: &PivotMonitor) {
+        self.max_abs_pivot = self.max_abs_pivot.max(other.max_abs_pivot);
+        self.min_abs_pivot = self.min_abs_pivot.min(other.min_abs_pivot);
+    }
+
+    /// Pivot growth against the largest stamped input value (0.0 when
+    /// nothing was observed or the stamp max is degenerate).
+    pub fn growth(&self, max_abs_stamp: f64) -> f64 {
+        if max_abs_stamp > 0.0 && self.max_abs_pivot > 0.0 {
+            self.max_abs_pivot / max_abs_stamp
+        } else {
+            0.0
+        }
+    }
+
+    /// Diagonal-ratio condition estimate `max|pivot| / min|pivot|`
+    /// (`+inf` for a zero pivot, 0.0 when nothing was observed).
+    pub fn condition_estimate(&self) -> f64 {
+        if self.min_abs_pivot.is_finite() && self.max_abs_pivot > 0.0 {
+            self.max_abs_pivot / self.min_abs_pivot
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Compact LU factors over a filled pattern.
 ///
 /// Entry `(i, j)` of the underlying CSC holds `U(i,j)` for `i <= j` and

@@ -120,7 +120,9 @@ pub fn refactor_in_place(
     });
 
     let f = failed.load(Ordering::Relaxed);
-    anyhow::ensure!(f == usize::MAX, "zero/non-finite pivot at column {f}");
+    if f != usize::MAX {
+        return Err(super::singular_pivot(f));
+    }
     Ok(())
 }
 
@@ -239,7 +241,9 @@ pub fn factor_spawn_per_level_with(
             }
         });
         let f = failed.load(Ordering::Relaxed);
-        anyhow::ensure!(f == usize::MAX, "zero/non-finite pivot at column {f}");
+        if f != usize::MAX {
+            return Err(super::singular_pivot(f));
+        }
     }
     Ok(LuFactors { lu })
 }

@@ -81,7 +81,40 @@ use crate::numeric::pool::{PoolCtx, SharedPtr, WorkerPool};
 use crate::plan::{CpuAssignment, FactorPlan, ScatterMap};
 use crate::symbolic::SymbolicFill;
 
-use super::LuFactors;
+use super::{LuFactors, PivotMonitor};
+
+/// Shared pivot-extrema accumulator for the worker pool: `|pivot|` is
+/// non-negative, and for non-negative IEEE-754 doubles the bit pattern
+/// orders exactly like the value — so a lock-free `fetch_max`/`fetch_min`
+/// on the bits is a correct floating-point max/min. Two relaxed RMWs per
+/// *column* (never on the MAC hot loop).
+struct AtomicMonitor {
+    max_bits: AtomicU64,
+    min_bits: AtomicU64,
+}
+
+impl AtomicMonitor {
+    fn new() -> Self {
+        AtomicMonitor {
+            max_bits: AtomicU64::new(0.0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+        }
+    }
+
+    #[inline]
+    fn observe(&self, pivot: f64) {
+        let b = pivot.abs().to_bits();
+        self.max_bits.fetch_max(b, Ordering::Relaxed);
+        self.min_bits.fetch_min(b, Ordering::Relaxed);
+    }
+
+    fn merge_into(&self, mon: &mut PivotMonitor) {
+        mon.merge(&PivotMonitor {
+            max_abs_pivot: f64::from_bits(self.max_bits.load(Ordering::Relaxed)),
+            min_abs_pivot: f64::from_bits(self.min_bits.load(Ordering::Relaxed)),
+        });
+    }
+}
 
 /// Relaxed atomic load of `vals[idx]` (the multiplier read in the CAS
 /// strategies: the schedule proves no concurrent *semantic* writer, but
@@ -121,7 +154,7 @@ pub fn factor_with(
     pool: &WorkerPool,
 ) -> anyhow::Result<LuFactors> {
     let mut lu = sym.filled.clone();
-    refactor_in_place(&mut lu, plan, pool)?;
+    refactor_in_place(&mut lu, plan, pool, &mut PivotMonitor::new())?;
     Ok(LuFactors { lu })
 }
 
@@ -133,7 +166,7 @@ pub fn factor_with_search(
     pool: &WorkerPool,
 ) -> anyhow::Result<LuFactors> {
     let mut lu = sym.filled.clone();
-    refactor_in_place_search(&mut lu, plan, pool)?;
+    refactor_in_place_search(&mut lu, plan, pool, &mut PivotMonitor::new())?;
     Ok(LuFactors { lu })
 }
 
@@ -146,6 +179,7 @@ pub fn refactor_in_place(
     lu: &mut crate::sparse::Csc,
     plan: &FactorPlan,
     pool: &WorkerPool,
+    mon: &mut PivotMonitor,
 ) -> anyhow::Result<()> {
     let n = lu.ncols();
     anyhow::ensure!(plan.n() == n, "plan dimension mismatch");
@@ -159,6 +193,7 @@ pub fn refactor_in_place(
     let (_, _, values) = lu.split_mut();
     let shared = SharedPtr(values.as_mut_ptr());
     let failed = AtomicUsize::new(usize::MAX);
+    let amon = AtomicMonitor::new();
 
     pool.run(&|ctx: &PoolCtx<'_>| {
         let ok = || failed.load(Ordering::Relaxed) == usize::MAX;
@@ -170,7 +205,7 @@ pub fn refactor_in_place(
                         let mut idx = ctx.id;
                         while idx < level.len() {
                             let j = level[idx] as usize;
-                            if !factor_column_indexed(j, sm, &shared, &failed) || !ok() {
+                            if !factor_column_indexed(j, sm, &shared, &failed, &amon) || !ok() {
                                 break;
                             }
                             idx += ctx.threads;
@@ -187,7 +222,7 @@ pub fn refactor_in_place(
                     if ok() {
                         let mut idx = ctx.id;
                         while idx < level.len() {
-                            if !divide_indexed(level[idx] as usize, sm, &shared, &failed)
+                            if !divide_indexed(level[idx] as usize, sm, &shared, &failed, &amon)
                                 || !ok()
                             {
                                 break;
@@ -239,7 +274,7 @@ pub fn refactor_in_place(
                     if ctx.id == 0 && ok() {
                         'run: for li in step.first_level..step.first_level + step.level_count {
                             for &j in &levels.levels[li] {
-                                if !factor_column_chain(j as usize, sm, &shared, &failed) {
+                                if !factor_column_chain(j as usize, sm, &shared, &failed, &amon) {
                                     break 'run;
                                 }
                             }
@@ -254,7 +289,10 @@ pub fn refactor_in_place(
     });
 
     let f = failed.load(Ordering::Relaxed);
-    anyhow::ensure!(f == usize::MAX, "zero/non-finite pivot at column {f}");
+    amon.merge_into(mon);
+    if f != usize::MAX {
+        return Err(super::singular_pivot(f));
+    }
     Ok(())
 }
 
@@ -262,7 +300,13 @@ pub fn refactor_in_place(
 /// (contiguous after the precomputed diagonal index) by the pivot. Plain
 /// accesses — this worker owns the column until the next barrier.
 #[inline]
-fn divide_indexed(j: usize, sm: &ScatterMap, shared: &SharedPtr, failed: &AtomicUsize) -> bool {
+fn divide_indexed(
+    j: usize,
+    sm: &ScatterMap,
+    shared: &SharedPtr,
+    failed: &AtomicUsize,
+    amon: &AtomicMonitor,
+) -> bool {
     let vals = shared.0;
     let d = sm.diag_idx[j] as usize;
     // SAFETY: only this worker touches column j's value range during this
@@ -273,6 +317,7 @@ fn divide_indexed(j: usize, sm: &ScatterMap, shared: &SharedPtr, failed: &Atomic
         failed.fetch_min(j, Ordering::Relaxed);
         return false;
     }
+    amon.observe(pivot);
     for idx in d + 1..=d + sm.l_len[j] as usize {
         let v = unsafe { *vals.add(idx) } / pivot;
         unsafe { *vals.add(idx) = v };
@@ -330,8 +375,9 @@ fn factor_column_indexed(
     sm: &ScatterMap,
     shared: &SharedPtr,
     failed: &AtomicUsize,
+    amon: &AtomicMonitor,
 ) -> bool {
-    if !divide_indexed(j, sm, shared, failed) {
+    if !divide_indexed(j, sm, shared, failed, amon) {
         return false;
     }
     for t in sm.task_ptr[j] as usize..sm.task_ptr[j + 1] as usize {
@@ -347,8 +393,9 @@ fn factor_column_chain(
     sm: &ScatterMap,
     shared: &SharedPtr,
     failed: &AtomicUsize,
+    amon: &AtomicMonitor,
 ) -> bool {
-    if !divide_indexed(j, sm, shared, failed) {
+    if !divide_indexed(j, sm, shared, failed, amon) {
         return false;
     }
     for t in sm.task_ptr[j] as usize..sm.task_ptr[j + 1] as usize {
@@ -372,6 +419,7 @@ pub fn refactor_in_place_search(
     lu: &mut crate::sparse::Csc,
     plan: &FactorPlan,
     pool: &WorkerPool,
+    mon: &mut PivotMonitor,
 ) -> anyhow::Result<()> {
     let n = lu.ncols();
     anyhow::ensure!(plan.n() == n, "plan dimension mismatch");
@@ -381,6 +429,7 @@ pub fn refactor_in_place_search(
     let (colptr, rowidx, values) = lu.split_mut();
     let shared = SharedPtr(values.as_mut_ptr());
     let failed = AtomicUsize::new(usize::MAX);
+    let amon = AtomicMonitor::new();
 
     pool.run(&|ctx: &PoolCtx<'_>| {
         let ok = || failed.load(Ordering::Relaxed) == usize::MAX;
@@ -394,7 +443,7 @@ pub fn refactor_in_place_search(
                         while idx < level.len() {
                             let j = level[idx] as usize;
                             if !factor_column_search(
-                                j, colptr, rowidx, &shared, &urow[j], &mut lvals, &failed,
+                                j, colptr, rowidx, &shared, &urow[j], &mut lvals, &failed, &amon,
                             ) || !ok()
                             {
                                 break;
@@ -417,6 +466,7 @@ pub fn refactor_in_place_search(
                                 rowidx,
                                 &shared,
                                 &failed,
+                                &amon,
                             ) || !ok()
                             {
                                 break;
@@ -451,6 +501,7 @@ pub fn refactor_in_place_search(
                                 let j = j as usize;
                                 if !factor_column_search(
                                     j, colptr, rowidx, &shared, &urow[j], &mut lvals, &failed,
+                                    &amon,
                                 ) {
                                     break 'run;
                                 }
@@ -466,7 +517,10 @@ pub fn refactor_in_place_search(
     });
 
     let f = failed.load(Ordering::Relaxed);
-    anyhow::ensure!(f == usize::MAX, "zero/non-finite pivot at column {f}");
+    amon.merge_into(mon);
+    if f != usize::MAX {
+        return Err(super::singular_pivot(f));
+    }
     Ok(())
 }
 
@@ -475,6 +529,7 @@ pub fn refactor_in_place_search(
 /// then the subcolumn MAC updates (atomic commits into later-level
 /// columns).
 #[inline]
+#[allow(clippy::too_many_arguments)]
 fn factor_column_search(
     j: usize,
     colptr: &[usize],
@@ -483,6 +538,7 @@ fn factor_column_search(
     subcols: &[u32],
     lvals: &mut Vec<f64>,
     failed: &AtomicUsize,
+    amon: &AtomicMonitor,
 ) -> bool {
     let vals = shared.0;
     let (s_j, e_j) = (colptr[j], colptr[j + 1]);
@@ -502,6 +558,7 @@ fn factor_column_search(
         failed.fetch_min(j, Ordering::Relaxed);
         return false;
     }
+    amon.observe(pivot);
     let lrows = &rows_j[diag_pos + 1..];
     lvals.clear();
     for idx in diag_pos + 1..rows_j.len() {
@@ -542,6 +599,7 @@ fn divide_column_search(
     rowidx: &[usize],
     shared: &SharedPtr,
     failed: &AtomicUsize,
+    amon: &AtomicMonitor,
 ) -> bool {
     let vals = shared.0;
     let (s_j, e_j) = (colptr[j], colptr[j + 1]);
@@ -559,6 +617,7 @@ fn divide_column_search(
         failed.fetch_min(j, Ordering::Relaxed);
         return false;
     }
+    amon.observe(pivot);
     for idx in diag_pos + 1..rows_j.len() {
         let v = unsafe { *vals.add(s_j + idx) } / pivot;
         unsafe { *vals.add(s_j + idx) = v };
@@ -797,7 +856,12 @@ mod tests {
         let plan = plan_for(&f, &lv);
         let pool = WorkerPool::new(2);
         let err = factor_with(&f, &plan, &pool).unwrap_err();
-        assert!(err.to_string().contains("pivot"), "{err}");
+        // the failure is typed, not just worded
+        assert_eq!(
+            err.downcast_ref::<crate::numeric::GluError>(),
+            Some(&crate::numeric::GluError::NumericallySingular { col: 1 }),
+            "{err}"
+        );
     }
 
     /// Pivot failure inside a *sliced* level (divide sub-phase) is caught
@@ -829,7 +893,13 @@ mod tests {
             values[idx] = 0.0;
         }
         let pool = WorkerPool::new(3);
-        let err = refactor_in_place(&mut lu, &plan, &pool).unwrap_err();
-        assert!(err.to_string().contains("pivot"), "{err}");
+        let err =
+            refactor_in_place(&mut lu, &plan, &pool, &mut PivotMonitor::new()).unwrap_err();
+        match err.downcast_ref::<crate::numeric::GluError>() {
+            Some(crate::numeric::GluError::NumericallySingular { col }) => {
+                assert_eq!(*col, victim, "{err}")
+            }
+            None => panic!("expected a typed NumericallySingular error: {err}"),
+        }
     }
 }

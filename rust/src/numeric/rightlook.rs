@@ -6,7 +6,7 @@
 //! bit-for-bit, and this engine against the left-looking oracle to fp
 //! tolerance.
 
-use super::LuFactors;
+use super::{LuFactors, PivotMonitor};
 use crate::symbolic::SymbolicFill;
 
 /// Row-wise view of the strictly-upper pattern: for each row `j`, the
@@ -29,23 +29,24 @@ pub fn factor(sym: &SymbolicFill) -> anyhow::Result<LuFactors> {
     let mut lu = sym.filled.clone();
     let urow = upper_rows(sym);
     let mut lvals = Vec::new();
-    factor_in_place(&mut lu, &urow, &mut lvals)?;
+    factor_in_place(&mut lu, &urow, &mut lvals, &mut PivotMonitor::new())?;
     Ok(LuFactors { lu })
 }
 
 /// Factor in place, column by column in ascending order: `lu` holds the
 /// filled pattern with `A`'s values stamped in and is overwritten with the
 /// factors. `urow` is the [`upper_rows`] view of the same pattern; `lvals`
-/// is a reusable divide-phase scratch. Allocation-free — the
-/// refactorization fast path.
+/// is a reusable divide-phase scratch; `mon` records the pivot extrema for
+/// the robustness ladder. Allocation-free — the refactorization fast path.
 pub fn factor_in_place(
     lu: &mut crate::sparse::Csc,
     urow: &[Vec<u32>],
     lvals: &mut Vec<f64>,
+    mon: &mut PivotMonitor,
 ) -> anyhow::Result<()> {
     anyhow::ensure!(urow.len() == lu.ncols(), "subcolumn view dimension mismatch");
     for j in 0..lu.ncols() {
-        factor_column(lu, &urow[j], j, lvals)?;
+        factor_column(lu, &urow[j], j, lvals, mon)?;
     }
     Ok(())
 }
@@ -64,6 +65,7 @@ pub(crate) fn factor_column(
     subcols: &[u32],
     j: usize,
     lvals: &mut Vec<f64>,
+    mon: &mut PivotMonitor,
 ) -> anyhow::Result<()> {
     let (colptr, rowidx, values) = lu.split_mut();
     let (s_j, e_j) = (colptr[j], colptr[j + 1]);
@@ -72,10 +74,10 @@ pub(crate) fn factor_column(
         .binary_search(&j)
         .map_err(|_| anyhow::anyhow!("missing diagonal at {j}"))?;
     let pivot = values[s_j + diag_pos];
-    anyhow::ensure!(
-        pivot != 0.0 && pivot.is_finite(),
-        "zero/non-finite pivot at column {j}"
-    );
+    if pivot == 0.0 || !pivot.is_finite() {
+        return Err(super::singular_pivot(j));
+    }
+    mon.observe(pivot);
     // Divide phase, staging L values into the scratch buffer.
     let lrows = &rows_j[diag_pos + 1..];
     lvals.clear();

@@ -141,8 +141,11 @@ fn augment(
 }
 
 /// Ruiz iterative equilibration: after convergence every row and column has
-/// infinity-norm ≈ 1. Returns `(row_scale, col_scale)`.
-fn ruiz_scale(a: &Csc, iters: usize) -> (Vec<f64>, Vec<f64>) {
+/// infinity-norm ≈ 1. Returns `(row_scale, col_scale)`. Exposed to the
+/// crate so the solver's robustness ladder can re-equilibrate a drifted
+/// Newton iterate on the *fixed* permutations (escalation rung) without
+/// redoing the transversal.
+pub(crate) fn ruiz_scale(a: &Csc, iters: usize) -> (Vec<f64>, Vec<f64>) {
     let n = a.nrows();
     let mut r = vec![1.0f64; n];
     let mut c = vec![1.0f64; n];

@@ -59,6 +59,7 @@
 //! factor`/`glu3 bench`, and the `schedule` block of `BENCH_numeric.json`.
 
 use crate::gpusim::exec::simulate_level;
+use crate::numeric::PivotMonitor;
 use crate::plan::{ColumnWork, FactorPlan, KernelMode, ScatterMap};
 
 use super::{LaunchSchedule, PlannedLaunch, LEVEL_SIZES};
@@ -195,8 +196,14 @@ pub trait DeviceExecutor: std::fmt::Debug + Send {
     /// value array, `A`'s values stamped in) in place, walking the
     /// launches level by level. The whole schedule is validated against
     /// the uploaded pattern before the first store; on a validation error
-    /// `vals` is untouched.
-    fn execute(&mut self, sched: &LaunchSchedule, vals: &mut [f64]) -> anyhow::Result<ExecReport>;
+    /// `vals` is untouched. `mon` records the pivot extrema the robustness
+    /// ladder consumes (the divide phase observes each pivot).
+    fn execute(
+        &mut self,
+        sched: &LaunchSchedule,
+        vals: &mut [f64],
+        mon: &mut PivotMonitor,
+    ) -> anyhow::Result<ExecReport>;
 }
 
 /// Construct the executor for a backend choice. `ExecBackend::Pjrt` needs
@@ -428,14 +435,19 @@ impl VirtualState {
     /// Divide phase of one column off the uploaded buffers — pivot check
     /// plus in-place L normalization, shared by both backends so their
     /// serialization can never diverge. Returns the column's L length.
-    fn divide_column(&self, j: usize, vals: &mut [f64]) -> anyhow::Result<usize> {
+    fn divide_column(
+        &self,
+        j: usize,
+        vals: &mut [f64],
+        mon: &mut PivotMonitor,
+    ) -> anyhow::Result<usize> {
         let d = self.diag_idx[j] as usize;
         let ll = self.l_len[j] as usize;
         let pivot = vals[d];
-        anyhow::ensure!(
-            pivot != 0.0 && pivot.is_finite(),
-            "zero/non-finite pivot at column {j}"
-        );
+        if pivot == 0.0 || !pivot.is_finite() {
+            return Err(crate::numeric::singular_pivot(j));
+        }
+        mon.observe(pivot);
         for v in &mut vals[d + 1..=d + ll] {
             *v /= pivot;
         }
@@ -463,11 +475,16 @@ impl VirtualState {
     /// columns, ascending — divide phase, then the column's MAC tasks in
     /// task order — exactly the simulator's serialization. Returns
     /// `(div_elems, mac_elems)` actually processed.
-    fn run_launch(&self, level: usize, vals: &mut [f64]) -> anyhow::Result<(u64, u64)> {
+    fn run_launch(
+        &self,
+        level: usize,
+        vals: &mut [f64],
+        mon: &mut PivotMonitor,
+    ) -> anyhow::Result<(u64, u64)> {
         let (mut div_elems, mut mac_elems) = (0u64, 0u64);
         for &j in &self.plan.levels().levels[level] {
             let j = j as usize;
-            let ll = self.divide_column(j, vals)?;
+            let ll = self.divide_column(j, vals, mon)?;
             div_elems += ll as u64;
             let ls = self.diag_idx[j] as usize + 1;
             for t in self.task_ptr[j] as usize..self.task_ptr[j + 1] as usize {
@@ -498,7 +515,12 @@ impl DeviceExecutor for VirtualDevice {
         Ok(info)
     }
 
-    fn execute(&mut self, sched: &LaunchSchedule, vals: &mut [f64]) -> anyhow::Result<ExecReport> {
+    fn execute(
+        &mut self,
+        sched: &LaunchSchedule,
+        vals: &mut [f64],
+        mon: &mut PivotMonitor,
+    ) -> anyhow::Result<ExecReport> {
         let st = self
             .state
             .as_ref()
@@ -506,7 +528,7 @@ impl DeviceExecutor for VirtualDevice {
         check_schedule(&st.plan, sched, vals.len(), st.nnz)?;
         let mut per_launch = Vec::with_capacity(sched.launches.len());
         for launch in &sched.launches {
-            let (div_elems, mac_elems) = st.run_launch(launch.level, vals)?;
+            let (div_elems, mac_elems) = st.run_launch(launch.level, vals, mon)?;
             per_launch.push(st.launch_row(launch, div_elems, mac_elems));
         }
         Ok(ExecReport {
@@ -560,7 +582,12 @@ impl DeviceExecutor for PjrtDevice {
         Ok(info)
     }
 
-    fn execute(&mut self, sched: &LaunchSchedule, vals: &mut [f64]) -> anyhow::Result<ExecReport> {
+    fn execute(
+        &mut self,
+        sched: &LaunchSchedule,
+        vals: &mut [f64],
+        mon: &mut PivotMonitor,
+    ) -> anyhow::Result<ExecReport> {
         let st = self
             .state
             .as_ref()
@@ -581,7 +608,7 @@ impl DeviceExecutor for PjrtDevice {
             for &j in &st.plan.levels().levels[launch.level] {
                 let j = j as usize;
                 let d = st.diag_idx[j] as usize;
-                let ll = st.divide_column(j, vals)?;
+                let ll = st.divide_column(j, vals, mon)?;
                 div_elems += ll as u64;
                 let (t0, t1) = (st.task_ptr[j] as usize, st.task_ptr[j + 1] as usize);
                 if ll == 0 || t0 == t1 {
@@ -657,7 +684,7 @@ mod tests {
         assert!(info.index_bytes > 0 && info.buffers == 6);
 
         let mut lu = sym.filled.clone();
-        let report = dev.execute(&sched, lu.values_mut()).unwrap();
+        let report = dev.execute(&sched, lu.values_mut(), &mut PivotMonitor::new()).unwrap();
 
         let (simf, simrep) = simulate_factorization(
             &sym,
@@ -686,7 +713,7 @@ mod tests {
         for v in lu2.values_mut() {
             *v *= 1.5;
         }
-        dev.execute(&sched, lu2.values_mut()).unwrap();
+        dev.execute(&sched, lu2.values_mut(), &mut PivotMonitor::new()).unwrap();
     }
 
     #[test]
@@ -702,35 +729,35 @@ mod tests {
         // wrong level order
         let mut bad = good.clone();
         bad.launches.swap(0, 1);
-        let err = dev.execute(&bad, lu.values_mut()).unwrap_err();
+        let err = dev.execute(&bad, lu.values_mut(), &mut PivotMonitor::new()).unwrap_err();
         assert!(err.to_string().contains("order"), "{err}");
         assert_eq!(lu.values(), &before[..], "values must be untouched");
 
         // truncated schedule
         let mut bad = good.clone();
         bad.launches.pop();
-        assert!(dev.execute(&bad, lu.values_mut()).is_err());
+        assert!(dev.execute(&bad, lu.values_mut(), &mut PivotMonitor::new()).is_err());
         assert_eq!(lu.values(), &before[..]);
 
         // a launch claiming the wrong column count (foreign pattern)
         let mut bad = good.clone();
         bad.launches[0].columns += 1;
-        let err = dev.execute(&bad, lu.values_mut()).unwrap_err();
+        let err = dev.execute(&bad, lu.values_mut(), &mut PivotMonitor::new()).unwrap_err();
         assert!(err.to_string().contains("mismatch"), "{err}");
         assert_eq!(lu.values(), &before[..]);
 
         // an unknown kernel name
         let mut bad = good.clone();
         bad.launches[0].kernel = "level_update_1x1".into();
-        assert!(dev.execute(&bad, lu.values_mut()).is_err());
+        assert!(dev.execute(&bad, lu.values_mut(), &mut PivotMonitor::new()).is_err());
         assert_eq!(lu.values(), &before[..]);
 
         // a value buffer of the wrong length (mismatched pattern)
         let mut short = vec![1.0; sym.filled.nnz() - 1];
-        assert!(dev.execute(&good, &mut short).is_err());
+        assert!(dev.execute(&good, &mut short, &mut PivotMonitor::new()).is_err());
 
         // the untouched schedule still executes fine afterwards
-        dev.execute(&good, lu.values_mut()).unwrap();
+        dev.execute(&good, lu.values_mut(), &mut PivotMonitor::new()).unwrap();
     }
 
     #[test]
@@ -766,7 +793,7 @@ mod tests {
         let mut dev = VirtualDevice::new();
         let sched = plan.launch_schedule().clone();
         let mut lu = sym.filled.clone();
-        let err = dev.execute(&sched, lu.values_mut()).unwrap_err();
+        let err = dev.execute(&sched, lu.values_mut(), &mut PivotMonitor::new()).unwrap_err();
         assert!(err.to_string().contains("uploaded"), "{err}");
     }
 
@@ -784,7 +811,7 @@ mod tests {
         let foreign = other.launch_schedule().clone();
         let mut lu = sym.filled.clone();
         let before = lu.values().to_vec();
-        assert!(dev.execute(&foreign, lu.values_mut()).is_err());
+        assert!(dev.execute(&foreign, lu.values_mut(), &mut PivotMonitor::new()).is_err());
         assert_eq!(lu.values(), &before[..]);
     }
 
@@ -797,8 +824,14 @@ mod tests {
         for v in lu.values_mut() {
             *v = 0.0;
         }
-        let err = dev.execute(plan.launch_schedule(), lu.values_mut()).unwrap_err();
-        assert!(err.to_string().contains("pivot"), "{err}");
+        let err = dev.execute(plan.launch_schedule(), lu.values_mut(), &mut PivotMonitor::new()).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<crate::numeric::GluError>(),
+                Some(crate::numeric::GluError::NumericallySingular { .. })
+            ),
+            "{err}"
+        );
     }
 
     #[cfg(not(feature = "pjrt"))]

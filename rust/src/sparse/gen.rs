@@ -210,6 +210,80 @@ pub fn restamp_columns(a: &Csc, rng: &mut Rng) -> Csc {
     m
 }
 
+// ---------------------------------------------------------------------------
+// Adversarial restamps — the numeric-robustness-ladder test fixtures.
+//
+// Each transformer keeps the sparsity pattern *bit-identical* (so the result
+// is a legal [`crate::glu::GluSolver::refactor`] input for a solver factored
+// on the healthy original) while making the values hostile to the no-pivot
+// regime in a specific, documented way. This mirrors what a Newton iteration
+// actually hands a cached solver when the operating point goes bad: the same
+// Jacobian pattern with degenerate values.
+// ---------------------------------------------------------------------------
+
+/// Near-singular restamp: scale the diagonal entry of every `every`-th
+/// column by `factor` (use `0.0` for exact zero pivots, `~1e-13` for the
+/// tiny-pivot / condition-gate regime). Off-diagonals are untouched, so the
+/// matrix usually stays nonsingular — it is the *static pivot order* that
+/// breaks, which is exactly what the ladder's diagonal perturbation repairs.
+pub fn weaken_diagonal(a: &Csc, every: usize, factor: f64) -> Csc {
+    assert!(every >= 1);
+    let mut m = a.clone();
+    let n = m.ncols();
+    for j in (0..n).step_by(every) {
+        if let Some(idx) = m.entry_index(j, j) {
+            let vals = m.values_mut();
+            vals[idx] *= factor;
+        }
+    }
+    m
+}
+
+/// Mis-scaled restamp: multiply every `every`-th *row* by `factor` (think
+/// `1e100`: a device model blowing up in one equation). Pivots stay
+/// nonzero but the diagonal ratio explodes past any condition gate, and a
+/// relative diagonal perturbation drowns the healthy rows — the fixture
+/// that forces the ladder past rung 1 into re-equilibration.
+pub fn misscale_rows(a: &Csc, every: usize, factor: f64) -> Csc {
+    assert!(every >= 1);
+    let mut m = a.clone();
+    let colptr = m.colptr().to_vec();
+    let rowidx = m.rowidx().to_vec();
+    let vals = m.values_mut();
+    for c in 0..colptr.len() - 1 {
+        for p in colptr[c]..colptr[c + 1] {
+            if rowidx[p] % every == 0 {
+                vals[p] *= factor;
+            }
+        }
+    }
+    m
+}
+
+/// Highly-unsymmetric restamp: stretch strictly-upper entries up and
+/// strictly-lower entries down by per-entry log-uniform factors up to
+/// `10^decades`, destroying the value symmetry (and much of the diagonal
+/// dominance) the generators otherwise guarantee. Exercises the ladder's
+/// growth monitoring on matrices where `A` and `Aᵀ` look nothing alike.
+pub fn skew_unsymmetric(a: &Csc, decades: f64, seed: u64) -> Csc {
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let mut m = a.clone();
+    let colptr = m.colptr().to_vec();
+    let rowidx = m.rowidx().to_vec();
+    let vals = m.values_mut();
+    for c in 0..colptr.len() - 1 {
+        for p in colptr[c]..colptr[c + 1] {
+            let r = rowidx[p];
+            if r < c {
+                vals[p] *= 10f64.powf(rng.range_f64(0.0, decades));
+            } else if r > c {
+                vals[p] *= 10f64.powf(rng.range_f64(-decades, 0.0));
+            }
+        }
+    }
+    m
+}
+
 /// 5-point 2-D mesh Laplacian (G3_circuit class).
 pub fn grid2d(nx: usize, ny: usize, seed: u64) -> Csc {
     let n = nx * ny;
@@ -627,5 +701,70 @@ mod tests {
             let a = generate(&m.spec());
             check_circuit_matrix(&a);
         }
+    }
+
+    #[test]
+    fn adversarial_restamps_preserve_pattern() {
+        let a = netlist(200, 6, 12, 0.05, 2, 0.2, 31);
+        for bad in [
+            weaken_diagonal(&a, 3, 0.0),
+            weaken_diagonal(&a, 5, 1e-13),
+            misscale_rows(&a, 7, 1e100),
+            skew_unsymmetric(&a, 6.0, 31),
+        ] {
+            assert_eq!(bad.colptr(), a.colptr());
+            assert_eq!(bad.rowidx(), a.rowidx());
+            assert_eq!(bad.nnz(), a.nnz());
+        }
+    }
+
+    #[test]
+    fn weaken_diagonal_hits_exactly_the_stride() {
+        let a = grid2d(10, 10, 3);
+        let bad = weaken_diagonal(&a, 4, 0.0);
+        for j in 0..a.ncols() {
+            let (orig, got) = (a.get(j, j), bad.get(j, j));
+            if j % 4 == 0 {
+                assert_eq!(got, 0.0, "col {j} must be zeroed");
+            } else {
+                assert_eq!(got, orig, "col {j} must be untouched");
+            }
+        }
+    }
+
+    #[test]
+    fn misscale_rows_scales_whole_rows() {
+        let a = grid2d(6, 6, 1);
+        let bad = misscale_rows(&a, 3, 1e10);
+        for c in 0..a.ncols() {
+            let (rows, vals) = a.col(c);
+            let (_, bvals) = bad.col(c);
+            for ((&r, &v), &bv) in rows.iter().zip(vals).zip(bvals) {
+                let want = if r % 3 == 0 { v * 1e10 } else { v };
+                assert_eq!(bv, want, "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn skew_unsymmetric_breaks_value_symmetry() {
+        let a = grid2d(8, 8, 5);
+        let bad = skew_unsymmetric(&a, 6.0, 5);
+        // diagonal untouched, and at least one mirrored pair now differs by
+        // orders of magnitude
+        let mut max_ratio = 0.0f64;
+        for c in 0..a.ncols() {
+            assert_eq!(bad.get(c, c), a.get(c, c));
+            let (rows, _) = a.col(c);
+            for &r in rows {
+                if r > c {
+                    let (lo, hi) = (bad.get(r, c).abs(), bad.get(c, r).abs());
+                    if lo > 0.0 {
+                        max_ratio = max_ratio.max(hi / lo);
+                    }
+                }
+            }
+        }
+        assert!(max_ratio > 1e3, "skew too mild: {max_ratio}");
     }
 }

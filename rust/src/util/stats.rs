@@ -72,8 +72,14 @@ impl LatencyRecorder {
         }
     }
 
-    /// Record one request latency in milliseconds.
+    /// Record one request latency in milliseconds. Non-finite samples are
+    /// dropped: `total_cmp` sorts NaN after every finite value, so a single
+    /// NaN admitted to the window would poison `p99_ms` (and `mean_ms`)
+    /// for as long as it stays resident.
     pub fn record(&mut self, ms: f64) {
+        if !ms.is_finite() {
+            return;
+        }
         self.total += 1;
         if self.samples.len() < self.cap {
             self.samples.push(ms);
@@ -194,6 +200,28 @@ mod tests {
         big.merge(&r);
         assert_eq!(big.count(), 10);
         assert_eq!(big.samples().len(), 2);
+    }
+
+    #[test]
+    fn latency_recorder_rejects_non_finite() {
+        let mut r = LatencyRecorder::new();
+        r.record(1.0);
+        r.record(f64::NAN);
+        r.record(f64::INFINITY);
+        r.record(f64::NEG_INFINITY);
+        r.record(3.0);
+        // Only the finite samples count — a NaN in the window would sort
+        // last under total_cmp and be reported as the p99.
+        assert_eq!(r.count(), 2);
+        assert_eq!(r.samples(), &[1.0, 3.0]);
+        assert_eq!(r.p99_ms(), 3.0);
+        assert!((r.mean_ms() - 2.0).abs() < 1e-12);
+
+        // merge stays coherent (window samples are always finite).
+        let mut agg = LatencyRecorder::new();
+        agg.merge(&r);
+        assert_eq!(agg.count(), 2);
+        assert_eq!(agg.p99_ms(), 3.0);
     }
 
     #[test]

@@ -95,12 +95,27 @@ fn bench_smoke_report_covers_all_engines_and_validates() {
     );
     assert!(sc.executed_total() > 0 && sc.simulated_total() > 0);
 
+    // the v5 robustness block: the repair ladder fired on the deterministic
+    // singular refactor and repaired it in place within probe tolerance
+    let rb = &report.robustness;
+    assert!(rb.repairs >= 1, "robustness fixture must record a repair");
+    assert!(rb.perturbations >= 1, "rung 1 must fire on the zeroed pivot");
+    assert_eq!(rb.escalations, 0, "the tridiagonal fixture must not escalate");
+    assert!(
+        rb.probe_residual.is_finite() && rb.probe_residual <= 1e-9,
+        "repair accepted above probe tolerance: {}",
+        rb.probe_residual
+    );
+    assert!(rb.pivot_growth.is_finite() && rb.pivot_growth > 0.0);
+    assert!(rb.condition_estimate >= 1.0);
+
     let json = report.to_json();
     validate_json_schema(&json).expect("well-formed report");
     assert!(json.contains("\"plan\""), "plan block must be emitted");
     assert!(json.contains("\"mode_histogram\""));
     assert!(json.contains("\"refactor_loop\""), "v3 block must be emitted");
     assert!(json.contains("\"schedule\""), "v4 block must be emitted");
+    assert!(json.contains("\"robustness\""), "v5 block must be emitted");
 
     // and the file artifact round-trips
     let path = std::env::temp_dir().join("BENCH_numeric_smoke_test.json");

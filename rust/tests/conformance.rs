@@ -23,7 +23,7 @@ use std::collections::BTreeMap;
 
 use glu3::depend::{glu3 as det3, levelize};
 use glu3::gpusim::{simulate_factorization, DeviceConfig, Policy};
-use glu3::numeric::{parrl, residual, WorkerPool};
+use glu3::numeric::{parrl, residual, PivotMonitor, WorkerPool};
 use glu3::plan::FactorPlan;
 use glu3::runtime::{lower_plan, DeviceExecutor, VirtualDevice};
 use glu3::sparse::{Coo, Csc};
@@ -153,7 +153,9 @@ fn three_way_matrix_executor_vs_parrl_vs_simulator() {
         let mut dev = VirtualDevice::new();
         dev.upload_pattern(&plan, plan.scatter(&f.filled)).unwrap();
         let mut exec_lu = f.filled.clone();
-        let exec_rep = dev.execute(plan.launch_schedule(), exec_lu.values_mut()).unwrap();
+        let exec_rep = dev
+            .execute(plan.launch_schedule(), exec_lu.values_mut(), &mut PivotMonitor::new())
+            .unwrap();
         assert_eq!(
             exec_lu.values(),
             sim.lu.values(),
@@ -229,12 +231,15 @@ fn corrupted_schedule_rejected_before_values_change() {
     bad.launches.swap(0, 1);
     let mut lu = f.filled.clone();
     let before = lu.values().to_vec();
-    let err = dev.execute(&bad, lu.values_mut()).unwrap_err();
+    let err = dev
+        .execute(&bad, lu.values_mut(), &mut PivotMonitor::new())
+        .unwrap_err();
     assert!(err.to_string().contains("order"), "{err}");
     assert_eq!(lu.values(), &before[..], "values must be untouched");
 
     // the honest schedule still runs afterwards
-    dev.execute(plan.launch_schedule(), lu.values_mut()).unwrap();
+    dev.execute(plan.launch_schedule(), lu.values_mut(), &mut PivotMonitor::new())
+        .unwrap();
 }
 
 fn fixture_dir() -> std::path::PathBuf {
@@ -321,7 +326,8 @@ fn golden_pattern_fixtures_pin_lowering_and_levelization() {
         let mut dev = VirtualDevice::new();
         dev.upload_pattern(&plan, plan.scatter(&f.filled)).unwrap();
         let mut lu = f.filled.clone();
-        dev.execute(plan.launch_schedule(), lu.values_mut()).unwrap();
+        dev.execute(plan.launch_schedule(), lu.values_mut(), &mut PivotMonitor::new())
+        .unwrap();
         let n = a.nrows();
         let b = vec![1.0; n];
         let mut x = b.clone();

@@ -17,6 +17,7 @@ const SEED_ROUNDTRIP: u64 = 0xC5C_0001;
 const SEED_DUPLICATES: u64 = 0xC5C_0002;
 const SEED_RANDOM_DD: u64 = 0xDD_0001;
 const SEED_REFACTOR: u64 = 0xDD_0002;
+const SEED_LADDER: u64 = 0xDD_0003;
 
 /// Random sparse matrix with unique coordinates and a full, column
 /// diagonally dominant diagonal (the pivot-free GLU regime).
@@ -299,6 +300,153 @@ fn plan_driven_parrl_matches_simulator_across_all_modes() {
         glu3::numeric::trisolve::lower_unit_solve(&indexed.lu, &mut x);
         glu3::numeric::trisolve::upper_solve(&indexed.lu, &mut x);
         assert!(residual(&a, &x, &b) < 1e-10, "threads {threads}");
+    }
+}
+
+/// Tridiagonal DD fixture: MC64 matching and natural ordering are both the
+/// identity on it, so a diagonal zeroed at refactor time is *guaranteed* to
+/// land on a pivot — the deterministic trigger for the robustness ladder —
+/// while the zeroed-corner matrix stays provably nonsingular (repairable).
+fn tridiag(n: usize) -> Csc {
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        coo.push(i, i, 4.0);
+        if i + 1 < n {
+            coo.push(i, i + 1, -1.0);
+            coo.push(i + 1, i, -1.0);
+        }
+    }
+    coo.to_csc()
+}
+
+/// Every numeric engine × thread count the crate offers, for the ladder
+/// matrix (engines that ignore the thread knob appear once).
+fn all_engines() -> Vec<glu3::glu::NumericEngine> {
+    use glu3::glu::{ExecBackend, NumericEngine};
+    let mut engines = vec![
+        NumericEngine::SimulatedGpu,
+        NumericEngine::LeftLookingCpu,
+        NumericEngine::RightLookingCpu,
+        NumericEngine::Schedule {
+            backend: ExecBackend::Virtual,
+        },
+    ];
+    for threads in [1usize, 2, 4] {
+        engines.push(NumericEngine::ParallelCpu { threads });
+        engines.push(NumericEngine::ParallelRightLooking { threads });
+        engines.push(NumericEngine::Auto { threads });
+    }
+    engines
+}
+
+/// The numeric robustness ladder repairs a zero pivot *in place* on every
+/// engine at every thread count: good → singular → good on one solver,
+/// zero extra symbolic runs, acceptance residual after the repair.
+#[test]
+fn ladder_repairs_zero_pivot_on_every_engine() {
+    use glu3::order::FillOrdering;
+
+    let a = tridiag(72);
+    let bad = gen::weaken_diagonal(&a, 72, 0.0); // A(0,0) = 0
+    let b = vec![1.0; 72];
+    for engine in all_engines() {
+        let opts = GluOptions {
+            ordering: FillOrdering::Natural,
+            scale: false,
+            engine: engine.clone(),
+            ..Default::default()
+        };
+        let mut s = GluSolver::factor(&a, &opts).unwrap();
+        s.refactor(&bad)
+            .unwrap_or_else(|e| panic!("{engine:?}: ladder failed to repair: {e}"));
+        let st = s.stats();
+        assert_eq!(st.symbolic_runs, 1, "{engine:?}: symbolic rerun");
+        assert_eq!(st.plan_builds, 1, "{engine:?}: replan");
+        assert!(st.robustness.repairs >= 1, "{engine:?}: no repair recorded");
+        let x = s.solve(&b).unwrap();
+        let r = residual(&bad, &x, &b);
+        assert!(r <= 1e-8, "{engine:?}: repaired residual {r}");
+
+        // healthy values again: clean run, same cached state
+        s.refactor(&a).unwrap();
+        let x = s.solve(&b).unwrap();
+        assert!(residual(&a, &x, &b) <= 1e-8, "{engine:?}: recovery");
+        assert_eq!(s.stats().symbolic_runs, 1);
+    }
+}
+
+/// Randomized adversarial restamps (tiny pivots, mis-scaled rows, heavy
+/// value unsymmetry) against every engine: the refactor must either repair
+/// — with the solver-recorded probe residual meeting tolerance and a sane
+/// solve — or fail with the *typed* numeric classification; it must never
+/// panic, never return an untyped error, and the cached pattern must
+/// survive for the next healthy restamp either way.
+#[test]
+fn ladder_adversarial_restamps_repair_or_fail_typed() {
+    use glu3::numeric::GluError;
+
+    let engines = all_engines();
+    let mut rng = Rng::new(SEED_LADDER);
+    for (trial, engine) in engines.into_iter().enumerate() {
+        let n = rng.range(40, 120);
+        let base = random_dd(n, n * 3, &mut rng);
+        let bad = match trial % 3 {
+            0 => gen::weaken_diagonal(&base, 7, 1e-13),
+            1 => gen::misscale_rows(&base, 11, 1e100),
+            _ => gen::skew_unsymmetric(&base, 8.0, SEED_LADDER ^ trial as u64),
+        };
+        let opts = GluOptions {
+            engine,
+            ..Default::default()
+        };
+        let mut s = GluSolver::factor(&base, &opts).unwrap_or_else(|e| {
+            panic!("seed {SEED_LADDER:#x} trial {trial} (n={n}): base factor failed: {e}")
+        });
+        let b = vec![1.0; n];
+        match s.refactor(&bad) {
+            Ok(()) => {
+                let (repairs, probe, growth) = {
+                    let rb = &s.stats().robustness;
+                    (rb.repairs, rb.last_residual, rb.pivot_growth)
+                };
+                if repairs > 0 {
+                    assert!(
+                        probe <= 1e-9,
+                        "trial {trial}: accepted repair above probe tolerance: {probe}"
+                    );
+                }
+                let x = s.solve(&b).unwrap();
+                assert!(x.iter().all(|v| v.is_finite()), "trial {trial}: non-finite x");
+                let r = residual(&bad, &x, &b);
+                // backward-error-consistent bound: a clean rung-0 pass may
+                // carry element growth up to the gate limit, which costs
+                // digits legitimately; garbage factors cannot hide under it
+                let bound = (growth.max(1.0) * 1e-13).max(1e-7);
+                assert!(
+                    r <= bound,
+                    "seed {SEED_LADDER:#x} trial {trial}: residual {r} (growth {growth:.2e})"
+                );
+            }
+            Err(e) => {
+                assert!(
+                    e.downcast_ref::<GluError>().is_some(),
+                    "seed {SEED_LADDER:#x} trial {trial}: untyped numeric failure: {e:#}"
+                );
+            }
+        }
+
+        // Either way the cached symbolic state must serve the next healthy
+        // stamp without rerunning the pattern phases.
+        s.refactor(&base).unwrap_or_else(|e| {
+            panic!("seed {SEED_LADDER:#x} trial {trial}: healthy restamp failed: {e}")
+        });
+        assert_eq!(s.stats().symbolic_runs, 1, "trial {trial}");
+        let x = s.solve(&b).unwrap();
+        assert!(x.iter().all(|v| v.is_finite()), "trial {trial}: recovery x");
+        assert!(
+            residual(&base, &x, &b) <= 1e-3,
+            "seed {SEED_LADDER:#x} trial {trial}: recovery residual"
+        );
     }
 }
 

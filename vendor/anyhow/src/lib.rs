@@ -5,7 +5,8 @@
 //! `anyhow` API subset the `glu3` crate actually uses:
 //!
 //! - [`Error`] / [`Result`] — a string-chain error type (context frames are
-//!   flattened to strings eagerly; no downcasting support).
+//!   flattened to strings eagerly) with an optional typed payload for
+//!   [`Error::downcast_ref`].
 //! - [`anyhow!`], [`bail!`], [`ensure!`] — the formatting macros.
 //! - [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
 //!   `Option`.
@@ -14,13 +15,18 @@
 //! prints the whole chain separated by `": "`, and `{:?}` prints the
 //! outermost message followed by a `Caused by:` list.
 
+use std::any::Any;
 use std::error::Error as StdError;
 use std::fmt;
 
 /// A flattened error chain. `chain[0]` is the outermost (most recent
 /// context) message; later entries are the causes, outermost-in first.
+/// `payload` optionally carries the original typed value so callers can
+/// recover structured error information with [`Error::downcast_ref`] —
+/// the subset of real `anyhow`'s downcasting this workspace needs.
 pub struct Error {
     chain: Vec<String>,
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
@@ -28,6 +34,7 @@ impl Error {
     pub fn msg(message: impl fmt::Display) -> Self {
         Error {
             chain: vec![message.to_string()],
+            payload: None,
         }
     }
 
@@ -39,10 +46,29 @@ impl Error {
             chain.push(cause.to_string());
             source = cause.source();
         }
-        Error { chain }
+        Error {
+            chain,
+            payload: None,
+        }
     }
 
-    /// Push a new outermost context frame.
+    /// Create an error whose Display is `message` and whose typed payload is
+    /// `value` — recoverable later through [`Error::downcast_ref`]. Context
+    /// frames stacked on top preserve the payload.
+    pub fn with_payload<T: Any + Send + Sync>(message: impl fmt::Display, value: T) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+            payload: Some(Box::new(value)),
+        }
+    }
+
+    /// Borrow the typed payload, if one of type `T` was attached at
+    /// construction. Context frames do not erase it.
+    pub fn downcast_ref<T: Any>(&self) -> Option<&T> {
+        self.payload.as_deref().and_then(|p| p.downcast_ref())
+    }
+
+    /// Push a new outermost context frame (the payload is preserved).
     pub fn context(mut self, context: impl fmt::Display) -> Self {
         self.chain.insert(0, context.to_string());
         self
@@ -189,6 +215,24 @@ mod tests {
         assert!(f(5).is_ok());
         assert_eq!(format!("{}", f(-1).unwrap_err()), "x must be positive, got -1");
         assert_eq!(format!("{}", f(101).unwrap_err()), "too big");
+    }
+
+    #[test]
+    fn payload_survives_context_frames() {
+        #[derive(Debug, PartialEq)]
+        struct Marker(usize);
+
+        let e = Error::with_payload("bad column 3", Marker(3));
+        assert_eq!(format!("{e}"), "bad column 3");
+        assert_eq!(e.downcast_ref::<Marker>(), Some(&Marker(3)));
+        assert!(e.downcast_ref::<String>().is_none());
+
+        let e = e.context("while refactoring");
+        assert_eq!(format!("{e}"), "while refactoring");
+        assert_eq!(e.downcast_ref::<Marker>(), Some(&Marker(3)));
+
+        // plain errors carry no payload
+        assert!(anyhow!("plain").downcast_ref::<Marker>().is_none());
     }
 
     #[test]
