@@ -1,36 +1,39 @@
-//! The L3 coordinator as a service: a [`SolverPool`] serving concurrent
-//! solve requests from 4 client threads over a mixed-pattern workload —
-//! the "serving" view of the solver (vLLM-router flavor, scaled to a
-//! linear-algebra service).
+//! The fault-tolerant serving core under deterministic chaos: a
+//! multi-tenant [`Server`] over the [`SolverPool`](glu3::coordinator::SolverPool)
+//! absorbing injected delays, robustness-ladder repairs and escalations,
+//! singular exhaustions, poisoned checkouts, and submission bursts —
+//! while losing **zero** requests.
 //!
-//! Each client thread repeatedly restamps one of three circuit matrices
-//! with fresh values (the Newton–Raphson access pattern) and submits a
-//! batched multi-RHS solve. Only the warm-up request per *pattern* pays the
-//! symbolic pipeline (MC64 + AMD + fill + dependency detection +
-//! levelization); every threaded request hits the pattern cache and takes
-//! the numeric-only refactor fast path, so the symbolic-cache hit rate on
-//! this workload is ≥ 90% by construction (3 warm-up misses, then 100
-//! hits). The serial warm-up also keeps the number deterministic: cold
-//! patterns hit by several threads at once can otherwise each be factored
-//! more than once, since the pool deliberately factors outside its shard
-//! locks.
+//! Four tenants (priorities 0–3) submit mixed-pattern, multi-RHS work
+//! against three circuit matrices. A seeded [`FaultPlan`] (≥10% fault
+//! rate) decides per request id — deterministically, independent of
+//! thread timing — what goes wrong. The demo then asserts the serving
+//! invariants:
+//!
+//! - **zero lost or hung requests**: every admitted request resolves
+//!   with a solution or a *typed* error ([`GluError`] downcast);
+//! - **bounded tail**: p999 latency stays under the deadline;
+//! - **amortization survives chaos**: the symbolic pipeline runs far
+//!   fewer times than the request count (caching + coalescing).
 //!
 //! ```text
 //! cargo run --release --example solver_service
 //! ```
 
-use std::time::Instant;
+use std::time::Duration;
 
-use glu3::coordinator::SolverPool;
-use glu3::glu::{amortization_profile, GluOptions};
-use glu3::numeric::residual;
+use glu3::coordinator::{FaultPlan, ServeConfig, Server, Ticket};
+use glu3::glu::GluOptions;
+use glu3::numeric::GluError;
 use glu3::sparse::gen::{self, restamp_columns, SuiteMatrix};
 use glu3::sparse::Csc;
 use glu3::util::Rng;
 
-const THREADS: usize = 4;
-const REQUESTS_PER_THREAD: usize = 25;
-const RHS_PER_REQUEST: usize = 4;
+const TENANTS: usize = 4;
+const REQUESTS: usize = 120;
+const RHS_PER_REQUEST: usize = 3;
+const DEADLINE_MS: u64 = 5_000;
+const FAULT_SEED: u64 = 0xC11A05;
 
 fn main() -> anyhow::Result<()> {
     // Three distinct sparsity patterns (three circuits being simulated).
@@ -46,85 +49,122 @@ fn main() -> anyhow::Result<()> {
         println!("pattern {:10} n={:6} nz={}", name, a.nrows(), a.nnz());
     }
 
-    let pool = SolverPool::new(GluOptions::default());
+    let plan = FaultPlan::chaos(FAULT_SEED);
+    println!(
+        "fault plan: seed {:#x}, {:.0}% injected faults (+{:.0}% bursts)\n",
+        plan.seed,
+        plan.fault_rate() * 100.0,
+        plan.burst * 100.0
+    );
+    let cfg = ServeConfig {
+        queue_capacity: 48,
+        workers: 2,
+        default_deadline: Duration::from_millis(DEADLINE_MS),
+        fault_plan: plan.clone(),
+        ..ServeConfig::default()
+    };
+    let server = Server::new(GluOptions::default(), cfg);
+    let tenants: Vec<_> = (0..TENANTS)
+        .map(|i| server.tenant(&format!("tenant-{i}"), i as u8))
+        .collect();
 
-    // Serial warm-up: factor each pattern once so the threaded phase is
-    // all hits (and the hit-rate below is deterministic).
-    let mut warm_rng = Rng::new(0xAA);
-    for (_, base) in &patterns {
-        let m = restamp_columns(base, &mut warm_rng);
-        let b = vec![1.0; m.nrows()];
-        pool.solve(&m, &b)?;
+    // Warm each pattern so injected singular stamps always land on cached
+    // symbolic state (the retention scenario), then submit the storm.
+    for (_, a) in &patterns {
+        server.warm(a)?;
     }
-
-    let t0 = Instant::now();
-    std::thread::scope(|scope| {
-        for t in 0..THREADS {
-            let pool = &pool;
-            let patterns = &patterns;
-            scope.spawn(move || {
-                let mut rng = Rng::new(0xC11E57 + t as u64);
-                for i in 0..REQUESTS_PER_THREAD {
-                    // Mixed patterns: each thread walks all three circuits.
-                    let (_, base) = &patterns[(t + i) % patterns.len()];
-                    let m = restamp_columns(base, &mut rng);
-                    let n = m.nrows();
-                    let rhs: Vec<Vec<f64>> = (0..RHS_PER_REQUEST)
-                        .map(|s| (0..n).map(|j| ((j + s + i) % 11) as f64 - 5.0).collect())
-                        .collect();
-                    let xs = pool.solve_many(&m, &rhs).expect("solve");
-                    for (x, b) in xs.iter().zip(&rhs) {
-                        assert!(residual(&m, x, b) < 1e-6);
+    let mut rng = Rng::new(FAULT_SEED);
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(REQUESTS);
+    let mut admitted = 0u64;
+    let mut turned_away = 0u64;
+    for i in 0..REQUESTS {
+        let (_, base) = &patterns[i % patterns.len()];
+        let m = restamp_columns(base, &mut rng);
+        let rhs = vec![vec![1.0; m.nrows()]; RHS_PER_REQUEST];
+        match server.submit(tenants[i % TENANTS], m.clone(), rhs.clone()) {
+            Ok(t) => {
+                // Deterministic bursts: duplicate this exact stamp so the
+                // queue sees same-values spikes for coalescing to absorb.
+                if plan.burst_at(t.id()) {
+                    match server.submit(tenants[(i + 1) % TENANTS], m, rhs) {
+                        Ok(t2) => tickets.push(t2),
+                        Err(_) => turned_away += 1,
                     }
                 }
-            });
+                tickets.push(t);
+                admitted += 1;
+            }
+            // Back-pressure is an answer, not a loss: typed Overloaded.
+            Err(e) => {
+                assert!(
+                    e.downcast_ref::<GluError>().is_some(),
+                    "admission errors must be typed: {e:#}"
+                );
+                turned_away += 1;
+            }
         }
-    });
-    let wall = t0.elapsed().as_secs_f64();
-
-    let st = pool.stats();
-    let threaded_requests = THREADS * REQUESTS_PER_THREAD;
-    let threaded_solves = threaded_requests * RHS_PER_REQUEST;
-    println!(
-        "\nserved {threaded_requests} requests ({threaded_solves} RHS) from {THREADS} threads \
-         in {:.1} ms ({:.0} solves/s)",
-        wall * 1e3,
-        threaded_solves as f64 / wall
-    );
-    println!(
-        "symbolic-cache hit rate: {:.1}%  (hits {}, misses {}; {} full factorizations, {} refactorizations)",
-        st.hit_rate() * 100.0,
-        st.hits,
-        st.misses,
-        st.factors,
-        st.refactors
-    );
-    println!(
-        "solve latency: p50 {:.2} ms, p99 {:.2} ms (mean {:.2} ms over {} requests)",
-        st.p50_ms(),
-        st.p99_ms(),
-        st.latency.mean_ms(),
-        st.latency.count()
-    );
-
-    println!("\nper-pattern amortization (symbolic pipeline ran once each):");
-    for (key, stats) in pool.entry_stats() {
-        let ap = amortization_profile(&stats);
-        println!(
-            "  n={:6} nnz={:8}  symbolic x{}  numeric x{:3}  reuse {:5.1}x  cpu saved {:8.1} ms",
-            key.n,
-            key.nnz,
-            ap.symbolic_runs,
-            ap.numeric_runs,
-            ap.reuse(),
-            ap.cpu_ms_saved()
-        );
     }
 
-    assert!(
-        st.hit_rate() >= 0.9,
-        "repeated-pattern workload must hit the symbolic cache >= 90%"
+    // Every ticket must resolve — solution or *typed* error, never a hang.
+    let mut ok = 0u64;
+    let mut typed_errors = 0u64;
+    for t in tickets {
+        match t.wait() {
+            Ok(xs) => {
+                assert_eq!(xs.len(), RHS_PER_REQUEST);
+                ok += 1;
+            }
+            Err(e) => {
+                let typed = e.downcast_ref::<GluError>();
+                assert!(typed.is_some(), "untyped service error: {e:#}");
+                typed_errors += 1;
+            }
+        }
+    }
+
+    let st = server.shutdown();
+    println!(
+        "admitted {admitted} (+bursts), turned away {turned_away}; \
+         resolved {ok} ok + {typed_errors} typed errors"
     );
-    println!("\nhit-rate acceptance (>= 90%): OK");
+    println!(
+        "counters: completed {}, deadline missed {}, failed {}, retries {}, \
+         coalesced {}, degraded checkouts {}",
+        st.completed, st.deadline_missed, st.failed, st.retries, st.coalesced,
+        st.degraded_checkouts
+    );
+    println!(
+        "injected: {} delays, {} repairs, {} escalations, {} singulars, {} poisons",
+        st.injected_delays,
+        st.injected_repairs,
+        st.injected_escalations,
+        st.injected_singulars,
+        st.injected_poisons
+    );
+    println!(
+        "latency: p50 {:.2} ms, p99 {:.2} ms, p999 {:.2} ms; queue depth max {} / cap {}",
+        st.p50_ms(),
+        st.p99_ms(),
+        st.p999_ms(),
+        st.depth.max_depth(),
+        st.queue_capacity
+    );
+    println!(
+        "amortization: {} symbolic runs vs {} submitted requests",
+        st.symbolic_runs, st.submitted
+    );
+
+    // The serving invariants this demo exists to prove.
+    assert_eq!(st.in_flight(), 0, "zero lost/hung requests");
+    assert!(st.injected_faults() > 0, "the chaos plan must actually fire");
+    assert!(
+        st.p999_ms() < DEADLINE_MS as f64,
+        "tail latency must stay inside the deadline"
+    );
+    assert!(
+        st.symbolic_runs < st.submitted as usize,
+        "caching must beat one-symbolic-per-request even under chaos"
+    );
+    println!("\nchaos acceptance (zero lost, typed errors, bounded tail): OK");
     Ok(())
 }

@@ -5,6 +5,7 @@
 
 pub mod fixtures;
 pub mod numeric;
+pub mod service;
 pub mod table;
 
 pub use fixtures::paper_example;

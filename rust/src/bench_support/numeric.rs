@@ -507,7 +507,7 @@ pub fn spawn_vs_pool(spec: &BenchSpec) -> anyhow::Result<SpawnBaseline> {
     })
 }
 
-fn json_num(v: f64) -> String {
+pub(crate) fn json_num(v: f64) -> String {
     if v.is_finite() {
         format!("{v:.6}")
     } else {
@@ -519,7 +519,7 @@ fn json_num(v: f64) -> String {
 /// (growth factors, condition proxies, probe residuals), where fixed
 /// 6-decimal formatting would flatten e.g. `1e-12` to `0.000000`.
 /// Rust's `{:e}` output (`1.5e-12`, `2e0`) is valid JSON number syntax.
-fn json_num_sci(v: f64) -> String {
+pub(crate) fn json_num_sci(v: f64) -> String {
     if v.is_finite() {
         format!("{v:e}")
     } else {
@@ -529,7 +529,7 @@ fn json_num_sci(v: f64) -> String {
 
 /// Escape a string for embedding in a JSON document (labels come from the
 /// CLI's `--matrix` argument, which can be an arbitrary file path).
-fn json_str(s: &str) -> String {
+pub(crate) fn json_str(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     for c in s.chars() {
         match c {
@@ -546,19 +546,19 @@ fn json_str(s: &str) -> String {
 }
 
 /// Render a slice of ms samples as a JSON number array.
-fn json_num_array(xs: &[f64]) -> String {
+pub(crate) fn json_num_array(xs: &[f64]) -> String {
     let items: Vec<String> = xs.iter().map(|&v| json_num(v)).collect();
     format!("[{}]", items.join(", "))
 }
 
 /// Render a slice of cycle counts as a JSON integer array.
-fn json_u64_array(xs: &[u64]) -> String {
+pub(crate) fn json_u64_array(xs: &[u64]) -> String {
     let items: Vec<String> = xs.iter().map(|v| v.to_string()).collect();
     format!("[{}]", items.join(", "))
 }
 
 /// Render a slice of strings as a JSON string array.
-fn json_str_array(xs: &[String]) -> String {
+pub(crate) fn json_str_array(xs: &[String]) -> String {
     let items: Vec<String> = xs.iter().map(|s| format!("\"{}\"", json_str(s))).collect();
     format!("[{}]", items.join(", "))
 }
@@ -722,6 +722,12 @@ pub fn validate_json_schema(s: &str) -> anyhow::Result<()> {
     ] {
         anyhow::ensure!(s.contains(key), "missing key {key}");
     }
+    check_balanced(s)
+}
+
+/// Shared structural check: every `{`/`[` closed, string-aware (quotes and
+/// escapes inside JSON strings don't count toward nesting).
+pub(crate) fn check_balanced(s: &str) -> anyhow::Result<()> {
     let mut depth_obj = 0i64;
     let mut depth_arr = 0i64;
     let mut in_str = false;

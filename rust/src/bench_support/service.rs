@@ -1,0 +1,415 @@
+//! Serving-core benchmark: a seeded chaos run plus a saturation sweep over
+//! the [`Server`], reported as the schema-validated `BENCH_service.json`.
+//!
+//! Two phases:
+//!
+//! 1. **Chaos run** — `requests` submissions spread round-robin over
+//!    `tenants` tenants (priorities cycling 0..4) and the given pattern
+//!    set, unpaced, under the spec's [`FaultPlan`]. This is the
+//!    acceptance surface: zero lost requests, bounded tail latency, and
+//!    `symbolic_runs < requests` even while faults force ladder repairs,
+//!    escalations, singular exhaustions, poisoned checkouts, and bursts.
+//! 2. **Saturation sweep** — fresh fault-free servers driven at offered
+//!    rates of ×0.25/×0.5/×1/×2 the chaos run's achieved throughput,
+//!    with drift-free pacing, showing where admission control starts
+//!    shedding and what it does to the p99/p999 tail.
+
+use std::time::{Duration, Instant};
+
+use crate::bench_support::numeric::{check_balanced, json_num, json_str};
+use crate::coordinator::serve::{FaultPlan, ServeConfig, ServeStats, Server, TenantId, Ticket};
+use crate::glu::GluOptions;
+use crate::sparse::Csc;
+
+/// What to run; see the module docs for the two phases.
+pub struct ServiceBenchSpec {
+    /// Report label (matrix name or suite tag).
+    pub label: String,
+    /// Tenants to register (priorities cycle 0..4).
+    pub tenants: usize,
+    /// Total chaos-run submissions (bursts add extras on top).
+    pub requests: usize,
+    /// Right-hand sides per request.
+    pub rhs_per_request: usize,
+    /// Admission-queue capacity.
+    pub queue_capacity: usize,
+    /// Worker threads.
+    pub workers: usize,
+    /// Per-request deadline, ms.
+    pub deadline_ms: u64,
+    /// The seeded chaos plan for phase 1 (phase 2 always runs fault-free).
+    pub fault_plan: FaultPlan,
+    /// Pace the chaos run to this offered rate (requests/s); `None` means
+    /// unpaced (submit as fast as admission control allows).
+    pub rate_rps: Option<f64>,
+    /// Run the saturation sweep (phase 2); when off, `sweep` is `[]`.
+    pub sweep: bool,
+    /// Solver options for every server in the run.
+    pub opts: GluOptions,
+}
+
+impl ServiceBenchSpec {
+    /// CI-sized spec: small enough for a debug-build smoke run, big
+    /// enough that coalescing, shedding, and every fault class fire.
+    pub fn smoke(seed: u64) -> Self {
+        ServiceBenchSpec {
+            label: "smoke".to_string(),
+            tenants: 4,
+            requests: 96,
+            rhs_per_request: 2,
+            queue_capacity: 32,
+            workers: 2,
+            deadline_ms: 5_000,
+            fault_plan: FaultPlan::chaos(seed),
+            rate_rps: None,
+            sweep: true,
+            opts: GluOptions::default(),
+        }
+    }
+}
+
+/// One offered-rate point of the saturation sweep.
+pub struct SweepPoint {
+    pub offered_rps: f64,
+    pub achieved_rps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub rejected: u64,
+    pub shed: u64,
+    pub max_depth: usize,
+}
+
+/// Everything `BENCH_service.json` serializes.
+pub struct ServiceReport {
+    pub label: String,
+    pub n: usize,
+    pub nnz: usize,
+    pub patterns: usize,
+    pub tenants: usize,
+    pub workers: usize,
+    pub queue_capacity: usize,
+    pub fault_seed: u64,
+    pub fault_rate: f64,
+    pub wall_ms: f64,
+    pub stats: ServeStats,
+    pub sweep: Vec<SweepPoint>,
+}
+
+fn max_sample(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(0.0, f64::max)
+}
+
+struct Driver<'a> {
+    matrices: &'a [Csc],
+    tenant_ids: Vec<TenantId>,
+    rhs_per_request: usize,
+    deadline: Duration,
+}
+
+impl Driver<'_> {
+    /// Submit one request (request index `i` picks the tenant and the
+    /// pattern); admission rejections are counted by the server itself.
+    fn submit(&self, server: &Server, i: usize) -> Option<Ticket> {
+        let a = &self.matrices[i % self.matrices.len()];
+        let rhs = vec![vec![1.0; a.ncols()]; self.rhs_per_request];
+        let tenant = self.tenant_ids[i % self.tenant_ids.len()];
+        server
+            .submit_with_deadline(tenant, a.clone(), rhs, self.deadline)
+            .ok()
+    }
+}
+
+fn build_server(spec: &ServiceBenchSpec, plan: FaultPlan) -> (Server, Vec<TenantId>) {
+    let cfg = ServeConfig {
+        queue_capacity: spec.queue_capacity,
+        workers: spec.workers,
+        default_deadline: Duration::from_millis(spec.deadline_ms),
+        fault_plan: plan,
+        ..ServeConfig::default()
+    };
+    let server = Server::new(spec.opts.clone(), cfg);
+    let tenant_ids = (0..spec.tenants.max(1))
+        .map(|i| server.tenant(&format!("tenant-{i}"), (i % 4) as u8))
+        .collect();
+    (server, tenant_ids)
+}
+
+/// Drive one server: submit `requests` (optionally paced to `rate_rps`),
+/// wait out every ticket, shut down. Returns `(final stats, wall secs)`.
+fn drive(
+    spec: &ServiceBenchSpec,
+    matrices: &[Csc],
+    plan: FaultPlan,
+    requests: usize,
+    rate_rps: Option<f64>,
+) -> anyhow::Result<(ServeStats, f64)> {
+    let (server, tenant_ids) = build_server(spec, plan.clone());
+    for a in matrices {
+        server.warm(a)?;
+    }
+    let driver = Driver {
+        matrices,
+        tenant_ids,
+        rhs_per_request: spec.rhs_per_request.max(1),
+        deadline: Duration::from_millis(spec.deadline_ms),
+    };
+    let interval = rate_rps.map(|r| Duration::from_secs_f64(1.0 / r.max(1e-9)));
+    let start = Instant::now();
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(requests);
+    for i in 0..requests {
+        if let Some(step) = interval {
+            // Drift-free pacing: each request has an absolute start slot.
+            let slot = start + step * i as u32;
+            let now = Instant::now();
+            if slot > now {
+                std::thread::sleep(slot - now);
+            }
+        }
+        if let Some(t) = driver.submit(&server, i) {
+            // Deterministic burst injection: duplicate this submission, so
+            // the queue sees same-stamp spikes for coalescing to absorb.
+            if plan.burst_at(t.id()) {
+                tickets.extend(driver.submit(&server, i));
+            }
+            tickets.push(t);
+        }
+    }
+    // Every admitted request must resolve — success or typed error.
+    for t in tickets {
+        let _ = t.wait();
+    }
+    let wall = start.elapsed().as_secs_f64();
+    Ok((server.shutdown(), wall))
+}
+
+/// Run the chaos phase and (optionally) the saturation sweep.
+pub fn run_service_bench(
+    spec: &ServiceBenchSpec,
+    matrices: &[Csc],
+) -> anyhow::Result<ServiceReport> {
+    anyhow::ensure!(!matrices.is_empty(), "service bench needs at least one matrix");
+    let plan = spec.fault_plan.clone();
+    let (stats, wall) = drive(spec, matrices, plan, spec.requests, spec.rate_rps)?;
+    let base_rps = (stats.resolved() as f64 / wall.max(1e-9)).max(1.0);
+
+    let mut sweep = Vec::new();
+    if spec.sweep {
+        let per_point = spec.requests.clamp(8, 48);
+        for mult in [0.25, 0.5, 1.0, 2.0] {
+            let offered = base_rps * mult;
+            let (st, w) = drive(spec, matrices, FaultPlan::disabled(), per_point, Some(offered))?;
+            sweep.push(SweepPoint {
+                offered_rps: offered,
+                achieved_rps: st.completed as f64 / w.max(1e-9),
+                p50_ms: st.p50_ms(),
+                p99_ms: st.p99_ms(),
+                p999_ms: st.p999_ms(),
+                rejected: st.rejected,
+                shed: st.shed,
+                max_depth: st.depth.max_depth(),
+            });
+        }
+    }
+
+    Ok(ServiceReport {
+        label: spec.label.clone(),
+        n: matrices[0].ncols(),
+        nnz: matrices[0].nnz(),
+        patterns: matrices.len(),
+        tenants: spec.tenants.max(1),
+        workers: spec.workers,
+        queue_capacity: spec.queue_capacity,
+        fault_seed: spec.fault_plan.seed,
+        fault_rate: spec.fault_plan.fault_rate(),
+        wall_ms: wall * 1e3,
+        stats,
+        sweep,
+    })
+}
+
+impl ServiceReport {
+    /// Requests per second achieved by the chaos run.
+    pub fn rps(&self) -> f64 {
+        self.stats.resolved() as f64 / (self.wall_ms / 1e3).max(1e-9)
+    }
+
+    /// Hand-rolled JSON (no serde in the offline vendored crate set).
+    /// Schema `glu3-bench-service-v1`; validated by the CI chaos job.
+    pub fn to_json(&self) -> String {
+        let st = &self.stats;
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"glu3-bench-service-v1\",\n");
+        s.push_str(&format!("  \"label\": \"{}\",\n", json_str(&self.label)));
+        s.push_str(&format!("  \"n\": {},\n", self.n));
+        s.push_str(&format!("  \"nnz\": {},\n", self.nnz));
+        s.push_str(&format!("  \"patterns\": {},\n", self.patterns));
+        s.push_str(&format!("  \"tenants\": {},\n", self.tenants));
+        s.push_str(&format!("  \"workers\": {},\n", self.workers));
+        s.push_str(&format!("  \"fault_seed\": {},\n", self.fault_seed));
+        s.push_str(&format!("  \"fault_rate\": {},\n", json_num(self.fault_rate)));
+        s.push_str(&format!(
+            "  \"throughput\": {{\"requests\": {}, \"wall_ms\": {}, \"rps\": {}}},\n",
+            st.submitted,
+            json_num(self.wall_ms),
+            json_num(self.rps())
+        ));
+        s.push_str(&format!(
+            "  \"latency\": {{\"count\": {}, \"p50_ms\": {}, \"p99_ms\": {}, \
+             \"p999_ms\": {}, \"max_ms\": {}}},\n",
+            st.latency.count(),
+            json_num(st.p50_ms()),
+            json_num(st.p99_ms()),
+            json_num(st.p999_ms()),
+            json_num(max_sample(st.latency.samples()))
+        ));
+        s.push_str(&format!(
+            "  \"queue\": {{\"capacity\": {}, \"max_depth\": {}, \"mean_depth\": {}, \
+             \"p99_depth\": {}}},\n",
+            st.queue_capacity,
+            st.depth.max_depth(),
+            json_num(st.depth.mean()),
+            json_num(st.depth.p99())
+        ));
+        s.push_str(&format!(
+            "  \"counters\": {{\"submitted\": {}, \"completed\": {}, \"rejected\": {}, \
+             \"shed\": {}, \"deadline_missed\": {}, \"failed\": {}, \"retries\": {}, \
+             \"coalesced\": {}, \"degraded_checkouts\": {}, \"worker_panics\": {}, \
+             \"in_flight\": {}, \"symbolic_runs\": {}, \"numeric_runs\": {}}},\n",
+            st.submitted,
+            st.completed,
+            st.rejected,
+            st.shed,
+            st.deadline_missed,
+            st.failed,
+            st.retries,
+            st.coalesced,
+            st.degraded_checkouts,
+            st.worker_panics,
+            st.in_flight(),
+            st.symbolic_runs,
+            st.numeric_runs
+        ));
+        s.push_str(&format!(
+            "  \"faults\": {{\"delays\": {}, \"repairs\": {}, \"escalations\": {}, \
+             \"singulars\": {}, \"poisons\": {}, \"total\": {}}},\n",
+            st.injected_delays,
+            st.injected_repairs,
+            st.injected_escalations,
+            st.injected_singulars,
+            st.injected_poisons,
+            st.injected_faults()
+        ));
+        s.push_str("  \"sweep\": [\n");
+        for (i, p) in self.sweep.iter().enumerate() {
+            let sep = if i + 1 == self.sweep.len() { "" } else { "," };
+            s.push_str(&format!(
+                "    {{\"offered_rps\": {}, \"achieved_rps\": {}, \"p50_ms\": {}, \
+                 \"p99_ms\": {}, \"p999_ms\": {}, \"rejected\": {}, \"shed\": {}, \
+                 \"max_depth\": {}}}{}\n",
+                json_num(p.offered_rps),
+                json_num(p.achieved_rps),
+                json_num(p.p50_ms),
+                json_num(p.p99_ms),
+                json_num(p.p999_ms),
+                p.rejected,
+                p.shed,
+                p.max_depth,
+                sep
+            ));
+        }
+        s.push_str("  ]\n");
+        s.push_str("}\n");
+        s
+    }
+
+    /// Write the JSON document to `path`.
+    pub fn write_json(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))
+    }
+}
+
+/// Light structural validation of a `glu3-bench-service-v1` document:
+/// required keys present, braces/brackets balanced. (CI additionally runs
+/// it through a real JSON parser.)
+pub fn validate_service_schema(s: &str) -> anyhow::Result<()> {
+    for key in [
+        "\"schema\": \"glu3-bench-service-v1\"",
+        "\"label\"",
+        "\"tenants\"",
+        "\"workers\"",
+        "\"fault_seed\"",
+        "\"fault_rate\"",
+        "\"throughput\"",
+        "\"rps\"",
+        "\"latency\"",
+        "\"p50_ms\"",
+        "\"p99_ms\"",
+        "\"p999_ms\"",
+        "\"queue\"",
+        "\"capacity\"",
+        "\"max_depth\"",
+        "\"mean_depth\"",
+        "\"p99_depth\"",
+        "\"counters\"",
+        "\"submitted\"",
+        "\"completed\"",
+        "\"rejected\"",
+        "\"shed\"",
+        "\"deadline_missed\"",
+        "\"failed\"",
+        "\"retries\"",
+        "\"coalesced\"",
+        "\"degraded_checkouts\"",
+        "\"worker_panics\"",
+        "\"in_flight\"",
+        "\"symbolic_runs\"",
+        "\"numeric_runs\"",
+        "\"faults\"",
+        "\"delays\"",
+        "\"repairs\"",
+        "\"escalations\"",
+        "\"singulars\"",
+        "\"poisons\"",
+        "\"sweep\"",
+    ] {
+        anyhow::ensure!(s.contains(key), "missing key {key}");
+    }
+    check_balanced(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn smoke_bench_round_trips_and_validates() {
+        let mut spec = ServiceBenchSpec::smoke(20260808);
+        spec.requests = 48;
+        spec.sweep = false;
+        let matrices = vec![
+            gen::netlist(96, 5, 8, 0.1, 1, 0.2, 11),
+            gen::grid2d(10, 10, 3),
+        ];
+        let report = run_service_bench(&spec, &matrices).unwrap();
+        assert_eq!(report.stats.in_flight(), 0, "no request may be lost");
+        assert!(report.stats.submitted > 0);
+        assert!(
+            report.stats.symbolic_runs < report.stats.submitted as usize,
+            "caching must beat one-symbolic-per-request"
+        );
+        let json = report.to_json();
+        validate_service_schema(&json).unwrap();
+    }
+
+    #[test]
+    fn schema_validator_rejects_truncation() {
+        let spec = ServiceBenchSpec::smoke(1);
+        assert!(spec.sweep);
+        let bad = "{\"schema\": \"glu3-bench-service-v1\"";
+        assert!(validate_service_schema(bad).is_err());
+    }
+}

@@ -15,11 +15,18 @@
 //!   each factored system, clients submit solve/refactor jobs over channels.
 //!   Useful when systems are long-lived and callers want isolation rather
 //!   than a shared cache.
+//! - [`serve`] — the fault-tolerant serving core over the pool: bounded
+//!   admission with priority shedding, per-tenant fairness, deadlines with
+//!   cooperative cancellation, transient-failure retry, same-stamp request
+//!   coalescing, engine degradation under pressure, drain-then-join
+//!   shutdown — all testable under a deterministic seeded [`FaultPlan`].
 
 pub mod nr;
 pub mod pool;
+pub mod serve;
 pub mod service;
 
 pub use nr::{newton_raphson, newton_raphson_in, NonlinearSystem, NrOptions, NrResult};
 pub use pool::{pattern_key, Checkout, PatternKey, PoolGuard, PoolStats, SolverPool};
+pub use serve::{FaultAction, FaultPlan, ServeConfig, ServeStats, Server, TenantId, Ticket};
 pub use service::{SolverHandle, SolverService};

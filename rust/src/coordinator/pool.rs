@@ -165,6 +165,11 @@ impl PoolStats {
     pub fn p99_ms(&self) -> f64 {
         self.latency.p99_ms()
     }
+
+    /// 99.9th-percentile request latency, ms.
+    pub fn p999_ms(&self) -> f64 {
+        self.latency.p999_ms()
+    }
 }
 
 /// A sharded, pattern-keyed pool of factored systems.
@@ -415,6 +420,22 @@ impl SolverPool {
         }
         out.sort_by(|a, b| b.0.cmp(&a.0));
         out.into_iter().map(|(_, k, st)| (k, st)).collect()
+    }
+
+    /// `(symbolic_runs, numeric_runs)` summed over the live entries — the
+    /// serving layer's "did coalescing/caching actually avoid work" signal
+    /// (evicted entries' runs are not counted).
+    pub fn run_totals(&self) -> (usize, usize) {
+        let mut sym = 0usize;
+        let mut num = 0usize;
+        for s in &self.shards {
+            let shard = lock_shard(s);
+            for e in &shard.entries {
+                sym += e.solver.stats().symbolic_runs;
+                num += e.solver.stats().numeric_runs;
+            }
+        }
+        (sym, num)
     }
 
     /// Aggregate counters and merged latency samples.

@@ -1,0 +1,986 @@
+//! The fault-tolerant serving core: a multi-tenant request loop over the
+//! [`SolverPool`].
+//!
+//! [`SolverPool`] amortizes symbolic work across requests, but nothing in
+//! it survives a slow, failing, or overloaded *caller population*. The
+//! [`Server`] adds the service discipline a production solver front-end
+//! needs, as one pipeline every request flows through:
+//!
+//! ```text
+//! submit ──► admission ──► fairness ──► coalesce ──► checkout ──► solve
+//!            bounded       round-robin  by pattern   retry w/     per-RHS
+//!            queue,        over per-    key: one     backoff on   deadline
+//!            priority      tenant sub-  refactor     transient    checks
+//!            shedding      queues       feeds all    faults only
+//!            │                          waiters      │
+//!            ▼ GluError::Overloaded                  ▼ GluError::
+//!                                                    DeadlineExceeded /
+//!                                                    NumericallySingular
+//! ```
+//!
+//! - **Admission control & back-pressure** — the queue is bounded
+//!   ([`ServeConfig::queue_capacity`]); a full queue rejects with a typed
+//!   [`GluError::Overloaded`] instead of buffering unboundedly, and every
+//!   depth transition is recorded in a ring-buffered
+//!   [`crate::util::stats::DepthGauge`]. Under pressure, tenants are shed
+//!   lowest-priority first: a tenant with priority `p` may only occupy
+//!   `capacity * (p+1) / (max_priority+1)` slots, so low-priority traffic
+//!   hits back-pressure while high-priority traffic still flows.
+//! - **Fairness** — each tenant has its own sub-queue; workers pop
+//!   round-robin across tenants, so one chatty tenant cannot starve the
+//!   rest no matter how deep its backlog.
+//! - **Deadlines** — every request carries a budget; cancellation is
+//!   cooperative, checked at the dequeue, checkout, and per-RHS solve
+//!   boundaries, and a missed deadline replies with a typed
+//!   [`GluError::DeadlineExceeded`].
+//! - **Retry** — checkout failures classified transient by
+//!   [`crate::numeric::is_transient`] are retried with exponential
+//!   backoff inside the remaining deadline budget. The robustness
+//!   ladder's in-place repairs (perturbed/escalated refactors) return
+//!   `Ok` and need no retry; [`GluError::NumericallySingular`] exhaustion
+//!   is terminal and is **never** retried.
+//! - **Coalescing** — when a popped request has same-pattern, same-values
+//!   peers waiting anywhere in the queue, they ride the same checkout:
+//!   one refactor feeds every waiting solve for that stamp.
+//! - **Degradation** — sustained pressure (the backlog holding above ¾
+//!   of capacity) flips the loop to a fallback pool whose engine is the
+//!   cheapest viable one (the sequential left-looking oracle), trading
+//!   per-request speed for service-wide liveness; easing below ¼
+//!   capacity flips it back.
+//! - **Shutdown** — [`Server::shutdown`] (and `Drop`) stops admission,
+//!   lets the workers drain the backlog, joins them, and replies a typed
+//!   [`GluError::WorkerPanicked`] to anything a dead worker stranded —
+//!   no caller ever hangs.
+//!
+//! Driving all of it: the deterministic, seedable [`FaultPlan`] — the
+//! chaos-injection layer. Decisions are a pure function of `(seed,
+//! request id)`, so a chaos run is reproducible in CI regardless of
+//! thread interleaving. Injected matrix faults reuse the adversarial
+//! restamps of [`crate::sparse::gen`] (pattern-preserving, so they are
+//! legal refactor inputs that exercise specific robustness-ladder rungs).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::pool::{pattern_key, PatternKey, PoolGuard, PoolStats, SolverPool};
+use crate::glu::{GluOptions, NumericEngine};
+use crate::numeric::{is_transient, service_error, GluError};
+use crate::sparse::{gen, Csc};
+use crate::util::stats::{DepthGauge, LatencyRecorder};
+use crate::util::Rng;
+
+/// Serving-loop knobs. The defaults suit tests and demos; a real
+/// deployment sizes `queue_capacity`/`workers` to its traffic.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bounded admission-queue capacity (across all tenants).
+    pub queue_capacity: usize,
+    /// Worker threads draining the queue.
+    pub workers: usize,
+    /// Deadline for [`Server::submit`] (use
+    /// [`Server::submit_with_deadline`] for per-request budgets).
+    pub default_deadline: Duration,
+    /// Retry budget for transient checkout failures.
+    pub max_retries: u32,
+    /// First backoff sleep; doubles per retry, capped by the deadline.
+    pub backoff_base: Duration,
+    /// Largest coalesced batch (1 disables coalescing).
+    pub max_coalesce: usize,
+    /// Consecutive over-watermark admissions before the loop degrades to
+    /// the fallback engine.
+    pub degrade_after: u32,
+    /// Deterministic chaos injection (disabled by default).
+    pub fault_plan: FaultPlan,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            queue_capacity: 64,
+            workers: 2,
+            default_deadline: Duration::from_secs(5),
+            max_retries: 3,
+            backoff_base: Duration::from_millis(1),
+            max_coalesce: 8,
+            degrade_after: 16,
+            fault_plan: FaultPlan::disabled(),
+        }
+    }
+}
+
+/// What the [`FaultPlan`] injects into one request's processing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// No injection.
+    None,
+    /// Stall the worker for the given milliseconds before the checkout
+    /// (models a slow device or a GC-style hiccup).
+    Delay(u64),
+    /// Weaken every 7th diagonal to `1e-13` of its value
+    /// ([`gen::weaken_diagonal`]): forces the ladder's rung-1/2
+    /// perturb+refine repair.
+    WeakenDiagonal,
+    /// Mis-scale every 9th row by `1e100` ([`gen::misscale_rows`]):
+    /// forces a rung-2 re-equilibration escalation.
+    MisscaleRows,
+    /// Zero every stored value: exhausts the ladder into a terminal typed
+    /// [`GluError::NumericallySingular`] (the cached pattern survives).
+    ZeroValues,
+    /// Fail the first checkout attempt with a typed
+    /// [`GluError::TransientFault`]: exercises the backoff-retry path.
+    Poison,
+}
+
+/// A deterministic, seedable chaos plan. Every decision is a pure
+/// function of `(seed, request id)` — independent of thread timing — so
+/// a seeded chaos run is bit-reproducible in CI.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Seed recorded in reports; same seed ⇒ same per-request decisions.
+    pub seed: u64,
+    /// Probability of [`FaultAction::Delay`].
+    pub delay: f64,
+    /// Injected delay length, ms.
+    pub delay_ms: u64,
+    /// Probability of [`FaultAction::WeakenDiagonal`].
+    pub weaken: f64,
+    /// Probability of [`FaultAction::MisscaleRows`].
+    pub misscale: f64,
+    /// Probability of [`FaultAction::ZeroValues`].
+    pub singular: f64,
+    /// Probability of [`FaultAction::Poison`].
+    pub poison: f64,
+    /// Probability that a driver duplicates a request into a burst
+    /// (consumed by the harnesses via [`FaultPlan::burst_at`], not by the
+    /// serving loop itself).
+    pub burst: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+impl FaultPlan {
+    /// No injection at all (the production configuration).
+    pub fn disabled() -> Self {
+        FaultPlan {
+            seed: 0,
+            delay: 0.0,
+            delay_ms: 0,
+            weaken: 0.0,
+            misscale: 0.0,
+            singular: 0.0,
+            poison: 0.0,
+            burst: 0.0,
+        }
+    }
+
+    /// The CI/demo chaos mix: ≥10% injected faults spanning every action,
+    /// plus occasional submission bursts.
+    pub fn chaos(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            delay: 0.05,
+            delay_ms: 2,
+            weaken: 0.04,
+            misscale: 0.02,
+            singular: 0.02,
+            poison: 0.04,
+            burst: 0.03,
+        }
+    }
+
+    /// Total injected-fault probability (bursts excluded — they add
+    /// load, not faults).
+    pub fn fault_rate(&self) -> f64 {
+        self.delay + self.weaken + self.misscale + self.singular + self.poison
+    }
+
+    /// The (deterministic) action for one request id.
+    pub fn decide(&self, request_id: u64) -> FaultAction {
+        let mix = request_id.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+        let mut rng = Rng::new(self.seed ^ mix);
+        let x = rng.f64();
+        let mut acc = self.delay;
+        if x < acc {
+            return FaultAction::Delay(self.delay_ms);
+        }
+        acc += self.weaken;
+        if x < acc {
+            return FaultAction::WeakenDiagonal;
+        }
+        acc += self.misscale;
+        if x < acc {
+            return FaultAction::MisscaleRows;
+        }
+        acc += self.singular;
+        if x < acc {
+            return FaultAction::ZeroValues;
+        }
+        acc += self.poison;
+        if x < acc {
+            return FaultAction::Poison;
+        }
+        FaultAction::None
+    }
+
+    /// Whether a driver should duplicate request `request_id` into a
+    /// burst (deterministic, like [`FaultPlan::decide`]).
+    pub fn burst_at(&self, request_id: u64) -> bool {
+        let mut rng = Rng::new(self.seed ^ request_id.rotate_left(17).wrapping_add(0xB0B));
+        rng.chance(self.burst)
+    }
+}
+
+/// Handle to a registered tenant (index into the per-tenant sub-queues).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantId(usize);
+
+/// One admitted request waiting in (or popped from) the queue.
+struct Request {
+    id: u64,
+    key: PatternKey,
+    a: Csc,
+    rhs: Vec<Vec<f64>>,
+    deadline: Instant,
+    budget_ms: u64,
+    enqueued: Instant,
+    reply: mpsc::Sender<anyhow::Result<Vec<Vec<f64>>>>,
+}
+
+struct TenantState {
+    name: String,
+    priority: u8,
+    submitted: u64,
+    queue: VecDeque<Request>,
+}
+
+struct QueueState {
+    tenants: Vec<TenantState>,
+    /// Round-robin cursor over tenants.
+    rr: usize,
+    /// Total queued requests across tenants.
+    depth: usize,
+    /// Consecutive admissions observed above the degrade watermark.
+    over_streak: u32,
+    /// Set by shutdown: reject new work, drain the backlog, exit workers.
+    stopping: bool,
+}
+
+/// The pending reply to one submitted request. [`Ticket::wait`] blocks
+/// until the serving loop answers; every admitted request is answered —
+/// with a solution, a typed rejection, or a typed deadline error — even
+/// across worker death and shutdown.
+pub struct Ticket {
+    id: u64,
+    rx: mpsc::Receiver<anyhow::Result<Vec<Vec<f64>>>>,
+}
+
+impl Ticket {
+    /// The request id (the [`FaultPlan`] key for this request).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the request resolves. A dead worker surfaces as a
+    /// typed [`GluError::WorkerPanicked`] rather than a hang.
+    pub fn wait(self) -> anyhow::Result<Vec<Vec<f64>>> {
+        let Ok(r) = self.rx.recv() else {
+            let e = service_error(GluError::WorkerPanicked);
+            return Err(e.context("request dropped: its worker thread died"));
+        };
+        r
+    }
+}
+
+/// Aggregate serving counters (see [`Server::stats`]). The zero-lost
+/// invariant after a drained shutdown is
+/// `submitted == completed + deadline_missed + failed`
+/// ([`ServeStats::in_flight`] returns 0); rejections and sheds are
+/// counted separately because those requests were never admitted.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    /// Requests admitted to the queue.
+    pub submitted: u64,
+    /// Requests answered with solutions.
+    pub completed: u64,
+    /// Submissions rejected by the full queue (typed
+    /// [`GluError::Overloaded`]).
+    pub rejected: u64,
+    /// Submissions shed by priority-scaled admission under pressure.
+    pub shed: u64,
+    /// Admitted requests that missed their deadline (typed
+    /// [`GluError::DeadlineExceeded`]).
+    pub deadline_missed: u64,
+    /// Admitted requests that failed terminally (typed
+    /// [`GluError::NumericallySingular`], structural errors, or a
+    /// shutdown flush).
+    pub failed: u64,
+    /// Backoff retries of transient checkout failures.
+    pub retries: u64,
+    /// Requests that rode another request's checkout (batch members
+    /// beyond each leader).
+    pub coalesced: u64,
+    /// Checkouts served by the degraded fallback engine.
+    pub degraded_checkouts: u64,
+    /// Worker threads that died (panicked) over the server's lifetime.
+    pub worker_panics: u64,
+    /// Injected [`FaultAction::Delay`] count.
+    pub injected_delays: u64,
+    /// Injected [`FaultAction::WeakenDiagonal`] count.
+    pub injected_repairs: u64,
+    /// Injected [`FaultAction::MisscaleRows`] count.
+    pub injected_escalations: u64,
+    /// Injected [`FaultAction::ZeroValues`] count.
+    pub injected_singulars: u64,
+    /// Injected [`FaultAction::Poison`] count.
+    pub injected_poisons: u64,
+    /// Configured admission-queue capacity.
+    pub queue_capacity: usize,
+    /// Queue-depth gauge (current / high-water / windowed summaries).
+    pub depth: DepthGauge,
+    /// End-to-end request latency (admission to reply), completed
+    /// requests only.
+    pub latency: LatencyRecorder,
+    /// Primary pool counters (hits/misses/evictions/...).
+    pub pool: PoolStats,
+    /// Symbolic pipeline runs across both pools' live entries — the
+    /// coalescing acceptance reads `symbolic_runs < submitted`.
+    pub symbolic_runs: usize,
+    /// Numeric kernel runs across both pools' live entries.
+    pub numeric_runs: usize,
+}
+
+impl ServeStats {
+    /// Admitted requests that have received a reply.
+    pub fn resolved(&self) -> u64 {
+        self.completed + self.deadline_missed + self.failed
+    }
+
+    /// Admitted requests not yet replied to (0 after a drained shutdown —
+    /// the zero-lost invariant).
+    pub fn in_flight(&self) -> u64 {
+        self.submitted.saturating_sub(self.resolved())
+    }
+
+    /// Total injected faults.
+    pub fn injected_faults(&self) -> u64 {
+        self.injected_delays
+            + self.injected_repairs
+            + self.injected_escalations
+            + self.injected_singulars
+            + self.injected_poisons
+    }
+
+    /// Median end-to-end latency, ms.
+    pub fn p50_ms(&self) -> f64 {
+        self.latency.p50_ms()
+    }
+
+    /// 99th-percentile end-to-end latency, ms.
+    pub fn p99_ms(&self) -> f64 {
+        self.latency.p99_ms()
+    }
+
+    /// 99.9th-percentile end-to-end latency, ms.
+    pub fn p999_ms(&self) -> f64 {
+        self.latency.p999_ms()
+    }
+}
+
+enum CheckoutErr {
+    Deadline,
+    Failed(anyhow::Error),
+}
+
+struct Inner {
+    cfg: ServeConfig,
+    pool: SolverPool,
+    /// Cheapest-viable-engine pool the loop degrades to under sustained
+    /// pressure (sequential left-looking: no worker threads to feed).
+    fallback: SolverPool,
+    queue: Mutex<QueueState>,
+    cond: Condvar,
+    gauge: Mutex<DepthGauge>,
+    latency: Mutex<LatencyRecorder>,
+    degraded: AtomicBool,
+    next_id: AtomicU64,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+    shed: AtomicU64,
+    deadline_missed: AtomicU64,
+    failed: AtomicU64,
+    retries: AtomicU64,
+    coalesced: AtomicU64,
+    degraded_checkouts: AtomicU64,
+    worker_panics: AtomicU64,
+    injected_delays: AtomicU64,
+    injected_repairs: AtomicU64,
+    injected_escalations: AtomicU64,
+    injected_singulars: AtomicU64,
+    injected_poisons: AtomicU64,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `anyhow::Error` is not `Clone`, but every member of a coalesced batch
+/// needs its own copy of a shared failure: typed payloads are
+/// reconstructed exactly, untyped chains are flattened to their rendered
+/// form.
+fn clone_error(e: &anyhow::Error) -> anyhow::Error {
+    match e.downcast_ref::<GluError>() {
+        Some(g) => service_error(*g),
+        None => anyhow::anyhow!("{e:#}"),
+    }
+}
+
+impl Inner {
+    fn pop_locked(&self, q: &mut QueueState) -> Option<Vec<Request>> {
+        if q.depth == 0 || q.tenants.is_empty() {
+            return None;
+        }
+        // Round-robin fairness across tenant sub-queues.
+        let nt = q.tenants.len();
+        let mut lead: Option<Request> = None;
+        for step in 0..nt {
+            let ti = (q.rr + step) % nt;
+            if let Some(r) = q.tenants[ti].queue.pop_front() {
+                q.rr = (ti + 1) % nt;
+                lead = Some(r);
+                break;
+            }
+        }
+        let lead = lead?;
+        q.depth -= 1;
+
+        // Coalesce: same pattern, same values, anywhere in the queue —
+        // they all ride this checkout.
+        let mut extras: Vec<Request> = Vec::new();
+        let limit = self.cfg.max_coalesce;
+        if limit > 1 {
+            let lead_vals = lead.a.values();
+            'scan: for t in q.tenants.iter_mut() {
+                let mut i = 0;
+                while i < t.queue.len() {
+                    if extras.len() + 1 >= limit {
+                        break 'scan;
+                    }
+                    if t.queue[i].key == lead.key && t.queue[i].a.values() == lead_vals {
+                        if let Some(r) = t.queue.remove(i) {
+                            extras.push(r);
+                        }
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        }
+        q.depth -= extras.len();
+
+        // Pressure easing: leave degraded mode once the backlog falls to
+        // a quarter of capacity.
+        if q.depth * 4 <= self.cfg.queue_capacity {
+            q.over_streak = 0;
+            self.degraded.store(false, Ordering::Relaxed);
+        }
+        lock(&self.gauge).record(q.depth);
+
+        let mut batch = Vec::with_capacity(1 + extras.len());
+        batch.push(lead);
+        batch.extend(extras);
+        Some(batch)
+    }
+
+    fn next_batch(&self) -> Option<Vec<Request>> {
+        let mut q = lock(&self.queue);
+        loop {
+            if let Some(batch) = self.pop_locked(&mut q) {
+                return Some(batch);
+            }
+            if q.stopping {
+                return None;
+            }
+            q = self.cond.wait(q).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    fn finish_deadline(&self, r: Request) {
+        self.deadline_missed.fetch_add(1, Ordering::Relaxed);
+        let e = GluError::DeadlineExceeded {
+            budget_ms: r.budget_ms,
+        };
+        let _ = r.reply.send(Err(service_error(e)));
+    }
+
+    /// Apply the matrix-transforming fault actions (pattern-preserving
+    /// adversarial restamps), counting each injection.
+    fn apply_matrix_fault(&self, action: FaultAction, a: &Csc) -> Option<Csc> {
+        match action {
+            FaultAction::WeakenDiagonal => {
+                self.injected_repairs.fetch_add(1, Ordering::Relaxed);
+                Some(gen::weaken_diagonal(a, 7, 1e-13))
+            }
+            FaultAction::MisscaleRows => {
+                self.injected_escalations.fetch_add(1, Ordering::Relaxed);
+                Some(gen::misscale_rows(a, 9, 1e100))
+            }
+            FaultAction::ZeroValues => {
+                self.injected_singulars.fetch_add(1, Ordering::Relaxed);
+                let mut z = a.clone();
+                for v in z.values_mut() {
+                    *v = 0.0;
+                }
+                Some(z)
+            }
+            _ => None,
+        }
+    }
+
+    /// Checkout with deadline-capped exponential-backoff retry of
+    /// *transient* failures (injected poisons, overload); terminal
+    /// failures — ladder exhaustion, structural errors — return
+    /// immediately.
+    fn checkout_with_retry(
+        &self,
+        a: &Csc,
+        poisoned: bool,
+        deadline: Instant,
+    ) -> Result<PoolGuard<'_>, CheckoutErr> {
+        let mut attempt: u32 = 0;
+        let mut backoff = self.cfg.backoff_base;
+        loop {
+            if Instant::now() >= deadline {
+                return Err(CheckoutErr::Deadline);
+            }
+            let res = if poisoned && attempt == 0 {
+                self.injected_poisons.fetch_add(1, Ordering::Relaxed);
+                Err(service_error(GluError::TransientFault).context("injected poisoned checkout"))
+            } else if self.degraded.load(Ordering::Relaxed) {
+                self.degraded_checkouts.fetch_add(1, Ordering::Relaxed);
+                self.fallback.checkout(a)
+            } else {
+                self.pool.checkout(a)
+            };
+            match res {
+                Ok(g) => return Ok(g),
+                Err(e) if is_transient(&e) && attempt < self.cfg.max_retries => {
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    let remaining = deadline.saturating_duration_since(Instant::now());
+                    std::thread::sleep(backoff.min(remaining));
+                    backoff = backoff.saturating_mul(2);
+                    attempt += 1;
+                }
+                Err(e) => return Err(CheckoutErr::Failed(e)),
+            }
+        }
+    }
+
+    /// Solve one request against a held checkout, with cooperative
+    /// deadline checks between right-hand sides.
+    fn solve_one(&self, guard: &mut PoolGuard<'_>, r: Request) {
+        let mut xs: Vec<Vec<f64>> = Vec::with_capacity(r.rhs.len());
+        let mut err: Option<anyhow::Error> = None;
+        let mut timed_out = Instant::now() >= r.deadline;
+        if !timed_out {
+            for b in &r.rhs {
+                if Instant::now() >= r.deadline {
+                    timed_out = true;
+                    break;
+                }
+                match guard.solve(b) {
+                    Ok(x) => xs.push(x),
+                    Err(e) => {
+                        err = Some(e);
+                        break;
+                    }
+                }
+            }
+        }
+        if timed_out {
+            self.finish_deadline(r);
+        } else if let Some(e) = err {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+            let _ = r.reply.send(Err(e.context("solve failed")));
+        } else {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+            let ms = r.enqueued.elapsed().as_secs_f64() * 1e3;
+            lock(&self.latency).record(ms);
+            let _ = r.reply.send(Ok(xs));
+        }
+    }
+
+    fn process(&self, batch: Vec<Request>) {
+        let extra = batch.len() - 1;
+        if extra > 0 {
+            self.coalesced.fetch_add(extra as u64, Ordering::Relaxed);
+        }
+        // Dequeue boundary: requests that expired while queued get their
+        // typed reply without costing a checkout.
+        let now = Instant::now();
+        let (live, expired): (Vec<Request>, Vec<Request>) =
+            batch.into_iter().partition(|r| now < r.deadline);
+        for r in expired {
+            self.finish_deadline(r);
+        }
+        let Some(lead) = live.first() else { return };
+
+        // One deterministic fault decision per batch, keyed by the leader.
+        let action = self.cfg.fault_plan.decide(lead.id);
+        if let FaultAction::Delay(ms) = action {
+            self.injected_delays.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        let adversarial = self.apply_matrix_fault(action, &lead.a);
+        let served = adversarial.as_ref().unwrap_or(&lead.a);
+
+        // The shared checkout runs under the batch's latest deadline;
+        // members are re-checked individually before their solves.
+        let latest = live.iter().map(|r| r.deadline).max().expect("batch");
+        let poisoned = matches!(action, FaultAction::Poison);
+        match self.checkout_with_retry(served, poisoned, latest) {
+            Ok(mut guard) => {
+                for r in live {
+                    self.solve_one(&mut guard, r);
+                }
+            }
+            Err(CheckoutErr::Deadline) => {
+                for r in live {
+                    self.finish_deadline(r);
+                }
+            }
+            Err(CheckoutErr::Failed(e)) => {
+                for r in live {
+                    self.failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = r.reply.send(Err(clone_error(&e).context("checkout failed")));
+                }
+            }
+        }
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    while let Some(batch) = inner.next_batch() {
+        inner.process(batch);
+    }
+}
+
+/// The multi-tenant serving loop (see the module docs for the pipeline).
+pub struct Server {
+    inner: Arc<Inner>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn a server: a [`SolverPool`] built from `opts`, a fallback
+    /// pool on the cheapest viable engine, and `cfg.workers` drainers.
+    pub fn new(opts: GluOptions, cfg: ServeConfig) -> Server {
+        assert!(cfg.queue_capacity >= 1, "queue capacity must be >= 1");
+        assert!(cfg.workers >= 1, "at least one worker");
+        assert!(cfg.max_coalesce >= 1, "max_coalesce must be >= 1");
+        let fallback_opts = GluOptions {
+            engine: NumericEngine::LeftLookingCpu,
+            ..opts.clone()
+        };
+        let nworkers = cfg.workers;
+        let inner = Arc::new(Inner {
+            cfg,
+            pool: SolverPool::new(opts),
+            fallback: SolverPool::with_config(fallback_opts, 2, 2),
+            queue: Mutex::new(QueueState {
+                tenants: Vec::new(),
+                rr: 0,
+                depth: 0,
+                over_streak: 0,
+                stopping: false,
+            }),
+            cond: Condvar::new(),
+            gauge: Mutex::new(DepthGauge::new()),
+            latency: Mutex::new(LatencyRecorder::new()),
+            degraded: AtomicBool::new(false),
+            next_id: AtomicU64::new(0),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            deadline_missed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            degraded_checkouts: AtomicU64::new(0),
+            worker_panics: AtomicU64::new(0),
+            injected_delays: AtomicU64::new(0),
+            injected_repairs: AtomicU64::new(0),
+            injected_escalations: AtomicU64::new(0),
+            injected_singulars: AtomicU64::new(0),
+            injected_poisons: AtomicU64::new(0),
+        });
+        let workers = (0..nworkers)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("glu3-serve-{i}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        Server { inner, workers }
+    }
+
+    /// Register a tenant. Higher `priority` keeps flowing longer under
+    /// pressure; the lowest-priority tenants are shed first.
+    pub fn tenant(&self, name: &str, priority: u8) -> TenantId {
+        let mut q = lock(&self.inner.queue);
+        q.tenants.push(TenantState {
+            name: name.to_string(),
+            priority,
+            submitted: 0,
+            queue: VecDeque::new(),
+        });
+        TenantId(q.tenants.len() - 1)
+    }
+
+    /// `(name, priority, admitted submissions)` per registered tenant.
+    pub fn tenant_info(&self) -> Vec<(String, u8, u64)> {
+        let q = lock(&self.inner.queue);
+        q.tenants
+            .iter()
+            .map(|t| (t.name.clone(), t.priority, t.submitted))
+            .collect()
+    }
+
+    /// Pre-factor a pattern directly into the primary pool, bypassing
+    /// the queue and the fault plan — harnesses warm their patterns so
+    /// injected singular stamps always land on *cached* symbolic state
+    /// (the scenario the pool's retention policy is about).
+    pub fn warm(&self, a: &Csc) -> anyhow::Result<()> {
+        self.inner.pool.checkout(a).map(|_| ())
+    }
+
+    /// The primary pool (counters and entry stats for tests/reports).
+    pub fn pool(&self) -> &SolverPool {
+        &self.inner.pool
+    }
+
+    /// Whether the loop is currently degraded to the fallback engine.
+    pub fn is_degraded(&self) -> bool {
+        self.inner.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Submit with the configured default deadline.
+    pub fn submit(&self, tenant: TenantId, a: Csc, rhs: Vec<Vec<f64>>) -> anyhow::Result<Ticket> {
+        let budget = self.inner.cfg.default_deadline;
+        self.submit_with_deadline(tenant, a, rhs, budget)
+    }
+
+    /// Submit a request: admission control runs synchronously (typed
+    /// [`GluError::Overloaded`] on rejection), everything after is
+    /// asynchronous behind the returned [`Ticket`].
+    pub fn submit_with_deadline(
+        &self,
+        tenant: TenantId,
+        a: Csc,
+        rhs: Vec<Vec<f64>>,
+        budget: Duration,
+    ) -> anyhow::Result<Ticket> {
+        let inner = &self.inner;
+        let cap = inner.cfg.queue_capacity;
+        let key = pattern_key(&a);
+        let (tx, rx) = mpsc::channel();
+        let id = inner.next_id.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut q = lock(&inner.queue);
+            anyhow::ensure!(tenant.0 < q.tenants.len(), "unregistered tenant");
+            if q.stopping {
+                inner.rejected.fetch_add(1, Ordering::Relaxed);
+                let e = GluError::Overloaded {
+                    depth: q.depth,
+                    capacity: cap,
+                };
+                return Err(service_error(e).context("server is shutting down"));
+            }
+            if q.depth >= cap {
+                inner.rejected.fetch_add(1, Ordering::Relaxed);
+                let e = GluError::Overloaded {
+                    depth: q.depth,
+                    capacity: cap,
+                };
+                return Err(service_error(e));
+            }
+            // Priority-scaled shares: a tenant with priority p may occupy
+            // cap*(p+1)/(maxp+1) slots, so under pressure the lowest
+            // priorities are shed first while the top priority still sees
+            // the full queue.
+            let maxp = q.tenants.iter().map(|t| t.priority).max().unwrap_or(0) as usize;
+            let p = q.tenants[tenant.0].priority as usize;
+            let share = (cap * (p + 1)) / (maxp + 1);
+            if q.depth >= share {
+                inner.shed.fetch_add(1, Ordering::Relaxed);
+                let e = GluError::Overloaded {
+                    depth: q.depth,
+                    capacity: cap,
+                };
+                let msg = format!("shed: priority {p} share is {share} slots");
+                return Err(service_error(e).context(msg));
+            }
+            let now = Instant::now();
+            q.tenants[tenant.0].queue.push_back(Request {
+                id,
+                key,
+                a,
+                rhs,
+                deadline: now + budget,
+                budget_ms: budget.as_millis() as u64,
+                enqueued: now,
+                reply: tx,
+            });
+            q.tenants[tenant.0].submitted += 1;
+            q.depth += 1;
+            // Sustained-pressure tracking for engine degradation.
+            if q.depth * 4 >= cap * 3 {
+                q.over_streak += 1;
+                if q.over_streak >= inner.cfg.degrade_after {
+                    inner.degraded.store(true, Ordering::Relaxed);
+                }
+            } else {
+                q.over_streak = 0;
+            }
+            lock(&inner.gauge).record(q.depth);
+            inner.submitted.fetch_add(1, Ordering::Relaxed);
+        }
+        inner.cond.notify_one();
+        Ok(Ticket { id, rx })
+    }
+
+    /// Counter snapshot (live — callable while serving).
+    pub fn stats(&self) -> ServeStats {
+        let inner = &self.inner;
+        let (sym_p, num_p) = inner.pool.run_totals();
+        let (sym_f, num_f) = inner.fallback.run_totals();
+        ServeStats {
+            submitted: inner.submitted.load(Ordering::Relaxed),
+            completed: inner.completed.load(Ordering::Relaxed),
+            rejected: inner.rejected.load(Ordering::Relaxed),
+            shed: inner.shed.load(Ordering::Relaxed),
+            deadline_missed: inner.deadline_missed.load(Ordering::Relaxed),
+            failed: inner.failed.load(Ordering::Relaxed),
+            retries: inner.retries.load(Ordering::Relaxed),
+            coalesced: inner.coalesced.load(Ordering::Relaxed),
+            degraded_checkouts: inner.degraded_checkouts.load(Ordering::Relaxed),
+            worker_panics: inner.worker_panics.load(Ordering::Relaxed),
+            injected_delays: inner.injected_delays.load(Ordering::Relaxed),
+            injected_repairs: inner.injected_repairs.load(Ordering::Relaxed),
+            injected_escalations: inner.injected_escalations.load(Ordering::Relaxed),
+            injected_singulars: inner.injected_singulars.load(Ordering::Relaxed),
+            injected_poisons: inner.injected_poisons.load(Ordering::Relaxed),
+            queue_capacity: inner.cfg.queue_capacity,
+            depth: lock(&inner.gauge).clone(),
+            latency: lock(&inner.latency).clone(),
+            pool: inner.pool.stats(),
+            symbolic_runs: sym_p + sym_f,
+            numeric_runs: num_p + num_f,
+        }
+    }
+
+    /// Graceful shutdown: stop admission, let the workers drain the
+    /// backlog, join them, and flush anything a dead worker stranded.
+    /// Returns the final counters (with `in_flight() == 0`).
+    pub fn shutdown(mut self) -> ServeStats {
+        self.shutdown_impl();
+        self.stats()
+    }
+
+    fn shutdown_impl(&mut self) {
+        {
+            let mut q = lock(&self.inner.queue);
+            q.stopping = true;
+        }
+        self.inner.cond.notify_all();
+        for j in self.workers.drain(..) {
+            if j.join().is_err() {
+                self.inner.worker_panics.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // Workers drain before exiting, so leftovers only exist if a
+        // worker died: give every stranded request a typed reply so no
+        // ticket can hang.
+        let mut q = lock(&self.inner.queue);
+        for t in q.tenants.iter_mut() {
+            while let Some(r) = t.queue.pop_front() {
+                self.inner.failed.fetch_add(1, Ordering::Relaxed);
+                let e = service_error(GluError::WorkerPanicked)
+                    .context("server shut down before the request ran");
+                let _ = r.reply.send(Err(e));
+            }
+        }
+        q.depth = 0;
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::residual;
+
+    #[test]
+    fn fault_plan_is_deterministic_and_seed_sensitive() {
+        let a = FaultPlan::chaos(42);
+        let b = FaultPlan::chaos(42);
+        let c = FaultPlan::chaos(43);
+        let da: Vec<FaultAction> = (0..256).map(|i| a.decide(i)).collect();
+        let db: Vec<FaultAction> = (0..256).map(|i| b.decide(i)).collect();
+        let dc: Vec<FaultAction> = (0..256).map(|i| c.decide(i)).collect();
+        assert_eq!(da, db, "same seed must replay identically");
+        assert_ne!(da, dc, "different seeds must differ");
+        assert!(a.fault_rate() >= 0.1, "chaos mix is >= 10% faults");
+        assert!(
+            da.iter().any(|&x| x != FaultAction::None),
+            "chaos plan must actually inject"
+        );
+        let quiet = FaultPlan::disabled();
+        assert!((0..256).all(|i| quiet.decide(i) == FaultAction::None));
+    }
+
+    #[test]
+    fn clean_round_trip_completes_everything() {
+        let a = gen::netlist(96, 5, 8, 0.1, 1, 0.2, 11);
+        let server = Server::new(GluOptions::default(), ServeConfig::default());
+        let t0 = server.tenant("sim-a", 1);
+        server.warm(&a).unwrap();
+        let b = vec![1.0; 96];
+        let tickets: Vec<Ticket> = (0..8)
+            .map(|_| server.submit(t0, a.clone(), vec![b.clone()]).unwrap())
+            .collect();
+        for t in tickets {
+            let xs = t.wait().unwrap();
+            assert_eq!(xs.len(), 1);
+            assert!(residual(&a, &xs[0], &b) < 1e-7);
+        }
+        let st = server.shutdown();
+        assert_eq!(st.completed, 8);
+        assert_eq!(st.in_flight(), 0);
+        assert_eq!(st.rejected + st.shed + st.failed + st.deadline_missed, 0);
+    }
+
+    #[test]
+    fn unregistered_tenant_is_refused() {
+        let server = Server::new(GluOptions::default(), ServeConfig::default());
+        let err = server
+            .submit(TenantId(5), gen::grid2d(4, 4, 1), vec![vec![1.0; 16]])
+            .unwrap_err();
+        assert!(format!("{err}").contains("unregistered"));
+    }
+}

@@ -6,7 +6,14 @@ use std::sync::mpsc;
 use std::thread::JoinHandle;
 
 use crate::glu::{GluOptions, GluSolver, GluStats};
+use crate::numeric::{service_error, GluError};
 use crate::sparse::Csc;
+
+/// A dead worker thread, as a typed error: callers can downcast to
+/// [`GluError::WorkerPanicked`] instead of string-matching `"worker gone"`.
+fn worker_gone() -> anyhow::Error {
+    service_error(GluError::WorkerPanicked)
+}
 
 enum Job {
     /// Solve a batch of right-hand sides.
@@ -84,8 +91,8 @@ impl SolverHandle {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Job::Solve { rhs, reply })
-            .map_err(|_| anyhow::anyhow!("worker gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("worker gone"))?
+            .map_err(|_| worker_gone())?;
+        rx.recv().map_err(|_| worker_gone())?
     }
 
     /// Refactor with new values (same pattern).
@@ -96,8 +103,8 @@ impl SolverHandle {
                 a: Box::new(a),
                 reply,
             })
-            .map_err(|_| anyhow::anyhow!("worker gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("worker gone"))?
+            .map_err(|_| worker_gone())?;
+        rx.recv().map_err(|_| worker_gone())?
     }
 
     /// Current stats snapshot.
@@ -105,8 +112,22 @@ impl SolverHandle {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Job::Stats { reply })
-            .map_err(|_| anyhow::anyhow!("worker gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("worker gone"))
+            .map_err(|_| worker_gone())?;
+        rx.recv().map_err(|_| worker_gone())
+    }
+
+    /// Graceful shutdown: drain the job channel (every already-submitted
+    /// job is answered), then join the worker. Reports — rather than
+    /// swallows — a worker that died by panic, as a typed
+    /// [`GluError::WorkerPanicked`]. `Drop` does the same minus the
+    /// report; call this when you care about the outcome.
+    pub fn shutdown(mut self) -> anyhow::Result<()> {
+        let _ = self.tx.send(Job::Shutdown);
+        let panicked = self.join.take().is_some_and(|j| j.join().is_err());
+        if panicked {
+            return Err(worker_gone().context("worker panicked before shutdown"));
+        }
+        Ok(())
     }
 }
 
@@ -151,6 +172,21 @@ impl SolverService {
     /// Registered system names.
     pub fn names(&self) -> Vec<&str> {
         self.solvers.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Shut every solver down (drain-then-join), reporting the first
+    /// worker that died by panic instead of silently dropping it.
+    pub fn shutdown_all(&mut self) -> anyhow::Result<()> {
+        let mut first_err = None;
+        for (name, h) in self.solvers.drain() {
+            if let Err(e) = h.shutdown() {
+                first_err.get_or_insert(e.context(format!("solver '{name}'")));
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 }
 
@@ -206,6 +242,33 @@ mod tests {
         assert!(svc
             .load("bad", coo.to_csc(), GluOptions::default())
             .is_err());
+    }
+
+    #[test]
+    fn shutdown_drains_and_joins() {
+        let a = gen::netlist(100, 5, 8, 0.1, 1, 0.2, 5);
+        let h = SolverHandle::spawn(a, GluOptions::default()).unwrap();
+        h.shutdown().unwrap();
+
+        let mut svc = SolverService::new();
+        let a = gen::netlist(100, 5, 8, 0.1, 1, 0.2, 6);
+        svc.load("sys", a, GluOptions::default()).unwrap();
+        svc.shutdown_all().unwrap();
+        assert!(svc.names().is_empty());
+    }
+
+    #[test]
+    fn dead_worker_surfaces_as_typed_error() {
+        use crate::numeric::GluError;
+        let a = gen::netlist(100, 5, 8, 0.1, 1, 0.2, 7);
+        let h = SolverHandle::spawn(a, GluOptions::default()).unwrap();
+        // Kill the worker out from under the handle; whether or not it has
+        // exited by the time solve() runs, the caller must get a typed
+        // error, never a hang.
+        h.tx.send(Job::Shutdown).unwrap();
+        let err = h.solve(vec![1.0; 100]).unwrap_err();
+        let typed = err.downcast_ref::<GluError>();
+        assert_eq!(typed, Some(&GluError::WorkerPanicked));
     }
 
     #[test]

@@ -674,7 +674,7 @@ impl GluSolver {
             Err(e) => match e.downcast_ref::<GluError>() {
                 Some(GluError::NumericallySingular { col }) => bad_col = *col,
                 // Structural failure (not values): the ladder cannot help.
-                None => return Err(self.fail_numeric(e)),
+                _ => return Err(self.fail_numeric(e)),
             },
         }
 
@@ -707,7 +707,7 @@ impl GluSolver {
             }
             Err(e) => match e.downcast_ref::<GluError>() {
                 Some(GluError::NumericallySingular { col }) => bad_col = *col,
-                None => return Err(self.fail_numeric(e)),
+                _ => return Err(self.fail_numeric(e)),
             },
         }
         if let Some((run, rel)) = self.try_perturbed(max_stamp, &mut mon, &mut bad_col) {

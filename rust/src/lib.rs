@@ -222,6 +222,46 @@
 //! refactor fails *numerically* (the next restamp will likely repair) and
 //! evicts only on structural failure.
 //!
+//! ## Serving under failure
+//!
+//! The ladder repairs hostile *values*; [`coordinator::Server`] survives
+//! hostile *callers*. It wraps the [`coordinator::SolverPool`] in the
+//! service discipline a simulation farm's shared solver front-end needs,
+//! as one pipeline every request flows through:
+//!
+//! ```text
+//! submit ─► admission ─► fairness ─► coalesce ─► checkout ─► solve
+//!           bounded      round-robin by pattern  retry w/    per-RHS
+//!           queue,       over tenant key + equal backoff on  deadline
+//!           priority     sub-queues  values     transients   checks
+//!           shedding
+//! ```
+//!
+//! Admission is bounded and priority-aware: a full queue answers with a
+//! typed [`numeric::GluError::Overloaded`] (back-pressure, not an
+//! unbounded buffer), and under pressure low-priority tenants are shed
+//! first. Every request carries a deadline, checked cooperatively at the
+//! dequeue, checkout, and per-RHS boundaries — a miss replies with a
+//! typed [`numeric::GluError::DeadlineExceeded`], never a hang. Transient
+//! checkout failures retry with exponential backoff inside the remaining
+//! budget; ladder exhaustion
+//! ([`numeric::GluError::NumericallySingular`]) is terminal and is never
+//! retried. Same-pattern same-values requests coalesce onto one checkout,
+//! so a submission burst costs one refactor; sustained pressure degrades
+//! the loop to the cheapest viable engine until the backlog eases; and
+//! shutdown drains the backlog, joins the workers, and gives anything
+//! stranded a typed reply.
+//!
+//! All of it is testable under a deterministic, seedable
+//! [`coordinator::FaultPlan`]: injected delays, adversarial restamps that
+//! force specific ladder rungs, poisoned checkouts, and submission bursts
+//! are a pure function of `(seed, request id)`, so a chaos run
+//! (`tests/chaos.rs`, `glu3 serve`, the `solver_service` example) is
+//! reproducible in CI regardless of thread interleaving. `glu3 serve`
+//! emits the serving counters — throughput, p50/p99/p999 latency, queue
+//! depth, shed/retry/coalesce counts, and a saturation sweep — as
+//! `BENCH_service.json`.
+//!
 //! ## Choosing a kernel mode
 //!
 //! You don't: the [`plan::FactorPlan`] does, per level, at plan-build

@@ -17,10 +17,8 @@ use std::collections::HashMap;
 use std::process::ExitCode;
 
 use glu3::bench_support::table::{ms, ratio, Table};
-use glu3::coordinator::SolverPool;
 use glu3::glu::{
-    amortization_profile, parallelism_profile, Detection, ExecBackend, GluOptions, GluSolver,
-    NumericEngine,
+    parallelism_profile, Detection, ExecBackend, GluOptions, GluSolver, NumericEngine,
 };
 use glu3::gpusim::Policy;
 use glu3::numeric::residual;
@@ -72,8 +70,11 @@ fn print_usage() {
          \x20 solve   same options, also solves (--rhs ones|ramp)\n\
          \x20 suite   [--set small|all] [--policy ...]   run the whole suite\n\
          \x20 profile --matrix <...>   per-level parallelism profile (Fig. 10)\n\
-         \x20 serve   --matrix <...> [--requests N] [--threads T] [--patterns P]\n\
-         \x20         drive the SolverPool and report cache/latency counters\n\
+         \x20 serve   --matrix <...> [--requests N] [--tenants T] [--workers W] [--queue Q]\n\
+         \x20         [--patterns P] [--deadline-ms D] [--fault-seed S] [--rate RPS]\n\
+         \x20         [--sweep] [--out BENCH_service.json]\n\
+         \x20         drive the fault-tolerant serving core (admission control, deadlines,\n\
+         \x20         coalescing, seeded chaos) and emit the service bench report\n\
          \x20 bench   [--matrix <...>] [--threads 1,2,4] [--iters N] [--warmup N]\n\
          \x20         [--out BENCH_numeric.json] [--smoke]\n\
          \x20         wall-clock factor/refactor/solve across engines -> JSON\n\
@@ -88,7 +89,7 @@ fn print_usage() {
 }
 
 /// Flags that take no value (presence == "true").
-const BOOL_FLAGS: &[&str] = &["smoke"];
+const BOOL_FLAGS: &[&str] = &["smoke", "sweep"];
 
 fn parse_flags(args: &[String]) -> anyhow::Result<HashMap<String, String>> {
     let mut map = HashMap::new();
@@ -352,18 +353,38 @@ fn flag_usize(
     }
 }
 
-/// Drive the [`SolverPool`] with a concurrent repeated-pattern workload and
-/// report the cache/latency counters — the serving view of the solver.
+fn flag_u64(flags: &HashMap<String, String>, key: &str, default: u64) -> anyhow::Result<u64> {
+    match flags.get(key) {
+        Some(s) => Ok(s.parse()?),
+        None => Ok(default),
+    }
+}
+
+fn flag_f64_opt(flags: &HashMap<String, String>, key: &str) -> anyhow::Result<Option<f64>> {
+    match flags.get(key) {
+        Some(s) => Ok(Some(s.parse()?)),
+        None => Ok(None),
+    }
+}
+
+/// Drive the fault-tolerant serving core ([`glu3::coordinator::Server`])
+/// with a multi-tenant, seeded-chaos workload and emit the schema-validated
+/// `BENCH_service.json` (throughput, tail latency, queue depth, shed/retry/
+/// coalesce counters, saturation sweep).
 fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use glu3::bench_support::service::{
+        run_service_bench, validate_service_schema, ServiceBenchSpec,
+    };
+    use glu3::coordinator::FaultPlan;
+
     let (name, a) = load_matrix(flags)?;
     let opts = options_from(flags)?;
-    let requests = flag_usize(flags, "requests", 64)?;
-    let threads = flag_usize(flags, "threads", 4)?;
     let patterns = flag_usize(flags, "patterns", 3)?.max(1);
+    let fault_seed = flag_u64(flags, "fault-seed", 0x5EED)?;
 
     // Distinct sparsity patterns: the base matrix plus symmetric random
     // permutations of it (structure changes, solvability is preserved).
-    let mut rng = glu3::util::Rng::new(0x5EED);
+    let mut rng = glu3::util::Rng::new(fault_seed);
     let mut variants = vec![a.clone()];
     for _ in 1..patterns {
         let mut p: Vec<usize> = (0..a.nrows()).collect();
@@ -371,70 +392,109 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         variants.push(a.permute(&p, &p));
     }
 
-    println!(
-        "serving {name}: n={} nz={}, {threads} threads x {requests} requests, {patterns} patterns",
-        a.nrows(),
-        a.nnz()
-    );
-    let pool = SolverPool::new(opts);
-    let t0 = std::time::Instant::now();
-    std::thread::scope(|scope| {
-        for t in 0..threads {
-            let pool = &pool;
-            let variants = &variants;
-            scope.spawn(move || {
-                let mut rng = glu3::util::Rng::new(0xC0FFEE + t as u64);
-                for i in 0..requests {
-                    let m = gen::restamp_columns(&variants[(t + i) % variants.len()], &mut rng);
-                    let n = m.nrows();
-                    let rhs: Vec<Vec<f64>> = (0..2)
-                        .map(|s| (0..n).map(|j| ((j + s + i) % 11) as f64 - 5.0).collect())
-                        .collect();
-                    let xs = pool.solve_many(&m, &rhs).expect("solve");
-                    for (x, b) in xs.iter().zip(&rhs) {
-                        assert!(residual(&m, x, b) < 1e-6, "bad residual");
-                    }
-                }
-            });
-        }
-    });
-    let wall_s = t0.elapsed().as_secs_f64();
+    let spec = ServiceBenchSpec {
+        label: name.clone(),
+        tenants: flag_usize(flags, "tenants", 4)?.max(1),
+        requests: flag_usize(flags, "requests", 64)?.max(1),
+        rhs_per_request: flag_usize(flags, "rhs", 2)?.max(1),
+        queue_capacity: flag_usize(flags, "queue", 32)?.max(1),
+        workers: flag_usize(flags, "workers", 2)?.max(1),
+        deadline_ms: flag_u64(flags, "deadline-ms", 5_000)?,
+        fault_plan: FaultPlan::chaos(fault_seed),
+        rate_rps: flag_f64_opt(flags, "rate")?,
+        sweep: flags.contains_key("sweep"),
+        opts,
+    };
+    let out = flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "BENCH_service.json".to_string());
 
-    let st = pool.stats();
+    println!(
+        "serving {name}: n={} nz={}, {} tenants x {} requests on {} workers \
+         (queue {}, deadline {} ms, fault seed {:#x}, {} patterns)",
+        a.nrows(),
+        a.nnz(),
+        spec.tenants,
+        spec.requests,
+        spec.workers,
+        spec.queue_capacity,
+        spec.deadline_ms,
+        fault_seed,
+        patterns
+    );
+    let report = run_service_bench(&spec, &variants)?;
+    let st = &report.stats;
+
     let mut t = Table::new(vec!["counter", "value"]);
-    t.row(vec!["requests".to_string(), st.requests().to_string()]);
-    t.row(vec!["rhs solved".to_string(), st.solves.to_string()]);
+    t.row(vec!["submitted".to_string(), st.submitted.to_string()]);
+    t.row(vec!["completed".to_string(), st.completed.to_string()]);
+    t.row(vec!["rejected (queue full)".to_string(), st.rejected.to_string()]);
+    t.row(vec!["shed (priority)".to_string(), st.shed.to_string()]);
     t.row(vec![
-        "cache hit rate".to_string(),
-        format!("{:.1}%", st.hit_rate() * 100.0),
+        "deadline missed".to_string(),
+        st.deadline_missed.to_string(),
     ]);
-    t.row(vec!["full factorizations".to_string(), st.factors.to_string()]);
-    t.row(vec!["refactorizations".to_string(), st.refactors.to_string()]);
-    t.row(vec!["evictions".to_string(), st.evictions.to_string()]);
-    t.row(vec!["cached patterns".to_string(), st.entries.to_string()]);
+    t.row(vec!["failed (terminal)".to_string(), st.failed.to_string()]);
+    t.row(vec!["retries".to_string(), st.retries.to_string()]);
+    t.row(vec!["coalesced".to_string(), st.coalesced.to_string()]);
+    t.row(vec![
+        "degraded checkouts".to_string(),
+        st.degraded_checkouts.to_string(),
+    ]);
+    t.row(vec![
+        "injected faults".to_string(),
+        st.injected_faults().to_string(),
+    ]);
+    t.row(vec!["in flight (lost)".to_string(), st.in_flight().to_string()]);
+    t.row(vec![
+        "symbolic runs".to_string(),
+        st.symbolic_runs.to_string(),
+    ]);
+    t.row(vec!["numeric runs".to_string(), st.numeric_runs.to_string()]);
+    t.row(vec!["queue max depth".to_string(), st.depth.max_depth().to_string()]);
     t.row(vec!["p50 latency (ms)".to_string(), ms(st.p50_ms())]);
     t.row(vec!["p99 latency (ms)".to_string(), ms(st.p99_ms())]);
+    t.row(vec!["p999 latency (ms)".to_string(), ms(st.p999_ms())]);
     t.row(vec![
         "throughput (req/s)".to_string(),
-        format!("{:.0}", st.requests() as f64 / wall_s),
+        format!("{:.0}", report.rps()),
     ]);
     print!("{}", t.render());
 
-    println!("\n# per-pattern amortization (symbolic work paid once, reused hot)");
-    let mut t = Table::new(vec![
-        "pattern", "symbolic", "numeric", "reuse", "cpu saved (ms)",
-    ]);
-    for (key, stats) in pool.entry_stats() {
-        let ap = amortization_profile(&stats);
-        t.row(vec![
-            format!("{:016x}", key.hash),
-            ap.symbolic_runs.to_string(),
-            ap.numeric_runs.to_string(),
-            format!("{:.1}x", ap.reuse()),
-            ms(ap.cpu_ms_saved()),
+    anyhow::ensure!(st.in_flight() == 0, "lost requests: {}", st.in_flight());
+
+    if !report.sweep.is_empty() {
+        println!("\n# saturation sweep (fault-free, paced offered load)");
+        let mut t = Table::new(vec![
+            "offered r/s",
+            "achieved r/s",
+            "p50(ms)",
+            "p99(ms)",
+            "p999(ms)",
+            "rej",
+            "shed",
+            "depth",
         ]);
+        for p in &report.sweep {
+            t.row(vec![
+                format!("{:.0}", p.offered_rps),
+                format!("{:.0}", p.achieved_rps),
+                ms(p.p50_ms),
+                ms(p.p99_ms),
+                ms(p.p999_ms),
+                p.rejected.to_string(),
+                p.shed.to_string(),
+                p.max_depth.to_string(),
+            ]);
+        }
+        print!("{}", t.render());
     }
-    print!("{}", t.render());
+
+    let json = report.to_json();
+    validate_service_schema(&json)?;
+    report.write_json(&out)?;
+    println!("wrote {out}");
     Ok(())
 }
 

@@ -38,19 +38,53 @@ pub use pool::WorkerPool;
 
 use crate::sparse::Csc;
 
-/// Typed numeric-failure classification, carried as the payload of the
-/// `anyhow::Error` every engine raises on a bad pivot (recover it with
+/// Typed failure classification, carried as the payload of the
+/// `anyhow::Error` the solver stack raises (recover it with
 /// `err.downcast_ref::<GluError>()`). The robustness ladder and the
 /// [`crate::coordinator::SolverPool`] use it to tell a *values*-level
 /// singularity (repairable: the symbolic state is still viable, retry with
 /// perturbation/re-equilibration or fresh values) from a structural
-/// failure (not repairable on this pattern).
+/// failure (not repairable on this pattern); the serving layer
+/// ([`crate::coordinator::serve`]) extends the same payload mechanism to
+/// admission, deadline, and worker-lifecycle failures, and uses
+/// [`GluError::is_transient`] to decide what retry-with-backoff may touch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum GluError {
     /// The factorization hit a zero / non-finite pivot at column `col`:
     /// the *values* are singular under the static pivot order, the
-    /// pattern and schedule remain valid.
+    /// pattern and schedule remain valid. Raised only after the repair
+    /// ladder is exhausted — **terminal** for the request that stamped
+    /// these values (retrying the same values climbs the same ladder to
+    /// the same dead end), though the cached pattern stays serviceable.
     NumericallySingular { col: usize },
+    /// Admission control rejected the request: the bounded queue is at
+    /// `depth` of `capacity` (or past the submitting tenant's
+    /// priority-scaled share of it). **Transient** — the caller may back
+    /// off and resubmit once the queue drains.
+    Overloaded { depth: usize, capacity: usize },
+    /// The request's deadline expired before an answer was produced;
+    /// `budget_ms` is the deadline it was admitted with. **Terminal** for
+    /// this request — the serving loop already spent the time budget.
+    DeadlineExceeded { budget_ms: u64 },
+    /// A service worker thread died (panic or lost channel) while the
+    /// request was in flight. **Terminal**: the request's state is gone.
+    WorkerPanicked,
+    /// A deterministically injected transient fault (the chaos harness's
+    /// poisoned-checkout action). **Transient** by construction — the
+    /// retry path must absorb it.
+    TransientFault,
+}
+
+impl GluError {
+    /// Whether a retry (with backoff) can plausibly succeed. The ladder's
+    /// in-place repairs never surface here — a repaired refactor returns
+    /// `Ok` — so the only transient failures are load-level
+    /// ([`GluError::Overloaded`]) and injected ([`GluError::TransientFault`])
+    /// ones; [`GluError::NumericallySingular`] exhaustion is terminal and
+    /// must never be retried with the same values.
+    pub fn is_transient(&self) -> bool {
+        matches!(self, GluError::Overloaded { .. } | GluError::TransientFault)
+    }
 }
 
 impl std::fmt::Display for GluError {
@@ -59,6 +93,14 @@ impl std::fmt::Display for GluError {
             GluError::NumericallySingular { col } => {
                 write!(f, "zero/non-finite pivot at column {col}")
             }
+            GluError::Overloaded { depth, capacity } => {
+                write!(f, "admission queue overloaded ({depth}/{capacity})")
+            }
+            GluError::DeadlineExceeded { budget_ms } => {
+                write!(f, "deadline exceeded ({budget_ms} ms budget)")
+            }
+            GluError::WorkerPanicked => write!(f, "service worker thread died"),
+            GluError::TransientFault => write!(f, "injected transient fault"),
         }
     }
 }
@@ -70,6 +112,23 @@ impl std::fmt::Display for GluError {
 pub(crate) fn singular_pivot(col: usize) -> anyhow::Error {
     let e = GluError::NumericallySingular { col };
     anyhow::Error::with_payload(e, e)
+}
+
+/// Wrap a [`GluError`] as an `anyhow::Error` whose Display is the error's
+/// own message and whose typed payload is recoverable with
+/// `downcast_ref::<GluError>()` — the serving layer's counterpart of
+/// [`singular_pivot`].
+pub fn service_error(e: GluError) -> anyhow::Error {
+    anyhow::Error::with_payload(e, e)
+}
+
+/// Transient-vs-terminal classification of an error chain: `true` iff the
+/// chain carries a typed [`GluError`] payload whose
+/// [`GluError::is_transient`] says a backoff-retry may succeed. Untyped
+/// errors are conservatively terminal (structural failures, I/O, bugs).
+pub fn is_transient(err: &anyhow::Error) -> bool {
+    err.downcast_ref::<GluError>()
+        .is_some_and(GluError::is_transient)
 }
 
 /// Cheap pivot-growth monitor threaded through every factorization
@@ -215,4 +274,49 @@ pub fn residual(a: &Csc, x: &[f64], b: &[f64]) -> f64 {
     let xn = x.iter().map(|v| v.abs()).fold(0.0, f64::max);
     let bn = b.iter().map(|v| v.abs()).fold(0.0, f64::max);
     num / (a.fro_norm() * xn + bn + f64::MIN_POSITIVE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transient_vs_terminal_classification() {
+        // Terminal: singular exhaustion, deadlines, dead workers.
+        assert!(!GluError::NumericallySingular { col: 3 }.is_transient());
+        assert!(!GluError::DeadlineExceeded { budget_ms: 50 }.is_transient());
+        assert!(!GluError::WorkerPanicked.is_transient());
+        // Transient: load shedding and injected faults.
+        let over = GluError::Overloaded {
+            depth: 8,
+            capacity: 8,
+        };
+        assert!(over.is_transient());
+        assert!(GluError::TransientFault.is_transient());
+    }
+
+    #[test]
+    fn chain_classification_requires_typed_payload() {
+        // Untyped errors are conservatively terminal.
+        assert!(!is_transient(&anyhow::anyhow!("structural failure")));
+        // Typed payloads classify through context frames.
+        let e = service_error(GluError::Overloaded {
+            depth: 9,
+            capacity: 8,
+        })
+        .context("while submitting");
+        assert!(is_transient(&e));
+        let e = singular_pivot(7).context("while refactoring");
+        assert!(!is_transient(&e));
+    }
+
+    #[test]
+    fn service_error_payload_and_display() {
+        let e = service_error(GluError::DeadlineExceeded { budget_ms: 250 });
+        assert_eq!(format!("{e}"), "deadline exceeded (250 ms budget)");
+        assert_eq!(
+            e.downcast_ref::<GluError>(),
+            Some(&GluError::DeadlineExceeded { budget_ms: 250 })
+        );
+    }
 }

@@ -899,7 +899,7 @@ mod tests {
             Some(crate::numeric::GluError::NumericallySingular { col }) => {
                 assert_eq!(*col, victim, "{err}")
             }
-            None => panic!("expected a typed NumericallySingular error: {err}"),
+            _ => panic!("expected a typed NumericallySingular error: {err}"),
         }
     }
 }

@@ -118,7 +118,108 @@ impl LatencyRecorder {
         percentile(&self.samples, 99.0)
     }
 
+    /// 99.9th percentile over the current window, ms — the serving tier's
+    /// tail-latency gate. With fewer than 1000 window samples the nearest
+    /// rank is the window maximum, which is the conservative reading a
+    /// tail gate wants.
+    pub fn p999_ms(&self) -> f64 {
+        percentile(&self.samples, 99.9)
+    }
+
     /// The sample window (insertion order until the ring wraps).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// A ring-buffered queue-depth gauge: records the admission queue's depth
+/// at every transition (submit / dispatch), keeping the instantaneous
+/// value, the all-time high-water mark, and a bounded window of recent
+/// observations for mean/percentile summaries. Like [`LatencyRecorder`],
+/// the ring keeps a long-lived server at constant memory.
+#[derive(Debug, Clone)]
+pub struct DepthGauge {
+    /// Observation window (ring once `cap` is reached).
+    samples: Vec<f64>,
+    /// Next ring slot to overwrite once full.
+    next: usize,
+    /// All-time number of observations.
+    total: usize,
+    cap: usize,
+    /// Depth at the most recent observation.
+    current: usize,
+    /// All-time high-water mark (not windowed — a saturation spike must
+    /// stay visible even after its samples rotate out).
+    max: usize,
+}
+
+/// Default depth-observation window.
+const DEPTH_WINDOW: usize = 4096;
+
+impl Default for DepthGauge {
+    fn default() -> Self {
+        Self::with_window(DEPTH_WINDOW)
+    }
+}
+
+impl DepthGauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A gauge keeping at most `window` recent observations (`window >= 1`).
+    pub fn with_window(window: usize) -> Self {
+        assert!(window >= 1);
+        DepthGauge {
+            samples: Vec::new(),
+            next: 0,
+            total: 0,
+            cap: window,
+            current: 0,
+            max: 0,
+        }
+    }
+
+    /// Record the queue depth after a transition.
+    pub fn record(&mut self, depth: usize) {
+        self.current = depth;
+        self.max = self.max.max(depth);
+        self.total += 1;
+        let d = depth as f64;
+        if self.samples.len() < self.cap {
+            self.samples.push(d);
+        } else {
+            self.samples[self.next] = d;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    /// Depth at the most recent observation.
+    pub fn current(&self) -> usize {
+        self.current
+    }
+
+    /// All-time high-water mark.
+    pub fn max_depth(&self) -> usize {
+        self.max
+    }
+
+    /// All-time number of observations.
+    pub fn count(&self) -> usize {
+        self.total
+    }
+
+    /// Mean depth over the current window.
+    pub fn mean(&self) -> f64 {
+        arith_mean(&self.samples)
+    }
+
+    /// 99th-percentile depth over the current window.
+    pub fn p99(&self) -> f64 {
+        percentile(&self.samples, 99.0)
+    }
+
+    /// The observation window (insertion order until the ring wraps).
     pub fn samples(&self) -> &[f64] {
         &self.samples
     }
@@ -222,6 +323,66 @@ mod tests {
         agg.merge(&r);
         assert_eq!(agg.count(), 2);
         assert_eq!(agg.p99_ms(), 3.0);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        // Empty: every percentile is 0.0 by definition.
+        for p in [0.0, 50.0, 99.0, 99.9, 100.0] {
+            assert_eq!(percentile(&[], p), 0.0);
+        }
+        // Single sample: every percentile is that sample.
+        for p in [0.0, 50.0, 99.0, 99.9, 100.0] {
+            assert_eq!(percentile(&[7.25], p), 7.25);
+        }
+        // All-equal samples: every percentile is the common value.
+        let same = vec![3.5; 64];
+        for p in [0.0, 50.0, 99.0, 99.9, 100.0] {
+            assert_eq!(percentile(&same, p), 3.5);
+        }
+    }
+
+    #[test]
+    fn p999_tracks_the_extreme_tail() {
+        let mut r = LatencyRecorder::new();
+        // 998 fast samples and two 500 ms outliers: p99 must not see the
+        // outliers (nearest rank 990), p999 must (nearest rank >= 999).
+        for _ in 0..998 {
+            r.record(1.0);
+        }
+        r.record(500.0);
+        r.record(500.0);
+        assert_eq!(r.p99_ms(), 1.0);
+        assert_eq!(r.p999_ms(), 500.0);
+        // Below 1000 samples the p999 nearest rank is the window max —
+        // the conservative tail reading.
+        let mut small = LatencyRecorder::new();
+        small.record(1.0);
+        small.record(9.0);
+        assert_eq!(small.p999_ms(), 9.0);
+    }
+
+    #[test]
+    fn depth_gauge_tracks_current_max_and_window() {
+        let mut g = DepthGauge::with_window(4);
+        assert_eq!(g.current(), 0);
+        assert_eq!(g.max_depth(), 0);
+        assert_eq!(g.mean(), 0.0);
+        for d in [1usize, 3, 9, 2, 2, 2] {
+            g.record(d);
+        }
+        assert_eq!(g.current(), 2);
+        assert_eq!(g.count(), 6);
+        // The window holds the last 4 observations (9, 2, 2, 2)...
+        assert_eq!(g.samples().len(), 4);
+        assert!((g.mean() - 3.75).abs() < 1e-12);
+        assert_eq!(g.p99(), 9.0);
+        // ...and once the spike rotates out, the high-water mark persists.
+        for _ in 0..8 {
+            g.record(1);
+        }
+        assert_eq!(g.max_depth(), 9);
+        assert_eq!(g.p99(), 1.0);
     }
 
     #[test]

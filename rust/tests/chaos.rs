@@ -1,0 +1,311 @@
+//! Chaos tier: the fault-tolerant serving core under a deterministic,
+//! seeded fault matrix — {injected delay, rung-2 repair stamp, rung-3
+//! escalation stamp, singular exhaustion, poisoned checkout, queue-full
+//! burst} × {1, 4} tenants.
+//!
+//! The invariants under test, for every scenario:
+//!
+//! - **zero lost requests**: every admitted request resolves
+//!   (`ServeStats::in_flight() == 0` after a drained shutdown) and every
+//!   ticket wait returns — solution or error, never a hang;
+//! - **typed failures**: every service error downcasts to [`GluError`];
+//! - **retry discipline**: transient faults retry with backoff, terminal
+//!   [`GluError::NumericallySingular`] exhaustion never does;
+//! - **the cached pattern survives faults**: the symbolic pipeline count
+//!   stays at the warm-up's single run no matter what values arrive.
+//!
+//! Fault decisions are a pure function of `(seed, request id)`, so these
+//! tests are reproducible regardless of worker interleaving.
+//!
+//! Tier layout: see `rust/tests/README.md`.
+
+use std::time::Duration;
+
+use glu3::coordinator::{FaultPlan, ServeConfig, ServeStats, Server};
+use glu3::glu::GluOptions;
+use glu3::numeric::GluError;
+use glu3::sparse::gen::{self, restamp_columns};
+use glu3::sparse::Csc;
+use glu3::util::Rng;
+
+type Outcome = anyhow::Result<Vec<Vec<f64>>>;
+
+fn base_matrix(seed: u64) -> Csc {
+    gen::netlist(120, 5, 8, 0.1, 1, 0.2, seed)
+}
+
+/// Drive `requests` submissions across `tenants` equal-priority tenants
+/// (distinct values per request, so no coalescing muddies the counters),
+/// wait out every ticket, and return the drained stats plus each outcome.
+fn storm(a: &Csc, plan: FaultPlan, tenants: usize, requests: usize) -> (ServeStats, Vec<Outcome>) {
+    let cfg = ServeConfig {
+        queue_capacity: 64,
+        workers: 2,
+        default_deadline: Duration::from_secs(10),
+        max_coalesce: 1,
+        fault_plan: plan,
+        ..ServeConfig::default()
+    };
+    let server = Server::new(GluOptions::default(), cfg);
+    let ids: Vec<_> = (0..tenants).map(|i| server.tenant(&format!("t{i}"), 1)).collect();
+    server.warm(a).unwrap();
+    let mut rng = Rng::new(0xFA11);
+    let tickets: Vec<_> = (0..requests)
+        .map(|i| {
+            let m = restamp_columns(a, &mut rng);
+            let rhs = vec![vec![1.0; m.nrows()]; 2];
+            server.submit(ids[i % ids.len()], m, rhs).unwrap()
+        })
+        .collect();
+    let results: Vec<Outcome> = tickets.into_iter().map(|t| t.wait()).collect();
+    (server.shutdown(), results)
+}
+
+fn assert_all_typed_or_ok(results: &[Outcome]) {
+    for (i, r) in results.iter().enumerate() {
+        if let Err(e) = r {
+            assert!(
+                e.downcast_ref::<GluError>().is_some(),
+                "request {i}: untyped service error: {e:#}"
+            );
+        }
+    }
+}
+
+/// Injected worker delays slow everything down but lose nothing.
+#[test]
+fn delay_storm_completes_everything() {
+    let a = base_matrix(1);
+    for tenants in [1usize, 4] {
+        let plan = FaultPlan {
+            delay: 1.0,
+            delay_ms: 3,
+            ..FaultPlan::disabled()
+        };
+        let (st, results) = storm(&a, plan, tenants, 10);
+        assert!(
+            results.iter().all(|r| r.is_ok()),
+            "{tenants} tenants: delays must not fail requests"
+        );
+        assert_eq!(st.completed, 10);
+        assert_eq!(st.in_flight(), 0);
+        assert_eq!(st.injected_delays, 10);
+        assert_eq!(st.retries, 0, "delays are not retried, just absorbed");
+    }
+}
+
+/// Every request arrives with weakened diagonals (the rung-1/2 repair
+/// stamp): the ladder repairs in place or fails typed — and the cached
+/// pattern survives either way.
+#[test]
+fn rung2_weaken_stamps_resolve_without_symbolic_reruns() {
+    let a = base_matrix(2);
+    for tenants in [1usize, 4] {
+        let plan = FaultPlan {
+            weaken: 1.0,
+            ..FaultPlan::disabled()
+        };
+        let (st, results) = storm(&a, plan, tenants, 8);
+        assert_all_typed_or_ok(&results);
+        assert_eq!(st.in_flight(), 0);
+        assert_eq!(st.completed + st.failed, 8);
+        assert_eq!(st.injected_repairs, 8);
+        assert_eq!(st.retries, 0, "in-place ladder repairs are not retries");
+        assert_eq!(
+            st.symbolic_runs, 1,
+            "{tenants} tenants: hostile values must never rerun the symbolic pipeline"
+        );
+    }
+}
+
+/// Every request arrives with 1e100-misscaled rows (the rung-2 Ruiz
+/// escalation stamp): repair-or-typed-failure, no symbolic reruns.
+#[test]
+fn rung3_misscale_stamps_resolve_without_symbolic_reruns() {
+    let a = base_matrix(3);
+    for tenants in [1usize, 4] {
+        let plan = FaultPlan {
+            misscale: 1.0,
+            ..FaultPlan::disabled()
+        };
+        let (st, results) = storm(&a, plan, tenants, 8);
+        assert_all_typed_or_ok(&results);
+        assert_eq!(st.in_flight(), 0);
+        assert_eq!(st.completed + st.failed, 8);
+        assert_eq!(st.injected_escalations, 8);
+        assert_eq!(st.retries, 0);
+        assert_eq!(st.symbolic_runs, 1);
+    }
+}
+
+/// All-zero value stamps exhaust the robustness ladder: a terminal typed
+/// [`GluError::NumericallySingular`] on every request, **zero** retries
+/// (exhaustion is never transient), and the cached pattern survives.
+#[test]
+fn singular_exhaustion_is_terminal_typed_and_never_retried() {
+    let a = base_matrix(4);
+    for tenants in [1usize, 4] {
+        let plan = FaultPlan {
+            singular: 1.0,
+            ..FaultPlan::disabled()
+        };
+        let (st, results) = storm(&a, plan, tenants, 6);
+        assert_eq!(st.in_flight(), 0);
+        assert_eq!(st.completed, 0, "all-zero stamps cannot solve");
+        assert_eq!(st.failed, 6);
+        assert_eq!(st.injected_singulars, 6);
+        assert_eq!(st.retries, 0, "singular exhaustion must never be retried");
+        assert_eq!(st.symbolic_runs, 1, "the cached pattern must survive");
+        for (i, r) in results.iter().enumerate() {
+            let e = r.as_ref().expect_err("zeroed stamp must fail");
+            assert!(
+                matches!(
+                    e.downcast_ref::<GluError>(),
+                    Some(GluError::NumericallySingular { .. })
+                ),
+                "request {i}: expected typed singular exhaustion, got {e:#}"
+            );
+        }
+    }
+}
+
+/// Poisoned checkouts (typed transient faults on the first attempt) are
+/// retried with backoff and then succeed: no request fails, one retry per
+/// request, and the retry discipline is visible in the counters.
+#[test]
+fn poisoned_checkouts_retry_and_recover() {
+    let a = base_matrix(5);
+    for tenants in [1usize, 4] {
+        let plan = FaultPlan {
+            poison: 1.0,
+            ..FaultPlan::disabled()
+        };
+        let (st, results) = storm(&a, plan, tenants, 6);
+        assert!(
+            results.iter().all(|r| r.is_ok()),
+            "{tenants} tenants: transient poisons must be retried away"
+        );
+        assert_eq!(st.completed, 6);
+        assert_eq!(st.injected_poisons, 6);
+        assert_eq!(st.retries, 6, "exactly one backoff retry per poisoned request");
+        assert_eq!(st.in_flight(), 0);
+    }
+}
+
+/// Tiny deadlines under injected delay: cooperative cancellation answers
+/// every request with a typed [`GluError::DeadlineExceeded`] instead of
+/// blocking the worker loop on doomed work.
+#[test]
+fn deadlines_cancel_cooperatively_with_typed_errors() {
+    let a = base_matrix(6);
+    let plan = FaultPlan {
+        delay: 1.0,
+        delay_ms: 30,
+        ..FaultPlan::disabled()
+    };
+    let cfg = ServeConfig {
+        queue_capacity: 16,
+        workers: 1,
+        max_coalesce: 1,
+        fault_plan: plan,
+        ..ServeConfig::default()
+    };
+    let server = Server::new(GluOptions::default(), cfg);
+    let t0 = server.tenant("hurried", 1);
+    server.warm(&a).unwrap();
+    let mut rng = Rng::new(0xDEAD);
+    let tickets: Vec<_> = (0..4)
+        .map(|_| {
+            let m = restamp_columns(&a, &mut rng);
+            let rhs = vec![vec![1.0; m.nrows()]];
+            server
+                .submit_with_deadline(t0, m, rhs, Duration::from_millis(5))
+                .unwrap()
+        })
+        .collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let e = t.wait().expect_err("5ms budget under 30ms delay must miss");
+        assert!(
+            matches!(
+                e.downcast_ref::<GluError>(),
+                Some(GluError::DeadlineExceeded { .. })
+            ),
+            "request {i}: expected typed deadline error, got {e:#}"
+        );
+    }
+    let st = server.shutdown();
+    assert_eq!(st.deadline_missed, 4);
+    assert_eq!(st.completed, 0);
+    assert_eq!(st.in_flight(), 0);
+}
+
+/// A queue-full burst against a slow single worker: the bounded queue
+/// rejects with typed [`GluError::Overloaded`], the lowest-priority tenant
+/// is shed first (priority-scaled admission shares), and every *admitted*
+/// request still resolves.
+#[test]
+fn queue_full_burst_rejects_typed_and_sheds_lowest_priority_first() {
+    let a = base_matrix(7);
+    let plan = FaultPlan {
+        delay: 1.0,
+        delay_ms: 25,
+        ..FaultPlan::disabled()
+    };
+    let cfg = ServeConfig {
+        queue_capacity: 4,
+        workers: 1,
+        max_coalesce: 1,
+        default_deadline: Duration::from_secs(30),
+        fault_plan: plan,
+        ..ServeConfig::default()
+    };
+    let server = Server::new(GluOptions::default(), cfg);
+    let low = server.tenant("batch", 0);
+    let high = server.tenant("interactive", 3);
+    server.warm(&a).unwrap();
+
+    let mut rng = Rng::new(0xB00);
+    let mut tickets = Vec::new();
+    let mut typed_rejections = 0u64;
+    // High-priority burst first: fills the queue to its real capacity.
+    for _ in 0..8 {
+        let m = restamp_columns(&a, &mut rng);
+        match server.submit(high, m, vec![vec![1.0; 120]]) {
+            Ok(t) => tickets.push(t),
+            Err(e) => {
+                assert!(
+                    matches!(e.downcast_ref::<GluError>(), Some(GluError::Overloaded { .. })),
+                    "untyped admission error: {e:#}"
+                );
+                typed_rejections += 1;
+            }
+        }
+    }
+    // Low-priority burst into the pressure: share = cap * 1/4 = 1 slot, so
+    // these shed while the high-priority tenant still saw the full queue.
+    for _ in 0..8 {
+        let m = restamp_columns(&a, &mut rng);
+        match server.submit(low, m, vec![vec![1.0; 120]]) {
+            Ok(t) => tickets.push(t),
+            Err(e) => {
+                assert!(
+                    matches!(e.downcast_ref::<GluError>(), Some(GluError::Overloaded { .. })),
+                    "untyped shed error: {e:#}"
+                );
+                typed_rejections += 1;
+            }
+        }
+    }
+    assert!(typed_rejections > 0, "a 16-deep burst into capacity 4 must reject");
+
+    // Every admitted request resolves; with a 30s deadline they complete.
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let st = server.shutdown();
+    assert!(st.rejected + st.shed > 0);
+    assert!(st.shed >= 1, "the priority-0 tenant must be shed under pressure");
+    assert_eq!(st.in_flight(), 0);
+    assert_eq!(st.submitted, st.completed);
+    assert_eq!(st.depth.max_depth().min(4), st.depth.max_depth(), "depth bounded by capacity");
+}

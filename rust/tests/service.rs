@@ -3,7 +3,9 @@
 //!
 //! Tier layout: see `rust/tests/README.md`.
 
-use glu3::coordinator::{pattern_key, Checkout, SolverPool};
+use std::time::Duration;
+
+use glu3::coordinator::{pattern_key, Checkout, FaultPlan, ServeConfig, Server, SolverPool};
 use glu3::glu::{ExecBackend, GluOptions, GluSolver, NumericEngine};
 use glu3::numeric::residual;
 use glu3::sparse::gen::{self, restamp_columns as restamp};
@@ -334,4 +336,47 @@ fn launch_schedule_lowered_once_across_pool_checkouts() {
     let exec = stats.exec.as_ref().expect("schedule engine must carry a per-launch report");
     assert_eq!(exec.per_launch.len(), stats.num_levels);
     assert!(exec.total_launches() >= stats.num_levels as u64);
+}
+
+/// Coalescing accounting on the serving loop: identical-stamp requests
+/// ride one checkout, so the server answers all of them while running
+/// far fewer refactors than requests (and exactly one symbolic run).
+#[test]
+fn coalescing_amortizes_identical_stamps() {
+    let a = gen::netlist(120, 5, 8, 0.1, 1, 0.2, 77);
+    // A slow single worker (forced 40ms per batch) backs the queue up so
+    // the identical stamps are actually waiting together when popped.
+    let plan = FaultPlan {
+        delay: 1.0,
+        delay_ms: 40,
+        ..FaultPlan::disabled()
+    };
+    let cfg = ServeConfig {
+        queue_capacity: 32,
+        workers: 1,
+        max_coalesce: 8,
+        default_deadline: Duration::from_secs(30),
+        fault_plan: plan,
+        ..ServeConfig::default()
+    };
+    let server = Server::new(GluOptions::default(), cfg);
+    let t0 = server.tenant("sim", 1);
+    server.warm(&a).unwrap();
+    let mut rng = Rng::new(7);
+    let m = restamp(&a, &mut rng);
+    let rhs = vec![vec![1.0; 120]];
+    let tickets: Vec<_> = (0..12)
+        .map(|_| server.submit(t0, m.clone(), rhs.clone()).unwrap())
+        .collect();
+    for t in tickets {
+        let xs = t.wait().unwrap();
+        assert_eq!(xs.len(), 1);
+        assert!(residual(&m, &xs[0], &rhs[0]) < 1e-7);
+    }
+    let st = server.shutdown();
+    assert_eq!(st.completed, 12);
+    assert_eq!(st.in_flight(), 0);
+    assert!(st.coalesced >= 4, "identical stamps must ride shared checkouts");
+    assert!(st.numeric_runs < 12, "coalescing must amortize refactors");
+    assert_eq!(st.symbolic_runs, 1, "one warm symbolic run serves everything");
 }
