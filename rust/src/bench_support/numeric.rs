@@ -19,9 +19,15 @@
 //! `robustness` block: the numeric-repair-ladder counters (perturbations,
 //! refinement steps, escalations, accepted probe residual) from one
 //! deterministic singular refactor, proving the in-place repair path per
-//! run. Wired into the CLI as
+//! run. Schema v6 adds a `symbolic` block: the cold-start anatomy of the
+//! once-per-pattern phase — serial fill+detect+levelize against the
+//! wave-parallel discovery ([`crate::symbolic::parfill`]) per thread
+//! count, and the cold pipeline against the incremental near-miss patch
+//! ([`crate::symbolic::delta`]) on a one-entry structural delta of the
+//! same pattern. Wired into the CLI as
 //! `glu3 bench` and into CI as a schema-validated smoke job; the perf
-//! trajectory lives in the emitted JSON, not in a CI gate.
+//! trajectory lives in the emitted JSON, not in a CI gate (except the two
+//! v6 symbolic floors asserted by `bench_smoke`).
 //!
 //! All timings are medians (factor/refactor/solve) or minima (the
 //! spawn-vs-pool ratio, where min is the stable statistic) over
@@ -30,7 +36,10 @@
 use crate::glu::{ExecBackend, GluOptions, GluSolver, NumericEngine};
 use crate::numeric::{parlu, parrl, PivotMonitor, WorkerPool};
 use crate::sparse::{gen, Csc};
-use crate::symbolic::symbolic_fill;
+use crate::symbolic::{
+    changed_columns, parallel_symbolic, patch_symbolic, symbolic_fill, symbolic_fill_with,
+    FillWorkspace, SymbolicFill,
+};
 use crate::util::stats::percentile;
 use crate::util::timer::measure;
 
@@ -105,8 +114,11 @@ pub struct PlanReport {
     /// Plan build wall-clock, ms (`GluStats::plan_ms` of the profiled
     /// factorization).
     pub build_ms: f64,
-    /// Symbolic fill wall-clock, ms.
+    /// Total symbolic wall-clock (fill + detect + levelize), ms — matches
+    /// `GluStats::symbolic_ms` since schema v6.
     pub symbolic_ms: f64,
+    /// Fill discovery wall-clock, ms (v6).
+    pub fillin_ms: f64,
     /// Dependency detection wall-clock, ms.
     pub detect_ms: f64,
     /// Levelization wall-clock, ms.
@@ -280,6 +292,130 @@ pub fn robustness_report() -> anyhow::Result<RobustnessReport> {
     })
 }
 
+/// The symbolic block (schema v6): cold-start anatomy of the
+/// once-per-pattern phase. Serial fill+detect+levelize against the
+/// wave-parallel discovery on the persistent worker pool at each requested
+/// thread count, plus the cold pipeline against the incremental patch on a
+/// one-entry structural delta of the same pattern — the two fast paths the
+/// SolverPool miss path takes.
+#[derive(Debug, Clone)]
+pub struct SymbolicReport {
+    /// Min wall-clock of one serial symbolic run (fill + GLU3.0 detect +
+    /// levelize), ms.
+    pub serial_ms: f64,
+    /// Thread counts the parallel path was measured at.
+    pub threads: Vec<usize>,
+    /// Min wall-clock of one fused parallel symbolic run per thread count
+    /// (same order as `threads`), ms.
+    pub parallel_ms: Vec<f64>,
+    /// Min wall-clock of the cold serial symbolic run on the delta
+    /// fixture's full pattern, ms.
+    pub cold_ms: f64,
+    /// Min wall-clock of the incremental patch covering the same delta, ms.
+    pub incremental_ms: f64,
+    /// Columns of the delta fixture whose raw structure changed.
+    pub changed_columns: usize,
+    /// Columns the patch actually recomputed (taint closure size).
+    pub recomputed_columns: usize,
+}
+
+impl SymbolicReport {
+    /// `serial / parallel` at the largest measured thread count (≥ 1.0 is
+    /// the acceptance bar on the 100×100 AMD grid at 4 threads).
+    pub fn speedup_parallel(&self) -> f64 {
+        self.parallel_ms
+            .last()
+            .map_or(0.0, |&p| self.serial_ms / p.max(1e-9))
+    }
+
+    /// `cold / incremental` (≥ 5.0 is the acceptance bar).
+    pub fn speedup_incremental(&self) -> f64 {
+        self.cold_ms / self.incremental_ms.max(1e-9)
+    }
+}
+
+/// Find one coordinate inside the fill envelope but absent from `a`: the
+/// structural delta a patch handles at minimum cost (the new entry is
+/// already in the filled pattern, so exactly the changed column is
+/// recomputed and nothing cascades).
+fn fill_envelope_entry(a: &Csc, sym: &SymbolicFill) -> Option<(usize, usize)> {
+    for j in 0..a.ncols() {
+        let (frows, _) = sym.filled.col(j);
+        let (arows, _) = a.col(j);
+        let mut ai = 0usize;
+        for &r in frows {
+            while ai < arows.len() && arows[ai] < r {
+                ai += 1;
+            }
+            if ai >= arows.len() || arows[ai] != r {
+                return Some((r, j));
+            }
+        }
+    }
+    None
+}
+
+/// Measure the symbolic block: AMD-permute the matrix (so the fixture
+/// matches what the solver's own pipeline analyzes), race serial vs
+/// parallel symbolic, then cold vs incremental on a fill-envelope delta.
+pub fn symbolic_report(spec: &BenchSpec) -> anyhow::Result<SymbolicReport> {
+    use crate::depend::{glu3, levelize};
+
+    let p = crate::order::amd::amd_order(&spec.a)?;
+    let a = spec.a.permute(p.as_scatter(), p.as_scatter());
+    let mut ws = FillWorkspace::new();
+
+    let serial = measure(spec.warmup, spec.iters, || {
+        let sym = symbolic_fill_with(&a, &mut ws).expect("serial symbolic");
+        let deps = glu3::detect(&sym.filled);
+        std::hint::black_box(levelize(&deps));
+    });
+
+    let threads = spec.thread_counts.clone();
+    let mut parallel_ms = Vec::with_capacity(threads.len());
+    for &t in &threads {
+        let pool = WorkerPool::new(t);
+        let par = measure(spec.warmup, spec.iters, || {
+            std::hint::black_box(
+                parallel_symbolic(&a, &pool, &mut ws).expect("parallel symbolic"),
+            );
+        });
+        parallel_ms.push(par.min * 1e3);
+    }
+
+    // The delta fixture: one entry inside the fill envelope. Any matrix
+    // worth benching has fill; refuse rather than silently bench a
+    // degenerate fixture.
+    let base = symbolic_fill_with(&a, &mut ws)?;
+    let (er, ec) = fill_envelope_entry(&a, &base)
+        .ok_or_else(|| anyhow::anyhow!("bench fixture has no fill-in"))?;
+    let a2 = gen::with_entry(&a, er, ec, -1e-3);
+    let budget = (a.ncols() / 4).max(4);
+    let changed = changed_columns(a.colptr(), a.rowidx(), &a2, budget)
+        .ok_or_else(|| anyhow::anyhow!("delta fixture exceeded the patch budget"))?;
+
+    let cold = measure(spec.warmup, spec.iters, || {
+        let sym = symbolic_fill_with(&a2, &mut ws).expect("cold symbolic");
+        let deps = glu3::detect(&sym.filled);
+        std::hint::black_box(levelize(&deps));
+    });
+    let mut recomputed = 0usize;
+    let incremental = measure(spec.warmup, spec.iters, || {
+        let patch = patch_symbolic(&base, &a2, &changed, &mut ws).expect("patch symbolic");
+        recomputed = patch.recomputed;
+    });
+
+    Ok(SymbolicReport {
+        serial_ms: serial.min * 1e3,
+        threads,
+        parallel_ms,
+        cold_ms: cold.min * 1e3,
+        incremental_ms: incremental.min * 1e3,
+        changed_columns: changed.len(),
+        recomputed_columns: recomputed,
+    })
+}
+
 /// The pool-vs-spawn head-to-head (same schedule, same arithmetic).
 #[derive(Debug, Clone)]
 pub struct SpawnBaseline {
@@ -310,6 +446,7 @@ pub struct BenchReport {
     pub refactor_loop: RefactorLoopReport,
     pub schedule: ScheduleReport,
     pub robustness: RobustnessReport,
+    pub symbolic: SymbolicReport,
 }
 
 /// Run the whole harness over `spec`.
@@ -386,6 +523,7 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
     let baseline = spawn_vs_pool(spec)?;
     let refactor_loop = refactor_loop(spec)?;
     let robustness = robustness_report()?;
+    let symbolic = symbolic_report(spec)?;
     let plan = plan.expect("at least one engine sampled");
     let schedule = schedule.expect("schedule engine sampled");
 
@@ -400,6 +538,7 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
         refactor_loop,
         schedule,
         robustness,
+        symbolic,
     })
 }
 
@@ -471,6 +610,7 @@ pub fn plan_report(solver: &GluSolver) -> PlanReport {
         modes_stream,
         build_ms: st.plan_ms,
         symbolic_ms: st.symbolic_ms,
+        fillin_ms: st.fillin_ms,
         detect_ms: st.detect_ms,
         levelize_ms: st.levelize_ms,
     }
@@ -565,13 +705,14 @@ pub(crate) fn json_str_array(xs: &[String]) -> String {
 
 impl BenchReport {
     /// Hand-rolled JSON (no serde in the offline vendored crate set).
-    /// Schema `glu3-bench-numeric-v5` (v2 added the `plan` block, v3 the
+    /// Schema `glu3-bench-numeric-v6` (v2 added the `plan` block, v3 the
     /// `refactor_loop` block, v4 the `schedule` block, v5 the
-    /// `robustness` block); validated by the CI smoke job.
+    /// `robustness` block, v6 the `symbolic` block and the plan block's
+    /// `fillin_ms`); validated by the CI smoke job.
     pub fn to_json(&self) -> String {
         let mut s = String::new();
         s.push_str("{\n");
-        s.push_str("  \"schema\": \"glu3-bench-numeric-v5\",\n");
+        s.push_str("  \"schema\": \"glu3-bench-numeric-v6\",\n");
         s.push_str(&format!("  \"matrix\": \"{}\",\n", json_str(&self.matrix)));
         s.push_str(&format!("  \"n\": {},\n", self.n));
         s.push_str(&format!("  \"nnz\": {},\n", self.nnz));
@@ -602,13 +743,14 @@ impl BenchReport {
         s.push_str(&format!(
             "  \"plan\": {{\"levels\": {}, \"mode_histogram\": {{\"small\": {}, \
              \"large\": {}, \"stream\": {}}}, \"build_ms\": {}, \"symbolic_ms\": {}, \
-             \"detect_ms\": {}, \"levelize_ms\": {}}},\n",
+             \"fillin_ms\": {}, \"detect_ms\": {}, \"levelize_ms\": {}}},\n",
             self.plan.levels,
             self.plan.modes_small,
             self.plan.modes_large,
             self.plan.modes_stream,
             json_num(self.plan.build_ms),
             json_num(self.plan.symbolic_ms),
+            json_num(self.plan.fillin_ms),
             json_num(self.plan.detect_ms),
             json_num(self.plan.levelize_ms)
         ));
@@ -646,7 +788,7 @@ impl BenchReport {
         s.push_str(&format!(
             "  \"robustness\": {{\"pivot_growth\": {}, \"condition_estimate\": {}, \
              \"perturbations\": {}, \"refine_iters\": {}, \"escalations\": {}, \
-             \"repairs\": {}, \"probe_residual\": {}}}\n",
+             \"repairs\": {}, \"probe_residual\": {}}},\n",
             json_num_sci(rb.pivot_growth),
             json_num_sci(rb.condition_estimate),
             rb.perturbations,
@@ -654,6 +796,23 @@ impl BenchReport {
             rb.escalations,
             rb.repairs,
             json_num_sci(rb.probe_residual)
+        ));
+        let sy = &self.symbolic;
+        let threads_u64: Vec<u64> = sy.threads.iter().map(|&t| t as u64).collect();
+        s.push_str(&format!(
+            "  \"symbolic\": {{\"serial_ms\": {}, \"threads\": {}, \
+             \"parallel_ms\": {}, \"speedup_parallel\": {}, \"cold_ms\": {}, \
+             \"incremental_ms\": {}, \"speedup_incremental\": {}, \
+             \"changed_columns\": {}, \"recomputed_columns\": {}}}\n",
+            json_num(sy.serial_ms),
+            json_u64_array(&threads_u64),
+            json_num_array(&sy.parallel_ms),
+            json_num(sy.speedup_parallel()),
+            json_num(sy.cold_ms),
+            json_num(sy.incremental_ms),
+            json_num(sy.speedup_incremental()),
+            sy.changed_columns,
+            sy.recomputed_columns
         ));
         s.push_str("}\n");
         s
@@ -666,14 +825,14 @@ impl BenchReport {
     }
 }
 
-/// Light structural validation of a `glu3-bench-numeric-v5` document:
+/// Light structural validation of a `glu3-bench-numeric-v6` document:
 /// required keys present (including the v2 `plan`, v3 `refactor_loop`,
-/// v4 `schedule`, and v5 `robustness` blocks), braces/brackets balanced,
-/// at least one result row. (CI additionally runs it through a real JSON
-/// parser.)
+/// v4 `schedule`, v5 `robustness`, and v6 `symbolic` blocks),
+/// braces/brackets balanced, at least one result row. (CI additionally
+/// runs it through a real JSON parser.)
 pub fn validate_json_schema(s: &str) -> anyhow::Result<()> {
     for key in [
-        "\"schema\": \"glu3-bench-numeric-v5\"",
+        "\"schema\": \"glu3-bench-numeric-v6\"",
         "\"matrix\"",
         "\"n\"",
         "\"nnz\"",
@@ -719,6 +878,16 @@ pub fn validate_json_schema(s: &str) -> anyhow::Result<()> {
         "\"escalations\"",
         "\"repairs\"",
         "\"probe_residual\"",
+        "\"symbolic\"",
+        "\"fillin_ms\"",
+        "\"serial_ms\"",
+        "\"parallel_ms\"",
+        "\"speedup_parallel\"",
+        "\"cold_ms\"",
+        "\"incremental_ms\"",
+        "\"speedup_incremental\"",
+        "\"changed_columns\"",
+        "\"recomputed_columns\"",
     ] {
         anyhow::ensure!(s.contains(key), "missing key {key}");
     }
@@ -772,8 +941,21 @@ mod tests {
             modes_stream: 1,
             build_ms: 0.25,
             symbolic_ms: 0.5,
+            fillin_ms: 0.3125,
             detect_ms: 0.125,
             levelize_ms: 0.0625,
+        }
+    }
+
+    fn toy_symbolic() -> SymbolicReport {
+        SymbolicReport {
+            serial_ms: 8.0,
+            threads: vec![1, 2, 4],
+            parallel_ms: vec![9.0, 5.0, 4.0],
+            cold_ms: 10.0,
+            incremental_ms: 0.5,
+            changed_columns: 1,
+            recomputed_columns: 1,
         }
     }
 
@@ -842,6 +1024,7 @@ mod tests {
             refactor_loop: toy_refactor_loop(),
             schedule: toy_schedule(),
             robustness: toy_robustness(),
+            symbolic: toy_symbolic(),
         };
         let json = report.to_json();
         validate_json_schema(&json).unwrap();
@@ -870,6 +1053,42 @@ mod tests {
         assert!(json.contains("\"escalations\": 0"));
         assert!(json.contains("\"repairs\": 1"));
         assert!(json.contains("\"probe_residual\": 1e-12"));
+        // the v6 symbolic block: thread sweep arrays + both speedups
+        assert!(json.contains("\"fillin_ms\": 0.312500"));
+        assert!(json.contains("\"serial_ms\": 8.000000"));
+        assert!(json.contains("\"threads\": [1, 2, 4]"));
+        assert!(json.contains("\"parallel_ms\": [9.000000, 5.000000, 4.000000]"));
+        assert!(json.contains("\"speedup_parallel\": 2.000000"));
+        assert!(json.contains("\"speedup_incremental\": 20.000000"));
+        assert!(json.contains("\"changed_columns\": 1"));
+        assert!(json.contains("\"recomputed_columns\": 1"));
+    }
+
+    #[test]
+    fn symbolic_report_speedups() {
+        let sy = toy_symbolic();
+        // the parallel speedup is taken at the *largest* thread count —
+        // 1-thread overhead (9ms vs 8ms serial) must not hide the win
+        assert!((sy.speedup_parallel() - 2.0).abs() < 1e-12);
+        assert!((sy.speedup_incremental() - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn symbolic_report_measures_both_fast_paths() {
+        let report = symbolic_report(&BenchSpec::smoke()).unwrap();
+        assert_eq!(report.threads, vec![1, 2]);
+        assert_eq!(report.parallel_ms.len(), 2);
+        assert!(report.serial_ms > 0.0 && report.cold_ms > 0.0);
+        // the fill-envelope delta touches one column and cannot cascade
+        assert_eq!(report.changed_columns, 1);
+        assert_eq!(report.recomputed_columns, 1);
+        // patching one of 900 columns must beat re-analyzing all of them
+        assert!(
+            report.speedup_incremental() > 1.0,
+            "incremental {} ms vs cold {} ms",
+            report.incremental_ms,
+            report.cold_ms
+        );
     }
 
     #[test]
@@ -918,6 +1137,7 @@ mod tests {
             refactor_loop: toy_refactor_loop(),
             schedule: toy_schedule(),
             robustness: toy_robustness(),
+            symbolic: toy_symbolic(),
         };
         let json = report.to_json();
         validate_json_schema(&json).unwrap();
@@ -926,7 +1146,7 @@ mod tests {
 
     #[test]
     fn validator_rejects_truncation() {
-        let report_json = "{\n  \"schema\": \"glu3-bench-numeric-v5\",\n  \"results\": [";
+        let report_json = "{\n  \"schema\": \"glu3-bench-numeric-v6\",\n  \"results\": [";
         assert!(validate_json_schema(report_json).is_err());
     }
 
@@ -952,8 +1172,10 @@ mod tests {
         let p = plan_report(&solver);
         assert!(p.levels > 1);
         assert_eq!(p.modes_small + p.modes_large + p.modes_stream, p.levels);
-        for v in [p.build_ms, p.symbolic_ms, p.detect_ms, p.levelize_ms] {
+        for v in [p.build_ms, p.symbolic_ms, p.fillin_ms, p.detect_ms, p.levelize_ms] {
             assert!(v.is_finite() && v >= 0.0);
         }
+        // v6 semantics: symbolic_ms is the whole phase, fillin a component
+        assert!((p.symbolic_ms - (p.fillin_ms + p.detect_ms + p.levelize_ms)).abs() < 1e-9);
     }
 }

@@ -17,6 +17,16 @@
 //!   — and caches it (two threads racing on the same cold pattern may both
 //!   factor; the later insert wins, so counters can report a few extra
 //!   misses under contention but never a stale answer);
+//! - a miss whose pattern is a structural *near-miss* of an already-cached
+//!   entry (same `n`, nnz within 1/8, only a handful of columns differ)
+//!   skips the cold pipeline entirely: the cached symbolic state is
+//!   snapshotted and patched incrementally ([`GluSolver::factor_delta`]
+//!   over [`crate::symbolic::delta`]), counted in [`PoolStats::patched`];
+//!   any patch failure falls back to the cold pipeline, so near-miss
+//!   detection can only save work, never lose a request;
+//! - cold misses borrow one pool-owned [`FillWorkspace`], so back-to-back
+//!   misses reuse the symbolic reach/marker buffers instead of
+//!   reallocating them per pattern;
 //! - the cache is sharded (`Mutex` per shard, share the pool itself behind
 //!   an `Arc` or scoped-thread borrow) so concurrent sessions with
 //!   different patterns proceed in parallel, with per-shard LRU eviction;
@@ -46,8 +56,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::Instant;
 
-use crate::glu::{GluOptions, GluSolver, GluStats};
+use crate::glu::{Detection, GluOptions, GluSolver, GluStats, SymbolicSnapshot};
 use crate::sparse::Csc;
+use crate::symbolic::{changed_columns, FillWorkspace};
 use crate::util::stats::LatencyRecorder;
 
 /// Identity of a sparsity pattern: dimensions, nnz, and a structural hash.
@@ -127,8 +138,12 @@ pub struct PoolStats {
     pub misses: u64,
     /// Entries dropped by LRU pressure.
     pub evictions: u64,
-    /// Full factorizations performed.
+    /// Cold full factorizations performed (misses that found no usable
+    /// structural near-miss; `misses == factors + patched` absent errors).
     pub factors: u64,
+    /// Misses served by incrementally patching a cached near-miss pattern
+    /// ([`GluSolver::factor_delta`]) instead of the cold pipeline.
+    pub patched: u64,
     /// Value-only refactorizations performed.
     pub refactors: u64,
     /// Right-hand sides solved.
@@ -177,11 +192,16 @@ pub struct SolverPool {
     opts: GluOptions,
     shards: Vec<Mutex<Shard>>,
     capacity_per_shard: usize,
+    /// Symbolic scratch lent to every cold miss (taken out of the mutex for
+    /// the factorization itself, so concurrent misses never serialize on it
+    /// — a racing miss simply allocates fresh buffers).
+    fill_ws: Mutex<FillWorkspace>,
     clock: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
     factors: AtomicU64,
+    patched: AtomicU64,
     refactors: AtomicU64,
     solves: AtomicU64,
 }
@@ -237,7 +257,7 @@ impl Drop for PoolGuard<'_> {
     }
 }
 
-fn lock_shard(m: &Mutex<Shard>) -> MutexGuard<'_, Shard> {
+fn lock_shard<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
@@ -255,11 +275,13 @@ impl SolverPool {
             opts,
             shards: (0..shards).map(|_| Mutex::new(Shard::default())).collect(),
             capacity_per_shard,
+            fill_ws: Mutex::new(FillWorkspace::new()),
             clock: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             factors: AtomicU64::new(0),
+            patched: AtomicU64::new(0),
             refactors: AtomicU64::new(0),
             solves: AtomicU64::new(0),
         }
@@ -328,10 +350,10 @@ impl SolverPool {
             }
         } // release the shard lock for the expensive factorization
 
-        // Miss: pay the full pipeline outside the lock, then cache.
+        // Miss: pay the full pipeline (or a near-miss patch) outside the
+        // lock, then cache.
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let solver = GluSolver::factor(a, &self.opts)?;
-        self.factors.fetch_add(1, Ordering::Relaxed);
+        let solver = self.factor_miss(&key, a)?;
 
         let mut shard = lock_shard(&self.shards[si]);
         let idx = if let Some(i) = Self::find(&shard, &key, a) {
@@ -370,6 +392,61 @@ impl SolverPool {
             outcome: Checkout::Factored,
             start,
         })
+    }
+
+    /// Scan the cache for a structural near-miss of `a`: an entry with the
+    /// same dimension, nnz within 1/8, and at most `max(n/4, 4)` columns
+    /// whose raw structure differs. Returns the cached symbolic snapshot
+    /// plus the changed original-column list. Holds one shard lock at a
+    /// time; the snapshot clone is the only work done under it.
+    fn find_near_miss(&self, key: &PatternKey, a: &Csc) -> Option<(SymbolicSnapshot, Vec<u32>)> {
+        if self.opts.detection != Detection::Glu3 {
+            return None; // the patch path streams GLU3.0 detection only
+        }
+        let budget = (key.n / 4).max(4);
+        for m in &self.shards {
+            let shard = lock_shard(m);
+            for e in &shard.entries {
+                // Same hash means same pattern (or a collision) — either way
+                // the exact-match path already had its chance; and a pattern
+                // of a different dimension can never be a delta of ours.
+                if e.key.hash == key.hash || e.key.n != key.n {
+                    continue;
+                }
+                if e.key.nnz.abs_diff(key.nnz) * 8 > key.nnz.max(1) {
+                    continue;
+                }
+                if let Some(changed) = changed_columns(&e.colptr, &e.rowidx, a, budget) {
+                    if !changed.is_empty() {
+                        return Some((e.solver.symbolic_snapshot(), changed));
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Produce a solver for a missed pattern, with no shard lock held:
+    /// incremental patch off a cached structural near-miss when one fits
+    /// the budget, cold pipeline otherwise. Cold runs borrow the pool's
+    /// [`FillWorkspace`]; a patch failure (e.g. the delta broke the matched
+    /// diagonal) silently falls back to cold.
+    fn factor_miss(&self, key: &PatternKey, a: &Csc) -> anyhow::Result<GluSolver> {
+        if let Some((snap, changed)) = self.find_near_miss(key, a) {
+            let mut fws = std::mem::take(&mut *lock_shard(&self.fill_ws));
+            let patched = GluSolver::factor_delta(a, &self.opts, &snap, &changed, &mut fws);
+            *lock_shard(&self.fill_ws) = fws;
+            if let Ok(solver) = patched {
+                self.patched.fetch_add(1, Ordering::Relaxed);
+                return Ok(solver);
+            }
+        }
+        let mut fws = std::mem::take(&mut *lock_shard(&self.fill_ws));
+        let solver = GluSolver::factor_with_workspace(a, &self.opts, &mut fws);
+        *lock_shard(&self.fill_ws) = fws;
+        let solver = solver?;
+        self.factors.fetch_add(1, Ordering::Relaxed);
+        Ok(solver)
     }
 
     fn tick(&self) -> u64 {
@@ -456,6 +533,7 @@ impl SolverPool {
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             factors: self.factors.load(Ordering::Relaxed),
+            patched: self.patched.load(Ordering::Relaxed),
             refactors: self.refactors.load(Ordering::Relaxed),
             solves: self.solves.load(Ordering::Relaxed),
             entries,
@@ -598,6 +676,61 @@ mod tests {
         let b = vec![1.0; 120];
         let x = pool.solve(&a, &b).unwrap();
         assert!(residual(&a, &x, &b) < 1e-7);
+    }
+
+    #[test]
+    fn near_miss_takes_the_incremental_patch() {
+        let a = gen::grid2d(12, 12, 5);
+        let n = a.nrows();
+        let pool = SolverPool::new(GluOptions::default());
+        let b = vec![1.0; n];
+
+        let x = pool.solve(&a, &b).unwrap();
+        assert!(residual(&a, &x, &b) < 1e-7);
+
+        // One extra entry: a structural near-miss of the cached pattern.
+        // It misses the exact-match lookup but fits the patch budget.
+        let a2 = gen::with_entry(&a, 7, 2, -1e-3);
+        assert!(a2.nnz() == a.nnz() + 1);
+        let x2 = pool.solve(&a2, &b).unwrap();
+        assert!(residual(&a2, &x2, &b) < 1e-7);
+
+        let st = pool.stats();
+        assert_eq!(st.misses, 2);
+        assert_eq!(st.patched, 1, "second pattern must patch, not factor");
+        assert_eq!(st.factors, 1);
+        assert_eq!(st.entries, 2);
+
+        // the patched entry reports zero symbolic runs and one patch
+        let es = pool.entry_stats();
+        let patched = es
+            .iter()
+            .find(|(k, _)| k.nnz == a2.nnz())
+            .expect("patched entry cached");
+        assert_eq!(patched.1.symbolic_runs, 0);
+        assert_eq!(patched.1.incremental_patches, 1);
+
+        // and it is a first-class cache entry: exact re-requests hit it
+        let x3 = pool.solve(&a2, &b).unwrap();
+        assert!(residual(&a2, &x3, &b) < 1e-7);
+        assert_eq!(pool.stats().hits, 1);
+    }
+
+    #[test]
+    fn unrelated_patterns_stay_on_the_cold_path() {
+        // Different-seed netlists share n and a similar nnz but differ in
+        // far more columns than the patch budget: the near-miss scan must
+        // reject them and the cold path must serve both.
+        let a = gen::netlist(96, 5, 8, 0.1, 1, 0.2, 11);
+        let c = gen::netlist(96, 5, 8, 0.1, 1, 0.2, 12);
+        let pool = SolverPool::new(GluOptions::default());
+        let b = vec![1.0; 96];
+        pool.solve(&a, &b).unwrap();
+        pool.solve(&c, &b).unwrap();
+        let st = pool.stats();
+        assert_eq!(st.misses, 2);
+        assert_eq!(st.factors, 2);
+        assert_eq!(st.patched, 0);
     }
 
     #[test]

@@ -29,6 +29,21 @@ impl Levels {
     pub fn max_level_size(&self) -> usize {
         self.levels.iter().map(|l| l.len()).max().unwrap_or(0)
     }
+
+    /// Group a per-column level assignment into the level lists — the
+    /// shared back half of [`levelize`], the streaming detector
+    /// ([`crate::depend::glu3::StreamingDetect`]), and the incremental
+    /// symbolic patcher. Ascending iteration keeps every level's column
+    /// list sorted, so the result is bit-identical no matter which front
+    /// end produced `level_of`.
+    pub fn from_level_of(level_of: Vec<u32>) -> Levels {
+        let nlevels = level_of.iter().map(|&l| l + 1).max().unwrap_or(0);
+        let mut levels: Vec<Vec<u32>> = vec![Vec::new(); nlevels as usize];
+        for (k, &l) in level_of.iter().enumerate() {
+            levels[l as usize].push(k as u32);
+        }
+        Levels { level_of, levels }
+    }
 }
 
 /// Compute levels from a dependency graph. Single forward pass: every
@@ -37,20 +52,14 @@ impl Levels {
 pub fn levelize(deps: &DepGraph) -> Levels {
     let n = deps.n();
     let mut level_of = vec![0u32; n];
-    let mut nlevels = 0u32;
     for k in 0..n {
         let mut lvl = 0u32;
         for &d in deps.deps_of(k) {
             lvl = lvl.max(level_of[d as usize] + 1);
         }
         level_of[k] = lvl;
-        nlevels = nlevels.max(lvl + 1);
     }
-    let mut levels: Vec<Vec<u32>> = vec![Vec::new(); nlevels as usize];
-    for (k, &l) in level_of.iter().enumerate() {
-        levels[l as usize].push(k as u32);
-    }
-    Levels { level_of, levels }
+    Levels::from_level_of(level_of)
 }
 
 /// Validate that a level schedule is *hazard-free* for the hybrid

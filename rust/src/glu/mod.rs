@@ -18,6 +18,14 @@
 //! ([`GluSolver::refactor`]) — the Newton–Raphson pattern of SPICE-class
 //! circuit simulation, where the GPU kernel "might be repeated many times"
 //! (paper §III).
+//!
+//! The once-per-pattern symbolic cost itself has two fast paths: on a
+//! multi-threaded engine the fill discovery runs wave-parallel on the
+//! worker pool with detection + levelization fused into the assembly
+//! sweep ([`crate::symbolic::parfill`]), and a structural *near-miss* of
+//! an already-analyzed pattern can be patched incrementally
+//! ([`GluSolver::factor_delta`] over [`crate::symbolic::delta`]) instead
+//! of recomputed.
 
 pub mod profile;
 pub mod solver;
@@ -25,4 +33,5 @@ pub mod solver;
 pub use profile::{amortization_profile, parallelism_profile, AmortizationProfile, LevelProfile};
 pub use solver::{
     Detection, ExecBackend, GluOptions, GluSolver, GluStats, NumericEngine, RobustnessStats,
+    SymbolicSnapshot,
 };

@@ -18,6 +18,8 @@
 //! dispatches to a backend:
 //!
 //! ```text
+//!                 ┌── wave-parallel & streamed ([`symbolic::parfill`]);
+//!                 │   near-miss patterns patch instead ([`symbolic::delta`])
 //! order → scale → symbolic → detect → levelize → plan ──► execute
 //!                                                  │
 //!                              ┌───────────────────┼──────────────────┐
@@ -89,6 +91,48 @@
 //! every linear solve through a pool, so a warm pool carries symbolic
 //! state across whole simulations (e.g. Monte-Carlo corners of one
 //! circuit).
+//!
+//! ## Cold starts and pattern deltas
+//!
+//! The hit path above amortizes *numeric* work; this section is about the
+//! miss path — the serial symbolic pipeline a cold pattern pays before
+//! the first refactor can ever run. Two mechanisms attack it:
+//!
+//! **Wave-parallel symbolic** ([`symbolic::parallel_symbolic`]): the
+//! column elimination tree is computed first (cheap,
+//! [`symbolic::etree::col_etree`]), its node heights partition columns into
+//! *waves* of provably independent reach computations, and each wave's
+//! fill discovery fans out across the same spawn-once
+//! [`numeric::pool::WorkerPool`] the numeric engines park between runs.
+//! Finished columns stream straight into the fused relaxed-detection +
+//! levelization pass ([`depend::glu3::StreamingDetect`]), so dependency
+//! analysis overlaps fill discovery instead of waiting for it. The
+//! result — fill pattern, dependency graph, levels — is **bit-identical
+//! to the serial pass at any thread count** (the symbolic tier of
+//! `rust/tests/property.rs` holds that matrix), so every downstream
+//! consumer is oblivious to how the pattern was produced.
+//!
+//! **Incremental patching** ([`symbolic::patch_symbolic`]): a transient
+//! step that fires a switch, or a Monte-Carlo corner that adds one
+//! device, hands the pool a pattern that is *almost* a cached one.
+//! [`symbolic::changed_columns`] diffs the new matrix against a cached
+//! pattern under a changed-column budget; if the delta is small, the
+//! exact taint set (changed columns plus everything their new fill can
+//! reach) is recomputed against the frozen prefix and the rest of the
+//! symbolic state — fill, dependency edges, levels, and the
+//! [`plan::FactorPlan`]'s per-level annotations
+//! ([`plan::FactorPlan::from_levels_delta`]) — is patched in place. The
+//! patched state is bit-identical to a fresh cold run on the new matrix.
+//! [`coordinator::SolverPool`] wires this in on every miss: a near-miss
+//! scan over cached entries (same `n`, nnz within ~12%, budget
+//! `(n/4).max(4)`) routes small deltas through
+//! [`glu::GluSolver::factor_delta`], falling back to the cold path —
+//! with a pool-owned reusable fill workspace — when no candidate
+//! qualifies. [`coordinator::PoolStats::patched`] counts the saved cold
+//! starts, [`glu::GluStats`] reports `fillin_ms` and the
+//! incremental/parallel run counters, and `glu3 bench` records cold vs
+//! incremental symbolic wall-clock in the `symbolic` block of
+//! `BENCH_numeric.json`.
 //!
 //! ## Choosing a numeric engine
 //!

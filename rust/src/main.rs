@@ -208,9 +208,22 @@ fn cmd_factor(flags: &HashMap<String, String>, also_solve: bool) -> anyhow::Resu
         st.max_level_size.to_string(),
     ]);
     t.row(vec!["preprocess (ms)".to_string(), ms(st.preprocess_ms)]);
-    t.row(vec!["symbolic (ms)".to_string(), ms(st.symbolic_ms)]);
-    t.row(vec!["detect (ms)".to_string(), ms(st.detect_ms)]);
-    t.row(vec!["levelize (ms)".to_string(), ms(st.levelize_ms)]);
+    // The symbolic stage table: total plus its three components (fill
+    // discovery, dependency detection, levelization) and how it ran.
+    t.row(vec!["symbolic total (ms)".to_string(), ms(st.symbolic_ms)]);
+    t.row(vec!["  fill-in (ms)".to_string(), ms(st.fillin_ms)]);
+    t.row(vec!["  detect (ms)".to_string(), ms(st.detect_ms)]);
+    t.row(vec!["  levelize (ms)".to_string(), ms(st.levelize_ms)]);
+    t.row(vec![
+        "symbolic path".to_string(),
+        if st.incremental_patches > 0 {
+            "incremental patch".to_string()
+        } else if st.symbolic_parallel_runs > 0 {
+            "wave-parallel".to_string()
+        } else {
+            "serial".to_string()
+        },
+    ]);
     t.row(vec!["plan build (ms)".to_string(), ms(st.plan_ms)]);
     t.row(vec!["numeric (ms)".to_string(), ms(st.numeric_ms)]);
     t.row(vec![
@@ -567,16 +580,37 @@ fn cmd_bench(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     );
     let p = &report.plan;
     println!(
-        "plan: {} levels (A/B/C {}/{}/{}), build {} ms; preprocessing: symbolic {} ms, \
-         detect {} ms, levelize {} ms",
+        "plan: {} levels (A/B/C {}/{}/{}), build {} ms; symbolic {} ms \
+         (fill {} + detect {} + levelize {})",
         p.levels,
         p.modes_small,
         p.modes_large,
         p.modes_stream,
         ms(p.build_ms),
         ms(p.symbolic_ms),
+        ms(p.fillin_ms),
         ms(p.detect_ms),
         ms(p.levelize_ms)
+    );
+    let sy = &report.symbolic;
+    let par_list: Vec<String> = sy
+        .threads
+        .iter()
+        .zip(&sy.parallel_ms)
+        .map(|(t, &v)| format!("{} ms @{}t", ms(v), t))
+        .collect();
+    println!(
+        "symbolic cold-start: serial {} ms vs parallel {} ({} speedup); \
+         incremental patch {} ms vs cold {} ms ({} speedup, \
+         {} changed / {} recomputed column(s))",
+        ms(sy.serial_ms),
+        par_list.join(", "),
+        ratio(sy.speedup_parallel()),
+        ms(sy.incremental_ms),
+        ms(sy.cold_ms),
+        ratio(sy.speedup_incremental()),
+        sy.changed_columns,
+        sy.recomputed_columns
     );
     let rl = &report.refactor_loop;
     println!(

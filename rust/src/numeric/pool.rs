@@ -87,6 +87,45 @@ pub(crate) struct SharedPtr(pub *mut f64);
 unsafe impl Send for SharedPtr {}
 unsafe impl Sync for SharedPtr {}
 
+/// Shared raw view over a slice of `T` slots, for pool jobs where each slot
+/// is written by exactly one worker and read only after a barrier published
+/// the write — the generic analogue of [`SharedPtr`] the *symbolic* jobs
+/// need (per-column pattern slots, per-worker scratch slots; see
+/// [`crate::symbolic::parfill`]).
+pub(crate) struct SharedSlots<T>(*mut T, usize);
+unsafe impl<T: Send> Send for SharedSlots<T> {}
+unsafe impl<T: Send> Sync for SharedSlots<T> {}
+
+impl<T> SharedSlots<T> {
+    pub(crate) fn new(slots: &mut [T]) -> Self {
+        SharedSlots(slots.as_mut_ptr(), slots.len())
+    }
+
+    /// Shared read of slot `i`.
+    ///
+    /// # Safety
+    /// The caller's schedule must guarantee slot `i` is not being written
+    /// concurrently and that any prior write was published by a barrier.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn get(&self, i: usize) -> &T {
+        debug_assert!(i < self.1);
+        unsafe { &*self.0.add(i) }
+    }
+
+    /// Exclusive write access to slot `i`.
+    ///
+    /// # Safety
+    /// The caller's schedule must guarantee this worker is the only one
+    /// touching slot `i` until the next barrier.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn get_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.1);
+        unsafe { &mut *self.0.add(i) }
+    }
+}
+
 /// Sense-reversing spin-then-yield barrier for `total` participants.
 ///
 /// `wait` returns `true` on a normal rendezvous and `false` once the

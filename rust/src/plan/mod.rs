@@ -354,6 +354,9 @@ struct PlanInner {
     /// MAC element commits per factorization that the ownership/chain
     /// strategies perform with plain stores instead of CAS loops.
     atomic_commits_avoided: u64,
+    /// Levels whose ownership analysis was transferred from a base plan
+    /// ([`FactorPlan::from_levels_delta`]; 0 for cold builds).
+    reused_levels: usize,
     /// The pattern-time [`ScatterMap`], built lazily on first numeric use
     /// (only the indexed right-looking engines consume it) and cached with
     /// the plan — a pooled solver therefore never rebuilds it on a
@@ -405,6 +408,35 @@ impl FactorPlan {
         levels: Levels,
         policy: &Policy,
         device: &DeviceConfig,
+    ) -> FactorPlan {
+        FactorPlan::build_plan_impl(sym, levels, policy, device, None)
+    }
+
+    /// [`FactorPlan::from_levels`] against a cached base plan (the
+    /// incremental-patch path): a level whose column list and per-column
+    /// pattern data (`urow`, work, global task ids) are unchanged from the
+    /// base reuses the base's ownership decision and cloned destination
+    /// groups instead of re-sorting its MAC tasks. The result is identical
+    /// to `from_levels` on the same inputs (the reuse conditions pin every
+    /// input of the per-level computation); [`FactorPlan::reused_levels`]
+    /// reports how much was skipped.
+    pub fn from_levels_delta(
+        sym: &SymbolicFill,
+        levels: Levels,
+        policy: &Policy,
+        device: &DeviceConfig,
+        base: &FactorPlan,
+    ) -> FactorPlan {
+        FactorPlan::build_plan_impl(sym, levels, policy, device, Some(base))
+    }
+
+    /// Shared construction; `base` enables the per-level reuse fast path.
+    fn build_plan_impl(
+        sym: &SymbolicFill,
+        levels: Levels,
+        policy: &Policy,
+        device: &DeviceConfig,
+        base: Option<&FactorPlan>,
     ) -> FactorPlan {
         let n = sym.filled.ncols();
         let urow = upper_rows(sym);
@@ -508,18 +540,69 @@ impl FactorPlan {
                 })
                 .sum()
         };
+        // Incremental reuse: a level transfers the base plan's ownership
+        // decision (and its materialized groups) verbatim when its column
+        // list and every member column's `urow` slice, work description,
+        // and *global* task id are unchanged — exactly the inputs of
+        // `dest_task_bounds` + `ownership_wins`. Task ids are prefix sums
+        // over all earlier columns, so a structural change shifts them for
+        // every later column and reuse stops there.
+        let base_inner = base.map(|b| b.inner.as_ref());
+        let base_task_base: Vec<u32> = base_inner.map_or_else(Vec::new, |b| {
+            let mut acc = 0u32;
+            b.urow
+                .iter()
+                .map(|u| {
+                    let t = acc;
+                    acc += u.len() as u32;
+                    t
+                })
+                .collect()
+        });
+        let level_reusable = |index: usize, cols: &[u32]| -> Option<&LevelPlan> {
+            let b = base_inner?;
+            let base_lp = b.level_plans.get(index)?;
+            if !matches!(
+                base_lp.assignment,
+                CpuAssignment::SubcolumnSlices | CpuAssignment::OwnedDestinations
+            ) || b.levels.levels.get(index).map(Vec::as_slice) != Some(cols)
+            {
+                return None;
+            }
+            cols.iter()
+                .all(|&j| {
+                    let ju = j as usize;
+                    urow[ju] == b.urow[ju]
+                        && col_work[ju].l_len == b.col_work[ju].l_len
+                        && col_work[ju].n_subcols == b.col_work[ju].n_subcols
+                        && task_base[ju] == base_task_base[ju]
+                })
+                .then_some(base_lp)
+        };
+        let mut reused_levels = 0usize;
         let mut dest_groups: Vec<DestGroups> = vec![DestGroups::default(); level_plans.len()];
         let mut atomic_commits_avoided = 0u64;
         for lp in &mut level_plans {
             let cols = &levels.levels[lp.index];
             match lp.assignment {
                 CpuAssignment::SubcolumnSlices => {
-                    let (pairs, bounds, max_flops, total_flops) =
-                        dest_task_bounds(cols, &urow, &task_base, &col_work);
-                    if ownership_wins(max_flops, total_flops) {
-                        lp.assignment = CpuAssignment::OwnedDestinations;
-                        atomic_commits_avoided += mac_elems(cols);
-                        dest_groups[lp.index] = build_dest_groups(&pairs, bounds);
+                    if let Some(base_lp) = level_reusable(lp.index, cols) {
+                        lp.assignment = base_lp.assignment;
+                        if base_lp.assignment == CpuAssignment::OwnedDestinations {
+                            atomic_commits_avoided += mac_elems(cols);
+                            dest_groups[lp.index] =
+                                base_inner.expect("reusable implies base").dest_groups[lp.index]
+                                    .clone();
+                        }
+                        reused_levels += 1;
+                    } else {
+                        let (pairs, bounds, max_flops, total_flops) =
+                            dest_task_bounds(cols, &urow, &task_base, &col_work);
+                        if ownership_wins(max_flops, total_flops) {
+                            lp.assignment = CpuAssignment::OwnedDestinations;
+                            atomic_commits_avoided += mac_elems(cols);
+                            dest_groups[lp.index] = build_dest_groups(&pairs, bounds);
+                        }
                     }
                 }
                 CpuAssignment::ChainBatch => atomic_commits_avoided += mac_elems(cols),
@@ -561,6 +644,7 @@ impl FactorPlan {
                 urow,
                 dest_groups,
                 atomic_commits_avoided,
+                reused_levels,
                 scatter: OnceLock::new(),
                 scatter_builds: AtomicUsize::new(0),
                 schedule: OnceLock::new(),
@@ -666,6 +750,12 @@ impl FactorPlan {
     /// batching.
     pub fn atomic_commits_avoided(&self) -> u64 {
         self.inner.atomic_commits_avoided
+    }
+
+    /// Levels whose ownership analysis was transferred from a base plan by
+    /// [`FactorPlan::from_levels_delta`] — 0 for cold builds.
+    pub fn reused_levels(&self) -> usize {
+        self.inner.reused_levels
     }
 
     /// The triangular-solve row schedules for this pattern, built on first
@@ -1068,5 +1158,45 @@ mod tests {
         // same backing allocation — cloning a cached plan is free
         assert!(std::ptr::eq(plan.urow(), clone.urow()));
         assert!(std::ptr::eq(plan.levels(), clone.levels()));
+    }
+
+    fn assert_plans_equal(a: &FactorPlan, b: &FactorPlan) {
+        assert_eq!(a.level_plans(), b.level_plans());
+        assert_eq!(a.cpu_steps(), b.cpu_steps());
+        assert_eq!(a.atomic_commits_avoided(), b.atomic_commits_avoided());
+        assert_eq!(a.num_levels(), b.num_levels());
+        for lvl in 0..a.num_levels() {
+            assert_eq!(a.dest_groups(lvl).tasks, b.dest_groups(lvl).tasks);
+            assert_eq!(a.dest_groups(lvl).group_ptr, b.dest_groups(lvl).group_ptr);
+        }
+    }
+
+    /// `from_levels_delta` is identical to a cold `from_levels` build no
+    /// matter the base — full reuse against an identical base, zero reuse
+    /// against an unrelated one, bit-identical annotations either way.
+    #[test]
+    fn delta_build_matches_cold_build() {
+        let policy = Policy::glu3();
+        let d = DeviceConfig::titan_x();
+        let sym = amd_grid(12, 12, 3);
+        let deps = glu3::detect(&sym.filled);
+        let levels = crate::depend::levelize(&deps);
+        let cold = FactorPlan::from_levels(&sym, levels.clone(), &policy, &d);
+        assert_eq!(cold.reused_levels(), 0);
+
+        let patched = FactorPlan::from_levels_delta(&sym, levels.clone(), &policy, &d, &cold);
+        assert_plans_equal(&cold, &patched);
+        assert!(patched.reused_levels() > 0, "identical base must reuse");
+
+        let other_sym = amd_grid(9, 7, 1);
+        let odeps = glu3::detect(&other_sym.filled);
+        let obase = FactorPlan::from_levels(
+            &other_sym,
+            crate::depend::levelize(&odeps),
+            &policy,
+            &d,
+        );
+        let cross = FactorPlan::from_levels_delta(&sym, levels, &policy, &d, &obase);
+        assert_plans_equal(&cold, &cross);
     }
 }

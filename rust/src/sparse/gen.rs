@@ -210,6 +210,25 @@ pub fn restamp_columns(a: &Csc, rng: &mut Rng) -> Csc {
     m
 }
 
+/// One-entry structural delta: `a` plus a single `(row, col)` stamp of
+/// value `g` — the pattern-delta fixture for the incremental-symbolic path
+/// (a device added between two existing nodes; the Jacobian gains one
+/// coupling entry). If `(row, col)` is already structural, the value is
+/// merged and the pattern is unchanged — callers wanting a guaranteed
+/// structural change should pick an absent coordinate.
+pub fn with_entry(a: &Csc, row: usize, col: usize, g: f64) -> Csc {
+    assert!(row < a.nrows() && col < a.ncols());
+    let mut coo = Coo::new(a.nrows(), a.ncols());
+    for c in 0..a.ncols() {
+        let (rows, vals) = a.col(c);
+        for (&r, &v) in rows.iter().zip(vals) {
+            coo.push(r, c, v);
+        }
+    }
+    coo.push(row, col, g);
+    coo.to_csc()
+}
+
 // ---------------------------------------------------------------------------
 // Adversarial restamps — the numeric-robustness-ladder test fixtures.
 //
@@ -701,6 +720,25 @@ mod tests {
             let a = generate(&m.spec());
             check_circuit_matrix(&a);
         }
+    }
+
+    #[test]
+    fn with_entry_adds_exactly_one_structural_entry() {
+        let a = grid2d(6, 6, 2);
+        assert_eq!(a.get(17, 3), 0.0, "fixture needs an absent coordinate");
+        let b = with_entry(&a, 17, 3, -0.25);
+        assert_eq!(b.nnz(), a.nnz() + 1);
+        assert_eq!(b.get(17, 3), -0.25);
+        for c in 0..a.ncols() {
+            let (rows, vals) = a.col(c);
+            for (&r, &v) in rows.iter().zip(vals) {
+                assert_eq!(b.get(r, c), v, "({r},{c}) must be untouched");
+            }
+        }
+        // merging onto an existing coordinate keeps the pattern
+        let m = with_entry(&a, 0, 0, 1.0);
+        assert_eq!(m.nnz(), a.nnz());
+        assert_eq!(m.get(0, 0), a.get(0, 0) + 1.0);
     }
 
     #[test]

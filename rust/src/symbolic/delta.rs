@@ -1,0 +1,357 @@
+//! Incremental symbolic patching — the near-miss half of the symbolic
+//! overhaul.
+//!
+//! Circuit simulators re-factor long sequences of matrices whose *structure*
+//! drifts slowly (a device model switching on, a coupling element added)
+//! while values change every step. A structural near-miss in the
+//! [`crate::coordinator::SolverPool`] used to pay the full cold pipeline;
+//! here it pays a **structural diff** plus a patch proportional to the part
+//! of the pattern the diff actually perturbs.
+//!
+//! The taint rule is exact, not heuristic. Column `j`'s fill DFS starts from
+//! `struct(A(:,j))` and traverses the L patterns of exactly the columns that
+//! appear as U-rows (`< j`) of its *filled* column. Ascending over `j`:
+//!
+//! - if `struct(A(:,j))` is unchanged **and** no old U-row `v` of `j` has a
+//!   changed L pattern (`l_changed[v]`), the DFS replays move-for-move —
+//!   column `j`'s pattern is copied from the base (values re-merged from the
+//!   new `A`);
+//! - otherwise column `j` is recomputed with the serial DFS against the
+//!   *new* lower patterns, and `l_changed[j]` records whether its L part
+//!   differs from the base, propagating the taint exactly as far as it
+//!   reaches and no further.
+//!
+//! Every finalized column streams through [`StreamingDetect`], so the
+//! dependency graph and level schedule come out of the same sweep —
+//! bit-identical to a from-scratch `symbolic_fill` + `detect` + `levelize`
+//! on the new matrix (property-tested in `tests/property.rs`).
+
+use super::fillin::{ensure_factorable, FillWorkspace, SymbolicFill};
+use crate::depend::glu3::StreamingDetect;
+use crate::depend::{DepGraph, Levels};
+use crate::sparse::Csc;
+
+/// Columns of `a` whose structure differs from the cached base pattern
+/// (`base_colptr` / `base_rowidx`), ascending. `None` when the matrices are
+/// not comparable (different shape) or the diff exceeds `max_changed` —
+/// the caller should fall back to the cold path.
+pub fn changed_columns(
+    base_colptr: &[usize],
+    base_rowidx: &[usize],
+    a: &Csc,
+    max_changed: usize,
+) -> Option<Vec<u32>> {
+    let n = a.ncols();
+    if base_colptr.len() != n + 1 {
+        return None;
+    }
+    let mut changed = Vec::new();
+    for j in 0..n {
+        let base = &base_rowidx[base_colptr[j]..base_colptr[j + 1]];
+        if base != a.col(j).0 {
+            if changed.len() == max_changed {
+                return None;
+            }
+            changed.push(j as u32);
+        }
+    }
+    Some(changed)
+}
+
+/// A patched symbolic phase: the new triple plus how much work the patch
+/// actually did.
+#[derive(Debug)]
+pub struct SymbolicPatch {
+    pub sym: SymbolicFill,
+    pub deps: DepGraph,
+    pub levels: Levels,
+    /// Columns whose fill DFS was re-run (taint closure of `changed`).
+    pub recomputed: usize,
+}
+
+/// Patch `base`'s filled pattern onto the new matrix `a`, recomputing only
+/// the taint closure of `changed` (ascending column indices from
+/// [`changed_columns`], in the same index space as `a` and `base`).
+pub fn patch_symbolic(
+    base: &SymbolicFill,
+    a: &Csc,
+    changed: &[u32],
+    ws: &mut FillWorkspace,
+) -> anyhow::Result<SymbolicPatch> {
+    ensure_factorable(a)?;
+    let n = a.ncols();
+    anyhow::ensure!(
+        base.filled.ncols() == n && base.filled.nrows() == n,
+        "base pattern shape mismatch"
+    );
+    ws.reset(n);
+
+    let mut changed_set = vec![false; n];
+    for &c in changed {
+        changed_set[c as usize] = true;
+    }
+    let mut l_changed = vec![false; n];
+
+    let mut colptr = Vec::with_capacity(n + 1);
+    colptr.push(0usize);
+    let mut rowidx: Vec<usize> = Vec::with_capacity(base.filled.nnz());
+    let mut values: Vec<f64> = Vec::with_capacity(base.filled.nnz());
+    // L pattern of each finalized new column, as a range into `rowidx`
+    // (stable: the vec only grows).
+    let mut lrange: Vec<(usize, usize)> = Vec::with_capacity(n);
+    let mut sd = StreamingDetect::new(n);
+    let mut recomputed = 0usize;
+
+    for j in 0..n {
+        let (old_rows, _) = base.filled.col(j);
+        let tainted = changed_set[j]
+            || old_rows
+                .iter()
+                .take_while(|&&v| v < j)
+                .any(|&v| l_changed[v]);
+        let start = rowidx.len();
+        if tainted {
+            recomputed += 1;
+            // Serial Gilbert–Peierls DFS against the *new* lower patterns.
+            ws.pattern.clear();
+            let ju = j as u32;
+            let (arows, avals) = a.col(j);
+            for &r in arows {
+                if ws.marked[r] == ju {
+                    continue;
+                }
+                ws.dfs_stack.clear();
+                ws.marked[r] = ju;
+                ws.dfs_stack.push((r as u32, 0));
+                while let Some(&mut (v, ref mut ci)) = ws.dfs_stack.last_mut() {
+                    let v_ = v as usize;
+                    if v_ >= j {
+                        ws.pattern.push(v);
+                        ws.dfs_stack.pop();
+                        continue;
+                    }
+                    let (klo, khi) = lrange[v_];
+                    let kids = &rowidx[klo..khi];
+                    let mut pushed = false;
+                    while (*ci as usize) < kids.len() {
+                        let t = kids[*ci as usize];
+                        *ci += 1;
+                        if ws.marked[t] != ju {
+                            ws.marked[t] = ju;
+                            ws.dfs_stack.push((t as u32, 0));
+                            pushed = true;
+                            break;
+                        }
+                    }
+                    if !pushed {
+                        ws.pattern.push(v);
+                        ws.dfs_stack.pop();
+                    }
+                }
+            }
+            ws.pattern.sort_unstable();
+            let mut ai = 0usize;
+            for &r in &ws.pattern {
+                let r_ = r as usize;
+                rowidx.push(r_);
+                if ai < arows.len() && arows[ai] == r_ {
+                    values.push(avals[ai]);
+                    ai += 1;
+                } else {
+                    values.push(0.0);
+                }
+            }
+            debug_assert_eq!(ai, arows.len(), "structural entry missing from pattern");
+            // Did the L part move? Compare against the base column.
+            let lpos = rowidx[start..].partition_point(|&r| r <= j);
+            let old_lpos = old_rows.partition_point(|&r| r <= j);
+            l_changed[j] = rowidx[start + lpos..] != old_rows[old_lpos..];
+        } else {
+            // Untainted: the base pattern replays identically; copy it and
+            // re-merge the (possibly restamped) values from the new matrix.
+            let (arows, avals) = a.col(j);
+            let mut ai = 0usize;
+            for &r in old_rows {
+                rowidx.push(r);
+                if ai < arows.len() && arows[ai] == r {
+                    values.push(avals[ai]);
+                    ai += 1;
+                } else {
+                    values.push(0.0);
+                }
+            }
+            debug_assert_eq!(ai, arows.len(), "unchanged column disagrees with base");
+        }
+        colptr.push(rowidx.len());
+        let lpos = start + rowidx[start..].partition_point(|&r| r <= j);
+        lrange.push((lpos, rowidx.len()));
+        sd.consume(j, &rowidx[start..]);
+    }
+
+    let fill_count = rowidx.len() - a.nnz();
+    let filled = Csc::from_raw_parts(n, n, colptr, rowidx, values)?;
+    let (deps, levels) = sd.finish();
+    Ok(SymbolicPatch {
+        sym: SymbolicFill { filled, fill_count },
+        deps,
+        levels,
+        recomputed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::depend::{glu3, levelize};
+    use crate::sparse::{gen, Coo};
+    use crate::symbolic::symbolic_fill;
+    use crate::util::Rng;
+
+    fn raw_pattern(a: &Csc) -> (Vec<usize>, Vec<usize>) {
+        let mut colptr = vec![0usize];
+        let mut rowidx = Vec::new();
+        for j in 0..a.ncols() {
+            rowidx.extend_from_slice(a.col(j).0);
+            colptr.push(rowidx.len());
+        }
+        (colptr, rowidx)
+    }
+
+    /// Rebuild `a` with one extra structural entry at `(r, c)`.
+    fn with_extra(a: &Csc, r: usize, c: usize, v: f64) -> Csc {
+        let mut coo = Coo::new(a.nrows(), a.ncols());
+        for j in 0..a.ncols() {
+            let (rows, vals) = a.col(j);
+            for (&i, &x) in rows.iter().zip(vals) {
+                coo.push(i, j, x);
+            }
+        }
+        coo.push(r, c, v);
+        coo.to_csc()
+    }
+
+    #[test]
+    fn changed_columns_finds_the_diff() {
+        let a = gen::grid2d(8, 8, 1);
+        let (cp, ri) = raw_pattern(&a);
+        assert_eq!(changed_columns(&cp, &ri, &a, 4).unwrap(), Vec::<u32>::new());
+        let b = with_extra(&a, 40, 3, -0.5);
+        let ch = changed_columns(&cp, &ri, &b, 4).unwrap();
+        assert_eq!(ch, vec![3]);
+        // Budget exhaustion falls back.
+        let mut c = a.clone();
+        for col in 0..6 {
+            c = with_extra(&c, 50, col, -0.1);
+        }
+        assert!(changed_columns(&cp, &ri, &c, 4).is_none());
+    }
+
+    fn check_patch_matches_fresh(base_a: &Csc, new_a: &Csc) {
+        let base = symbolic_fill(base_a).unwrap();
+        let (cp, ri) = raw_pattern(base_a);
+        let changed = changed_columns(&cp, &ri, new_a, new_a.ncols())
+            .expect("same shape, diff within budget");
+        let mut ws = FillWorkspace::new();
+        let patch = patch_symbolic(&base, new_a, &changed, &mut ws).unwrap();
+        let fresh = symbolic_fill(new_a).unwrap();
+        assert_eq!(patch.sym.filled, fresh.filled);
+        assert_eq!(patch.sym.fill_count, fresh.fill_count);
+        assert_eq!(patch.deps, glu3::detect(&fresh.filled));
+        assert_eq!(patch.levels, levelize(&glu3::detect(&fresh.filled)));
+        assert!(patch.recomputed >= changed.len());
+    }
+
+    #[test]
+    fn identity_delta_recomputes_nothing() {
+        let a = gen::grid2d(9, 9, 5);
+        let base = symbolic_fill(&a).unwrap();
+        let mut ws = FillWorkspace::new();
+        let patch = patch_symbolic(&base, &a, &[], &mut ws).unwrap();
+        assert_eq!(patch.recomputed, 0);
+        assert_eq!(patch.sym.filled, base.filled);
+    }
+
+    #[test]
+    fn single_entry_deltas_match_fresh() {
+        let mut rng = Rng::new(0xDE17A);
+        for trial in 0..12 {
+            let n = rng.range(30, 90);
+            let a = gen::netlist(n, 6, 8, 0.1, 2, 0.25, 4000 + trial);
+            let r = rng.below(n);
+            let c = rng.below(n);
+            let b = with_extra(&a, r, c, -0.3);
+            check_patch_matches_fresh(&a, &b);
+        }
+    }
+
+    #[test]
+    fn two_column_deltas_match_fresh() {
+        let mut rng = Rng::new(0xDE17B);
+        for trial in 0..8 {
+            let n = rng.range(40, 100);
+            let a = gen::netlist(n, 6, 8, 0.1, 2, 0.25, 5000 + trial);
+            let b = with_extra(&a, rng.below(n), rng.below(n), 0.2);
+            let c = with_extra(&b, rng.below(n), rng.below(n), -0.7);
+            check_patch_matches_fresh(&a, &c);
+        }
+    }
+
+    #[test]
+    fn entry_removal_delta_matches_fresh() {
+        // Shrinking structure: drop one off-diagonal entry.
+        let a = gen::grid2d(10, 7, 3);
+        let mut coo = Coo::new(a.nrows(), a.ncols());
+        let mut dropped = false;
+        for j in 0..a.ncols() {
+            let (rows, vals) = a.col(j);
+            for (&i, &x) in rows.iter().zip(vals) {
+                if !dropped && i != j && i > 20 {
+                    dropped = true;
+                    continue;
+                }
+                coo.push(i, j, x);
+            }
+        }
+        assert!(dropped);
+        check_patch_matches_fresh(&a, &coo.to_csc());
+    }
+
+    #[test]
+    fn fill_envelope_delta_recomputes_one_column() {
+        // An entry already inside the filled pattern but absent from A:
+        // the patched column's reach cannot grow, so the taint stops there.
+        let a = gen::grid2d(10, 10, 2);
+        let base = symbolic_fill(&a).unwrap();
+        let mut pick = None;
+        'outer: for j in 0..a.ncols() {
+            let (rows, _) = base.filled.col(j);
+            for &r in rows {
+                if !a.has_entry(r, j) && r > j {
+                    pick = Some((r, j));
+                    break 'outer;
+                }
+            }
+        }
+        let (r, c) = pick.expect("grids always fill in");
+        let b = with_extra(&a, r, c, 1e-3);
+        let (cp, ri) = raw_pattern(&a);
+        let changed = changed_columns(&cp, &ri, &b, 8).unwrap();
+        assert_eq!(changed, vec![c as u32]);
+        let mut ws = FillWorkspace::new();
+        let patch = patch_symbolic(&base, &b, &changed, &mut ws).unwrap();
+        assert_eq!(patch.recomputed, 1);
+        let fresh = symbolic_fill(&b).unwrap();
+        assert_eq!(patch.sym.filled, fresh.filled);
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let a = gen::grid2d(6, 6, 1);
+        let b = gen::grid2d(7, 7, 1);
+        let base = symbolic_fill(&a).unwrap();
+        let mut ws = FillWorkspace::new();
+        assert!(patch_symbolic(&base, &b, &[], &mut ws).is_err());
+        let (cp, ri) = raw_pattern(&a);
+        assert!(changed_columns(&cp, &ri, &b, 99).is_none());
+    }
+}

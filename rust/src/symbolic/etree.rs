@@ -25,6 +25,80 @@ pub fn etree_from_filled(filled: &Csc) -> Vec<usize> {
     parent
 }
 
+/// Column elimination tree of `A` **before** fill — the elimination tree of
+/// `AᵀA` computed without forming it (SuperLU's `sp_coletree` union-find
+/// trick over each column's row set, keyed by the first column touching
+/// each row).
+///
+/// Gilbert–Ng: for any matrix with a zero-free diagonal, every column `i`
+/// consulted by Gilbert–Peierls fill discovery of column `j` (`i < j`,
+/// `Us(i,j) ≠ 0`) is a proper descendant of `j` in this tree. Height-based
+/// level sets over it therefore partition the columns so a level's fill
+/// DFSs only read columns finished in strictly earlier levels — the safe
+/// parallel schedule [`super::parfill`] runs on, known before any fill is
+/// computed.
+pub fn col_etree(a: &Csc) -> Vec<usize> {
+    let n = a.ncols();
+    // firstcol[r] = smallest column with a structural entry in row r.
+    let mut firstcol = vec![NONE; a.nrows()];
+    for j in 0..n {
+        for &r in a.col(j).0 {
+            if firstcol[r] == NONE {
+                firstcol[r] = j;
+            }
+        }
+    }
+    // Union-find with path halving; root[find(x)] = highest-numbered column
+    // of x's current subtree.
+    let mut pp: Vec<usize> = (0..n).collect();
+    let mut root: Vec<usize> = (0..n).collect();
+    let mut parent = vec![NONE; n];
+    let mut find = |pp: &mut Vec<usize>, mut x: usize| {
+        while pp[x] != x {
+            pp[x] = pp[pp[x]];
+            x = pp[x];
+        }
+        x
+    };
+    for col in 0..n {
+        let mut cset = col;
+        root[cset] = col;
+        for &r in a.col(col).0 {
+            let k = firstcol[r];
+            if k >= col {
+                continue;
+            }
+            let rset = find(&mut pp, k);
+            let rroot = root[rset];
+            if rroot != col {
+                parent[rroot] = col;
+                // link rset into cset
+                pp[rset] = cset;
+                cset = rset;
+                root[cset] = col;
+            }
+        }
+    }
+    parent
+}
+
+/// Height of each node from the leaves (`leaf = 0`,
+/// `height[parent] ≥ height[child] + 1`). Valid for trees whose parents
+/// strictly increase (both the coletree and the post-fill etree), so a
+/// single ascending pass settles every node.
+pub fn tree_heights(parent: &[usize]) -> Vec<u32> {
+    let n = parent.len();
+    let mut height = vec![0u32; n];
+    for j in 0..n {
+        let p = parent[j];
+        if p != NONE {
+            debug_assert!(p > j, "etree parents must increase");
+            height[p] = height[p].max(height[j] + 1);
+        }
+    }
+    height
+}
+
 /// Depth of each node in the tree (roots have depth 0).
 pub fn tree_depths(parent: &[usize]) -> Vec<usize> {
     let n = parent.len();
@@ -88,6 +162,58 @@ mod tests {
         for (j, &pj) in p.iter().enumerate() {
             if pj != NONE {
                 assert!(pj > j);
+            }
+        }
+    }
+
+    #[test]
+    fn coletree_of_chain_is_path() {
+        let a = gen::ladder(12, 12, 0, 1); // tridiagonal chain
+        let p = col_etree(&a);
+        for j in 0..11 {
+            assert_eq!(p[j], j + 1);
+        }
+        assert_eq!(p[11], NONE);
+        let h = tree_heights(&p);
+        assert_eq!(h[11], 11);
+        assert_eq!(h[0], 0);
+    }
+
+    /// The Gilbert–Ng safety property the parallel symbolic engine rests
+    /// on: every U-row of every filled column is a proper coletree
+    /// descendant of that column (so its fill DFS only reads columns of
+    /// strictly smaller coletree height).
+    #[test]
+    fn coletree_bounds_fill_dfs_reads() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(0xC01E);
+        let mut mats = vec![gen::grid2d(9, 9, 4), gen::ladder(60, 12, 24, 2)];
+        for t in 0..8 {
+            let n = rng.range(20, 80);
+            mats.push(gen::netlist(n, 6, 8, 0.1, 2, 0.25, 600 + t));
+        }
+        for a in &mats {
+            let parent = col_etree(a);
+            let heights = tree_heights(&parent);
+            let is_descendant = |mut v: usize, j: usize| -> bool {
+                while v < j {
+                    v = parent[v];
+                    if v == NONE {
+                        return false;
+                    }
+                }
+                v == j
+            };
+            let f = symbolic_fill(a).unwrap();
+            for j in 0..a.ncols() {
+                let (rows, _) = f.filled.col(j);
+                for &i in rows.iter().take_while(|&&i| i < j) {
+                    assert!(
+                        is_descendant(i, j),
+                        "U-row {i} of column {j} is not a coletree descendant"
+                    );
+                    assert!(heights[i] < heights[j]);
+                }
             }
         }
     }

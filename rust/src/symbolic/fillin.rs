@@ -6,6 +6,12 @@
 //! propagating only through `i < j`). This is exactly the pattern the
 //! numeric triangular solve of Algorithm 1 touches, so the numeric kernels
 //! can run data-oblivious on the filled pattern.
+//!
+//! The DFS scratch (marker array, explicit stack, pattern buffer, per-column
+//! L lists) lives in a [`FillWorkspace`] so repeated symbolic runs — the
+//! [`crate::coordinator::SolverPool`] miss path, the parallel engine in
+//! [`super::parfill`], and the incremental patcher in [`super::delta`] —
+//! reuse one allocation instead of paying `O(n)` fresh buffers per call.
 
 use crate::sparse::Csc;
 
@@ -26,71 +32,147 @@ impl SymbolicFill {
     }
 }
 
-/// Compute the filled pattern `As = L + U` of `a` (no pivoting — GLU's
-/// regime: the diagonal must be structurally present and numerically usable,
-/// which MC64-style preprocessing establishes).
-pub fn symbolic_fill(a: &Csc) -> anyhow::Result<SymbolicFill> {
+/// Per-worker DFS scratch of the parallel fill engine: one marker array and
+/// one explicit stack per pool thread, so workers discover disjoint columns
+/// without sharing (or locking) any mutable state.
+#[derive(Debug, Default)]
+pub(crate) struct FillScratch {
+    pub(crate) marked: Vec<u32>,
+    pub(crate) stack: Vec<(u32, u32)>,
+    pub(crate) pat: Vec<u32>,
+}
+
+impl FillScratch {
+    fn reset(&mut self, n: usize) {
+        self.marked.clear();
+        self.marked.resize(n, u32::MAX);
+        self.stack.clear();
+        self.pat.clear();
+    }
+}
+
+/// Reusable symbolic scratch: the reach/marker buffers the serial fill DFS
+/// allocated per call, plus per-worker scratches for the parallel engine.
+/// Owned by long-lived callers (the solver pool keeps one per pool and lends
+/// it to every miss) so back-to-back symbolic runs are allocation-light.
+#[derive(Debug, Default)]
+pub struct FillWorkspace {
+    /// `marked[i] == j` means row `i` was visited while computing column `j`.
+    pub(crate) marked: Vec<u32>,
+    /// Explicit DFS stack of `(node, next child index)` frames.
+    pub(crate) dfs_stack: Vec<(u32, u32)>,
+    /// Pattern accumulator for the column in flight.
+    pub(crate) pattern: Vec<u32>,
+    /// L patterns discovered so far: `lower[c]` = sorted rows `> c` of
+    /// column `c`. The outer vec and the inner allocations are both reused
+    /// across calls (cleared, not dropped).
+    pub(crate) lower: Vec<Vec<u32>>,
+    /// Per-worker scratches for [`super::parfill`]; sized on demand.
+    pub(crate) scratches: Vec<FillScratch>,
+}
+
+impl FillWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reset the serial-DFS buffers for an `n`-column run, keeping capacity.
+    pub(crate) fn reset(&mut self, n: usize) {
+        self.marked.clear();
+        self.marked.resize(n, u32::MAX);
+        self.dfs_stack.clear();
+        self.pattern.clear();
+        self.lower.truncate(n);
+        for l in &mut self.lower {
+            l.clear();
+        }
+        let have = self.lower.len();
+        self.lower.resize_with(n, Vec::new);
+        debug_assert!(have <= n);
+    }
+
+    /// Reset `threads` per-worker scratches for an `n`-column parallel run.
+    pub(crate) fn reset_scratches(&mut self, threads: usize, n: usize) {
+        self.scratches.resize_with(threads, FillScratch::default);
+        self.scratches.truncate(threads);
+        for s in &mut self.scratches {
+            s.reset(n);
+        }
+    }
+}
+
+/// Shared validation for every symbolic entry point: square with a
+/// structurally full diagonal (the pivot-free GLU regime MC64 establishes).
+pub(crate) fn ensure_factorable(a: &Csc) -> anyhow::Result<()> {
     anyhow::ensure!(a.nrows() == a.ncols(), "matrix must be square");
-    let n = a.nrows();
     anyhow::ensure!(
         a.has_full_diagonal(),
         "diagonal must be structurally full (run MC64 matching first)"
     );
+    Ok(())
+}
 
-    // L patterns discovered so far: lower[c] = sorted rows > c of column c.
-    let mut lower: Vec<Vec<u32>> = Vec::with_capacity(n);
+/// Compute the filled pattern `As = L + U` of `a` (no pivoting — GLU's
+/// regime: the diagonal must be structurally present and numerically usable,
+/// which MC64-style preprocessing establishes).
+pub fn symbolic_fill(a: &Csc) -> anyhow::Result<SymbolicFill> {
+    symbolic_fill_with(a, &mut FillWorkspace::new())
+}
+
+/// [`symbolic_fill`] with caller-owned scratch: the reach/marker buffers in
+/// `ws` are reused instead of reallocated, the win the solver pool's
+/// miss path depends on when distinct patterns arrive back-to-back.
+pub fn symbolic_fill_with(a: &Csc, ws: &mut FillWorkspace) -> anyhow::Result<SymbolicFill> {
+    ensure_factorable(a)?;
+    let n = a.nrows();
+    ws.reset(n);
 
     let mut colptr = Vec::with_capacity(n + 1);
     colptr.push(0usize);
     let mut rowidx: Vec<usize> = Vec::new();
     let mut values: Vec<f64> = Vec::new();
 
-    // DFS scratch.
-    let mut marked = vec![u32::MAX; n]; // marked[i] == j means visited in col j
-    let mut dfs_stack: Vec<(u32, u32)> = Vec::new(); // (node, next child index)
-    let mut pattern: Vec<u32> = Vec::new();
-
     let mut fill_count = 0usize;
 
     for j in 0..n {
-        pattern.clear();
+        ws.pattern.clear();
         let ju = j as u32;
         let (arows, _) = a.col(j);
         for &r in arows {
             // DFS from r through the L DAG (only nodes < j propagate).
-            if marked[r] == ju {
+            if ws.marked[r] == ju {
                 continue;
             }
-            dfs_stack.clear();
-            marked[r] = ju;
-            dfs_stack.push((r as u32, 0));
-            while let Some(&mut (v, ref mut ci)) = dfs_stack.last_mut() {
+            ws.dfs_stack.clear();
+            ws.marked[r] = ju;
+            ws.dfs_stack.push((r as u32, 0));
+            while let Some(&mut (v, ref mut ci)) = ws.dfs_stack.last_mut() {
                 let v_ = v as usize;
                 if v_ >= j {
                     // L part of the current column: no outgoing edges yet.
-                    pattern.push(v);
-                    dfs_stack.pop();
+                    ws.pattern.push(v);
+                    ws.dfs_stack.pop();
                     continue;
                 }
-                let kids = &lower[v_];
+                let kids = &ws.lower[v_];
                 let mut pushed = false;
                 while (*ci as usize) < kids.len() {
                     let t = kids[*ci as usize];
                     *ci += 1;
-                    if marked[t as usize] != ju {
-                        marked[t as usize] = ju;
-                        dfs_stack.push((t, 0));
+                    if ws.marked[t as usize] != ju {
+                        ws.marked[t as usize] = ju;
+                        ws.dfs_stack.push((t, 0));
                         pushed = true;
                         break;
                     }
                 }
                 if !pushed {
-                    pattern.push(v);
-                    dfs_stack.pop();
+                    ws.pattern.push(v);
+                    ws.dfs_stack.pop();
                 }
             }
         }
-        pattern.sort_unstable();
+        ws.pattern.sort_unstable();
 
         // Record column j of the filled matrix and its L pattern. `A(:,j)`
         // is a sorted subset of the (sorted) reachable pattern — every
@@ -99,8 +181,8 @@ pub fn symbolic_fill(a: &Csc) -> anyhow::Result<SymbolicFill> {
         // searches per output nonzero).
         let (arows, avals) = a.col(j);
         let mut ai = 0usize;
-        let mut lcol: Vec<u32> = Vec::new();
-        for &r in &pattern {
+        let lcol = &mut ws.lower[j];
+        for &r in &ws.pattern {
             let r_ = r as usize;
             rowidx.push(r_);
             if ai < arows.len() && arows[ai] == r_ {
@@ -115,7 +197,6 @@ pub fn symbolic_fill(a: &Csc) -> anyhow::Result<SymbolicFill> {
             }
         }
         debug_assert_eq!(ai, arows.len(), "structural entry missing from pattern");
-        lower.push(lcol);
         colptr.push(rowidx.len());
     }
 
@@ -239,5 +320,24 @@ mod tests {
         coo.push(0, 1, 1.0);
         coo.push(1, 0, 1.0);
         assert!(symbolic_fill(&coo.to_csc()).is_err());
+    }
+
+    /// A reused workspace produces the same answer as fresh scratch on a
+    /// sequence of distinct patterns — the pool-miss reuse contract.
+    #[test]
+    fn workspace_reuse_matches_fresh_scratch() {
+        let mut ws = FillWorkspace::new();
+        let mats = [
+            gen::grid2d(9, 9, 2),
+            gen::netlist(64, 5, 8, 0.1, 1, 0.2, 9),
+            gen::grid2d(6, 11, 4),
+            gen::ladder(48, 12, 24, 3),
+        ];
+        for a in &mats {
+            let fresh = symbolic_fill(a).unwrap();
+            let reused = symbolic_fill_with(a, &mut ws).unwrap();
+            assert_eq!(reused.filled, fresh.filled);
+            assert_eq!(reused.fill_count, fresh.fill_count);
+        }
     }
 }

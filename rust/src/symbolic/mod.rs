@@ -5,8 +5,18 @@
 //! This module computes that pattern with the Gilbert–Peierls reachability
 //! argument, and derives the column elimination tree used by tests and the
 //! multithreaded CPU baseline.
+//!
+//! Two fast paths take the cold-start tax off that once-per-pattern work:
+//! [`parfill`] runs fill discovery wave-parallel on the numeric worker pool
+//! (coletree height level sets; bit-identical to the serial pass), and
+//! [`delta`] patches a cached pattern against a structural near-miss instead
+//! of recomputing it from scratch.
 
+pub mod delta;
 pub mod etree;
 pub mod fillin;
+pub mod parfill;
 
-pub use fillin::{symbolic_fill, SymbolicFill};
+pub use delta::{changed_columns, patch_symbolic, SymbolicPatch};
+pub use fillin::{symbolic_fill, symbolic_fill_with, FillWorkspace, SymbolicFill};
+pub use parfill::{parallel_fill, parallel_symbolic, ParSymbolic};

@@ -1,0 +1,357 @@
+//! Parallel Gilbert–Peierls fill discovery on the spawn-once worker pool —
+//! the cold-start half of the symbolic overhaul.
+//!
+//! The serial fill pass ([`super::fillin`]) is inherently sequential in
+//! appearance: column `j`'s DFS reads the L patterns of columns `< j`. But it
+//! never reads *all* of them — Gilbert–Ng shows every column a fill DFS of
+//! `j` visits is a proper descendant of `j` in the **column elimination
+//! tree** of `A` ([`super::etree::col_etree`]), a structure computable in
+//! near-linear time *before any fill exists*. Height-based level sets of that
+//! tree therefore partition the columns into waves whose DFSs only read
+//! columns finished in strictly earlier waves (GSoFa's schedule, here on
+//! CPU threads instead of GPU blocks):
+//!
+//! - **wide waves** are chunked contiguously across the pool's workers, each
+//!   worker discovering its columns into a private [`FillScratch`] and
+//!   publishing the finished pattern into a per-column slot
+//!   ([`SharedSlots`] — disjoint writes, reads ordered by the wave barrier);
+//! - **runs of narrow waves** (the top of the tree) are merged into one
+//!   serial segment run by worker 0, so the barrier count is proportional to
+//!   the number of *wide* waves, not the tree height.
+//!
+//! Each column's pattern is sorted before publication, so the assembled
+//! filled matrix is **bit-identical** to the serial pipeline at any thread
+//! count — the reach set of a column is schedule-independent; only the
+//! discovery order varies. The assembly walk feeds every finished column
+//! straight into [`StreamingDetect`], fusing GLU3.0 dependency detection and
+//! levelization into the same sweep.
+
+use std::time::Instant;
+
+use super::etree::{col_etree, tree_heights};
+use super::fillin::{ensure_factorable, FillScratch, FillWorkspace, SymbolicFill};
+use crate::depend::glu3::StreamingDetect;
+use crate::depend::{DepGraph, Levels};
+use crate::numeric::pool::{SharedSlots, WorkerPool};
+use crate::sparse::Csc;
+
+/// A finished column's sorted pattern and the offset of its first L row
+/// (`pat[lstart..]` = rows strictly below the diagonal), published for the
+/// DFSs of later waves.
+#[derive(Debug, Default)]
+struct ColPat {
+    pat: Vec<u32>,
+    lstart: u32,
+}
+
+/// One barrier-delimited slice of the wave schedule.
+#[derive(Debug)]
+struct Segment {
+    /// Chunked across all workers (`true`) or run whole by worker 0.
+    parallel: bool,
+    /// Columns in ascending coletree-height order, ascending index within a
+    /// height (serial segments may span several consecutive heights).
+    cols: Vec<u32>,
+}
+
+/// A parallel wave must amortize its barrier: anything narrower is cheaper
+/// run serially and merged with its neighbors into one barrier.
+fn wide_threshold(threads: usize) -> usize {
+    (threads * 4).max(16)
+}
+
+/// Partition the columns into barrier-delimited segments by coletree height.
+fn build_segments(a: &Csc, threads: usize) -> Vec<Segment> {
+    let n = a.ncols();
+    let parent = col_etree(a);
+    let heights = tree_heights(&parent);
+    let nh = heights.iter().map(|&h| h as usize + 1).max().unwrap_or(0);
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); nh];
+    for j in 0..n {
+        buckets[heights[j] as usize].push(j as u32);
+    }
+    let wide = wide_threshold(threads);
+    let mut segments: Vec<Segment> = Vec::new();
+    for b in buckets {
+        if b.len() >= wide {
+            segments.push(Segment {
+                parallel: true,
+                cols: b,
+            });
+        } else if let Some(last) = segments.last_mut().filter(|s| !s.parallel) {
+            last.cols.extend_from_slice(&b);
+        } else {
+            segments.push(Segment {
+                parallel: false,
+                cols: b,
+            });
+        }
+    }
+    segments
+}
+
+/// Discover the full reach pattern of column `j` and publish it into its
+/// slot. Reads only slots of strictly smaller coletree height — finalized by
+/// an earlier barrier or earlier in this worker's serial run.
+fn discover(a: &Csc, j: usize, scratch: &mut FillScratch, slots: &SharedSlots<ColPat>) {
+    let ju = j as u32;
+    scratch.pat.clear();
+    let (arows, _) = a.col(j);
+    for &r in arows {
+        if scratch.marked[r] == ju {
+            continue;
+        }
+        scratch.stack.clear();
+        scratch.marked[r] = ju;
+        scratch.stack.push((r as u32, 0));
+        while let Some(&mut (v, ref mut ci)) = scratch.stack.last_mut() {
+            let v_ = v as usize;
+            if v_ >= j {
+                scratch.pat.push(v);
+                scratch.stack.pop();
+                continue;
+            }
+            // SAFETY: v < j is reachable in column j's fill DFS, so it is a
+            // proper coletree descendant of j (Gilbert–Ng) and its slot was
+            // published before this segment started (or earlier in this
+            // worker's serial run). No worker writes it now.
+            let cp = unsafe { slots.get(v_) };
+            let kids = &cp.pat[cp.lstart as usize..];
+            let mut pushed = false;
+            while (*ci as usize) < kids.len() {
+                let t = kids[*ci as usize];
+                *ci += 1;
+                if scratch.marked[t as usize] != ju {
+                    scratch.marked[t as usize] = ju;
+                    scratch.stack.push((t, 0));
+                    pushed = true;
+                    break;
+                }
+            }
+            if !pushed {
+                scratch.pat.push(v);
+                scratch.stack.pop();
+            }
+        }
+    }
+    scratch.pat.sort_unstable();
+    let lstart = scratch.pat.partition_point(|&r| r <= ju) as u32;
+    // SAFETY: column j belongs to exactly one worker's chunk of exactly one
+    // segment — no concurrent access to this slot.
+    let out = unsafe { slots.get_mut(j) };
+    out.pat.extend_from_slice(&scratch.pat);
+    out.lstart = lstart;
+}
+
+/// Run the wave schedule on the pool, leaving every column's sorted pattern
+/// in `pats`.
+fn discover_all(a: &Csc, pool: &WorkerPool, ws: &mut FillWorkspace, pats: &mut [ColPat]) {
+    let threads = pool.threads();
+    let segments = build_segments(a, threads);
+    ws.reset_scratches(threads, a.ncols());
+    let slots = SharedSlots::new(pats);
+    let scratch = SharedSlots::new(&mut ws.scratches);
+    let segs = &segments;
+    pool.run(&move |ctx| {
+        // SAFETY: one scratch per worker id, ids are distinct.
+        let my = unsafe { scratch.get_mut(ctx.id) };
+        for seg in segs {
+            if seg.parallel {
+                let len = seg.cols.len();
+                let lo = len * ctx.id / ctx.threads;
+                let hi = len * (ctx.id + 1) / ctx.threads;
+                for &j in &seg.cols[lo..hi] {
+                    discover(a, j as usize, my, &slots);
+                }
+            } else if ctx.id == 0 {
+                for &j in &seg.cols {
+                    discover(a, j as usize, my, &slots);
+                }
+            }
+            if !ctx.sync() {
+                return;
+            }
+        }
+    });
+}
+
+/// Output of the fused parallel symbolic phase: the filled pattern plus the
+/// GLU3.0 dependency graph and level schedule it streams out, with per-stage
+/// timings for [`crate::glu::GluStats`].
+#[derive(Debug)]
+pub struct ParSymbolic {
+    pub sym: SymbolicFill,
+    pub deps: DepGraph,
+    pub levels: Levels,
+    /// Wave-parallel reach discovery.
+    pub fillin_ms: f64,
+    /// Serial assembly of the filled CSC + streamed Algorithm 4.
+    pub detect_ms: f64,
+    /// Grouping the streamed level assignment.
+    pub levelize_ms: f64,
+}
+
+/// Parallel fill + fused streaming detection/levelization — the Glu3 cold
+/// path. Bit-identical to `symbolic_fill` → `glu3::detect` → `levelize` at
+/// any thread count.
+pub fn parallel_symbolic(
+    a: &Csc,
+    pool: &WorkerPool,
+    ws: &mut FillWorkspace,
+) -> anyhow::Result<ParSymbolic> {
+    ensure_factorable(a)?;
+    let n = a.ncols();
+    let t0 = Instant::now();
+    let mut pats: Vec<ColPat> = Vec::new();
+    pats.resize_with(n, ColPat::default);
+    discover_all(a, pool, ws, &mut pats);
+    let fillin_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let t1 = Instant::now();
+    let mut sd = StreamingDetect::new(n);
+    let (sym, _) = assemble(a, &pats, Some(&mut sd))?;
+    let detect_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+    let t2 = Instant::now();
+    let (deps, levels) = sd.finish();
+    let levelize_ms = t2.elapsed().as_secs_f64() * 1e3;
+
+    Ok(ParSymbolic {
+        sym,
+        deps,
+        levels,
+        fillin_ms,
+        detect_ms,
+        levelize_ms,
+    })
+}
+
+/// Parallel fill alone (no fused detection) — the cold path for detection
+/// modes that batch-process the filled pattern afterwards. Returns the
+/// filled pattern and the discovery time (assembly included, matching the
+/// serial `symbolic_fill` accounting).
+pub fn parallel_fill(
+    a: &Csc,
+    pool: &WorkerPool,
+    ws: &mut FillWorkspace,
+) -> anyhow::Result<(SymbolicFill, f64)> {
+    ensure_factorable(a)?;
+    let t0 = Instant::now();
+    let mut pats: Vec<ColPat> = Vec::new();
+    pats.resize_with(a.ncols(), ColPat::default);
+    discover_all(a, pool, ws, &mut pats);
+    let (sym, _) = assemble(a, &pats, None)?;
+    Ok((sym, t0.elapsed().as_secs_f64() * 1e3))
+}
+
+/// Serial assembly of the discovered per-column patterns into the filled
+/// CSC, optionally streaming each finished column into `sd`.
+fn assemble(
+    a: &Csc,
+    pats: &[ColPat],
+    mut sd: Option<&mut StreamingDetect>,
+) -> anyhow::Result<(SymbolicFill, usize)> {
+    let n = a.ncols();
+    let total: usize = pats.iter().map(|p| p.pat.len()).sum();
+    let mut colptr = Vec::with_capacity(n + 1);
+    colptr.push(0usize);
+    let mut rowidx: Vec<usize> = Vec::with_capacity(total);
+    let mut values: Vec<f64> = Vec::with_capacity(total);
+    for (j, p) in pats.iter().enumerate() {
+        let (arows, avals) = a.col(j);
+        let mut ai = 0usize;
+        let start = rowidx.len();
+        for &r in &p.pat {
+            let r_ = r as usize;
+            rowidx.push(r_);
+            if ai < arows.len() && arows[ai] == r_ {
+                values.push(avals[ai]);
+                ai += 1;
+            } else {
+                values.push(0.0);
+            }
+        }
+        debug_assert_eq!(ai, arows.len(), "structural entry missing from pattern");
+        colptr.push(rowidx.len());
+        if let Some(sd) = sd.as_deref_mut() {
+            sd.consume(j, &rowidx[start..]);
+        }
+    }
+    let fill_count = rowidx.len() - a.nnz();
+    let filled = Csc::from_raw_parts(n, n, colptr, rowidx, values)?;
+    Ok((SymbolicFill { filled, fill_count }, total))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::depend::{glu3, levelize};
+    use crate::sparse::gen;
+    use crate::symbolic::symbolic_fill;
+
+    fn check_identical(a: &Csc, threads: usize) {
+        let serial = symbolic_fill(a).unwrap();
+        let sdeps = glu3::detect(&serial.filled);
+        let slevels = levelize(&sdeps);
+        let pool = WorkerPool::new(threads);
+        let mut ws = FillWorkspace::new();
+        let par = parallel_symbolic(a, &pool, &mut ws).unwrap();
+        assert_eq!(par.sym.filled, serial.filled);
+        assert_eq!(par.sym.fill_count, serial.fill_count);
+        assert_eq!(par.deps, sdeps);
+        assert_eq!(par.levels, slevels);
+        // Reused workspace, second run — same answer.
+        let again = parallel_symbolic(a, &pool, &mut ws).unwrap();
+        assert_eq!(again.sym.filled, serial.filled);
+    }
+
+    #[test]
+    fn matches_serial_on_grid_all_thread_counts() {
+        let a = gen::grid2d(13, 11, 7);
+        for threads in [1, 2, 4] {
+            check_identical(&a, threads);
+        }
+    }
+
+    #[test]
+    fn matches_serial_on_netlists() {
+        for (seed, threads) in [(11u64, 2usize), (12, 4), (13, 3)] {
+            let a = gen::netlist(150, 6, 8, 0.1, 2, 0.25, seed);
+            check_identical(&a, threads);
+        }
+    }
+
+    #[test]
+    fn matches_serial_on_chain_tree_degenerate() {
+        // Tridiagonal chain: coletree is a path, every wave is narrow — the
+        // whole run collapses into one serial segment on worker 0.
+        let a = gen::ladder(64, 16, 32, 5);
+        check_identical(&a, 4);
+    }
+
+    #[test]
+    fn parallel_fill_matches_serial() {
+        let a = gen::grid2d(10, 10, 3);
+        let pool = WorkerPool::new(4);
+        let mut ws = FillWorkspace::new();
+        let (sym, ms) = parallel_fill(&a, &pool, &mut ws).unwrap();
+        let serial = symbolic_fill(&a).unwrap();
+        assert_eq!(sym.filled, serial.filled);
+        assert_eq!(sym.fill_count, serial.fill_count);
+        assert!(ms >= 0.0);
+    }
+
+    #[test]
+    fn segments_cover_every_column_once() {
+        let a = gen::netlist(200, 6, 8, 0.1, 2, 0.25, 77);
+        let segs = build_segments(&a, 4);
+        let mut seen = vec![false; a.ncols()];
+        for s in &segs {
+            for &c in &s.cols {
+                assert!(!seen[c as usize], "column {c} scheduled twice");
+                seen[c as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+}

@@ -7,7 +7,7 @@
 use std::sync::Mutex;
 
 use glu3::bench_support::numeric::{
-    refactor_loop, run, spawn_vs_pool, validate_json_schema, BenchSpec,
+    refactor_loop, run, spawn_vs_pool, symbolic_report, validate_json_schema, BenchSpec,
 };
 
 /// The tests in this binary all measure wall-clock while spawning thread
@@ -58,9 +58,14 @@ fn bench_smoke_report_covers_all_engines_and_validates() {
         p.levels,
         "mode histogram must cover every level"
     );
-    for v in [p.build_ms, p.symbolic_ms, p.detect_ms, p.levelize_ms] {
+    for v in [p.build_ms, p.symbolic_ms, p.fillin_ms, p.detect_ms, p.levelize_ms] {
         assert!(v.is_finite() && v >= 0.0, "plan timing {v}");
     }
+    // v6 semantics: symbolic_ms is the whole phase, fill a component of it
+    assert!(
+        (p.symbolic_ms - (p.fillin_ms + p.detect_ms + p.levelize_ms)).abs() < 1e-9,
+        "symbolic_ms must equal fill + detect + levelize"
+    );
 
     // the v3 refactor_loop block: per-iteration arrays the right length,
     // sane timings, the head-to-head medians present
@@ -109,6 +114,21 @@ fn bench_smoke_report_covers_all_engines_and_validates() {
     assert!(rb.pivot_growth.is_finite() && rb.pivot_growth > 0.0);
     assert!(rb.condition_estimate >= 1.0);
 
+    // the v6 symbolic block: one parallel sample per thread count, the
+    // delta fixture touched exactly one column, timings sane
+    let sy = &report.symbolic;
+    assert_eq!(sy.threads, spec.thread_counts, "symbolic thread sweep");
+    assert_eq!(sy.parallel_ms.len(), sy.threads.len());
+    for v in sy
+        .parallel_ms
+        .iter()
+        .chain([sy.serial_ms, sy.cold_ms, sy.incremental_ms].iter())
+    {
+        assert!(v.is_finite() && *v > 0.0, "symbolic timing {v}");
+    }
+    assert_eq!(sy.changed_columns, 1, "fill-envelope delta touches one column");
+    assert_eq!(sy.recomputed_columns, 1, "in-envelope delta must not cascade");
+
     let json = report.to_json();
     validate_json_schema(&json).expect("well-formed report");
     assert!(json.contains("\"plan\""), "plan block must be emitted");
@@ -116,6 +136,7 @@ fn bench_smoke_report_covers_all_engines_and_validates() {
     assert!(json.contains("\"refactor_loop\""), "v3 block must be emitted");
     assert!(json.contains("\"schedule\""), "v4 block must be emitted");
     assert!(json.contains("\"robustness\""), "v5 block must be emitted");
+    assert!(json.contains("\"symbolic\""), "v6 block must be emitted");
 
     // and the file artifact round-trips
     let path = std::env::temp_dir().join("BENCH_numeric_smoke_test.json");
@@ -169,4 +190,34 @@ fn indexed_refactor_beats_search_baseline_on_acceptance_fixture() {
         rl.search_median_ms(),
         rl.speedup()
     );
+}
+
+/// The v6 acceptance bars: on the 100×100 AMD-ordered grid, (1) the
+/// wave-parallel symbolic phase at 4 threads is at least as fast as the
+/// serial pass (no regression from parallelizing — the win grows with the
+/// matrix), and (2) the incremental patch on a one-entry delta beats the
+/// cold symbolic pipeline by ≥ 5× (it recomputes one column out of 10 000).
+#[test]
+fn symbolic_fast_paths_hold_on_acceptance_fixture() {
+    let _serial = BENCH_LOCK.lock().unwrap();
+    let spec = BenchSpec::acceptance();
+    let sy = symbolic_report(&spec).expect("symbolic report");
+    assert_eq!(sy.threads.iter().copied().max(), Some(4));
+    assert!(
+        sy.speedup_parallel() >= 1.0,
+        "parallel symbolic @4t must not lose to serial: serial {:.2} ms vs \
+         parallel {:.2} ms ({:.2}x)",
+        sy.serial_ms,
+        sy.parallel_ms.last().unwrap(),
+        sy.speedup_parallel()
+    );
+    assert!(
+        sy.speedup_incremental() >= 5.0,
+        "incremental patch must beat cold symbolic ≥ 5x: cold {:.2} ms vs \
+         patch {:.3} ms ({:.2}x)",
+        sy.cold_ms,
+        sy.incremental_ms,
+        sy.speedup_incremental()
+    );
+    assert_eq!(sy.recomputed_columns, 1);
 }

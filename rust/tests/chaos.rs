@@ -12,7 +12,10 @@
 //! - **retry discipline**: transient faults retry with backoff, terminal
 //!   [`GluError::NumericallySingular`] exhaustion never does;
 //! - **the cached pattern survives faults**: the symbolic pipeline count
-//!   stays at the warm-up's single run no matter what values arrive.
+//!   stays at the warm-up's single run no matter what values arrive;
+//! - **structural near-misses patch**: mixed traffic over one-entry
+//!   pattern variants rides the incremental symbolic patch, keeping the
+//!   service-level symbolic run count sub-linear in distinct patterns.
 //!
 //! Fault decisions are a pure function of `(seed, request id)`, so these
 //! tests are reproducible regardless of worker interleaving.
@@ -237,6 +240,73 @@ fn deadlines_cancel_cooperatively_with_typed_errors() {
     assert_eq!(st.deadline_missed, 4);
     assert_eq!(st.completed, 0);
     assert_eq!(st.in_flight(), 0);
+}
+
+/// `count` one-entry structural variants of `a` at distinct absent
+/// coordinates — each a near-miss the pool's incremental patch absorbs.
+fn one_entry_variants(a: &Csc, count: usize, seed: u64) -> Vec<Csc> {
+    let mut rng = Rng::new(seed);
+    let n = a.ncols();
+    let mut used = std::collections::HashSet::new();
+    let mut out = Vec::with_capacity(count);
+    while out.len() < count {
+        let r = rng.below(n);
+        let c = rng.below(n);
+        if r != c && a.get(r, c) == 0.0 && used.insert((r, c)) {
+            out.push(gen::with_entry(a, r, c, -1e-2));
+        }
+    }
+    out
+}
+
+/// Mixed traffic over a base pattern plus five one-entry structural
+/// variants, under injected worker delay: every request resolves, nothing
+/// is lost, and the six distinct patterns cost ONE cold symbolic run —
+/// the five variants ride the near-miss incremental patch, so the
+/// service-level symbolic count stays sub-linear in distinct patterns.
+#[test]
+fn delta_pattern_traffic_patches_instead_of_recomputing() {
+    let a = base_matrix(8);
+    let variants = one_entry_variants(&a, 5, 0xDE17A);
+    let plan = FaultPlan {
+        delay: 1.0,
+        delay_ms: 2,
+        ..FaultPlan::disabled()
+    };
+    let cfg = ServeConfig {
+        queue_capacity: 64,
+        workers: 2,
+        default_deadline: Duration::from_secs(10),
+        max_coalesce: 1,
+        fault_plan: plan,
+        ..ServeConfig::default()
+    };
+    let server = Server::new(GluOptions::default(), cfg);
+    let t0 = server.tenant("mixed", 1);
+    server.warm(&a).unwrap();
+
+    let mut rng = Rng::new(0xA5A5);
+    let mut tickets = Vec::new();
+    for _round in 0..3 {
+        for m in std::iter::once(&a).chain(&variants) {
+            let m = restamp_columns(m, &mut rng);
+            let rhs = vec![vec![1.0; m.nrows()]];
+            tickets.push(server.submit(t0, m, rhs).unwrap());
+        }
+    }
+    for (i, t) in tickets.into_iter().enumerate() {
+        t.wait().unwrap_or_else(|e| panic!("request {i} failed: {e:#}"));
+    }
+
+    let st = server.shutdown();
+    assert_eq!(st.in_flight(), 0, "nothing may be lost");
+    assert_eq!(st.completed, 18);
+    assert!(
+        st.symbolic_runs <= 2,
+        "6 distinct patterns x 3 rounds must not cost per-pattern cold \
+         symbolic runs (got {}): the near-miss patch path is not engaging",
+        st.symbolic_runs
+    );
 }
 
 /// A queue-full burst against a slow single worker: the bounded queue

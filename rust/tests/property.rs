@@ -495,3 +495,141 @@ fn corrupted_scatter_map_is_rejected() {
     bad.l_len[j] -= 1;
     assert!(bad.validate(&f.filled, urow).is_err());
 }
+
+// ---------------------------------------------------------------------------
+// Symbolic tier: parallel ≡ serial and incremental-patch ≡ fresh.
+// ---------------------------------------------------------------------------
+
+const SEED_SYMBOLIC_DELTA: u64 = 0x5E11_0001;
+
+/// The three pattern families of the symbolic bit-identity sweep: an
+/// AMD-ordered mesh (the solver's own preprocessing), an RCM-ordered band
+/// matrix, and an unstructured random diagonally dominant pattern.
+fn symbolic_fixtures() -> Vec<(&'static str, Csc)> {
+    let grid = gen::grid2d(14, 12, 3);
+    let p = glu3::order::amd::amd_order(&grid).unwrap();
+    let amd_grid = grid.permute(p.as_scatter(), p.as_scatter());
+
+    let band = gen::netlist(180, 6, 10, 0.05, 2, 0.2, 21);
+    let p = glu3::order::rcm::rcm_order(&band).unwrap();
+    let rcm_band = band.permute(p.as_scatter(), p.as_scatter());
+
+    let mut rng = Rng::new(SEED_RANDOM_DD ^ 0x51);
+    let random = random_dd(160, 640, &mut rng);
+
+    vec![("amd-grid", amd_grid), ("rcm-band", rcm_band), ("random-dd", random)]
+}
+
+/// Wave-parallel fill discovery is bit-identical to the serial
+/// Gilbert–Peierls pass — filled pattern, values, fill count, dependency
+/// graph, and level sets — at every thread count, on every fixture family.
+#[test]
+fn parallel_symbolic_is_bit_identical_to_serial() {
+    use glu3::depend::{glu3 as det3, levelize};
+    use glu3::numeric::WorkerPool;
+    use glu3::symbolic::{parallel_symbolic, symbolic_fill, FillWorkspace};
+
+    for (label, a) in symbolic_fixtures() {
+        let sym = symbolic_fill(&a).unwrap();
+        let deps = det3::detect(&sym.filled);
+        let levels = levelize(&deps);
+        let mut ws = FillWorkspace::new();
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let par = parallel_symbolic(&a, &pool, &mut ws).unwrap();
+            assert_eq!(
+                par.sym.filled, sym.filled,
+                "{label} @{threads}t: filled pattern/values diverged"
+            );
+            assert_eq!(par.sym.fill_count, sym.fill_count, "{label} @{threads}t");
+            assert_eq!(par.deps, deps, "{label} @{threads}t: dependency graph");
+            assert_eq!(par.levels, levels, "{label} @{threads}t: level sets");
+        }
+    }
+}
+
+/// Patching a cached pattern against a randomized 1–2 column structural
+/// delta is bit-identical to fresh symbolic analysis of the new matrix —
+/// pattern, values, dependency graph, and levels.
+#[test]
+fn incremental_patch_is_bit_identical_to_fresh() {
+    use glu3::depend::{glu3 as det3, levelize};
+    use glu3::symbolic::{changed_columns, patch_symbolic, symbolic_fill, FillWorkspace};
+
+    let mut rng = Rng::new(SEED_SYMBOLIC_DELTA);
+    for (label, a) in symbolic_fixtures() {
+        let n = a.ncols();
+        let base = symbolic_fill(&a).unwrap();
+        let mut ws = FillWorkspace::new();
+        for trial in 0..6 {
+            // 1 or 2 extra entries at random absent coordinates
+            let mut a2 = a.clone();
+            for _ in 0..1 + (trial % 2) {
+                loop {
+                    let r = rng.below(n);
+                    let c = rng.below(n);
+                    if r != c && a2.get(r, c) == 0.0 {
+                        a2 = gen::with_entry(&a2, r, c, rng.range_f64(-0.01, 0.01));
+                        break;
+                    }
+                }
+            }
+            let changed = changed_columns(a.colptr(), a.rowidx(), &a2, n)
+                .expect("delta within budget");
+            assert!(!changed.is_empty() && changed.len() <= 2, "{label} trial {trial}");
+            let patch = patch_symbolic(&base, &a2, &changed, &mut ws).unwrap();
+
+            let fresh = symbolic_fill(&a2).unwrap();
+            let deps = det3::detect(&fresh.filled);
+            let levels = levelize(&deps);
+            assert_eq!(
+                patch.sym.filled, fresh.filled,
+                "{label} trial {trial} (seed {SEED_SYMBOLIC_DELTA:#x}): pattern"
+            );
+            assert_eq!(patch.sym.fill_count, fresh.fill_count, "{label} trial {trial}");
+            assert_eq!(patch.deps, deps, "{label} trial {trial}: dependency graph");
+            assert_eq!(patch.levels, levels, "{label} trial {trial}: levels");
+            assert!(
+                patch.recomputed >= changed.len(),
+                "{label} trial {trial}: taint closure must cover the changed columns"
+            );
+        }
+    }
+}
+
+/// Solver-level incremental factorization: `factor_delta` off a snapshot of
+/// the base pattern solves the perturbed system to the same accuracy as a
+/// cold `factor`, while reporting zero symbolic runs and one patch.
+#[test]
+fn factor_delta_matches_cold_factor() {
+    use glu3::symbolic::FillWorkspace;
+
+    let a = gen::grid2d(13, 11, 9);
+    let n = a.nrows();
+    let opts = GluOptions::default();
+    let base = GluSolver::factor(&a, &opts).unwrap();
+    let snap = base.symbolic_snapshot();
+
+    // a one-entry structural delta (absent coordinate, modest value)
+    assert_eq!(a.get(9, 2), 0.0, "fixture needs an absent coordinate");
+    let a2 = gen::with_entry(&a, 9, 2, -1e-2);
+    let changed = vec![2u32];
+
+    let mut ws = FillWorkspace::new();
+    let mut patched = GluSolver::factor_delta(&a2, &opts, &snap, &changed, &mut ws).unwrap();
+    let mut cold = GluSolver::factor(&a2, &opts).unwrap();
+
+    let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+    let xp = patched.solve(&b).unwrap();
+    let xc = cold.solve(&b).unwrap();
+    assert!(residual(&a2, &xp, &b) < 1e-8, "patched residual");
+    assert!(residual(&a2, &xc, &b) < 1e-8, "cold residual");
+    assert!(rel_linf(&xp, &xc) < 1e-8, "solutions must agree");
+
+    let st = patched.stats();
+    assert_eq!(st.symbolic_runs, 0, "patch must not rerun symbolic analysis");
+    assert_eq!(st.incremental_patches, 1);
+    assert_eq!(st.plan_builds, 1);
+    assert_eq!(st.detect_ms, 0.0);
+    assert_eq!((st.symbolic_ms - st.fillin_ms).abs(), 0.0);
+}
