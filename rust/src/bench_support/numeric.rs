@@ -24,10 +24,14 @@
 //! wave-parallel discovery ([`crate::symbolic::parfill`]) per thread
 //! count, and the cold pipeline against the incremental near-miss patch
 //! ([`crate::symbolic::delta`]) on a one-entry structural delta of the
-//! same pattern. Wired into the CLI as
-//! `glu3 bench` and into CI as a schema-validated smoke job; the perf
-//! trajectory lives in the emitted JSON, not in a CI gate (except the two
-//! v6 symbolic floors asserted by `bench_smoke`).
+//! same pattern. Schema v7 adds a `rescue` block: the rung-5
+//! threshold-partial-pivoting counters ([`crate::numeric::pivlu`]) from
+//! one deterministic fixed-order-exhausted refactor — rescues, swapped
+//! pivots, the cold rescue wall-clock beside the post-rescue fast-path
+//! refactor wall-clock, and the rescued probe residual. Wired into the
+//! CLI as `glu3 bench` and into CI as a schema-validated smoke job; the
+//! perf trajectory lives in the emitted JSON, not in a CI gate (except
+//! the two v6 symbolic floors asserted by `bench_smoke`).
 //!
 //! All timings are medians (factor/refactor/solve) or minima (the
 //! spawn-vs-pool ratio, where min is the stable statistic) over
@@ -292,6 +296,77 @@ pub fn robustness_report() -> anyhow::Result<RobustnessReport> {
     })
 }
 
+/// The rescue block (schema v7): ladder rung 5 driven once per bench run
+/// on a deterministic fixed-order-exhausted refactor — the healthy twin
+/// of a zero-diagonal-band matrix is factored (pinning the static order),
+/// then restamped with the adversarial values whose structurally zeroed
+/// diagonals defeat perturbation *and* re-equilibration, so the threshold
+/// partial-pivoting rescue ([`crate::numeric::pivlu`]) must fire. The
+/// cold `rescue_ms` (pivoting factorization + full pipeline rebuild) is
+/// reported beside the post-rescue `refactor_ms` (the same values on the
+/// rescued order), making the hot-swap's amortization measurable per run.
+#[derive(Debug, Clone)]
+pub struct RescueReport {
+    /// Rescues the driver's single exhausted refactor recorded (must be 1).
+    pub rescues: u64,
+    /// Pivot rows the rescue moved off the static choice.
+    pub swapped_pivots: u64,
+    /// Wall-clock of the cold rescue (pivoting factorization + symbolic
+    /// rebuild + engine rerun), ms.
+    pub rescue_ms: f64,
+    /// Median wall-clock of the post-rescue fast-path refactor on the
+    /// rescued order, ms.
+    pub refactor_ms: f64,
+    /// Scaled probe residual the accepted rescue achieved.
+    pub residual: f64,
+}
+
+/// Drive ladder rung 5 on the deterministic exhaustion fixture and capture
+/// the counters. Natural ordering and no scaling keep the twin's matching
+/// at identity, so the adversarial restamp's zeroed diagonals are
+/// guaranteed to land on pivots and cascade past every fixed-order rung.
+pub fn rescue_report() -> anyhow::Result<RescueReport> {
+    use crate::order::FillOrdering;
+
+    let a = gen::zero_diagonal_band(96, 48, 20260808);
+    let twin = gen::dominant_restamp(&a, 7);
+    let opts = GluOptions {
+        ordering: FillOrdering::Natural,
+        scale: false,
+        ..Default::default()
+    };
+    let mut solver = GluSolver::factor(&twin, &opts)?;
+    solver.refactor(&a)?;
+    let st = solver.stats();
+    anyhow::ensure!(
+        st.robustness.rescues == 1,
+        "the fixed-order ladder must exhaust into exactly one rescue"
+    );
+    anyhow::ensure!(
+        st.symbolic_runs == 2,
+        "the rescue must rebuild the symbolic pipeline exactly once"
+    );
+    let rescues = st.robustness.rescues;
+    let swapped_pivots = st.robustness.rescued_pivots;
+    let rescue_ms = st.robustness.rescue_ms;
+    let residual = st.robustness.last_residual;
+
+    // The same adversarial values again: now a plain fast-path refactor
+    // on the rescued order — its cost beside `rescue_ms` is the payoff.
+    let post = measure(1, 3, || solver.refactor(&a).expect("post-rescue refactor"));
+    anyhow::ensure!(
+        solver.stats().robustness.rescues == 1,
+        "the rescued order must not re-rescue"
+    );
+    Ok(RescueReport {
+        rescues,
+        swapped_pivots,
+        rescue_ms,
+        refactor_ms: post.median_ms(),
+        residual,
+    })
+}
+
 /// The symbolic block (schema v6): cold-start anatomy of the
 /// once-per-pattern phase. Serial fill+detect+levelize against the
 /// wave-parallel discovery on the persistent worker pool at each requested
@@ -446,6 +521,7 @@ pub struct BenchReport {
     pub refactor_loop: RefactorLoopReport,
     pub schedule: ScheduleReport,
     pub robustness: RobustnessReport,
+    pub rescue: RescueReport,
     pub symbolic: SymbolicReport,
 }
 
@@ -523,6 +599,7 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
     let baseline = spawn_vs_pool(spec)?;
     let refactor_loop = refactor_loop(spec)?;
     let robustness = robustness_report()?;
+    let rescue = rescue_report()?;
     let symbolic = symbolic_report(spec)?;
     let plan = plan.expect("at least one engine sampled");
     let schedule = schedule.expect("schedule engine sampled");
@@ -538,6 +615,7 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
         refactor_loop,
         schedule,
         robustness,
+        rescue,
         symbolic,
     })
 }
@@ -705,14 +783,14 @@ pub(crate) fn json_str_array(xs: &[String]) -> String {
 
 impl BenchReport {
     /// Hand-rolled JSON (no serde in the offline vendored crate set).
-    /// Schema `glu3-bench-numeric-v6` (v2 added the `plan` block, v3 the
+    /// Schema `glu3-bench-numeric-v7` (v2 added the `plan` block, v3 the
     /// `refactor_loop` block, v4 the `schedule` block, v5 the
     /// `robustness` block, v6 the `symbolic` block and the plan block's
-    /// `fillin_ms`); validated by the CI smoke job.
+    /// `fillin_ms`, v7 the `rescue` block); validated by the CI smoke job.
     pub fn to_json(&self) -> String {
         let mut s = String::new();
         s.push_str("{\n");
-        s.push_str("  \"schema\": \"glu3-bench-numeric-v6\",\n");
+        s.push_str("  \"schema\": \"glu3-bench-numeric-v7\",\n");
         s.push_str(&format!("  \"matrix\": \"{}\",\n", json_str(&self.matrix)));
         s.push_str(&format!("  \"n\": {},\n", self.n));
         s.push_str(&format!("  \"nnz\": {},\n", self.nnz));
@@ -797,6 +875,16 @@ impl BenchReport {
             rb.repairs,
             json_num_sci(rb.probe_residual)
         ));
+        let rs = &self.rescue;
+        s.push_str(&format!(
+            "  \"rescue\": {{\"rescues\": {}, \"swapped_pivots\": {}, \
+             \"rescue_ms\": {}, \"refactor_ms\": {}, \"residual\": {}}},\n",
+            rs.rescues,
+            rs.swapped_pivots,
+            json_num(rs.rescue_ms),
+            json_num(rs.refactor_ms),
+            json_num_sci(rs.residual)
+        ));
         let sy = &self.symbolic;
         let threads_u64: Vec<u64> = sy.threads.iter().map(|&t| t as u64).collect();
         s.push_str(&format!(
@@ -825,14 +913,14 @@ impl BenchReport {
     }
 }
 
-/// Light structural validation of a `glu3-bench-numeric-v6` document:
+/// Light structural validation of a `glu3-bench-numeric-v7` document:
 /// required keys present (including the v2 `plan`, v3 `refactor_loop`,
-/// v4 `schedule`, v5 `robustness`, and v6 `symbolic` blocks),
-/// braces/brackets balanced, at least one result row. (CI additionally
-/// runs it through a real JSON parser.)
+/// v4 `schedule`, v5 `robustness`, v6 `symbolic`, and v7 `rescue`
+/// blocks), braces/brackets balanced, at least one result row. (CI
+/// additionally runs it through a real JSON parser.)
 pub fn validate_json_schema(s: &str) -> anyhow::Result<()> {
     for key in [
-        "\"schema\": \"glu3-bench-numeric-v6\"",
+        "\"schema\": \"glu3-bench-numeric-v7\"",
         "\"matrix\"",
         "\"n\"",
         "\"nnz\"",
@@ -878,6 +966,11 @@ pub fn validate_json_schema(s: &str) -> anyhow::Result<()> {
         "\"escalations\"",
         "\"repairs\"",
         "\"probe_residual\"",
+        "\"rescue\"",
+        "\"rescues\"",
+        "\"swapped_pivots\"",
+        "\"rescue_ms\"",
+        "\"residual\"",
         "\"symbolic\"",
         "\"fillin_ms\"",
         "\"serial_ms\"",
@@ -992,6 +1085,16 @@ mod tests {
         }
     }
 
+    fn toy_rescue() -> RescueReport {
+        RescueReport {
+            rescues: 1,
+            swapped_pivots: 49,
+            rescue_ms: 4.0,
+            refactor_ms: 0.25,
+            residual: 1e-15,
+        }
+    }
+
     #[test]
     fn json_roundtrip_is_wellformed() {
         let report = BenchReport {
@@ -1024,6 +1127,7 @@ mod tests {
             refactor_loop: toy_refactor_loop(),
             schedule: toy_schedule(),
             robustness: toy_robustness(),
+            rescue: toy_rescue(),
             symbolic: toy_symbolic(),
         };
         let json = report.to_json();
@@ -1053,6 +1157,12 @@ mod tests {
         assert!(json.contains("\"escalations\": 0"));
         assert!(json.contains("\"repairs\": 1"));
         assert!(json.contains("\"probe_residual\": 1e-12"));
+        // the v7 rescue block: rung-5 counters, cold-vs-fast-path clocks
+        assert!(json.contains(
+            "\"rescue\": {\"rescues\": 1, \"swapped_pivots\": 49, \
+             \"rescue_ms\": 4.000000, \"refactor_ms\": 0.250000, \
+             \"residual\": 1e-15}"
+        ));
         // the v6 symbolic block: thread sweep arrays + both speedups
         assert!(json.contains("\"fillin_ms\": 0.312500"));
         assert!(json.contains("\"serial_ms\": 8.000000"));
@@ -1137,6 +1247,7 @@ mod tests {
             refactor_loop: toy_refactor_loop(),
             schedule: toy_schedule(),
             robustness: toy_robustness(),
+            rescue: toy_rescue(),
             symbolic: toy_symbolic(),
         };
         let json = report.to_json();
@@ -1146,8 +1257,25 @@ mod tests {
 
     #[test]
     fn validator_rejects_truncation() {
-        let report_json = "{\n  \"schema\": \"glu3-bench-numeric-v6\",\n  \"results\": [";
+        let report_json = "{\n  \"schema\": \"glu3-bench-numeric-v7\",\n  \"results\": [";
         assert!(validate_json_schema(report_json).is_err());
+    }
+
+    #[test]
+    fn rescue_report_records_the_hot_swap() {
+        let rs = rescue_report().unwrap();
+        assert_eq!(rs.rescues, 1, "exactly one rescue per driver run");
+        assert_eq!(
+            rs.swapped_pivots, 49,
+            "the zero-diagonal-band cascade forces band+1 pivot swaps"
+        );
+        assert!(rs.rescue_ms >= 0.0 && rs.rescue_ms.is_finite());
+        assert!(rs.refactor_ms >= 0.0 && rs.refactor_ms.is_finite());
+        assert!(
+            rs.residual.is_finite() && rs.residual <= 1e-9,
+            "accepted rescue above probe tolerance: {}",
+            rs.residual
+        );
     }
 
     #[test]

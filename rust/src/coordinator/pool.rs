@@ -413,6 +413,14 @@ impl SolverPool {
                 if e.key.hash == key.hash || e.key.n != key.n {
                     continue;
                 }
+                // A poisoned entry's plan annotations describe a numeric run
+                // that never completed, and a rescue-swapped entry's symbolic
+                // state lives on a re-permuted row order the delta patcher
+                // knows nothing about — either way its snapshot is not a
+                // sound delta base.
+                if e.solver.is_poisoned() || e.solver.is_rescued() {
+                    continue;
+                }
                 if e.key.nnz.abs_diff(key.nnz) * 8 > key.nnz.max(1) {
                     continue;
                 }
@@ -731,6 +739,85 @@ mod tests {
         assert_eq!(st.misses, 2);
         assert_eq!(st.factors, 2);
         assert_eq!(st.patched, 0);
+    }
+
+    #[test]
+    fn near_miss_scan_skips_poisoned_bases() {
+        // A cached entry whose last refactor failed partway is poisoned:
+        // its plan annotations describe a numeric run that never
+        // completed, so it must not serve as a delta base even though its
+        // pattern fits the near-miss budget.
+        let a = gen::grid2d(12, 12, 5);
+        let n = a.nrows();
+        let pool = SolverPool::new(GluOptions::default());
+        let b = vec![1.0; n];
+        pool.solve(&a, &b).unwrap();
+
+        let mut zeroed = a.clone();
+        for v in zeroed.values_mut() {
+            *v = 0.0;
+        }
+        let err = pool.checkout(&zeroed).unwrap_err();
+        assert!(err.downcast_ref::<crate::numeric::GluError>().is_some());
+        assert_eq!(pool.len(), 1, "numeric failure must retain the entry");
+
+        // The same near-miss that near_miss_takes_the_incremental_patch
+        // patches must now go cold: the only candidate base is poisoned.
+        let a2 = gen::with_entry(&a, 7, 2, -1e-3);
+        let x2 = pool.solve(&a2, &b).unwrap();
+        assert!(residual(&a2, &x2, &b) < 1e-7);
+        let st = pool.stats();
+        assert_eq!(st.patched, 0, "poisoned entry must not be a delta base");
+        assert_eq!(st.factors, 2);
+    }
+
+    #[test]
+    fn near_miss_scan_skips_rescue_swapped_bases() {
+        // A rung-5 pivot rescue re-permutes a cached solver's rows, so its
+        // symbolic state no longer matches what the cold pipeline would
+        // build for that pattern: the delta patcher must not extend it.
+        // The rescued entry itself keeps serving exact hits hot.
+        let opts = GluOptions {
+            ordering: crate::order::FillOrdering::Natural,
+            scale: false,
+            ..Default::default()
+        };
+        let pool = SolverPool::new(opts);
+        let a = gen::zero_diagonal_band(96, 48, 20260808);
+        let twin = gen::dominant_restamp(&a, 7);
+        let b = vec![1.0; 96];
+
+        let x = pool.solve(&twin, &b).unwrap();
+        assert!(residual(&twin, &x, &b) < 1e-7);
+
+        // Same pattern, adversarial values: the fixed-order ladder
+        // exhausts and the rescue hot-swaps the cached entry in place,
+        // under the shard lock, keyed exactly as before.
+        let mut g = pool.checkout(&a).unwrap();
+        assert_eq!(g.outcome(), Checkout::Refactored);
+        assert_eq!(g.stats().robustness.rescues, 1);
+        let xr = g.solve(&b).unwrap();
+        assert!(residual(&a, &xr, &b) < 1e-9);
+        drop(g);
+
+        // A structural near-miss of the twin (row 5 of column 60 is
+        // structurally empty in this generator) must factor cold rather
+        // than patch off the rescued entry.
+        let near = gen::with_entry(&twin, 5, 60, 1e-3);
+        assert_eq!(near.nnz(), twin.nnz() + 1);
+        let xn = pool.solve(&near, &b).unwrap();
+        assert!(residual(&near, &xn, &b) < 1e-7);
+        let st = pool.stats();
+        assert_eq!(st.patched, 0, "rescued entry must not be a delta base");
+        assert_eq!(st.factors, 2);
+
+        // The rescued entry still serves exact hits without re-rescuing:
+        // one cold symbolic run plus the one rescue rebuild, ever.
+        let g = pool.checkout(&a).unwrap();
+        assert_eq!(g.outcome(), Checkout::Refactored);
+        assert_eq!(g.stats().robustness.rescues, 1, "no re-rescue");
+        assert_eq!(g.stats().symbolic_runs, 2);
+        drop(g);
     }
 
     #[test]

@@ -35,10 +35,14 @@
 //!   [`GluError::DeadlineExceeded`].
 //! - **Retry** — checkout failures classified transient by
 //!   [`crate::numeric::is_transient`] are retried with exponential
-//!   backoff inside the remaining deadline budget. The robustness
-//!   ladder's in-place repairs (perturbed/escalated refactors) return
-//!   `Ok` and need no retry; [`GluError::NumericallySingular`] exhaustion
-//!   is terminal and is **never** retried.
+//!   backoff inside the remaining deadline budget, each sleep jittered
+//!   deterministically from the [`FaultPlan`] seed so coalesced tenants
+//!   never retry in lock-step. The robustness ladder's in-place repairs
+//!   (perturbed/escalated refactors, the rung-5 pivot rescue) return `Ok`
+//!   and need no retry; a [`GluError::NumericallySingular`] that escaped
+//!   *without* exhausting the ladder (cold-path factor, fallback race) is
+//!   recoverable-once, while ladder exhaustion — the matrix is singular
+//!   under every row order — is terminal and is **never** retried.
 //! - **Coalescing** — when a popped request has same-pattern, same-values
 //!   peers waiting anywhere in the queue, they ride the same checkout:
 //!   one refactor feeds every waiting solve for that stamp.
@@ -545,17 +549,41 @@ impl Inner {
     }
 
     /// Checkout with deadline-capped exponential-backoff retry of
-    /// *transient* failures (injected poisons, overload); terminal
-    /// failures — ladder exhaustion, structural errors — return
-    /// immediately.
+    /// *transient* failures (injected poisons, overload). A numerically
+    /// singular result is retried **once** unless the solver's ladder
+    /// already exhausted — a rescuable matrix is repaired inside
+    /// [`GluSolver::refactor`]'s rung-5 pivot rescue, so a singular error
+    /// *without* the ladder-exhausted marker means the rescue never got to
+    /// run (cold-path factor, fallback-pool race) and one more attempt may
+    /// land on the rescued entry. Terminal failures — ladder exhaustion,
+    /// structural errors — return immediately.
+    ///
+    /// Backoff sleeps carry deterministic seeded jitter (a pure function
+    /// of the [`FaultPlan`] seed, the leader's request id, and the attempt
+    /// number): coalesced tenants released by one rescue fan out instead
+    /// of retrying in lock-step, and a seeded chaos run stays
+    /// bit-reproducible.
+    ///
+    /// [`GluSolver::refactor`]: crate::glu::GluSolver::refactor
     fn checkout_with_retry(
         &self,
         a: &Csc,
+        id: u64,
         poisoned: bool,
         deadline: Instant,
     ) -> Result<PoolGuard<'_>, CheckoutErr> {
         let mut attempt: u32 = 0;
         let mut backoff = self.cfg.backoff_base;
+        let mut singular_retried = false;
+        let mix = id.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+        let mut jitter = Rng::new(self.cfg.fault_plan.seed ^ mix.rotate_left(29));
+        let mut sleep_with_jitter = |backoff: &mut Duration| {
+            self.retries.fetch_add(1, Ordering::Relaxed);
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let jittered = backoff.mul_f64(0.5 + jitter.f64());
+            std::thread::sleep(jittered.min(remaining));
+            *backoff = backoff.saturating_mul(2);
+        };
         loop {
             if Instant::now() >= deadline {
                 return Err(CheckoutErr::Deadline);
@@ -572,10 +600,20 @@ impl Inner {
             match res {
                 Ok(g) => return Ok(g),
                 Err(e) if is_transient(&e) && attempt < self.cfg.max_retries => {
-                    self.retries.fetch_add(1, Ordering::Relaxed);
-                    let remaining = deadline.saturating_duration_since(Instant::now());
-                    std::thread::sleep(backoff.min(remaining));
-                    backoff = backoff.saturating_mul(2);
+                    sleep_with_jitter(&mut backoff);
+                    attempt += 1;
+                }
+                Err(e)
+                    if !singular_retried
+                        && attempt < self.cfg.max_retries
+                        && matches!(
+                            e.downcast_ref::<GluError>(),
+                            Some(GluError::NumericallySingular { .. })
+                        )
+                        && !format!("{e:#}").contains("ladder exhausted") =>
+                {
+                    singular_retried = true;
+                    sleep_with_jitter(&mut backoff);
                     attempt += 1;
                 }
                 Err(e) => return Err(CheckoutErr::Failed(e)),
@@ -645,7 +683,7 @@ impl Inner {
         // members are re-checked individually before their solves.
         let latest = live.iter().map(|r| r.deadline).max().expect("batch");
         let poisoned = matches!(action, FaultAction::Poison);
-        match self.checkout_with_retry(served, poisoned, latest) {
+        match self.checkout_with_retry(served, lead.id, poisoned, latest) {
             Ok(mut guard) => {
                 for r in live {
                     self.solve_one(&mut guard, r);

@@ -4,7 +4,7 @@ use crate::depend::{glu1, glu2, glu3, levelize, DepGraph, Levels};
 use crate::gpusim::{simulate_refactorization, DeviceConfig, Policy, SimReport};
 use crate::numeric::pool::WorkerPool;
 use crate::numeric::trisolve::TriangularSchedule;
-use crate::numeric::{leftlook, parlu, parrl, rightlook, GluError, LuFactors, PivotMonitor};
+use crate::numeric::{leftlook, parlu, parrl, pivlu, rightlook, GluError, LuFactors, PivotMonitor};
 use crate::order::{preprocess, FillOrdering, Preprocessed};
 use crate::plan::FactorPlan;
 use crate::runtime::executor::{create_backend, DeviceExecutor, ExecReport};
@@ -191,6 +191,17 @@ pub struct RobustnessStats {
     /// Refactor calls that would have failed outright but were repaired in
     /// place by the ladder.
     pub repairs: u64,
+    /// Rung-5 rescues: refactor calls whose fixed pivot order was
+    /// numerically unsalvageable and that were saved by the threshold
+    /// partial-pivoting factorization ([`crate::numeric::pivlu`]) — each
+    /// one rebuilt the solver's symbolic state on a new row order.
+    pub rescues: u64,
+    /// Columns whose rescued pivot row differs from the static one,
+    /// summed over all rescues (the pivot-order drift).
+    pub rescued_pivots: u64,
+    /// Wall-clock of the last rescue, ms (pivoting factorization plus the
+    /// full symbolic/plan/workspace rebuild). 0.0 while no rescue ran.
+    pub rescue_ms: f64,
 }
 
 /// Phase timings and structural statistics of one factorization.
@@ -229,17 +240,19 @@ pub struct GluStats {
     /// Simulated-GPU report (None for CPU engines).
     pub sim: Option<SimReport>,
     /// How many times the symbolic pipeline (ordering + fill + dependency
-    /// detection + levelization) has run for this solver — always 1: the
-    /// whole point of [`GluSolver::refactor`] is that it never reruns.
-    /// Exposed so the service layer can *assert* the refactor fast path
-    /// skipped the CPU phases.
+    /// detection + levelization) has run for this solver — 1 unless a
+    /// rung-5 pivot rescue rebuilt the pattern on a new row order (then
+    /// 1 + rescues): the whole point of [`GluSolver::refactor`] is that it
+    /// never reruns on the fast path. Exposed so the service layer can
+    /// *assert* the refactor fast path skipped the CPU phases.
     pub symbolic_runs: usize,
     /// How many times the numeric kernel has run (1 for the initial factor
     /// plus one per [`GluSolver::refactor`]).
     pub numeric_runs: usize,
     /// How many times a [`FactorPlan`] has been built for this solver —
-    /// always 1: refactors and solves reuse it, and the service layer
-    /// asserts cache hits never replan.
+    /// 1 outside of rung-5 rescues (which replan once per rescue):
+    /// refactors and solves reuse it, and the service layer asserts cache
+    /// hits never replan.
     pub plan_builds: usize,
     /// Whether this solver's fill discovery ran wave-parallel on the
     /// worker pool (1) or serially (0).
@@ -843,9 +856,17 @@ impl GluSolver {
     /// 3. if refinement stalls, escalation: fresh Ruiz equilibration of
     ///    the new values on the *fixed* permutations, then one more
     ///    attempt (plain, then perturbed);
-    /// 4. only then a typed [`GluError::NumericallySingular`] — the solver
-    ///    stays poisoned until a later refactor succeeds, but its symbolic
-    ///    state remains reusable.
+    /// 4. when the fixed order itself is unsalvageable, the rung-5
+    ///    **pivot rescue**: a threshold partial-pivoting factorization
+    ///    ([`crate::numeric::pivlu`]) re-permutes the rows, and the whole
+    ///    static pipeline — filled pattern, dependency levels, plan,
+    ///    scatter map, launch schedule — is rebuilt in place on the
+    ///    rescued ordering (recorded in [`RobustnessStats::rescues`];
+    ///    subsequent refactors run the normal fast path, no re-rescue);
+    /// 5. only then a typed [`GluError::NumericallySingular`] — the matrix
+    ///    is singular under *every* row order; the solver stays poisoned
+    ///    until a later refactor succeeds, but its symbolic state remains
+    ///    reusable.
     pub fn refactor(&mut self, a: &crate::sparse::Csc) -> anyhow::Result<()> {
         anyhow::ensure!(
             a.nnz() == self.value_map.len() && a.nrows() == self.stats.n,
@@ -912,18 +933,155 @@ impl GluSolver {
             return Ok(());
         }
 
-        // Rung 3: the ladder is exhausted. Typed, so callers (the pool)
+        // Rung 5: the fixed-order ladder is exhausted — threshold partial
+        // pivoting as a last resort. On success the solver's symbolic
+        // state has been hot-swapped onto the rescued row order; on
+        // failure the error is terminal and typed, so callers (the pool)
         // can tell repairable-numeric from structural and keep the cached
         // symbolic state for the next refactor.
-        let col = bad_col;
-        Err(self.fail_numeric(anyhow::Error::with_payload(
-            format!(
-                "numeric robustness ladder exhausted: zero/non-finite pivot at \
-                 column {col} persisted through diagonal perturbation and \
-                 re-equilibration"
-            ),
-            GluError::NumericallySingular { col },
-        )))
+        match self.try_rescue(a, bad_col) {
+            Ok(()) => Ok(()),
+            Err(e) => Err(self.fail_numeric(e)),
+        }
+    }
+
+    /// Ladder rung 5 — the last resort, reached only after perturbation
+    /// and re-equilibration both failed. Factor the matrix in the solver's
+    /// current permuted/scaled domain with threshold partial pivoting,
+    /// then rebuild the entire static pipeline — filled pattern,
+    /// dependency levels, [`FactorPlan`], workspace, value/diag maps — on
+    /// the rescued row order and hot-swap it into `self`. Nothing in the
+    /// solver is mutated until the rescue factorization and the rebuilt
+    /// engine run have both succeeded, so a failed rescue leaves the old
+    /// (still-consistent) symbolic state in place for the next refactor.
+    fn try_rescue(&mut self, a: &crate::sparse::Csc, bad_col: usize) -> anyhow::Result<()> {
+        let t0 = std::time::Instant::now();
+        // The matrix whose static order just failed, in the solver's
+        // permuted/scaled domain: pivoting *within* this domain preserves
+        // the fill-reducing column order and whatever equilibration the
+        // escalation rung installed.
+        let cur = a.permute_scale(
+            self.pre.row_perm.as_scatter(),
+            self.pre.col_perm.as_scatter(),
+            self.apply_scales.then(|| self.pre.row_scale.as_slice()),
+            self.apply_scales.then(|| self.pre.col_scale.as_slice()),
+        );
+        let mut mon = PivotMonitor::new();
+        let rescued = match pivlu::factor(&cur, pivlu::DEFAULT_PIVOT_TOL, &mut mon) {
+            Ok(r) => r,
+            Err(e) => {
+                // Singular under every row order: terminal for real.
+                let col = match e.downcast_ref::<GluError>() {
+                    Some(GluError::NumericallySingular { col }) => *col,
+                    _ => bad_col,
+                };
+                return Err(anyhow::Error::with_payload(
+                    format!(
+                        "numeric robustness ladder exhausted: zero/non-finite \
+                         pivot at column {bad_col} persisted through diagonal \
+                         perturbation and re-equilibration, and the threshold \
+                         partial-pivoting rescue found no admissible pivot at \
+                         column {col}"
+                    ),
+                    GluError::NumericallySingular { col },
+                ));
+            }
+        };
+
+        // The discovered pattern *is* the no-pivot symbolic fill of the
+        // rescued row order (the Gilbert–Peierls reach argument), so the
+        // symbolic phase here is a pattern transplant: zero the factor
+        // values and restamp the matrix entries through the new order.
+        let n = self.stats.n;
+        let perm = rescued.row_perm.as_scatter();
+        let mut filled = rescued.lu.clone();
+        for v in filled.values_mut() {
+            *v = 0.0;
+        }
+        for c in 0..n {
+            let (rows, vals) = cur.col(c);
+            for (&r, &v) in rows.iter().zip(vals) {
+                let idx = filled
+                    .entry_index(perm[r], c)
+                    .expect("input entry missing from the rescued pattern");
+                filled.values_mut()[idx] += v;
+            }
+        }
+        let sym = SymbolicFill {
+            filled,
+            fill_count: rescued.fill_count,
+        };
+        let deps = detect(self.opts.detection, &sym);
+        let levels = levelize(&deps);
+        let plan = FactorPlan::from_levels(&sym, levels, &self.opts.policy, &self.opts.device);
+        let engine = resolve_engine(&self.opts.engine, self.opts.detection, &plan);
+        // A fresh workspace (and pool, for the multi-threaded engines):
+        // the old one stays untouched until the rescue commits.
+        let mut ws = NumericWorkspace::new(&engine, &sym, None)?;
+        let mut run_mon = PivotMonitor::new();
+        let (factors, sim, numeric_ms, exec) =
+            match run_engine(&engine, &plan, &sym, &mut ws, &mut run_mon) {
+                Ok(run) => run,
+                Err(e) => {
+                    return Err(anyhow::Error::with_payload(
+                        format!(
+                            "numeric robustness ladder exhausted: the threshold \
+                             partial-pivoting rescue factored the matrix but the \
+                             rebuilt static pipeline could not reproduce it: {e:#}"
+                        ),
+                        GluError::NumericallySingular { col: bad_col },
+                    ));
+                }
+            };
+
+        // Commit: compose the rescued row order into the preprocessing
+        // transform and install the rebuilt state. The original structural
+        // identity of the pattern is unchanged — the pool's cache key and
+        // near-miss scans still see the same matrix structure.
+        self.pre.row_perm = self.pre.row_perm.then(&rescued.row_perm);
+        let ident: Vec<usize> = (0..n).collect();
+        self.pre.a = cur.permute(perm, &ident);
+        self.sym = sym;
+        self.plan = plan;
+        self.factors = factors;
+        self.ws = ws;
+        self.engine = engine;
+        self.ws.fresh.copy_from_slice(self.sym.filled.values());
+        let max_stamp = max_abs(&self.ws.fresh);
+        self.diag_map = (0..n)
+            .map(|j| self.sym.filled.entry_index(j, j).unwrap_or(usize::MAX))
+            .collect();
+        self.value_map = build_value_map(a, &self.pre, &self.sym);
+        self.perturb_eps = 0.0;
+
+        self.stats.nnz = self.sym.filled.nnz();
+        self.stats.num_levels = self.plan.num_levels();
+        self.stats.max_level_size = self.plan.levels().max_level_size();
+        self.stats.symbolic_runs += 1;
+        self.stats.plan_builds += 1;
+        self.stats.resolved_engine = format!("{:?}", self.engine);
+        self.stats.robustness.rescues += 1;
+        self.stats.robustness.rescued_pivots += rescued.swapped_pivots as u64;
+        self.stats.robustness.rescue_ms = wall_ms(t0);
+
+        // Acceptance probe, exactly like the lower rungs: the rebuilt
+        // factors must reproduce the true stamped values. On failure the
+        // caller poisons the solver; the rescued symbolic state stays
+        // installed and consistent, so the next refactor retries on it.
+        let rel = self.probe_residual();
+        if rel > PROBE_TOL {
+            return Err(anyhow::Error::with_payload(
+                format!(
+                    "numeric robustness ladder exhausted: the partial-pivoting \
+                     rescue probe residual {rel:.3e} exceeds {PROBE_TOL:.0e}"
+                ),
+                GluError::NumericallySingular { col: bad_col },
+            ));
+        }
+        let mut full_mon = run_mon;
+        full_mon.merge(&mon);
+        self.finish_run((sim, numeric_ms, exec), &full_mon, max_stamp, rel);
+        Ok(())
     }
 
     /// Ladder rung 1 (shared with rung 2's second attempt): refactor with a
@@ -1041,6 +1199,22 @@ impl GluSolver {
     /// Factorization statistics.
     pub fn stats(&self) -> &GluStats {
         &self.stats
+    }
+
+    /// Whether the last refactor failed partway (factors are garbage and
+    /// solves are refused until a refactor succeeds). The pool's near-miss
+    /// scan must not patch from a poisoned solver's symbolic state.
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned
+    }
+
+    /// Whether a rung-5 pivot rescue has rebuilt this solver's symbolic
+    /// state on a new row order. The cached pattern key is unchanged (the
+    /// input structure is the same), but the internal plan/permutation no
+    /// longer match what the cold pipeline would build — so the near-miss
+    /// delta patcher must not use it as a base.
+    pub fn is_rescued(&self) -> bool {
+        self.stats.robustness.rescues > 0
     }
 
     /// The level schedule (Fig. 10 / Table III analysis).

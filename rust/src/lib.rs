@@ -252,19 +252,42 @@
 //!    equilibration of the new values on the *same* permutations, then
 //!    the perturbed retry again. Ordering, fill, dependency levels, plan,
 //!    scatter map, and launch schedule are all reused at every rung.
-//! 4. Only when every rung fails does `refactor` return an error — a
-//!    typed [`numeric::GluError::NumericallySingular`] carried in the
-//!    `anyhow` chain — with the stats scrubbed so stale timings can't be
-//!    mistaken for a successful run.
+//! 4. When the fixed order itself is unsalvageable, the last resort is
+//!    the **pivot rescue** ([`numeric::pivlu`]): a Gilbert–Peierls
+//!    left-looking factorization with *threshold partial pivoting* —
+//!    keep the static pivot when it is within a relative tolerance of
+//!    the best candidate, otherwise swap toward the largest (ties broken
+//!    toward sparser rows, Markowitz-style) — discovers the fill of the
+//!    new row order on the fly, and the entire static pipeline (filled
+//!    pattern, dependency levels, [`plan::FactorPlan`], scatter map,
+//!    launch schedule, workspace) is rebuilt and **hot-swapped in
+//!    place** on the rescued order. Subsequent refactors run the normal
+//!    fast path on that order — one rescue, not one per restamp.
+//! 5. Only when even the rescue finds no admissible pivot does
+//!    `refactor` return an error — a typed
+//!    [`numeric::GluError::NumericallySingular`] carried in the `anyhow`
+//!    chain — with the stats scrubbed so stale timings can't be mistaken
+//!    for a successful run.
+//!
+//! One consequence worth naming: a rescue makes the solver's internal
+//! row order *drift* from what the cold pipeline would build for the
+//! same pattern. Solutions are unaffected (the permutation is applied
+//! and undone inside `solve`), but raw LU values are no longer
+//! comparable entry-for-entry against a fresh `factor`, and cached
+//! symbolic state on the rescued order is not a valid delta base for
+//! structural near-miss patching — [`glu::GluSolver::is_rescued`] flags
+//! this, and the pool's near-miss scan skips such entries.
 //!
 //! [`glu::RobustnessStats`] (on [`glu::GluStats`]) counts perturbations,
-//! refinement steps, escalations, and repairs, and records the growth /
+//! refinement steps, escalations, repairs, and rescues (with swapped
+//! pivot counts and the rescue wall-clock), and records the growth /
 //! condition proxies and the accepted probe residual; `glu3 factor`
-//! prints them and `glu3 bench` emits them as the `robustness` block of
-//! `BENCH_numeric.json`. The serving tier leans on the same split:
-//! [`coordinator::SolverPool`] keeps a cached pattern when a checkout's
-//! refactor fails *numerically* (the next restamp will likely repair) and
-//! evicts only on structural failure.
+//! prints them and `glu3 bench` emits them as the `robustness` and
+//! `rescue` blocks of `BENCH_numeric.json`. The serving tier leans on
+//! the same split: [`coordinator::SolverPool`] keeps a cached pattern
+//! when a checkout's refactor fails *numerically* (the next restamp will
+//! likely repair), hot-swaps it under the same pattern key when a rescue
+//! re-permutes it, and evicts only on structural failure.
 //!
 //! ## Serving under failure
 //!

@@ -19,6 +19,10 @@
 //!   [`crate::gpusim::executor::simulate_refactorization`] and the
 //!   schedule executor ([`crate::runtime::executor::VirtualDevice`]) —
 //!   see `rust/tests/conformance.rs`.
+//! - [`pivlu`] — Gilbert–Peierls left-looking LU **with threshold partial
+//!   pivoting**: the rung-5 rescue for matrices whose fixed pivot order is
+//!   numerically unsalvageable (discovers fill on the fly, emits the new
+//!   row permutation; see the robustness ladder in [`crate::glu`]).
 //! - [`pool`] — the spawn-once worker pool + spin barrier all the
 //!   real-parallel paths (including the parallel triangular solves) share.
 //! - [`trisolve`] — sparse forward/backward substitution over the factors,
@@ -30,6 +34,7 @@ pub mod dense;
 pub mod leftlook;
 pub mod parlu;
 pub mod parrl;
+pub mod pivlu;
 pub mod pool;
 pub mod rightlook;
 pub mod trisolve;

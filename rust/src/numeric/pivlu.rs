@@ -1,0 +1,428 @@
+//! Gilbert–Peierls left-looking sparse LU **with threshold partial
+//! pivoting** — the rung-5 rescue factorization of the numeric robustness
+//! ladder.
+//!
+//! Every other engine in this crate factors a *statically filled* pattern
+//! without pivoting (the GLU regime): preprocessing is trusted to keep the
+//! fixed pivot order viable, and the ladder in [`crate::glu::GluSolver`]
+//! can only bend values on that pattern. This module is the CKTSO/NICSLU
+//! style last resort for the matrices the fixed order genuinely cannot
+//! factor: a classic Gilbert–Peierls left-looking elimination that
+//!
+//! - discovers fill **on the fly** into growable per-column buffers (no
+//!   precomputed symbolic phase — the reach DFS runs against the partial
+//!   row permutation as it is being chosen),
+//! - picks each pivot by **threshold partial pivoting**: the static
+//!   (diagonal) candidate is kept whenever it is within `tol` of the
+//!   column's largest eligible magnitude; otherwise the admissible
+//!   candidate with the smallest input row degree wins (a Markowitz-style
+//!   sparsity tie-break, smallest row index on equal degree),
+//! - emits the new row [`Permutation`] and the factors' merged fill
+//!   pattern **in pivoted row indices**.
+//!
+//! The returned pattern is exactly the fill pattern the *no-pivot*
+//! elimination of the row-permuted matrix produces (the Gilbert–Peierls
+//! reach argument, the same property KLU's `refactor` relies on), so the
+//! caller can rebuild the normal static pipeline — `SymbolicFill` →
+//! detection → levelization → `FactorPlan` — on the rescued ordering and
+//! every existing engine keeps refactoring it without pivoting.
+
+use super::{singular_pivot, PivotMonitor};
+use crate::sparse::{Csc, Permutation};
+
+/// Default pivot threshold: a candidate within `1e-3 ×` the column max is
+/// admissible, and the static diagonal is preferred whenever admissible —
+/// loose enough to keep most of the preprocessing's pivot order (small
+/// permutation drift, bounded fill), tight enough to cap element growth at
+/// `(1 + 1/tol)` per step.
+pub const DEFAULT_PIVOT_TOL: f64 = 1e-3;
+
+/// Result of a successful rescue factorization.
+#[derive(Debug, Clone)]
+pub struct RescuedLu {
+    /// Row permutation in scatter form over the *input's* row space:
+    /// `row_perm.as_scatter()[input_row] = pivoted_row`.
+    pub row_perm: Permutation,
+    /// Columns whose chosen pivot differs from the static diagonal row —
+    /// the permutation-drift count the robustness stats record.
+    pub swapped_pivots: usize,
+    /// The factors in compact L\U layout over the **pivoted** row indices:
+    /// `U` on/above the diagonal, unit-lower `L` strictly below (same
+    /// convention as [`crate::numeric::LuFactors`]). The sparsity pattern
+    /// of this matrix is the merged fill pattern of the rescued ordering.
+    pub lu: Csc,
+    /// Entries of `lu` that are fill (not structural in the input).
+    pub fill_count: usize,
+}
+
+/// Factor `a` (square, any viable row order) with threshold partial
+/// pivoting. `tol` is the admissibility threshold in `(0, 1]`; `mon`
+/// observes every chosen pivot so the caller's growth/condition gates work
+/// unchanged. Fails with a typed
+/// [`crate::numeric::GluError::NumericallySingular`] when some column has
+/// no admissible pivot — i.e. the matrix is singular (or so close that
+/// every candidate underflowed), which no row order can repair.
+pub fn factor(a: &Csc, tol: f64, mon: &mut PivotMonitor) -> anyhow::Result<RescuedLu> {
+    let n = a.ncols();
+    anyhow::ensure!(a.nrows() == n, "pivot rescue requires a square matrix");
+    anyhow::ensure!(tol > 0.0 && tol <= 1.0, "pivot threshold must be in (0, 1]");
+
+    // Markowitz-style tie-break data: input row degrees (cheaper than live
+    // degrees, and stable — the tie-break only has to *bias* toward
+    // sparsity, not optimize it).
+    let mut row_degree = vec![0usize; n];
+    for &r in a.rowidx() {
+        row_degree[r] += 1;
+    }
+
+    // pinv[input_row] = pivot position (usize::MAX while non-pivotal);
+    // pos[k] = input row chosen as pivot of column k.
+    let mut pinv = vec![usize::MAX; n];
+    let mut pos = vec![usize::MAX; n];
+
+    // Growable factor columns. L is kept in *input* row indices while the
+    // permutation is still partial (its rows are non-pivotal when stored
+    // and get their final index later); U rows are pivot positions, final
+    // at emission time.
+    let mut l_rows: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut l_vals: Vec<Vec<f64>> = vec![Vec::new(); n];
+    let mut u_rows: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut u_vals: Vec<Vec<f64>> = vec![Vec::new(); n];
+    let mut diag = vec![0.0f64; n];
+
+    // Dense accumulator + DFS scratch, indexed by input row.
+    let mut x = vec![0.0f64; n];
+    let mut mark = vec![usize::MAX; n];
+    let mut stack: Vec<(usize, usize)> = Vec::new();
+    let mut topo: Vec<usize> = Vec::with_capacity(n);
+
+    for j in 0..n {
+        // Symbolic step: reach of A(:,j) through the already-pivotal L
+        // columns, in DFS post-order (reversed below = topological).
+        topo.clear();
+        let (arows, avals) = a.col(j);
+        for &r0 in arows {
+            if mark[r0] == j {
+                continue;
+            }
+            mark[r0] = j;
+            stack.push((r0, 0));
+            while let Some(&(node, child)) = stack.last() {
+                let k = pinv[node];
+                let nchild = if k == usize::MAX { 0 } else { l_rows[k].len() };
+                if child < nchild {
+                    stack.last_mut().unwrap().1 += 1;
+                    let next = l_rows[k][child];
+                    if mark[next] != j {
+                        mark[next] = j;
+                        stack.push((next, 0));
+                    }
+                } else {
+                    topo.push(node);
+                    stack.pop();
+                }
+            }
+        }
+
+        // Numeric step: scatter A(:,j), then apply the pivotal updates in
+        // topological order (left-looking MAC against finished L columns).
+        for (&r, &v) in arows.iter().zip(avals) {
+            x[r] = v;
+        }
+        for &r in topo.iter().rev() {
+            let k = pinv[r];
+            if k == usize::MAX {
+                continue;
+            }
+            let xk = x[r];
+            if xk != 0.0 {
+                for (&lr, &lv) in l_rows[k].iter().zip(&l_vals[k]) {
+                    x[lr] -= xk * lv;
+                }
+            }
+        }
+
+        // Pivot search over the non-pivotal reach rows: threshold partial
+        // pivoting with the static diagonal preferred, Markowitz-biased
+        // otherwise.
+        let mut maxabs = 0.0f64;
+        for &r in &topo {
+            if pinv[r] == usize::MAX {
+                let v = x[r].abs();
+                if !v.is_finite() {
+                    clear(&mut x, &topo);
+                    return Err(singular_pivot(j).context(format!(
+                        "pivot rescue: non-finite candidate in column {j}"
+                    )));
+                }
+                if v > maxabs {
+                    maxabs = v;
+                }
+            }
+        }
+        if maxabs == 0.0 {
+            clear(&mut x, &topo);
+            return Err(singular_pivot(j).context(format!(
+                "pivot rescue: no admissible pivot in column {j} — \
+                 the matrix is singular under every row order"
+            )));
+        }
+        let admissible = tol * maxabs;
+        let mut pivot_row = usize::MAX;
+        // The static candidate: input row `j` sits on the diagonal of the
+        // caller's (already permuted) matrix.
+        if pinv[j] == usize::MAX && mark[j] == j && x[j].abs() >= admissible {
+            pivot_row = j;
+        } else {
+            let mut best_deg = usize::MAX;
+            for &r in &topo {
+                if pinv[r] == usize::MAX && x[r].abs() >= admissible {
+                    let deg = row_degree[r];
+                    if deg < best_deg || (deg == best_deg && r < pivot_row) {
+                        best_deg = deg;
+                        pivot_row = r;
+                    }
+                }
+            }
+        }
+        let pivot = x[pivot_row];
+        mon.observe(pivot);
+        pinv[pivot_row] = j;
+        pos[j] = pivot_row;
+
+        // Emit the column: pivotal reach rows are U entries (final row
+        // index = their pivot position), the rest join L scaled by the
+        // pivot. Reach rows are kept even when numerically zero — the
+        // pattern must stay the closed no-pivot fill of the rescued order.
+        diag[j] = pivot;
+        for &r in &topo {
+            let k = pinv[r];
+            if r == pivot_row {
+                continue;
+            }
+            if k == usize::MAX {
+                l_rows[j].push(r);
+                l_vals[j].push(x[r] / pivot);
+            } else {
+                u_rows[j].push(k);
+                u_vals[j].push(x[r]);
+            }
+        }
+        clear(&mut x, &topo);
+    }
+
+    // Every row is pivotal now; `pinv` is a complete scatter permutation.
+    let swapped_pivots = pos.iter().enumerate().filter(|&(k, &r)| r != k).count();
+    let row_perm = Permutation::from_scatter(pinv.clone())
+        .expect("pivot assignment yields a complete permutation");
+
+    // Assemble the compact L\U matrix in pivoted row indices, per-column
+    // sorted as the Csc invariants require.
+    let mut colptr = Vec::with_capacity(n + 1);
+    colptr.push(0usize);
+    let mut rowidx = Vec::new();
+    let mut values = Vec::new();
+    let mut entries: Vec<(usize, f64)> = Vec::new();
+    for j in 0..n {
+        entries.clear();
+        entries.extend(u_rows[j].iter().copied().zip(u_vals[j].iter().copied()));
+        entries.push((j, diag[j]));
+        entries.extend(
+            l_rows[j]
+                .iter()
+                .map(|&r| pinv[r])
+                .zip(l_vals[j].iter().copied()),
+        );
+        entries.sort_unstable_by_key(|&(r, _)| r);
+        for &(r, v) in entries.iter() {
+            rowidx.push(r);
+            values.push(v);
+        }
+        colptr.push(rowidx.len());
+    }
+    let lu = Csc::from_raw_parts(n, n, colptr, rowidx, values)?;
+    let fill_count = lu.nnz() - a.nnz();
+    Ok(RescuedLu {
+        row_perm,
+        swapped_pivots,
+        lu,
+        fill_count,
+    })
+}
+
+/// Zero the accumulator at exactly the touched positions.
+fn clear(x: &mut [f64], touched: &[usize]) {
+    for &r in touched {
+        x[r] = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::{dense, residual, GluError, LuFactors};
+    use crate::util::Rng;
+
+    /// Random sparse nonsingular matrix with some zero diagonals — needs
+    /// pivoting, solvable with it.
+    fn needs_pivoting(n: usize, seed: u64) -> Csc {
+        let mut rng = Rng::new(seed);
+        let mut dense = vec![0.0f64; n * n];
+        for i in 0..n {
+            // cyclic shift: row i holds its dominant entry at column (i+1)%n
+            dense[i * n + (i + 1) % n] = 4.0 + rng.f64();
+            for _ in 0..3 {
+                let c = rng.below(n);
+                dense[i * n + c] += rng.range_f64(-1.0, 1.0);
+            }
+        }
+        Csc::from_dense(n, n, &dense)
+    }
+
+    /// Apply the rescued permutation and compare `L·U` against `P·A`
+    /// densely.
+    fn check_reconstruction(a: &Csc, r: &RescuedLu, tol: f64) {
+        let n = a.ncols();
+        let pa = a.permute(r.row_perm.as_scatter(), Permutation::identity(n).as_scatter());
+        let want = pa.to_dense();
+        let got = LuFactors { lu: r.lu.clone() }.reconstruct_dense();
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= tol,
+                "L·U disagrees with P·A at flat index {i}: {g} vs {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn factors_permutation_heavy_matrices_the_static_order_cannot() {
+        for seed in [1u64, 7, 42] {
+            let a = needs_pivoting(24, seed);
+            let mut mon = PivotMonitor::new();
+            let r = factor(&a, DEFAULT_PIVOT_TOL, &mut mon).unwrap();
+            assert!(r.swapped_pivots > 0, "cyclic matrix must force swaps");
+            assert!(mon.min_abs_pivot > 0.0);
+            check_reconstruction(&a, &r, 1e-10);
+        }
+    }
+
+    #[test]
+    fn solve_through_rescued_factors_matches_dense_oracle() {
+        let n = 20;
+        let a = needs_pivoting(n, 3);
+        let mut mon = PivotMonitor::new();
+        let r = factor(&a, DEFAULT_PIVOT_TOL, &mut mon).unwrap();
+        let b = vec![1.0; n];
+        // Solve P·A·x = P·b through the sparse factors…
+        let pb = r.row_perm.apply(&b);
+        let x = LuFactors { lu: r.lu.clone() }.solve(&pb);
+        // …and check against the dense partial-pivoting oracle on A.
+        let want = dense::solve(&a.to_dense(), n, &b).unwrap();
+        for (g, w) in x.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9, "{g} vs {w}");
+        }
+        assert!(residual(&a, &x, &b) <= 1e-12);
+    }
+
+    #[test]
+    fn static_order_is_kept_when_admissible() {
+        // Diagonally dominant: every static pivot is the column max, so
+        // threshold pivoting must not drift the order at all.
+        let a = crate::sparse::gen::grid2d(5, 5, 0);
+        let mut mon = PivotMonitor::new();
+        let r = factor(&a, DEFAULT_PIVOT_TOL, &mut mon).unwrap();
+        assert_eq!(r.swapped_pivots, 0, "dominant diagonal must not drift");
+        assert_eq!(
+            r.row_perm.as_scatter(),
+            Permutation::identity(a.ncols()).as_scatter()
+        );
+        check_reconstruction(&a, &r, 1e-12);
+    }
+
+    #[test]
+    fn pattern_is_closed_under_nopivot_refactorization() {
+        // The rescued pattern must be exactly reusable by the static
+        // pipeline: symbolic fill of P·A may not exceed it.
+        let a = needs_pivoting(30, 11);
+        let mut mon = PivotMonitor::new();
+        let r = factor(&a, DEFAULT_PIVOT_TOL, &mut mon).unwrap();
+        let n = a.ncols();
+        let pa = a.permute(r.row_perm.as_scatter(), Permutation::identity(n).as_scatter());
+        let f = crate::symbolic::symbolic_fill(&pa).unwrap();
+        for c in 0..n {
+            let (rows, _) = f.filled.col(c);
+            for &row in rows {
+                assert!(
+                    r.lu.has_entry(row, c),
+                    "fill entry ({row},{c}) of the rescued order missing \
+                     from the discovered pattern"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn truly_singular_is_typed_and_names_the_column() {
+        // Rank-deficient: column 2 = column 0, so elimination runs dry.
+        let mut d = vec![0.0f64; 9];
+        d[0] = 1.0; // (0,0)
+        d[1] = 2.0; // (0,1)
+        d[2] = 1.0; // (0,2) == column 0
+        d[3] = 3.0; // (1,0)
+        d[4] = 1.0; // (1,1)
+        d[5] = 3.0; // (1,2)
+        d[6] = 2.0; // (2,0)
+        d[7] = 4.0; // (2,1)
+        d[8] = 2.0; // (2,2)
+        let a = Csc::from_dense(3, 3, &d);
+        let mut mon = PivotMonitor::new();
+        let e = factor(&a, DEFAULT_PIVOT_TOL, &mut mon).unwrap_err();
+        assert_eq!(
+            e.downcast_ref::<GluError>(),
+            Some(&GluError::NumericallySingular { col: 2 })
+        );
+        assert!(format!("{e:#}").contains("no admissible pivot"), "{e:#}");
+    }
+
+    #[test]
+    fn all_zero_values_fail_on_the_first_column() {
+        let mut a = crate::sparse::gen::grid2d(4, 4, 9);
+        for v in a.values_mut() {
+            *v = 0.0;
+        }
+        let mut mon = PivotMonitor::new();
+        let e = factor(&a, DEFAULT_PIVOT_TOL, &mut mon).unwrap_err();
+        assert_eq!(
+            e.downcast_ref::<GluError>(),
+            Some(&GluError::NumericallySingular { col: 0 })
+        );
+    }
+
+    #[test]
+    fn matches_dense_oracle_pivot_for_pivot_at_tol_one() {
+        // With tol = 1.0 the threshold rule *is* partial pivoting (largest
+        // magnitude wins; degree only breaks exact-magnitude ties, which a
+        // random matrix does not produce). Pin the permutation and factor
+        // values against `dense::lu_inplace`.
+        let n = 12;
+        let a = needs_pivoting(n, 5);
+        let mut mon = PivotMonitor::new();
+        let r = factor(&a, 1.0, &mut mon).unwrap();
+        let mut lu = a.to_dense();
+        let piv = dense::lu_inplace(&mut lu, n).unwrap();
+        // dense piv is gather form (piv[k] = input row at step k).
+        let want = Permutation::from_order(&piv).unwrap();
+        assert_eq!(r.row_perm.as_scatter(), want.as_scatter());
+        for i in 0..n {
+            for j in 0..n {
+                let g = r.lu.get(r.row_perm.as_scatter()[i], j);
+                // dense lu holds the factors in pivoted rows already
+                let k = want.as_scatter()[i];
+                let w = lu[k * n + j];
+                if g != 0.0 || w != 0.0 {
+                    assert!((g - w).abs() < 1e-12, "({i},{j}): {g} vs {w}");
+                }
+            }
+        }
+    }
+}

@@ -303,6 +303,124 @@ pub fn skew_unsymmetric(a: &Csc, decades: f64, seed: u64) -> Csc {
     m
 }
 
+// ---------------------------------------------------------------------------
+// Pivot-order killers — the rung-5 rescue test fixtures.
+//
+// Unlike the restamps above, these *construct* matrices (pattern and values)
+// that no fixed-order repair can save: the static pivot sequence hits an
+// exact zero that diagonal perturbation turns into a 1/eps elimination
+// cascade, overflowing to a non-finite pivot long before the last column —
+// under the original values, under perturbation, and under Ruiz rescaling
+// alike. Only a factorization that *changes the row order*
+// ([`crate::numeric::pivlu`]) factors them; threshold partial pivoting then
+// finds unit-magnitude pivots and growth ~1. Both matrices are exactly
+// nonsingular, and [`dominant_restamp`] produces a diagonally-dominant
+// "healthy twin" on the identical pattern so a solver can be factored
+// cleanly first and fed the hostile values through `refactor`.
+// ---------------------------------------------------------------------------
+
+/// A band of explicit-zero diagonals backed by a unit subdiagonal chain.
+///
+/// Columns `0..band` carry an explicit `0.0` diagonal and a unit
+/// subdiagonal `(j+1, j)`; entry `(0, band)` closes the chain so the matrix
+/// stays exactly nonsingular (determinant `±1` times the healthy block).
+/// Columns `band..n` get a dominant random diagonal plus a sparse seeded
+/// background strictly inside the healthy block. The fixed-order ladder
+/// dies deterministically: rung 0 hits the exact zero at column 0, and the
+/// perturbed reruns (rungs 1–4) push `1/eps ≈ 1e8` multipliers down the
+/// chain, overflowing into column `band` after ~40 steps — so keep
+/// `band >= 44`. Partial pivoting instead walks the unit subdiagonals and
+/// swaps exactly `band + 1` pivots.
+pub fn zero_diagonal_band(n: usize, band: usize, seed: u64) -> Csc {
+    assert!(band >= 44 && band + 2 < n, "need 44 <= band < n - 2");
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n, n);
+    for j in 0..band {
+        coo.push(j, j, 0.0); // explicit zero diagonal: pattern, no value
+        coo.push(j + 1, j, 1.0); // unit subdiagonal chain
+    }
+    coo.push(0, band, 1.0); // closes the chain: keeps the matrix nonsingular
+    for j in band..n {
+        coo.push(j, j, 4.0 + rng.f64());
+    }
+    // Sparse background strictly inside the healthy block, off-diagonal, so
+    // it can neither revive the dead band nor feed column `band` early.
+    for _ in 0..n {
+        let r = rng.range(band + 1, n);
+        let c = rng.range(band + 1, n);
+        if r != c {
+            coo.push(r, c, 0.01 * rng.range_f64(-1.0, 1.0));
+        }
+    }
+    coo.to_csc()
+}
+
+/// Rows of an upper-bidiagonal matrix shuffled block-cyclically.
+///
+/// Builds a well-behaved upper-bidiagonal `B` (diagonal `±[3,5]`,
+/// superdiagonal `±[0.5,1]`), then shifts every row up by one inside each
+/// `block`-sized group (the top row wraps to the bottom) — the classic
+/// "rows arrived in the wrong order" failure MC64 would normally undo at
+/// preprocessing time, landing mid-stream on a solver whose permutations
+/// are already frozen. Every diagonal of the shuffled matrix is
+/// structurally zero (stored explicitly), so the ladder's perturbed reruns
+/// cascade `1/eps` multipliers down each block and overflow before the
+/// block ends — keep `block >= 44`. Threshold partial pivoting simply
+/// rediscovers the un-shuffled order: all `n` pivots swap, growth ~1.
+pub fn shuffle_rows(n: usize, block: usize, seed: u64) -> Csc {
+    assert!(block >= 44 && n % block == 0, "need block >= 44 dividing n");
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n, n);
+    let shifted = |r: usize| {
+        let b = (r / block) * block;
+        b + (r + block - b - 1) % block
+    };
+    for i in 0..n {
+        let s = if rng.chance(0.5) { 1.0 } else { -1.0 };
+        coo.push(shifted(i), i, s * rng.range_f64(3.0, 5.0));
+        if i + 1 < n {
+            let s = if rng.chance(0.5) { 1.0 } else { -1.0 };
+            coo.push(shifted(i), i + 1, s * rng.range_f64(0.5, 1.0));
+        }
+    }
+    for i in 0..n {
+        coo.push(i, i, 0.0); // explicit zero diagonal at every column
+    }
+    coo.to_csc()
+}
+
+/// Diagonally-dominant healthy twin on an identical pattern: every
+/// off-diagonal value is redrawn in `[-1, 1]` and every diagonal is then
+/// stamped to `1 + margin` above its row's off-diagonal mass — so the
+/// greedy matching is the identity, the no-pivot factorization is clean,
+/// and the result is a legal `factor` precursor for a later `refactor`
+/// with the adversarial values (same pattern, hostile stamps).
+pub fn dominant_restamp(a: &Csc, seed: u64) -> Csc {
+    let mut rng = Rng::new(seed ^ 0xD0_0D);
+    let mut m = a.clone();
+    let n = m.ncols();
+    let colptr = m.colptr().to_vec();
+    let rowidx = m.rowidx().to_vec();
+    let vals = m.values_mut();
+    let mut offmass = vec![0.0f64; n];
+    for c in 0..n {
+        for p in colptr[c]..colptr[c + 1] {
+            if rowidx[p] != c {
+                vals[p] = rng.range_f64(-1.0, 1.0);
+                offmass[rowidx[p]] += vals[p].abs();
+            }
+        }
+    }
+    for c in 0..n {
+        for p in colptr[c]..colptr[c + 1] {
+            if rowidx[p] == c {
+                vals[p] = offmass[c] + 1.0 + rng.f64();
+            }
+        }
+    }
+    m
+}
+
 /// 5-point 2-D mesh Laplacian (G3_circuit class).
 pub fn grid2d(nx: usize, ny: usize, seed: u64) -> Csc {
     let n = nx * ny;
@@ -780,6 +898,68 @@ mod tests {
             for ((&r, &v), &bv) in rows.iter().zip(vals).zip(bvals) {
                 let want = if r % 3 == 0 { v * 1e10 } else { v };
                 assert_eq!(bv, want, "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_diagonal_band_structure() {
+        let a = zero_diagonal_band(96, 48, 1);
+        assert_eq!((a.nrows(), a.ncols()), (96, 96));
+        assert!(a.has_full_diagonal(), "explicit zeros must be structural");
+        for j in 0..48 {
+            assert_eq!(a.get(j, j), 0.0, "col {j} diagonal must be zero");
+            assert!(a.has_entry(j, j), "col {j} diagonal must be stored");
+            assert_eq!(a.get(j + 1, j), 1.0, "col {j} unit subdiagonal");
+        }
+        assert_eq!(a.get(0, 48), 1.0, "chain-closing entry");
+        for j in 48..96 {
+            assert!(a.get(j, j) >= 4.0, "col {j} healthy diagonal");
+        }
+        // deterministic, and seed-sensitive in the healthy block
+        assert_eq!(zero_diagonal_band(96, 48, 1), a);
+        assert_ne!(zero_diagonal_band(96, 48, 2).get(50, 50), a.get(50, 50));
+    }
+
+    #[test]
+    fn shuffle_rows_structure() {
+        let a = shuffle_rows(96, 48, 9);
+        // 2n-1 shifted bidiagonal entries + n explicit zero diagonals, and
+        // none of the shifted coordinates lands on the diagonal.
+        assert_eq!(a.nnz(), 3 * 96 - 1);
+        assert!(a.has_full_diagonal());
+        for i in 0..96 {
+            assert_eq!(a.get(i, i), 0.0, "diagonal {i} must be zero");
+        }
+        // every column keeps exactly one large entry (the shuffled pivot)
+        for c in 0..96 {
+            let (_, vals) = a.col(c);
+            let big = vals.iter().filter(|v| v.abs() >= 3.0).count();
+            assert_eq!(big, 1, "col {c} must keep exactly one pivot entry");
+        }
+        assert_eq!(shuffle_rows(96, 48, 9), a);
+    }
+
+    #[test]
+    fn dominant_restamp_is_a_healthy_twin() {
+        for a in [zero_diagonal_band(96, 48, 3), shuffle_rows(96, 48, 3)] {
+            let t = dominant_restamp(&a, 17);
+            assert_eq!(t.colptr(), a.colptr());
+            assert_eq!(t.rowidx(), a.rowidx());
+            // row-dominant (stable no-pivot LU) and column-dominant (the
+            // greedy matching keeps the natural row order)
+            let mut offrow = vec![0.0f64; 96];
+            for c in 0..96 {
+                let (rows, vals) = t.col(c);
+                for (&r, &v) in rows.iter().zip(vals) {
+                    if r != c {
+                        offrow[r] += v.abs();
+                        assert!(v.abs() <= 1.0);
+                    }
+                }
+            }
+            for c in 0..96 {
+                assert!(t.get(c, c) >= offrow[c] + 1.0, "row {c} not dominant");
             }
         }
     }

@@ -129,6 +129,20 @@ fn bench_smoke_report_covers_all_engines_and_validates() {
     assert_eq!(sy.changed_columns, 1, "fill-envelope delta touches one column");
     assert_eq!(sy.recomputed_columns, 1, "in-envelope delta must not cascade");
 
+    // the v7 rescue block: the fixed-order ladder exhausted exactly once
+    // into the rung-5 pivot rescue, and the rescued order refactors at
+    // fast-path cost afterwards
+    let rs = &report.rescue;
+    assert_eq!(rs.rescues, 1, "rescue fixture must record one rescue");
+    assert!(rs.swapped_pivots >= 1, "a rescue must swap pivots");
+    assert!(rs.rescue_ms.is_finite() && rs.rescue_ms >= 0.0);
+    assert!(rs.refactor_ms.is_finite() && rs.refactor_ms >= 0.0);
+    assert!(
+        rs.residual.is_finite() && rs.residual <= 1e-9,
+        "rescued residual above probe tolerance: {}",
+        rs.residual
+    );
+
     let json = report.to_json();
     validate_json_schema(&json).expect("well-formed report");
     assert!(json.contains("\"plan\""), "plan block must be emitted");
@@ -137,6 +151,7 @@ fn bench_smoke_report_covers_all_engines_and_validates() {
     assert!(json.contains("\"schedule\""), "v4 block must be emitted");
     assert!(json.contains("\"robustness\""), "v5 block must be emitted");
     assert!(json.contains("\"symbolic\""), "v6 block must be emitted");
+    assert!(json.contains("\"rescue\""), "v7 block must be emitted");
 
     // and the file artifact round-trips
     let path = std::env::temp_dir().join("BENCH_numeric_smoke_test.json");

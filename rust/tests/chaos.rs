@@ -1,7 +1,8 @@
 //! Chaos tier: the fault-tolerant serving core under a deterministic,
 //! seeded fault matrix — {injected delay, rung-2 repair stamp, rung-3
-//! escalation stamp, singular exhaustion, poisoned checkout, queue-full
-//! burst} × {1, 4} tenants.
+//! escalation stamp, singular exhaustion, rescuable singular burst
+//! (rung-5 pivot rescue), poisoned checkout, queue-full burst} × {1, 4}
+//! tenants.
 //!
 //! The invariants under test, for every scenario:
 //!
@@ -170,6 +171,58 @@ fn singular_exhaustion_is_terminal_typed_and_never_retried() {
             );
         }
     }
+}
+
+/// A burst of rescuable-singular stamps — structurally zeroed diagonals
+/// that defeat the fixed-order ladder outright — against a warm pattern:
+/// the first request pays the rung-5 pivot rescue and hot-swaps the pool
+/// entry, the rest ride the rescued order's refactor fast path. Zero lost
+/// requests, zero terminal singular replies, and the whole burst shares
+/// one rescue rebuild on top of the warm-up's single cold symbolic run.
+#[test]
+fn singular_burst_is_rescued_with_zero_lost_requests() {
+    use glu3::order::FillOrdering;
+
+    let a = gen::zero_diagonal_band(96, 48, 20260808);
+    let twin = gen::dominant_restamp(&a, 7);
+    let opts = GluOptions {
+        ordering: FillOrdering::Natural,
+        scale: false,
+        ..Default::default()
+    };
+    let cfg = ServeConfig {
+        queue_capacity: 64,
+        workers: 2,
+        default_deadline: Duration::from_secs(10),
+        max_coalesce: 1,
+        fault_plan: FaultPlan::disabled(),
+        ..ServeConfig::default()
+    };
+    let server = Server::new(opts, cfg);
+    let t0 = server.tenant("spice", 1);
+    server.warm(&twin).unwrap();
+
+    let b = vec![1.0; 96];
+    let tickets: Vec<_> = (0..8)
+        .map(|_| server.submit(t0, a.clone(), vec![b.clone()]).unwrap())
+        .collect();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let xs = t.wait().unwrap_or_else(|e| {
+            panic!("request {i}: a rescuable singular burst must not fail: {e:#}")
+        });
+        let r = glu3::numeric::residual(&a, &xs[0], &b);
+        assert!(r <= 1e-9, "request {i}: rescued residual {r}");
+    }
+
+    let st = server.shutdown();
+    assert_eq!(st.in_flight(), 0, "nothing may be lost or hung");
+    assert_eq!(st.completed, 8);
+    assert_eq!(st.failed, 0, "no terminal singular replies");
+    assert_eq!(st.retries, 0, "the rescue happens inside refactor, not via retry");
+    assert_eq!(
+        st.symbolic_runs, 2,
+        "one warm-up cold run plus one rescue rebuild, shared by the burst"
+    );
 }
 
 /// Poisoned checkouts (typed transient faults on the first attempt) are

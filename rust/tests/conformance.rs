@@ -336,3 +336,84 @@ fn golden_pattern_fixtures_pin_lowering_and_levelization() {
         assert!(residual(&a, &x, &b) < 1e-10, "{name}: factors must solve");
     }
 }
+
+/// Golden pivot-rescue fixture: a checked-in `zero_diagonal_band` instance
+/// whose fixed-order ladder exhausts deterministically (the 48-column dead
+/// band overflows every perturbed rerun), pinned through the full rescue
+/// flow — factor the diagonally-dominant twin, refactor with the hostile
+/// values, and compare the rescue invariants (rescue count, swapped pivot
+/// count, rebuild counters) field-by-field against the golden file. The
+/// rescued factors must then solve to dense-partial-pivoting-oracle
+/// accuracy and refactor again *without* re-rescuing.
+#[test]
+fn golden_rescue_fixture_pins_the_pivot_rescue() {
+    let dir = fixture_dir();
+    let a = glu3::sparse::io::read_matrix_market(dir.join("rescue_zdb_96.mtx"))
+        .expect("reading rescue fixture");
+    let golden_text = std::fs::read_to_string(dir.join("rescue_zdb_96.golden"))
+        .expect("reading rescue golden file");
+    let golden = parse_golden(&golden_text);
+
+    let twin = glu3::sparse::gen::dominant_restamp(&a, 7);
+    let opts = glu3::glu::GluOptions {
+        ordering: glu3::order::FillOrdering::Natural,
+        scale: false,
+        ..Default::default()
+    };
+    let mut s = glu3::glu::GluSolver::factor(&twin, &opts).expect("twin must factor cleanly");
+    assert_eq!(s.stats().robustness.rescues, 0);
+    s.refactor(&a)
+        .unwrap_or_else(|e| panic!("rung 5 must rescue the fixture: {e:#}"));
+
+    let st = s.stats();
+    let got: Vec<(&str, u64)> = vec![
+        ("n", a.nrows() as u64),
+        ("nnz", a.nnz() as u64),
+        ("rescues", st.robustness.rescues),
+        ("rescued_pivots", st.robustness.rescued_pivots),
+        ("symbolic_runs", st.symbolic_runs as u64),
+        ("plan_builds", st.plan_builds as u64),
+    ];
+    let mut diffs = Vec::new();
+    for (k, g) in &got {
+        match golden.get(*k) {
+            Some(w) if w == g => {}
+            Some(w) => diffs.push(format!("  {k}: got {g}, golden expects {w}")),
+            None => diffs.push(format!("  {k}: got {g}, missing from golden file")),
+        }
+    }
+    for k in golden.keys() {
+        if !got.iter().any(|(gk, _)| gk == k) {
+            diffs.push(format!("  {k}: in golden file but not measured"));
+        }
+    }
+    assert!(
+        diffs.is_empty(),
+        "pivot rescue drifted from the golden fixture:\n{}\n\
+         (regenerate rescue_zdb_96.golden only for an intentional ladder \
+         or pivoting-policy change)",
+        diffs.join("\n")
+    );
+    assert!(st.robustness.rescue_ms >= 0.0);
+
+    // The rescued factors solve to dense partial-pivoting oracle accuracy.
+    let n = a.nrows();
+    let b: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+    let x = s.solve(&b).expect("rescued solver must solve");
+    let want = glu3::numeric::dense::solve(&a.to_dense(), n, &b).expect("oracle must factor");
+    let drift = x
+        .iter()
+        .zip(&want)
+        .map(|(g, w)| (g - w).abs())
+        .fold(0.0f64, f64::max);
+    assert!(drift <= 1e-9, "rescued solve drifts {drift:.3e} from the dense oracle");
+    assert!(residual(&a, &x, &b) <= 1e-9, "rescued residual too large");
+
+    // Subsequent refactor on the rescued ordering: fast path, no re-rescue,
+    // no second symbolic rebuild.
+    s.refactor(&a).expect("refactor on the rescued ordering must succeed");
+    assert_eq!(s.stats().robustness.rescues, 1, "must not re-rescue");
+    assert_eq!(s.stats().symbolic_runs, 2, "no extra symbolic pass");
+    let x2 = s.solve(&b).unwrap();
+    assert!(residual(&a, &x2, &b) <= 1e-9, "post-rescue refactor residual");
+}
