@@ -28,10 +28,16 @@
 //! threshold-partial-pivoting counters ([`crate::numeric::pivlu`]) from
 //! one deterministic fixed-order-exhausted refactor — rescues, swapped
 //! pivots, the cold rescue wall-clock beside the post-rescue fast-path
-//! refactor wall-clock, and the rescued probe residual. Wired into the
-//! CLI as `glu3 bench` and into CI as a schema-validated smoke job; the
-//! perf trajectory lives in the emitted JSON, not in a CI gate (except
-//! the two v6 symbolic floors asserted by `bench_smoke`).
+//! refactor wall-clock, and the rescued probe residual. Schema v8 adds a
+//! `batched` block: the value-plane head-to-head — `B` looped refactors
+//! against one [`GluSolver::refactor_batch`] schedule walk and `B`
+//! single-RHS solves against one blocked [`GluSolver::solve_many_into`]
+//! trisolve walk, per batch size `B ∈ {1, 4, 16}` — plus the histogram
+//! of trisolve variants (sequential / level-set / sync-free) the timed
+//! solvers ran. Wired into the CLI as `glu3 bench` and into CI as a
+//! schema-validated smoke job; the perf trajectory lives in the emitted
+//! JSON, not in a CI gate (except the two v6 symbolic floors and the v8
+//! batched-refactor floor asserted by `bench_smoke`).
 //!
 //! All timings are medians (factor/refactor/solve) or minima (the
 //! spawn-vs-pool ratio, where min is the stable statistic) over
@@ -508,6 +514,142 @@ impl SpawnBaseline {
     }
 }
 
+/// The batched value-plane head-to-head (schema v8): one solver on the
+/// batched parallel right-looking engine, timing `B` looped
+/// [`GluSolver::refactor`] calls against one [`GluSolver::refactor_batch`]
+/// schedule walk, and `B` single-RHS [`GluSolver::solve`] calls against
+/// one blocked [`GluSolver::solve_many_into`] trisolve walk, per batch
+/// size. Also carries the trisolve-variant histogram: which of
+/// sequential / level-set / sync-free the timed solvers actually ran.
+#[derive(Debug, Clone)]
+pub struct BatchedReport {
+    pub threads: usize,
+    /// The batch sizes measured (index-aligned with the clock arrays).
+    pub batch_sizes: Vec<usize>,
+    /// Min wall-clock of `B` looped refactors, ms, per batch size.
+    pub looped_refactor_ms: Vec<f64>,
+    /// Min wall-clock of one `refactor_batch` over `B` planes, ms.
+    pub batched_refactor_ms: Vec<f64>,
+    /// Min wall-clock of `B` looped single-RHS solves, ms.
+    pub looped_solve_ms: Vec<f64>,
+    /// Min wall-clock of one blocked `solve_many_into` over `B` RHS, ms.
+    pub batched_solve_ms: Vec<f64>,
+    /// Trisolve-variant labels seen across the timed solvers…
+    pub variant_labels: Vec<String>,
+    /// …and how many solvers ran each (index-aligned with the labels).
+    pub variant_counts: Vec<u64>,
+}
+
+impl BatchedReport {
+    /// Looped / batched refactor wall-clock ratio at batch size `b`
+    /// (≥ 1.3 at the largest batch is the acceptance bar). NaN if `b`
+    /// was not measured.
+    pub fn refactor_speedup(&self, b: usize) -> f64 {
+        match self.batch_sizes.iter().position(|&x| x == b) {
+            Some(i) => self.looped_refactor_ms[i] / self.batched_refactor_ms[i].max(1e-9),
+            None => f64::NAN,
+        }
+    }
+
+    /// Looped / blocked solve wall-clock ratio at batch size `b`.
+    pub fn solve_speedup(&self, b: usize) -> f64 {
+        match self.batch_sizes.iter().position(|&x| x == b) {
+            Some(i) => self.looped_solve_ms[i] / self.batched_solve_ms[i].max(1e-9),
+            None => f64::NAN,
+        }
+    }
+
+    /// The largest batch size measured.
+    pub fn max_batch(&self) -> usize {
+        self.batch_sizes.iter().copied().max().unwrap_or(1)
+    }
+
+    /// Count one solver having run trisolve variant `label` (empty labels
+    /// — a solver that never solved — are ignored).
+    pub fn count_variant(&mut self, label: &str) {
+        if label.is_empty() {
+            return;
+        }
+        match self.variant_labels.iter().position(|l| l == label) {
+            Some(i) => self.variant_counts[i] += 1,
+            None => {
+                self.variant_labels.push(label.to_string());
+                self.variant_counts.push(1);
+            }
+        }
+    }
+}
+
+/// Run the batched head-to-head: factor `spec.a` once on the parallel
+/// right-looking engine at the largest requested thread count, then per
+/// batch size time looped-vs-batched refactor and looped-vs-blocked
+/// solve over value-scaled copies of the matrix (the transient-analysis
+/// shape: one pattern, `B` Newton-step Jacobians / stacked right-hand
+/// sides).
+pub fn batched_report(spec: &BenchSpec) -> anyhow::Result<BatchedReport> {
+    let threads = spec.thread_counts.iter().copied().max().unwrap_or(1);
+    let opts = GluOptions {
+        engine: NumericEngine::ParallelRightLooking { threads },
+        ..Default::default()
+    };
+    let mut solver = GluSolver::factor(&spec.a, &opts)?;
+    let n = spec.a.nrows();
+    let batch_sizes = vec![1usize, 4, 16];
+    let maxb = *batch_sizes.last().expect("non-empty batch sizes");
+    let mats: Vec<Csc> = (0..maxb)
+        .map(|p| {
+            let mut m = spec.a.clone();
+            for v in m.values_mut() {
+                *v *= 1.0 + 0.01 * (p as f64 + 1.0);
+            }
+            m
+        })
+        .collect();
+    let rhs: Vec<Vec<f64>> = (0..maxb)
+        .map(|k| (0..n).map(|i| 1.0 + ((i * 7 + k) % 31) as f64 / 31.0).collect())
+        .collect();
+
+    let mut report = BatchedReport {
+        threads,
+        batch_sizes: batch_sizes.clone(),
+        looped_refactor_ms: Vec::new(),
+        batched_refactor_ms: Vec::new(),
+        looped_solve_ms: Vec::new(),
+        batched_solve_ms: Vec::new(),
+        variant_labels: Vec::new(),
+        variant_counts: Vec::new(),
+    };
+    for &bsz in &batch_sizes {
+        let refs: Vec<&Csc> = mats[..bsz].iter().collect();
+        let looped = measure(spec.warmup, spec.iters, || {
+            for a in &refs {
+                solver.refactor(a).expect("bench looped refactor");
+            }
+        });
+        let batched = measure(spec.warmup, spec.iters, || {
+            solver.refactor_batch(&refs).expect("bench batched refactor")
+        });
+        let block = &rhs[..bsz];
+        let looped_solve = measure(spec.warmup, spec.iters.max(3), || {
+            for b in block {
+                solver.solve(b).expect("bench looped solve");
+            }
+        });
+        let mut out = vec![vec![0.0; n]; bsz];
+        let batched_solve = measure(spec.warmup, spec.iters.max(3), || {
+            solver
+                .solve_many_into(block, &mut out)
+                .expect("bench blocked solve")
+        });
+        report.looped_refactor_ms.push(looped.min * 1e3);
+        report.batched_refactor_ms.push(batched.min * 1e3);
+        report.looped_solve_ms.push(looped_solve.min * 1e3);
+        report.batched_solve_ms.push(batched_solve.min * 1e3);
+    }
+    report.count_variant(solver.stats().trisolve_variant);
+    Ok(report)
+}
+
 /// Full report, serializable with [`BenchReport::to_json`].
 #[derive(Debug, Clone)]
 pub struct BenchReport {
@@ -523,6 +665,7 @@ pub struct BenchReport {
     pub robustness: RobustnessReport,
     pub rescue: RescueReport,
     pub symbolic: SymbolicReport,
+    pub batched: BatchedReport,
 }
 
 /// Run the whole harness over `spec`.
@@ -557,6 +700,7 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
     let mut samples = Vec::with_capacity(engines.len());
     let mut plan: Option<PlanReport> = None;
     let mut schedule: Option<ScheduleReport> = None;
+    let mut variant_labels: Vec<&'static str> = Vec::new();
     for (name, engine) in engines {
         let threads = engine.threads();
         let opts = GluOptions {
@@ -587,6 +731,8 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
         if schedule.is_none() {
             schedule = schedule_report(&solver);
         }
+        // The trisolve-variant histogram: what this solver's solves ran.
+        variant_labels.push(solver.stats().trisolve_variant);
         samples.push(EngineSample {
             engine: name,
             threads,
@@ -601,6 +747,10 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
     let robustness = robustness_report()?;
     let rescue = rescue_report()?;
     let symbolic = symbolic_report(spec)?;
+    let mut batched = batched_report(spec)?;
+    for label in variant_labels {
+        batched.count_variant(label);
+    }
     let plan = plan.expect("at least one engine sampled");
     let schedule = schedule.expect("schedule engine sampled");
 
@@ -617,6 +767,7 @@ pub fn run(spec: &BenchSpec) -> anyhow::Result<BenchReport> {
         robustness,
         rescue,
         symbolic,
+        batched,
     })
 }
 
@@ -783,14 +934,15 @@ pub(crate) fn json_str_array(xs: &[String]) -> String {
 
 impl BenchReport {
     /// Hand-rolled JSON (no serde in the offline vendored crate set).
-    /// Schema `glu3-bench-numeric-v7` (v2 added the `plan` block, v3 the
+    /// Schema `glu3-bench-numeric-v8` (v2 added the `plan` block, v3 the
     /// `refactor_loop` block, v4 the `schedule` block, v5 the
     /// `robustness` block, v6 the `symbolic` block and the plan block's
-    /// `fillin_ms`, v7 the `rescue` block); validated by the CI smoke job.
+    /// `fillin_ms`, v7 the `rescue` block, v8 the `batched` block);
+    /// validated by the CI smoke job.
     pub fn to_json(&self) -> String {
         let mut s = String::new();
         s.push_str("{\n");
-        s.push_str("  \"schema\": \"glu3-bench-numeric-v7\",\n");
+        s.push_str("  \"schema\": \"glu3-bench-numeric-v8\",\n");
         s.push_str(&format!("  \"matrix\": \"{}\",\n", json_str(&self.matrix)));
         s.push_str(&format!("  \"n\": {},\n", self.n));
         s.push_str(&format!("  \"nnz\": {},\n", self.nnz));
@@ -885,6 +1037,31 @@ impl BenchReport {
             json_num(rs.refactor_ms),
             json_num_sci(rs.residual)
         ));
+        let bt = &self.batched;
+        let sizes_u64: Vec<u64> = bt.batch_sizes.iter().map(|&b| b as u64).collect();
+        let variants: Vec<String> = bt
+            .variant_labels
+            .iter()
+            .zip(&bt.variant_counts)
+            .map(|(l, c)| format!("\"{}\": {}", json_str(l), c))
+            .collect();
+        let maxb = bt.max_batch();
+        s.push_str(&format!(
+            "  \"batched\": {{\"threads\": {}, \"batch_sizes\": {}, \
+             \"looped_refactor_ms\": {}, \"batched_refactor_ms\": {}, \
+             \"looped_solve_ms\": {}, \"batched_solve_ms\": {}, \
+             \"refactor_speedup_at_max\": {}, \"solve_speedup_at_max\": {}, \
+             \"trisolve_variants\": {{{}}}}},\n",
+            bt.threads,
+            json_u64_array(&sizes_u64),
+            json_num_array(&bt.looped_refactor_ms),
+            json_num_array(&bt.batched_refactor_ms),
+            json_num_array(&bt.looped_solve_ms),
+            json_num_array(&bt.batched_solve_ms),
+            json_num(bt.refactor_speedup(maxb)),
+            json_num(bt.solve_speedup(maxb)),
+            variants.join(", ")
+        ));
         let sy = &self.symbolic;
         let threads_u64: Vec<u64> = sy.threads.iter().map(|&t| t as u64).collect();
         s.push_str(&format!(
@@ -913,14 +1090,14 @@ impl BenchReport {
     }
 }
 
-/// Light structural validation of a `glu3-bench-numeric-v7` document:
+/// Light structural validation of a `glu3-bench-numeric-v8` document:
 /// required keys present (including the v2 `plan`, v3 `refactor_loop`,
-/// v4 `schedule`, v5 `robustness`, v6 `symbolic`, and v7 `rescue`
-/// blocks), braces/brackets balanced, at least one result row. (CI
-/// additionally runs it through a real JSON parser.)
+/// v4 `schedule`, v5 `robustness`, v6 `symbolic`, v7 `rescue`, and v8
+/// `batched` blocks), braces/brackets balanced, at least one result
+/// row. (CI additionally runs it through a real JSON parser.)
 pub fn validate_json_schema(s: &str) -> anyhow::Result<()> {
     for key in [
-        "\"schema\": \"glu3-bench-numeric-v7\"",
+        "\"schema\": \"glu3-bench-numeric-v8\"",
         "\"matrix\"",
         "\"n\"",
         "\"nnz\"",
@@ -981,6 +1158,15 @@ pub fn validate_json_schema(s: &str) -> anyhow::Result<()> {
         "\"speedup_incremental\"",
         "\"changed_columns\"",
         "\"recomputed_columns\"",
+        "\"batched\"",
+        "\"batch_sizes\"",
+        "\"looped_refactor_ms\"",
+        "\"batched_refactor_ms\"",
+        "\"looped_solve_ms\"",
+        "\"batched_solve_ms\"",
+        "\"refactor_speedup_at_max\"",
+        "\"solve_speedup_at_max\"",
+        "\"trisolve_variants\"",
     ] {
         anyhow::ensure!(s.contains(key), "missing key {key}");
     }
@@ -1095,6 +1281,19 @@ mod tests {
         }
     }
 
+    fn toy_batched() -> BatchedReport {
+        BatchedReport {
+            threads: 4,
+            batch_sizes: vec![1, 4, 16],
+            looped_refactor_ms: vec![1.0, 4.0, 16.0],
+            batched_refactor_ms: vec![1.0, 2.0, 8.0],
+            looped_solve_ms: vec![0.5, 2.0, 8.0],
+            batched_solve_ms: vec![0.5, 1.0, 4.0],
+            variant_labels: vec!["sequential".into(), "level-set".into()],
+            variant_counts: vec![3, 1],
+        }
+    }
+
     #[test]
     fn json_roundtrip_is_wellformed() {
         let report = BenchReport {
@@ -1129,6 +1328,7 @@ mod tests {
             robustness: toy_robustness(),
             rescue: toy_rescue(),
             symbolic: toy_symbolic(),
+            batched: toy_batched(),
         };
         let json = report.to_json();
         validate_json_schema(&json).unwrap();
@@ -1172,6 +1372,46 @@ mod tests {
         assert!(json.contains("\"speedup_incremental\": 20.000000"));
         assert!(json.contains("\"changed_columns\": 1"));
         assert!(json.contains("\"recomputed_columns\": 1"));
+        // the v8 batched block: per-B clock arrays, speedups at B=16,
+        // and the trisolve-variant histogram
+        assert!(json.contains("\"batch_sizes\": [1, 4, 16]"));
+        assert!(json.contains("\"looped_refactor_ms\": [1.000000, 4.000000, 16.000000]"));
+        assert!(json.contains("\"batched_refactor_ms\": [1.000000, 2.000000, 8.000000]"));
+        assert!(json.contains("\"refactor_speedup_at_max\": 2.000000"));
+        assert!(json.contains("\"solve_speedup_at_max\": 2.000000"));
+        assert!(json.contains("\"trisolve_variants\": {\"sequential\": 3, \"level-set\": 1}"));
+    }
+
+    #[test]
+    fn batched_report_speedups_and_histogram() {
+        let mut bt = toy_batched();
+        assert!((bt.refactor_speedup(16) - 2.0).abs() < 1e-12);
+        assert!((bt.solve_speedup(16) - 2.0).abs() < 1e-12);
+        assert!((bt.refactor_speedup(1) - 1.0).abs() < 1e-12);
+        assert!(bt.refactor_speedup(3).is_nan(), "unmeasured batch size");
+        assert_eq!(bt.max_batch(), 16);
+        // the histogram merges repeats and ignores never-solved solvers
+        bt.count_variant("sequential");
+        bt.count_variant("");
+        bt.count_variant("sync-free");
+        assert_eq!(bt.variant_labels.len(), 3);
+        assert_eq!(bt.variant_counts, vec![4, 1, 1]);
+    }
+
+    #[test]
+    fn batched_report_measures_all_batch_sizes() {
+        let bt = batched_report(&BenchSpec::smoke()).unwrap();
+        assert_eq!(bt.batch_sizes, vec![1, 4, 16]);
+        for arr in [
+            &bt.looped_refactor_ms,
+            &bt.batched_refactor_ms,
+            &bt.looped_solve_ms,
+            &bt.batched_solve_ms,
+        ] {
+            assert_eq!(arr.len(), 3);
+            assert!(arr.iter().all(|&ms| ms > 0.0 && ms.is_finite()));
+        }
+        assert!(!bt.variant_labels.is_empty(), "the driver's solves count");
     }
 
     #[test]
@@ -1249,6 +1489,7 @@ mod tests {
             robustness: toy_robustness(),
             rescue: toy_rescue(),
             symbolic: toy_symbolic(),
+            batched: toy_batched(),
         };
         let json = report.to_json();
         validate_json_schema(&json).unwrap();
@@ -1257,7 +1498,7 @@ mod tests {
 
     #[test]
     fn validator_rejects_truncation() {
-        let report_json = "{\n  \"schema\": \"glu3-bench-numeric-v7\",\n  \"results\": [";
+        let report_json = "{\n  \"schema\": \"glu3-bench-numeric-v8\",\n  \"results\": [";
         assert!(validate_json_schema(report_json).is_err());
     }
 

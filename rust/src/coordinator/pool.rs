@@ -244,9 +244,23 @@ impl PoolGuard<'_> {
 
     /// Solve a batch of right-hand sides against the checked-out factors.
     pub fn solve_many(&mut self, rhs: &[Vec<f64>]) -> anyhow::Result<Vec<Vec<f64>>> {
-        let xs = self.shard.entries[self.idx].solver.solve_many(rhs)?;
+        let mut out = vec![vec![0.0; self.stats().n]; rhs.len()];
+        self.solve_many_into(rhs, &mut out)?;
+        Ok(out)
+    }
+
+    /// Blocked batch solve over caller-provided storage
+    /// ([`GluSolver::solve_many_into`]): one trisolve walk for the whole
+    /// batch, zero solve-path allocations in steady state — the serve
+    /// loop's coalesced groups ride this.
+    pub fn solve_many_into(
+        &mut self,
+        rhs: &[Vec<f64>],
+        out: &mut [Vec<f64>],
+    ) -> anyhow::Result<()> {
+        self.shard.entries[self.idx].solver.solve_many_into(rhs, out)?;
         self.pool.solves.fetch_add(rhs.len() as u64, Ordering::Relaxed);
-        Ok(xs)
+        Ok(())
     }
 }
 

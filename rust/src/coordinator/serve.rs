@@ -8,9 +8,9 @@
 //!
 //! ```text
 //! submit ──► admission ──► fairness ──► coalesce ──► checkout ──► solve
-//!            bounded       round-robin  by pattern   retry w/     per-RHS
-//!            queue,        over per-    key: one     backoff on   deadline
-//!            priority      tenant sub-  refactor     transient    checks
+//!            bounded       round-robin  by pattern   retry w/     one blocked
+//!            queue,        over per-    key: one     backoff on   trisolve walk
+//!            priority      tenant sub-  refactor     transient    per group
 //!            shedding      queues       feeds all    faults only
 //!            │                          waiters      │
 //!            ▼ GluError::Overloaded                  ▼ GluError::
@@ -30,7 +30,7 @@
 //!   round-robin across tenants, so one chatty tenant cannot starve the
 //!   rest no matter how deep its backlog.
 //! - **Deadlines** — every request carries a budget; cancellation is
-//!   cooperative, checked at the dequeue, checkout, and per-RHS solve
+//!   cooperative, checked at the dequeue, checkout, and group-solve
 //!   boundaries, and a missed deadline replies with a typed
 //!   [`GluError::DeadlineExceeded`].
 //! - **Retry** — checkout failures classified transient by
@@ -45,7 +45,10 @@
 //!   under every row order — is terminal and is **never** retried.
 //! - **Coalescing** — when a popped request has same-pattern, same-values
 //!   peers waiting anywhere in the queue, they ride the same checkout:
-//!   one refactor feeds every waiting solve for that stamp.
+//!   one refactor feeds every waiting solve for that stamp, and the whole
+//!   group's right-hand sides are stacked into **one** blocked trisolve
+//!   walk ([`crate::glu::GluSolver::solve_many_into`], counted by
+//!   [`ServeStats::batched_solve_walks`]).
 //! - **Degradation** — sustained pressure (the backlog holding above ¾
 //!   of capacity) flips the loop to a fallback pool whose engine is the
 //!   cheapest viable one (the sequential left-looking oracle), trading
@@ -330,6 +333,13 @@ pub struct ServeStats {
     /// Requests that rode another request's checkout (batch members
     /// beyond each leader).
     pub coalesced: u64,
+    /// Blocked multi-RHS trisolve walks issued by the serving loop — one
+    /// per processed group with at least one right-hand side, no matter
+    /// how many coalesced requests (or RHS per request) rode it. A
+    /// coalesced group costs exactly one walk: the acceptance invariant is
+    /// `batched_solve_walks + deadline_missed + failed >= submitted -
+    /// coalesced` with equality under clean traffic.
+    pub batched_solve_walks: u64,
     /// Checkouts served by the degraded fallback engine.
     pub degraded_checkouts: u64,
     /// Worker threads that died (panicked) over the server's lifetime.
@@ -422,6 +432,7 @@ struct Inner {
     failed: AtomicU64,
     retries: AtomicU64,
     coalesced: AtomicU64,
+    batched_solve_walks: AtomicU64,
     degraded_checkouts: AtomicU64,
     worker_panics: AtomicU64,
     injected_delays: AtomicU64,
@@ -621,41 +632,65 @@ impl Inner {
         }
     }
 
-    /// Solve one request against a held checkout, with cooperative
-    /// deadline checks between right-hand sides.
-    fn solve_one(&self, guard: &mut PoolGuard<'_>, r: Request) {
-        let mut xs: Vec<Vec<f64>> = Vec::with_capacity(r.rhs.len());
-        let mut err: Option<anyhow::Error> = None;
-        let mut timed_out = Instant::now() >= r.deadline;
-        if !timed_out {
-            for b in &r.rhs {
-                if Instant::now() >= r.deadline {
-                    timed_out = true;
-                    break;
+    /// Solve a coalesced group against a held checkout with **one**
+    /// blocked trisolve walk: every live member's right-hand sides are
+    /// stacked into a single [`PoolGuard::solve_many_into`] call (the
+    /// RHS vectors are moved, not copied, through worker-owned scratch),
+    /// then the solution block is split back per request. Deadlines are
+    /// re-checked per member at the solve boundary; a shared failure is
+    /// cloned to every member's reply.
+    fn solve_group(
+        &self,
+        guard: &mut PoolGuard<'_>,
+        live: Vec<Request>,
+        scratch: &mut SolveScratch,
+    ) {
+        let now = Instant::now();
+        let (mut ready, expired): (Vec<Request>, Vec<Request>) =
+            live.into_iter().partition(|r| now < r.deadline);
+        for r in expired {
+            self.finish_deadline(r);
+        }
+        if ready.is_empty() {
+            return;
+        }
+        scratch.rhs.clear();
+        scratch.counts.clear();
+        for r in ready.iter_mut() {
+            scratch.counts.push(r.rhs.len());
+            scratch.rhs.append(&mut r.rhs);
+        }
+        let total = scratch.rhs.len();
+        scratch.out.resize_with(total, Vec::new);
+        match guard.solve_many_into(&scratch.rhs, &mut scratch.out) {
+            Ok(()) => {
+                if total > 0 {
+                    self.batched_solve_walks.fetch_add(1, Ordering::Relaxed);
                 }
-                match guard.solve(b) {
-                    Ok(x) => xs.push(x),
-                    Err(e) => {
-                        err = Some(e);
-                        break;
-                    }
+                let mut off = 0usize;
+                for (r, &cnt) in ready.into_iter().zip(scratch.counts.iter()) {
+                    let xs: Vec<Vec<f64>> = scratch.out[off..off + cnt]
+                        .iter_mut()
+                        .map(std::mem::take)
+                        .collect();
+                    off += cnt;
+                    self.completed.fetch_add(1, Ordering::Relaxed);
+                    let ms = r.enqueued.elapsed().as_secs_f64() * 1e3;
+                    lock(&self.latency).record(ms);
+                    let _ = r.reply.send(Ok(xs));
+                }
+            }
+            Err(e) => {
+                for r in ready {
+                    self.failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = r.reply.send(Err(clone_error(&e).context("solve failed")));
                 }
             }
         }
-        if timed_out {
-            self.finish_deadline(r);
-        } else if let Some(e) = err {
-            self.failed.fetch_add(1, Ordering::Relaxed);
-            let _ = r.reply.send(Err(e.context("solve failed")));
-        } else {
-            self.completed.fetch_add(1, Ordering::Relaxed);
-            let ms = r.enqueued.elapsed().as_secs_f64() * 1e3;
-            lock(&self.latency).record(ms);
-            let _ = r.reply.send(Ok(xs));
-        }
+        scratch.rhs.clear();
     }
 
-    fn process(&self, batch: Vec<Request>) {
+    fn process(&self, batch: Vec<Request>, scratch: &mut SolveScratch) {
         let extra = batch.len() - 1;
         if extra > 0 {
             self.coalesced.fetch_add(extra as u64, Ordering::Relaxed);
@@ -684,11 +719,7 @@ impl Inner {
         let latest = live.iter().map(|r| r.deadline).max().expect("batch");
         let poisoned = matches!(action, FaultAction::Poison);
         match self.checkout_with_retry(served, lead.id, poisoned, latest) {
-            Ok(mut guard) => {
-                for r in live {
-                    self.solve_one(&mut guard, r);
-                }
-            }
+            Ok(mut guard) => self.solve_group(&mut guard, live, scratch),
             Err(CheckoutErr::Deadline) => {
                 for r in live {
                     self.finish_deadline(r);
@@ -704,9 +735,24 @@ impl Inner {
     }
 }
 
+/// Worker-owned scratch for the batched group solve: the flat RHS block,
+/// per-request counts, and the output slots are reused across batches so
+/// the steady-state serving loop's internal solve path allocates nothing
+/// (the reply payloads themselves are owned by the callers).
+struct SolveScratch {
+    rhs: Vec<Vec<f64>>,
+    out: Vec<Vec<f64>>,
+    counts: Vec<usize>,
+}
+
 fn worker_loop(inner: &Inner) {
+    let mut scratch = SolveScratch {
+        rhs: Vec::new(),
+        out: Vec::new(),
+        counts: Vec::new(),
+    };
     while let Some(batch) = inner.next_batch() {
-        inner.process(batch);
+        inner.process(batch, &mut scratch);
     }
 }
 
@@ -752,6 +798,7 @@ impl Server {
             failed: AtomicU64::new(0),
             retries: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
+            batched_solve_walks: AtomicU64::new(0),
             degraded_checkouts: AtomicU64::new(0),
             worker_panics: AtomicU64::new(0),
             injected_delays: AtomicU64::new(0),
@@ -911,6 +958,7 @@ impl Server {
             failed: inner.failed.load(Ordering::Relaxed),
             retries: inner.retries.load(Ordering::Relaxed),
             coalesced: inner.coalesced.load(Ordering::Relaxed),
+            batched_solve_walks: inner.batched_solve_walks.load(Ordering::Relaxed),
             degraded_checkouts: inner.degraded_checkouts.load(Ordering::Relaxed),
             worker_panics: inner.worker_panics.load(Ordering::Relaxed),
             injected_delays: inner.injected_delays.load(Ordering::Relaxed),

@@ -3,8 +3,10 @@
 use crate::depend::{glu1, glu2, glu3, levelize, DepGraph, Levels};
 use crate::gpusim::{simulate_refactorization, DeviceConfig, Policy, SimReport};
 use crate::numeric::pool::WorkerPool;
-use crate::numeric::trisolve::TriangularSchedule;
-use crate::numeric::{leftlook, parlu, parrl, pivlu, rightlook, GluError, LuFactors, PivotMonitor};
+use crate::numeric::trisolve::{ReadyFlags, TriangularSchedule, TrisolveVariant};
+use crate::numeric::{
+    leftlook, parlu, parrl, pivlu, rightlook, GluError, LuFactors, PivotMonitor, ValuePlanes,
+};
 use crate::order::{preprocess, FillOrdering, Preprocessed};
 use crate::plan::FactorPlan;
 use crate::runtime::executor::{create_backend, DeviceExecutor, ExecReport};
@@ -286,6 +288,12 @@ pub struct GluStats {
     /// Debug label of the engine actually running the kernels — equals the
     /// configured engine unless [`NumericEngine::Auto`] resolved it.
     pub resolved_engine: String,
+    /// Label of the trisolve variant the solves run ("sequential" /
+    /// "level-set" / "sync-free"; empty until the first solve) — the
+    /// per-pattern choice [`FactorPlan::trisolve_variant`] makes from the
+    /// level-width statistics, downgraded to sequential when the engine
+    /// has no multi-thread pool.
+    pub trisolve_variant: &'static str,
 }
 
 impl GluStats {
@@ -322,6 +330,19 @@ struct NumericWorkspace {
     /// index buffers) after the first run, so refactors re-execute the
     /// cached schedule with zero re-uploads.
     executor: Option<Box<dyn DeviceExecutor>>,
+    /// Scattered-rhs scratch for the refined solve path (ladder rung 1) —
+    /// solver-owned so a repaired solver's solves stay allocation-free.
+    b0: Vec<f64>,
+    /// Residual scratch for iterative refinement.
+    resid: Vec<f64>,
+    /// Permuted-domain solution scratch for [`GluSolver::solve`] and the
+    /// per-RHS refinement sweep of [`GluSolver::solve_many_into`].
+    pb: Vec<f64>,
+    /// Interleaved multi-RHS block (`n × nrhs`) for
+    /// [`GluSolver::solve_many_into`], grown to the largest batch seen.
+    block: Vec<f64>,
+    /// Per-row ready flags for the sync-free trisolves.
+    ready: ReadyFlags,
 }
 
 impl NumericWorkspace {
@@ -367,6 +388,11 @@ impl NumericWorkspace {
             ll_levels,
             pool,
             executor,
+            b0: Vec::new(),
+            resid: Vec::new(),
+            pb: Vec::new(),
+            block: Vec::new(),
+            ready: ReadyFlags::new(),
         })
     }
 }
@@ -511,6 +537,7 @@ impl GluSolver {
                 ..Default::default()
             },
             resolved_engine: format!("{engine:?}"),
+            trisolve_variant: "",
         };
 
         let apply_scales = opts.scale;
@@ -656,6 +683,7 @@ impl GluSolver {
                 ..Default::default()
             },
             resolved_engine: format!("{engine:?}"),
+            trisolve_variant: "",
         };
 
         Ok(GluSolver {
@@ -681,37 +709,160 @@ impl GluSolver {
         &self.engine
     }
 
-    /// Solve `A x = b` using the current factors.
+    /// Solve `A x = b` using the current factors. The permuted-domain
+    /// scratch lives in the solver workspace; only the returned solution
+    /// vector is allocated.
     pub fn solve(&mut self, b: &[f64]) -> anyhow::Result<Vec<f64>> {
         anyhow::ensure!(b.len() == self.stats.n, "rhs dimension mismatch");
         self.ensure_factors_valid()?;
-        let mut pb = vec![0.0; b.len()];
+        let mut pb = std::mem::take(&mut self.ws.pb);
+        pb.resize(b.len(), 0.0);
         let mut x = vec![0.0; b.len()];
         self.solve_into(b, &mut pb, &mut x);
+        self.ws.pb = pb;
         Ok(x)
     }
 
     /// Solve a batch of right-hand sides against the same factors.
-    ///
-    /// The permute/scale scratch buffer is allocated once and the triangular
-    /// solves run back-to-back over the cached level structure — the batched
-    /// fast path the [`crate::coordinator::SolverPool`] feeds. Each solution
-    /// is bit-identical to the corresponding [`GluSolver::solve`] call (same
-    /// inner routine, same operation order — the level-parallel trisolve is
-    /// bit-identical to the sequential one by construction).
+    /// Allocates the output block and delegates to
+    /// [`GluSolver::solve_many_into`].
     pub fn solve_many(&mut self, rhs: &[Vec<f64>]) -> anyhow::Result<Vec<Vec<f64>>> {
+        let mut out = vec![vec![0.0; self.stats.n]; rhs.len()];
+        self.solve_many_into(rhs, &mut out)?;
+        Ok(out)
+    }
+
+    /// Blocked multi-RHS solve over caller-provided storage — zero
+    /// solve-path heap allocation in steady state (the interleaved block
+    /// scratch is solver-owned and grown to the largest batch seen).
+    ///
+    /// The whole batch rides **one** permute/scale sweep, one blocked
+    /// triangular level walk (sequential, level-set, or sync-free — the
+    /// plan's per-pattern [`FactorPlan::trisolve_variant`] choice), and one
+    /// gather, instead of `nrhs` independent passes. Each solution is
+    /// bit-identical to the corresponding [`GluSolver::solve`] call: per
+    /// RHS the blocked kernels replay the single-vector operation order
+    /// exactly. Each `out[k]` is resized to `n`.
+    pub fn solve_many_into(
+        &mut self,
+        rhs: &[Vec<f64>],
+        out: &mut [Vec<f64>],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(rhs.len() == out.len(), "rhs/out batch size mismatch");
+        let n = self.stats.n;
         for b in rhs {
-            anyhow::ensure!(b.len() == self.stats.n, "rhs dimension mismatch");
+            anyhow::ensure!(b.len() == n, "rhs dimension mismatch");
         }
         self.ensure_factors_valid()?;
-        let mut pb = vec![0.0; self.stats.n];
-        let mut out = Vec::with_capacity(rhs.len());
-        for b in rhs {
-            let mut x = vec![0.0; self.stats.n];
-            self.solve_into(b, &mut pb, &mut x);
-            out.push(x);
+        let nrhs = rhs.len();
+        if nrhs == 0 {
+            return Ok(());
         }
-        Ok(out)
+        for x in out.iter_mut() {
+            x.resize(n, 0.0);
+        }
+        let mut xb = std::mem::take(&mut self.ws.block);
+        xb.resize(n * nrhs, 0.0);
+        // b' = Dr * b permuted by the row permutation, all RHS at once.
+        let pr = self.pre.row_perm.as_scatter();
+        for (old, &new) in pr.iter().enumerate() {
+            let scale = self.pre.row_scale[old];
+            let base = new * nrhs;
+            for (k, b) in rhs.iter().enumerate() {
+                xb[base + k] = b[old] * scale;
+            }
+        }
+        let variant = self.effective_trisolve_variant();
+        self.stats.trisolve_variant = variant.label();
+        match variant {
+            TrisolveVariant::Sequential => {
+                crate::numeric::trisolve::lower_unit_solve_block(&self.factors.lu, &mut xb, nrhs);
+                crate::numeric::trisolve::upper_solve_block(&self.factors.lu, &mut xb, nrhs);
+            }
+            TrisolveVariant::LevelSet => {
+                let pool = self.ws.pool.as_ref().expect("pool gated by variant");
+                let ts = self.plan.trisolve(&self.sym.filled);
+                crate::numeric::trisolve::lower_unit_solve_par_block(
+                    &self.factors.lu,
+                    &ts.lower,
+                    pool,
+                    &mut xb,
+                    nrhs,
+                );
+                crate::numeric::trisolve::upper_solve_par_block(
+                    &self.factors.lu,
+                    &ts.upper,
+                    pool,
+                    &mut xb,
+                    nrhs,
+                );
+            }
+            TrisolveVariant::SyncFree => {
+                let pool = self.ws.pool.as_ref().expect("pool gated by variant");
+                let ts = self.plan.trisolve(&self.sym.filled);
+                crate::numeric::trisolve::lower_unit_solve_syncfree_block(
+                    &self.factors.lu,
+                    &ts.lower,
+                    pool,
+                    &mut self.ws.ready,
+                    &mut xb,
+                    nrhs,
+                );
+                crate::numeric::trisolve::upper_solve_syncfree_block(
+                    &self.factors.lu,
+                    &ts.upper,
+                    pool,
+                    &mut self.ws.ready,
+                    &mut xb,
+                    nrhs,
+                );
+            }
+        }
+        // Perturbed factors are a preconditioner, not an inverse: refine
+        // each solution against the true stamped values, exactly as the
+        // single-RHS path does.
+        if self.perturb_eps > 0.0 {
+            let mut y = std::mem::take(&mut self.ws.pb);
+            y.resize(n, 0.0);
+            let mut b0 = std::mem::take(&mut self.ws.b0);
+            b0.resize(n, 0.0);
+            for (k, b) in rhs.iter().enumerate() {
+                for i in 0..n {
+                    y[i] = xb[i * nrhs + k];
+                }
+                let pr = self.pre.row_perm.as_scatter();
+                for (old, &new) in pr.iter().enumerate() {
+                    b0[new] = b[old] * self.pre.row_scale[old];
+                }
+                self.refine_in_place(&b0, &mut y, REFINE_MAX_SOLVE);
+                for i in 0..n {
+                    xb[i * nrhs + k] = y[i];
+                }
+            }
+            self.ws.pb = y;
+            self.ws.b0 = b0;
+        }
+        // x = Dc * (P_colᵀ x'), all RHS at once.
+        let pc = self.pre.col_perm.as_scatter();
+        for (old, &new) in pc.iter().enumerate() {
+            let scale = self.pre.col_scale[old];
+            let base = new * nrhs;
+            for (k, x) in out.iter_mut().enumerate() {
+                x[old] = xb[base + k] * scale;
+            }
+        }
+        self.ws.block = xb;
+        Ok(())
+    }
+
+    /// The trisolve variant this solver's solves actually run: the plan's
+    /// per-pattern choice when a multi-thread pool is available, sequential
+    /// otherwise.
+    fn effective_trisolve_variant(&self) -> TrisolveVariant {
+        match &self.ws.pool {
+            Some(pool) if pool.threads() > 1 => self.plan.trisolve_variant(&self.sym.filled),
+            _ => TrisolveVariant::Sequential,
+        }
     }
 
     fn ensure_factors_valid(&self) -> anyhow::Result<()> {
@@ -740,12 +891,17 @@ impl GluSolver {
             pb[new] = b[old] * self.pre.row_scale[old];
         }
         // The plan carries the row schedules (built lazily on the first
-        // multi-threaded solve); the parallel path is taken only when a
-        // pool exists and the schedule is wide enough for the per-level
-        // barriers to pay for themselves — results are bit-identical
-        // either way.
-        match &self.ws.pool {
-            Some(pool) if pool.threads() > 1 && self.plan.parallel_trisolve(&self.sym.filled) => {
+        // multi-threaded solve) and the per-pattern variant choice; every
+        // variant is bit-identical to the sequential walk by construction.
+        let variant = self.effective_trisolve_variant();
+        self.stats.trisolve_variant = variant.label();
+        match variant {
+            TrisolveVariant::Sequential => {
+                crate::numeric::trisolve::lower_unit_solve(&self.factors.lu, pb);
+                crate::numeric::trisolve::upper_solve(&self.factors.lu, pb);
+            }
+            TrisolveVariant::LevelSet => {
+                let pool = self.ws.pool.as_ref().expect("pool gated by variant");
                 let ts = self.plan.trisolve(&self.sym.filled);
                 crate::numeric::trisolve::lower_unit_solve_par(
                     &self.factors.lu,
@@ -755,20 +911,38 @@ impl GluSolver {
                 );
                 crate::numeric::trisolve::upper_solve_par(&self.factors.lu, &ts.upper, pool, pb);
             }
-            _ => {
-                crate::numeric::trisolve::lower_unit_solve(&self.factors.lu, pb);
-                crate::numeric::trisolve::upper_solve(&self.factors.lu, pb);
+            TrisolveVariant::SyncFree => {
+                let pool = self.ws.pool.as_ref().expect("pool gated by variant");
+                let ts = self.plan.trisolve(&self.sym.filled);
+                crate::numeric::trisolve::lower_unit_solve_syncfree(
+                    &self.factors.lu,
+                    &ts.lower,
+                    pool,
+                    &mut self.ws.ready,
+                    pb,
+                );
+                crate::numeric::trisolve::upper_solve_syncfree(
+                    &self.factors.lu,
+                    &ts.upper,
+                    pool,
+                    &mut self.ws.ready,
+                    pb,
+                );
             }
         }
         // Perturbed factors are a preconditioner, not an inverse: refine
         // the permuted-domain solution against the true stamped values.
         if self.perturb_eps > 0.0 {
             // re-derive the scattered rhs (pb was overwritten in place)
-            let mut b0 = vec![0.0; pb.len()];
+            // through workspace scratch — the refined solve path performs
+            // no heap allocation.
+            let mut b0 = std::mem::take(&mut self.ws.b0);
+            b0.resize(pb.len(), 0.0);
             for (old, &new) in pr.iter().enumerate() {
                 b0[new] = b[old] * self.pre.row_scale[old];
             }
             self.refine_in_place(&b0, pb, REFINE_MAX_SOLVE);
+            self.ws.b0 = b0;
         }
         // x = Dc * (P_colᵀ x').
         let pc = self.pre.col_perm.as_scatter();
@@ -799,7 +973,8 @@ impl GluSolver {
     /// scaled residual `‖b0 − As·y‖∞ / (‖As‖_F ‖y‖∞ + ‖b0‖∞)`.
     fn refine_in_place(&mut self, b0: &[f64], y: &mut [f64], max_iters: usize) -> f64 {
         let n = b0.len();
-        let mut r = vec![0.0; n];
+        let mut r = std::mem::take(&mut self.ws.resid);
+        r.resize(n, 0.0);
         let fro = self.ws.fresh.iter().map(|v| v * v).sum::<f64>().sqrt();
         let bnorm = b0.iter().fold(0.0f64, |m, v| m.max(v.abs()));
         let mut rel = f64::INFINITY;
@@ -822,6 +997,7 @@ impl GluSolver {
             }
             self.stats.robustness.refine_iters += 1;
         }
+        self.ws.resid = r;
         rel
     }
 
@@ -942,6 +1118,119 @@ impl GluSolver {
         match self.try_rescue(a, bad_col) {
             Ok(()) => Ok(()),
             Err(e) => Err(self.fail_numeric(e)),
+        }
+    }
+
+    /// Refactor a batch of matrices sharing the *same sparsity pattern* —
+    /// the transient-analysis shape, where one levelized schedule serves B
+    /// Newton-step Jacobians. Returns one factored value plane per input
+    /// matrix; the last plane is also installed as the solver's current
+    /// factors (so `refactor_batch(&[a])` ends in the same state as
+    /// `refactor(a)`).
+    ///
+    /// On the batched engines — parallel right-looking and the schedule
+    /// executor — the whole batch rides **one** schedule walk over a
+    /// [`ValuePlanes`] block: the scatter-map indices are read once per
+    /// task and the inner MAC loop runs over the contiguous plane
+    /// dimension. Per plane the operation order replays the single-plane
+    /// kernel exactly, so each plane is bit-identical to its looped
+    /// [`GluSolver::refactor`] at one worker thread (rounding-level at
+    /// more). Engines without a batched kernel, and any batch the batched
+    /// rung-0 attempt cannot factor cleanly, fall back to looping
+    /// [`GluSolver::refactor`] per plane — full robustness ladder
+    /// included.
+    pub fn refactor_batch(
+        &mut self,
+        mats: &[&crate::sparse::Csc],
+    ) -> anyhow::Result<ValuePlanes> {
+        anyhow::ensure!(!mats.is_empty(), "empty refactor batch");
+        for a in mats {
+            anyhow::ensure!(
+                a.nnz() == self.value_map.len() && a.nrows() == self.stats.n,
+                "refactor_batch requires the original sparsity pattern"
+            );
+        }
+        let nnz = self.sym.filled.nnz();
+        let b = mats.len();
+
+        // Batched rung 0: stamp every plane, one schedule walk. The
+        // growth/condition gates run on the merged monitor — any flagged
+        // plane (or singular pivot) drops the whole batch to the looped
+        // ladder below, which repairs plane by plane.
+        if b > 1 && self.batched_kernel_available() {
+            let mut planes = ValuePlanes::new(b, nnz);
+            let mut max_stamp = 0.0f64;
+            for (p, a) in mats.iter().enumerate() {
+                self.stamp_fresh(a);
+                max_stamp = max_stamp.max(max_abs(&self.ws.fresh));
+                planes.set_plane(p, &self.ws.fresh);
+            }
+            // ws.fresh now holds the last plane's stamp — the refinement /
+            // probe baseline for the installed factors.
+            let mut mon = PivotMonitor::new();
+            if let Ok(run) = self.run_numeric_planes(&mut planes, &mut mon) {
+                if mon.growth(max_stamp) <= GROWTH_LIMIT && mon.condition_estimate() <= COND_LIMIT
+                {
+                    planes.copy_plane(b - 1, self.factors.lu.values_mut());
+                    self.perturb_eps = 0.0;
+                    self.finish_run(run, &mon, max_stamp, 0.0);
+                    // one kernel run per plane, matching the looped path's
+                    // accounting (finish_run counted the first).
+                    self.stats.numeric_runs += b - 1;
+                    return Ok(planes);
+                }
+            }
+        }
+
+        // Looped fallback: the full ladder per plane. A terminal failure
+        // propagates (and poisons the solver) exactly as `refactor` does.
+        let mut planes = ValuePlanes::new(b, nnz);
+        for (p, a) in mats.iter().enumerate() {
+            self.refactor(a)?;
+            planes.set_plane(p, self.factors.lu.values());
+        }
+        Ok(planes)
+    }
+
+    /// Whether the resolved engine has a batched value-plane kernel.
+    fn batched_kernel_available(&self) -> bool {
+        match &self.engine {
+            NumericEngine::ParallelRightLooking { .. } => self.ws.pool.is_some(),
+            NumericEngine::Schedule { .. } => self.ws.executor.is_some(),
+            _ => false,
+        }
+    }
+
+    /// One batched kernel run over `planes` (already stamped), in the
+    /// shape of [`rerun_engine`]. Only called for engines
+    /// [`GluSolver::batched_kernel_available`] approves.
+    fn run_numeric_planes(
+        &mut self,
+        planes: &mut ValuePlanes,
+        mon: &mut PivotMonitor,
+    ) -> anyhow::Result<EngineRun> {
+        let t0 = std::time::Instant::now();
+        match &self.engine {
+            NumericEngine::ParallelRightLooking { .. } => {
+                parrl::refactor_planes(
+                    &self.sym.filled,
+                    planes,
+                    &self.plan,
+                    self.ws.pool.as_ref().expect("pool spawned for parallel engine"),
+                    mon,
+                )?;
+                Ok((None, wall_ms(t0), None))
+            }
+            NumericEngine::Schedule { .. } => {
+                let executor = self
+                    .ws
+                    .executor
+                    .as_mut()
+                    .expect("executor created for schedule engine");
+                let report = executor.execute_planes(self.plan.launch_schedule(), planes, mon)?;
+                Ok((None, wall_ms(t0), Some(report)))
+            }
+            _ => unreachable!("batched kernel availability checked by the caller"),
         }
     }
 
@@ -2119,6 +2408,89 @@ mod tests {
         let xs = seq.solve_many(&batch).unwrap();
         let xp = par.solve_many(&batch).unwrap();
         assert_eq!(xs, xp);
+    }
+
+    /// `refactor_batch` returns one plane per input matching the looped
+    /// per-matrix `refactor` (bit-identical on the deterministic schedule
+    /// executor, rounding-level on the CAS-committing parallel engine),
+    /// installs the last plane as the current factors, and keeps the
+    /// looped path's run accounting — on engines with a batched kernel
+    /// (parrl, schedule) and on the looped fallback (simulator) alike.
+    #[test]
+    fn refactor_batch_agrees_with_looped_refactor_and_installs_last_plane() {
+        let a = gen::grid2d(16, 16, 5);
+        let b = 4usize;
+        let mats: Vec<crate::sparse::Csc> = (0..b)
+            .map(|p| {
+                let mut m = a.clone();
+                for v in m.values_mut() {
+                    *v *= 1.0 + 0.1 * p as f64;
+                }
+                m
+            })
+            .collect();
+        let refs: Vec<&crate::sparse::Csc> = mats.iter().collect();
+        for engine in [
+            NumericEngine::SimulatedGpu, // no batched kernel: looped fallback
+            NumericEngine::ParallelRightLooking { threads: 2 },
+            NumericEngine::Schedule {
+                backend: ExecBackend::Virtual,
+            },
+        ] {
+            let opts = GluOptions {
+                engine: engine.clone(),
+                ..Default::default()
+            };
+            let mut s = GluSolver::factor(&a, &opts).unwrap();
+            let planes = s.refactor_batch(&refs).unwrap();
+            assert_eq!(planes.planes(), b);
+
+            // Each plane matches a looped refactor of the same matrix.
+            let mut looped = GluSolver::factor(&a, &opts).unwrap();
+            for (p, m) in mats.iter().enumerate() {
+                looped.refactor(m).unwrap();
+                let plane = planes.plane(p);
+                for (x, y) in plane.iter().zip(looped.factors().lu.values()) {
+                    assert!(
+                        (x - y).abs() <= 1e-12 * (1.0 + y.abs()),
+                        "{engine:?} plane {p}: {x} vs {y}"
+                    );
+                }
+            }
+
+            // The last plane is the solver's current factors — exactly.
+            assert_eq!(planes.plane(b - 1), s.factors().lu.values());
+            // Run accounting matches the looped path: factor + one per plane.
+            assert_eq!(s.stats().numeric_runs as usize, 1 + b);
+            assert_eq!(s.stats().symbolic_runs, 1);
+            assert_eq!(s.stats().plan_builds, 1);
+
+            // And the solver is immediately usable on the last matrix.
+            let rhs = vec![1.0; a.nrows()];
+            let x = s.solve(&rhs).unwrap();
+            assert!(residual(&mats[b - 1], &x, &rhs) < 1e-9);
+        }
+    }
+
+    /// A singleton batch ends in exactly the state `refactor` leaves.
+    #[test]
+    fn refactor_batch_of_one_equals_refactor() {
+        let a = gen::grid2d(12, 12, 9);
+        let mut a2 = a.clone();
+        for v in a2.values_mut() {
+            *v *= 1.3;
+        }
+        let opts = GluOptions {
+            engine: NumericEngine::ParallelRightLooking { threads: 2 },
+            ..Default::default()
+        };
+        let mut s = GluSolver::factor(&a, &opts).unwrap();
+        let planes = s.refactor_batch(&[&a2]).unwrap();
+        let mut r = GluSolver::factor(&a, &opts).unwrap();
+        r.refactor(&a2).unwrap();
+        assert_eq!(planes.plane(0), r.factors().lu.values());
+        assert_eq!(s.factors().lu.values(), r.factors().lu.values());
+        assert_eq!(s.stats().numeric_runs, r.stats().numeric_runs);
     }
 
     #[test]

@@ -63,10 +63,19 @@
 //! (ordering + fill + dependency graph + levels) under a structural hash:
 //! the first request for a pattern pays [`glu::GluSolver::factor`], every
 //! later request (same structure, any values) takes the numeric-only
-//! [`glu::GluSolver::refactor`] fast path. Batched right-hand sides share
-//! one checkout and one trisolve setup, the cache is sharded for
+//! [`glu::GluSolver::refactor`] fast path. Batched right-hand sides take
+//! one *blocked* triangular-solve walk ([`glu::GluSolver::solve_many`]
+//! permutes, scales, and level-walks the whole RHS block once, not once
+//! per vector), the allocation-free [`coordinator::PoolGuard::solve_many_into`]
+//! variant solves into caller-provided storage, the cache is sharded for
 //! concurrent sessions, and hit/miss/latency counters (p50/p99) come back
-//! through [`coordinator::SolverPool::stats`].
+//! through [`coordinator::SolverPool::stats`]. The serve loop
+//! ([`coordinator::serve`]) builds on the same primitive: requests that
+//! coalesce on an identical value stamp are stacked into one RHS block
+//! and retired by exactly one blocked walk —
+//! [`coordinator::serve::ServeStats::batched_solve_walks`] counts those
+//! walks, so `batched_solve_walks + coalesced == completed` under clean
+//! traffic.
 //!
 //! ```no_run
 //! use glu3::coordinator::SolverPool;
@@ -179,12 +188,22 @@
 //! defaults to `--engine auto`.
 //!
 //! Any multi-threaded engine also switches `solve`/`solve_many` to the
-//! level-scheduled parallel triangular solves (the
+//! parallel triangular solves (the
 //! [`numeric::trisolve::TriangularSchedule`] carried by the plan), which
 //! are bit-identical to the sequential substitutions at every thread
-//! count — gated on the schedule being wide enough that the per-level
-//! barrier pays for itself (deep, narrow schedules keep the sequential
-//! path). The `glu3 bench` subcommand measures factor/refactor/solve
+//! count. **Choosing a trisolve variant:** the plan picks one of three
+//! kernels per pattern from its own level-width statistics
+//! ([`numeric::trisolve::TriangularSchedule::choose_variant`], cached on
+//! the [`plan::FactorPlan`]): schedules too narrow for any barrier to pay for
+//! itself (mean level width below ~8 rows) keep the *sequential*
+//! substitution; wide, shallow schedules take the *level-set* kernel (one
+//! barrier per level, all rows in a level in parallel); and deep
+//! schedules — where per-level barriers would dominate — take the
+//! *sync-free* self-scheduling kernel (per-row ready counters in the
+//! style of Li's GPU trisolve: each worker spins only on its own rows'
+//! inputs, no inter-level barrier at all). The resolved label is recorded
+//! in [`glu::GluStats::trisolve_variant`]. The `glu3 bench` subcommand
+//! measures factor/refactor/solve
 //! wall-clock for every engine and writes `BENCH_numeric.json` — the
 //! recorded perf trajectory, including a `plan` block (per-level mode
 //! histogram + preprocessing stage timings).
@@ -223,6 +242,25 @@
 //! ownership partitioning removes; `glu3 bench` measures the win as the
 //! `refactor_loop` block of `BENCH_numeric.json` (indexed vs search-based
 //! head-to-head on the same plan and pool).
+//!
+//! When the workload restamps the pattern *many times at once* — Monte-
+//! Carlo corners, periodic-steady-state shooting, parameter sweeps — even
+//! the per-refactor schedule walk repeats work: B refactors replay the
+//! same launch sequence, re-read the same index buffers, and re-gather
+//! the same multipliers B times. [`glu::GluSolver::refactor_batch`] fixes
+//! the shape: the B value sets are laid out as a [`numeric::ValuePlanes`]
+//! structure-of-arrays (plane-major interleaved over the shared nnz
+//! layout), and **one** schedule walk pushes all B planes through the
+//! factorization — the ScatterMap indices are read once per task and the
+//! inner MAC loop runs over the contiguous plane dimension, in both the
+//! pool-backed right-looking engine and the lowered `LaunchSchedule` on
+//! the virtual device. Results are bit-identical to B looped refactors at
+//! one thread (and within 1e-12 relative at more); any plane that trips
+//! the pivot monitor drops the whole batch back to the looped repair
+//! ladder, so robustness is unchanged. The `batched` block of
+//! `BENCH_numeric.json` records the looped-vs-batched head-to-head (the
+//! tier-1 bar is ≥ 1.3× at B = 16 on the acceptance grid), alongside the
+//! blocked multi-RHS solve sweep and the trisolve-variant histogram.
 //!
 //! ## Surviving ugly matrices
 //!

@@ -300,7 +300,11 @@ fn cmd_factor(flags: &HashMap<String, String>, also_solve: bool) -> anyhow::Resu
             other => anyhow::bail!("unknown rhs {other}"),
         };
         let x = solver.solve(&b)?;
-        println!("solve: relative residual = {:.3e}", residual(&a, &x, &b));
+        println!(
+            "solve: relative residual = {:.3e} (trisolve variant: {})",
+            residual(&a, &x, &b),
+            solver.stats().trisolve_variant
+        );
     }
     Ok(())
 }
@@ -654,6 +658,27 @@ fn cmd_bench(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         rb.probe_residual,
         rb.pivot_growth,
         rb.condition_estimate
+    );
+    let bt = &report.batched;
+    let maxb = bt.max_batch();
+    let variants: Vec<String> = bt
+        .variant_labels
+        .iter()
+        .zip(&bt.variant_counts)
+        .map(|(l, c)| format!("{l}: {c}"))
+        .collect();
+    println!(
+        "batched @{} threads, B={}: refactor {} ms batched vs {} ms looped ({}); \
+         solve {} ms blocked vs {} ms looped ({}); trisolve variants {{{}}}",
+        bt.threads,
+        maxb,
+        ms(bt.batched_refactor_ms.last().copied().unwrap_or(f64::NAN)),
+        ms(bt.looped_refactor_ms.last().copied().unwrap_or(f64::NAN)),
+        ratio(bt.refactor_speedup(maxb)),
+        ms(bt.batched_solve_ms.last().copied().unwrap_or(f64::NAN)),
+        ms(bt.looped_solve_ms.last().copied().unwrap_or(f64::NAN)),
+        ratio(bt.solve_speedup(maxb)),
+        variants.join(", ")
     );
 
     let json = report.to_json();

@@ -210,6 +210,79 @@ impl PivotMonitor {
     }
 }
 
+/// A batch of value planes over one shared sparsity pattern, stored
+/// interleaved: plane `p`'s value for pattern position `idx` lives at
+/// `data[idx * planes + p]`, so the plane dimension is contiguous and the
+/// batched kernels' innermost loops (`for p in 0..planes`) vectorize.
+///
+/// This is the batched-refactor layout of ROADMAP item 5: circuit
+/// transient analysis re-runs the *same* levelized schedule with new
+/// values every Newton step, so B value planes ride one schedule walk —
+/// the per-task index gather/scatter (shared across planes through the
+/// [`crate::plan::ScatterMap`]) is paid once instead of B times.
+#[derive(Debug, Clone)]
+pub struct ValuePlanes {
+    planes: usize,
+    nnz: usize,
+    data: Vec<f64>,
+}
+
+impl ValuePlanes {
+    /// Zero-initialized batch of `planes` planes over `nnz` positions.
+    pub fn new(planes: usize, nnz: usize) -> Self {
+        assert!(planes > 0, "a batch needs at least one plane");
+        ValuePlanes {
+            planes,
+            nnz,
+            data: vec![0.0; planes * nnz],
+        }
+    }
+
+    /// Number of planes (the batch dimension B).
+    pub fn planes(&self) -> usize {
+        self.planes
+    }
+
+    /// Pattern positions per plane.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Overwrite plane `p` from a flat per-pattern value slice.
+    pub fn set_plane(&mut self, p: usize, vals: &[f64]) {
+        assert!(p < self.planes && vals.len() == self.nnz);
+        for (idx, &v) in vals.iter().enumerate() {
+            self.data[idx * self.planes + p] = v;
+        }
+    }
+
+    /// Copy plane `p` out into a flat per-pattern value slice.
+    pub fn copy_plane(&self, p: usize, out: &mut [f64]) {
+        assert!(p < self.planes && out.len() == self.nnz);
+        for (idx, slot) in out.iter_mut().enumerate() {
+            *slot = self.data[idx * self.planes + p];
+        }
+    }
+
+    /// Plane `p` as a freshly allocated vector (test/convenience path; the
+    /// hot paths use [`ValuePlanes::copy_plane`] into reused storage).
+    pub fn plane(&self, p: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.nnz];
+        self.copy_plane(p, &mut out);
+        out
+    }
+
+    /// The interleaved backing storage.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable interleaved backing storage (the batched kernels' view).
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+}
+
 /// Compact LU factors over a filled pattern.
 ///
 /// Entry `(i, j)` of the underlying CSC holds `U(i,j)` for `i <= j` and

@@ -81,7 +81,7 @@ use crate::numeric::pool::{PoolCtx, SharedPtr, WorkerPool};
 use crate::plan::{CpuAssignment, FactorPlan, ScatterMap};
 use crate::symbolic::SymbolicFill;
 
-use super::{LuFactors, PivotMonitor};
+use super::{LuFactors, PivotMonitor, ValuePlanes};
 
 /// Shared pivot-extrema accumulator for the worker pool: `|pivot|` is
 /// non-negative, and for non-negative IEEE-754 doubles the bit pattern
@@ -400,6 +400,273 @@ fn factor_column_chain(
     }
     for t in sm.task_ptr[j] as usize..sm.task_ptr[j + 1] as usize {
         mac_task_plain(j, t, sm, shared);
+    }
+    true
+}
+
+// ---------------------------------------------------------------------------
+// The batched value-plane refactor: B planes of values over one shared
+// pattern ride a single schedule walk. The ScatterMap indices are shared
+// across planes, so the per-task index gather is paid once; the innermost
+// loops run over the contiguous plane dimension (`data[idx * B + p]`) and
+// vectorize. Per plane, the operation order is exactly the single-plane
+// engine's, so a 1-thread batched refactor is bit-identical to B looped
+// single-plane refactors.
+// ---------------------------------------------------------------------------
+
+/// Batched [`refactor_in_place`]: factor every plane of `planes` (stamped
+/// values over `pattern`'s positions) in one walk of the plan's schedule.
+/// On a zero/non-finite pivot in *any* plane the whole batch aborts with
+/// the failing column's typed error — callers fall back to looped
+/// single-plane refactors (which run the full repair ladder per plane).
+pub fn refactor_planes(
+    pattern: &crate::sparse::Csc,
+    planes: &mut ValuePlanes,
+    plan: &FactorPlan,
+    pool: &WorkerPool,
+    mon: &mut PivotMonitor,
+) -> anyhow::Result<()> {
+    let n = pattern.ncols();
+    anyhow::ensure!(plan.n() == n, "plan dimension mismatch");
+    let sm = plan.scatter(pattern);
+    anyhow::ensure!(
+        sm.nnz == pattern.nnz() && sm.nnz == planes.nnz(),
+        "scatter map does not match this pattern/batch"
+    );
+    let b = planes.planes();
+    let levels = plan.levels();
+    let steps = plan.cpu_steps();
+    let shared = SharedPtr(planes.data_mut().as_mut_ptr());
+    let failed = AtomicUsize::new(usize::MAX);
+    let amon = AtomicMonitor::new();
+
+    pool.run(&|ctx: &PoolCtx<'_>| {
+        let ok = || failed.load(Ordering::Relaxed) == usize::MAX;
+        for step in steps {
+            match step.assignment {
+                CpuAssignment::InterleavedColumns => {
+                    let level = &levels.levels[step.first_level];
+                    if ok() {
+                        let mut idx = ctx.id;
+                        while idx < level.len() {
+                            let j = level[idx] as usize;
+                            if !factor_column_indexed_batch(j, b, sm, &shared, &failed, &amon)
+                                || !ok()
+                            {
+                                break;
+                            }
+                            idx += ctx.threads;
+                        }
+                    }
+                    if !ctx.sync() {
+                        return;
+                    }
+                }
+                CpuAssignment::SubcolumnSlices | CpuAssignment::OwnedDestinations => {
+                    let level = &levels.levels[step.first_level];
+                    if ok() {
+                        let mut idx = ctx.id;
+                        while idx < level.len() {
+                            if !divide_indexed_batch(
+                                level[idx] as usize,
+                                b,
+                                sm,
+                                &shared,
+                                &failed,
+                                &amon,
+                            ) || !ok()
+                            {
+                                break;
+                            }
+                            idx += ctx.threads;
+                        }
+                    }
+                    if !ctx.sync() {
+                        return;
+                    }
+                    if ok() {
+                        if step.assignment == CpuAssignment::OwnedDestinations {
+                            let groups = plan.dest_groups(step.first_level);
+                            let mut g = ctx.id;
+                            while g < groups.num_groups() {
+                                for t in groups.group(g) {
+                                    mac_task_plain_batch(
+                                        t.src as usize,
+                                        t.task as usize,
+                                        b,
+                                        sm,
+                                        &shared,
+                                    );
+                                }
+                                g += ctx.threads;
+                            }
+                        } else {
+                            let mut base = 0usize;
+                            for &j in level.iter() {
+                                let j = j as usize;
+                                let (t0, t1) =
+                                    (sm.task_ptr[j] as usize, sm.task_ptr[j + 1] as usize);
+                                for t in t0..t1 {
+                                    if (base + (t - t0)) % ctx.threads == ctx.id {
+                                        mac_task_atomic_batch(j, t, b, sm, &shared);
+                                    }
+                                }
+                                base += t1 - t0;
+                            }
+                        }
+                    }
+                    if !ctx.sync() {
+                        return;
+                    }
+                }
+                CpuAssignment::ChainBatch => {
+                    if ctx.id == 0 && ok() {
+                        'run: for li in step.first_level..step.first_level + step.level_count {
+                            for &j in &levels.levels[li] {
+                                if !factor_column_chain_batch(
+                                    j as usize, b, sm, &shared, &failed, &amon,
+                                ) {
+                                    break 'run;
+                                }
+                            }
+                        }
+                    }
+                    if !ctx.sync() {
+                        return;
+                    }
+                }
+            }
+        }
+    });
+
+    let f = failed.load(Ordering::Relaxed);
+    amon.merge_into(mon);
+    if f != usize::MAX {
+        return Err(super::singular_pivot(f));
+    }
+    Ok(())
+}
+
+/// Batched divide phase: per plane the pivot check and the L-run
+/// normalization of [`divide_indexed`], with the plane loop innermost over
+/// the contiguous plane run.
+#[inline]
+fn divide_indexed_batch(
+    j: usize,
+    b: usize,
+    sm: &ScatterMap,
+    shared: &SharedPtr,
+    failed: &AtomicUsize,
+    amon: &AtomicMonitor,
+) -> bool {
+    let vals = shared.0;
+    let d = sm.diag_idx[j] as usize;
+    // SAFETY: only this worker touches column j's value range (all planes)
+    // during this level; see `divide_indexed`.
+    for p in 0..b {
+        let pivot = unsafe { *vals.add(d * b + p) };
+        if pivot == 0.0 || !pivot.is_finite() {
+            failed.fetch_min(j, Ordering::Relaxed);
+            return false;
+        }
+        amon.observe(pivot);
+    }
+    for idx in d + 1..=d + sm.l_len[j] as usize {
+        let lbase = idx * b;
+        let dbase = d * b;
+        for p in 0..b {
+            let v = unsafe { *vals.add(lbase + p) } / unsafe { *vals.add(dbase + p) };
+            unsafe { *vals.add(lbase + p) = v };
+        }
+    }
+    true
+}
+
+/// Batched MAC task with atomic commits: for each destination element the
+/// plane loop runs over the contiguous run, skipping planes whose
+/// multiplier is zero (matching the single-plane task-level skip).
+#[inline]
+fn mac_task_atomic_batch(j: usize, t: usize, b: usize, sm: &ScatterMap, shared: &SharedPtr) {
+    let vals = shared.0;
+    let mbase = sm.mult_idx[t] as usize * b;
+    let ls = sm.diag_idx[j] as usize + 1;
+    let off = sm.dst_off[t] as usize;
+    let run = &sm.dst[off..off + sm.l_len[j] as usize];
+    for (i, &d) in run.iter().enumerate() {
+        let lbase = (ls + i) * b;
+        let dbase = d as usize * b;
+        for p in 0..b {
+            // The multiplier element is never a destination of its own
+            // task (destinations sit strictly below the pivot row), so
+            // re-reading it per element sees one stable value.
+            let mult = atomic_load(vals, mbase + p);
+            if mult == 0.0 {
+                continue;
+            }
+            // SAFETY: see module docs — L reads race-free, commits atomic.
+            let lij = unsafe { *vals.add(lbase + p) };
+            atomic_sub(vals, dbase + p, lij * mult);
+        }
+    }
+}
+
+/// Batched MAC task with plain stores (ownership / chain strategies).
+#[inline]
+fn mac_task_plain_batch(j: usize, t: usize, b: usize, sm: &ScatterMap, shared: &SharedPtr) {
+    let vals = shared.0;
+    let mbase = sm.mult_idx[t] as usize * b;
+    let ls = sm.diag_idx[j] as usize + 1;
+    let off = sm.dst_off[t] as usize;
+    let run = &sm.dst[off..off + sm.l_len[j] as usize];
+    for (i, &d) in run.iter().enumerate() {
+        let lbase = (ls + i) * b;
+        let dbase = d as usize * b;
+        for p in 0..b {
+            // SAFETY: destination column owned by this worker (module docs).
+            let mult = unsafe { *vals.add(mbase + p) };
+            if mult == 0.0 {
+                continue;
+            }
+            let lij = unsafe { *vals.add(lbase + p) };
+            unsafe { *vals.add(dbase + p) -= lij * mult };
+        }
+    }
+}
+
+/// Batched full column pipeline for interleaved levels.
+#[inline]
+fn factor_column_indexed_batch(
+    j: usize,
+    b: usize,
+    sm: &ScatterMap,
+    shared: &SharedPtr,
+    failed: &AtomicUsize,
+    amon: &AtomicMonitor,
+) -> bool {
+    if !divide_indexed_batch(j, b, sm, shared, failed, amon) {
+        return false;
+    }
+    for t in sm.task_ptr[j] as usize..sm.task_ptr[j + 1] as usize {
+        mac_task_atomic_batch(j, t, b, sm, shared);
+    }
+    true
+}
+
+/// Batched full column pipeline for chain batches.
+#[inline]
+fn factor_column_chain_batch(
+    j: usize,
+    b: usize,
+    sm: &ScatterMap,
+    shared: &SharedPtr,
+    failed: &AtomicUsize,
+    amon: &AtomicMonitor,
+) -> bool {
+    if !divide_indexed_batch(j, b, sm, shared, failed, amon) {
+        return false;
+    }
+    for t in sm.task_ptr[j] as usize..sm.task_ptr[j + 1] as usize {
+        mac_task_plain_batch(j, t, b, sm, shared);
     }
     true
 }
@@ -841,6 +1108,81 @@ mod tests {
         for (p, q) in x.lu.values().iter().zip(y.lu.values()) {
             assert!((p - q).abs() < 1e-11 * (1.0 + q.abs()), "{p} vs {q}");
         }
+    }
+
+    /// The batched value-plane refactor against B looped single-plane
+    /// refactors: bit-identical at 1 thread, ≤ 1e-12 relative otherwise
+    /// (the CAS levels' commit order differs across walks).
+    #[test]
+    fn batched_planes_match_looped_refactors() {
+        let g = gen::grid2d(18, 18, 3);
+        let ord = crate::order::amd::amd_order(&g).unwrap();
+        let a = g.permute(ord.as_scatter(), ord.as_scatter());
+        let f = symbolic_fill(&a).unwrap();
+        let lv = levelize(&glu3::detect(&f.filled));
+        let plan = plan_for(&f, &lv);
+        let base = f.filled.values().to_vec();
+        for bsz in [1usize, 4, 16] {
+            for threads in [1, 2, 4] {
+                let pool = WorkerPool::new(threads);
+                let mut vp = ValuePlanes::new(bsz, f.filled.nnz());
+                let mut looped = Vec::with_capacity(bsz);
+                for p in 0..bsz {
+                    let scale = 1.0 + 0.01 * p as f64;
+                    let vals: Vec<f64> = base.iter().map(|v| v * scale).collect();
+                    vp.set_plane(p, &vals);
+                    let mut lu = f.filled.clone();
+                    lu.values_mut().copy_from_slice(&vals);
+                    refactor_in_place(&mut lu, &plan, &pool, &mut PivotMonitor::new()).unwrap();
+                    looped.push(lu.values().to_vec());
+                }
+                refactor_planes(&f.filled, &mut vp, &plan, &pool, &mut PivotMonitor::new())
+                    .unwrap();
+                for p in 0..bsz {
+                    let got = vp.plane(p);
+                    if threads == 1 {
+                        assert_eq!(got, looped[p], "B {bsz} plane {p}: 1-thread bit-identity");
+                    } else {
+                        for (x, y) in got.iter().zip(&looped[p]) {
+                            assert!(
+                                (x - y).abs() <= 1e-12 * (1.0 + y.abs()),
+                                "B {bsz} threads {threads} plane {p}: {x} vs {y}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// A zero pivot in any plane aborts the whole batch with the failing
+    /// column's typed error.
+    #[test]
+    fn batched_planes_report_zero_pivot() {
+        use crate::sparse::Coo;
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 1, 1.0);
+        coo.push(1, 0, 1.0);
+        coo.push(1, 1, 1.0); // U(1,1) cancels to zero
+        let f = symbolic_fill(&coo.to_csc()).unwrap();
+        let lv = levelize(&glu3::detect(&f.filled));
+        let plan = plan_for(&f, &lv);
+        let pool = WorkerPool::new(2);
+        let mut vp = ValuePlanes::new(3, f.filled.nnz());
+        // column-major stamped values: [a00, a10, a01, a11]
+        vp.set_plane(0, &[1.0, 1.0, 1.0, 3.0]); // healthy: U(1,1) = 2
+        vp.set_plane(1, &[1.0, 1.0, 1.0, 1.0]); // singular: U(1,1) = 0
+        vp.set_plane(2, &[2.0, 1.0, 1.0, 3.0]); // healthy: U(1,1) = 2.5
+        let err = refactor_planes(&f.filled, &mut vp, &plan, &pool, &mut PivotMonitor::new())
+            .unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<crate::numeric::GluError>(),
+                Some(crate::numeric::GluError::NumericallySingular { .. })
+            ),
+            "{err}"
+        );
     }
 
     #[test]

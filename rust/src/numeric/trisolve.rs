@@ -5,24 +5,90 @@
 //! coordinator's repeated-solve path (same factors, many right-hand sides —
 //! the Newton–Raphson pattern).
 //!
-//! Two execution modes:
+//! Three execution modes:
 //!
-//! - the sequential column-oriented ("push") solves below, and
+//! - the sequential column-oriented ("push") solves below,
 //! - level-scheduled parallel row-oriented ("pull") solves
 //!   ([`lower_unit_solve_par`] / [`upper_solve_par`]) over a
 //!   [`TriangularSchedule`], following Li's GPU trisolve construction
 //!   (arXiv:1710.04985): rows are grouped into dependency levels, each
 //!   level's rows are dealt round-robin across a persistent
-//!   [`WorkerPool`], and a spin barrier separates levels.
+//!   [`WorkerPool`], and a spin barrier separates levels, and
+//! - self-scheduling **sync-free** solves
+//!   ([`lower_unit_solve_syncfree`] / [`upper_solve_syncfree`]) after the
+//!   same paper's barrier-free construction: workers claim rows from a
+//!   shared counter in dependency-safe order (ascending for `L`,
+//!   descending for `U`) and spin on per-row ready flags instead of
+//!   paying one barrier per level — the win on deep, narrow schedules
+//!   where the level-set form is all barrier and no concurrency.
 //!
-//! The pull form accumulates row `i`'s terms in exactly the order the push
-//! form applies them (ascending column for `L`, descending for `U`,
-//! including the skip of zero multiplicands), so the parallel solves are
-//! **bit-identical** to the sequential ones at any thread count — the
-//! property the test pyramid pins down.
+//! Every parallel form accumulates row `i`'s terms in exactly the order
+//! the push form applies them (ascending column for `L`, descending for
+//! `U`, including the skip of zero multiplicands), so the parallel solves
+//! are **bit-identical** to the sequential ones at any thread count — the
+//! property the test pyramid pins down. The `_block` variants solve `nrhs`
+//! interleaved right-hand sides (`xb[row * nrhs + p]`) in one factor walk,
+//! plane-for-plane bit-identical to `nrhs` single solves.
+
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 
 use crate::numeric::pool::{PoolCtx, SharedPtr, WorkerPool};
 use crate::sparse::Csc;
+
+/// Which trisolve implementation a pattern should use — chosen once per
+/// [`TriangularSchedule`] from its level-width statistics (see
+/// [`TriangularSchedule::choose_variant`]) and recorded in
+/// `GluStats::trisolve_variant`. All three produce bit-identical results;
+/// the choice is purely a latency heuristic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrisolveVariant {
+    /// Sequential push-form solve: the right call when the schedule is too
+    /// narrow for any parallel form to amortize its coordination cost.
+    Sequential,
+    /// Level-set pull-form solve with one barrier per dependency level.
+    LevelSet,
+    /// Self-scheduling solve with per-row ready flags and no barrier.
+    SyncFree,
+}
+
+impl TrisolveVariant {
+    /// Stable label for stats and bench reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            TrisolveVariant::Sequential => "sequential",
+            TrisolveVariant::LevelSet => "level-set",
+            TrisolveVariant::SyncFree => "sync-free",
+        }
+    }
+}
+
+/// Reusable per-row ready flags for the sync-free solves. Owned by the
+/// caller (the solver keeps one in its `NumericWorkspace`) so the
+/// steady-state solve path performs no heap allocation; `prepare` only
+/// grows the buffer on first use per size class.
+#[derive(Debug, Default)]
+pub struct ReadyFlags {
+    flags: Vec<AtomicU32>,
+}
+
+impl ReadyFlags {
+    pub fn new() -> Self {
+        ReadyFlags { flags: Vec::new() }
+    }
+
+    /// Ensure capacity for `n` rows and reset all flags to "not ready".
+    /// The relaxed stores are published to the workers by the pool's
+    /// dispatch handshake.
+    fn prepare(&mut self, n: usize) -> &[AtomicU32] {
+        if self.flags.len() < n {
+            self.flags.resize_with(n, || AtomicU32::new(0));
+        }
+        for f in &self.flags[..n] {
+            f.store(0, Ordering::Relaxed);
+        }
+        &self.flags[..n]
+    }
+}
 
 /// In-place forward substitution with the unit-lower factor stored in the
 /// strictly-lower triangle of `lu`: `x ← L⁻¹ x`.
@@ -58,6 +124,59 @@ pub fn upper_solve(lu: &Csc, x: &mut [f64]) {
         }
         for (&i, &uij) in rows[..dpos].iter().zip(&vals[..dpos]) {
             x[i] -= uij * xj;
+        }
+    }
+}
+
+/// Blocked forward substitution over `nrhs` interleaved right-hand sides:
+/// `xb[i * nrhs + p] ← (L⁻¹ x_p)[i]` for every plane `p`. One walk over
+/// the factor serves the whole block; per plane the operation order (and
+/// the zero-multiplicand skip) is exactly [`lower_unit_solve`]'s, so each
+/// plane's result is bit-identical to a single solve.
+pub fn lower_unit_solve_block(lu: &Csc, xb: &mut [f64], nrhs: usize) {
+    let n = lu.ncols();
+    assert_eq!(xb.len(), n * nrhs);
+    for j in 0..n {
+        let (rows, vals) = lu.col(j);
+        let start = rows.partition_point(|&r| r <= j);
+        if start == rows.len() {
+            continue;
+        }
+        let jbase = j * nrhs;
+        for (&i, &lij) in rows[start..].iter().zip(&vals[start..]) {
+            let ibase = i * nrhs;
+            for p in 0..nrhs {
+                let xj = xb[jbase + p];
+                if xj != 0.0 {
+                    xb[ibase + p] -= lij * xj;
+                }
+            }
+        }
+    }
+}
+
+/// Blocked backward substitution over `nrhs` interleaved right-hand sides:
+/// `xb ← U⁻¹ xb` plane-wise, each plane bit-identical to [`upper_solve`].
+pub fn upper_solve_block(lu: &Csc, xb: &mut [f64], nrhs: usize) {
+    let n = lu.ncols();
+    assert_eq!(xb.len(), n * nrhs);
+    for j in (0..n).rev() {
+        let (rows, vals) = lu.col(j);
+        let dpos = rows.partition_point(|&r| r < j);
+        debug_assert!(rows[dpos] == j, "missing diagonal");
+        let dj = vals[dpos];
+        let jbase = j * nrhs;
+        for p in 0..nrhs {
+            xb[jbase + p] /= dj;
+        }
+        for (&i, &uij) in rows[..dpos].iter().zip(&vals[..dpos]) {
+            let ibase = i * nrhs;
+            for p in 0..nrhs {
+                let xj = xb[jbase + p];
+                if xj != 0.0 {
+                    xb[ibase + p] -= uij * xj;
+                }
+            }
         }
     }
 }
@@ -147,6 +266,24 @@ impl TriangularSchedule {
         const MIN_MEAN_LEVEL_WIDTH: f64 = 8.0;
         self.lower.mean_level_width() >= MIN_MEAN_LEVEL_WIDTH
             && self.upper.mean_level_width() >= MIN_MEAN_LEVEL_WIDTH
+    }
+
+    /// Pick the trisolve implementation for this pattern from its
+    /// level-width statistics. Narrow schedules (below the
+    /// `parallel_worthwhile` width floor) stay sequential; among the
+    /// parallel-worthy ones, deep schedules prefer the sync-free form
+    /// (which pays per-row flag spins instead of one barrier per level,
+    /// and the barrier count is the depth), shallow-and-wide ones the
+    /// level-set form (few barriers, no spinning at all).
+    pub fn choose_variant(&self) -> TrisolveVariant {
+        const DEEP_LEVELS: usize = 48;
+        if !self.parallel_worthwhile() {
+            TrisolveVariant::Sequential
+        } else if self.lower.num_levels().max(self.upper.num_levels()) >= DEEP_LEVELS {
+            TrisolveVariant::SyncFree
+        } else {
+            TrisolveVariant::LevelSet
+        }
     }
 
     /// Build both row schedules from a factored (or just filled) pattern.
@@ -320,6 +457,270 @@ pub fn upper_solve_par(lu: &Csc, sched: &RowSched, pool: &WorkerPool, x: &mut [f
     });
 }
 
+/// Blocked level-parallel forward substitution: `nrhs` interleaved planes
+/// through one level walk, each plane bit-identical to
+/// [`lower_unit_solve`] / [`lower_unit_solve_block`].
+pub fn lower_unit_solve_par_block(
+    lu: &Csc,
+    sched: &RowSched,
+    pool: &WorkerPool,
+    xb: &mut [f64],
+    nrhs: usize,
+) {
+    let n = lu.ncols();
+    assert_eq!(xb.len(), n * nrhs);
+    assert_eq!(sched.ptr.len(), n + 1);
+    let vals = lu.values();
+    let xp = SharedPtr(xb.as_mut_ptr());
+    pool.run(&|ctx: &PoolCtx<'_>| {
+        for level in &sched.levels {
+            let mut idx = ctx.id;
+            while idx < level.len() {
+                let i = level[idx] as usize;
+                let ibase = i * nrhs;
+                // SAFETY: rows are dealt disjointly within a level and
+                // dependencies live in earlier levels (published by the
+                // barrier); plane columns of row i are exclusive to this
+                // worker for the duration of the level.
+                for e in sched.ptr[i]..sched.ptr[i + 1] {
+                    let jbase = sched.cols[e] as usize * nrhs;
+                    let lij = vals[sched.vidx[e]];
+                    for p in 0..nrhs {
+                        let xj = unsafe { *xp.0.add(jbase + p) };
+                        if xj != 0.0 {
+                            unsafe { *xp.0.add(ibase + p) -= lij * xj };
+                        }
+                    }
+                }
+                idx += ctx.threads;
+            }
+            if !ctx.sync() {
+                return;
+            }
+        }
+    });
+}
+
+/// Blocked level-parallel backward substitution, each plane bit-identical
+/// to [`upper_solve`] / [`upper_solve_block`].
+pub fn upper_solve_par_block(
+    lu: &Csc,
+    sched: &RowSched,
+    pool: &WorkerPool,
+    xb: &mut [f64],
+    nrhs: usize,
+) {
+    let n = lu.ncols();
+    assert_eq!(xb.len(), n * nrhs);
+    assert_eq!(sched.ptr.len(), n + 1);
+    assert_eq!(sched.diag.len(), n, "upper schedule required");
+    let vals = lu.values();
+    let xp = SharedPtr(xb.as_mut_ptr());
+    pool.run(&|ctx: &PoolCtx<'_>| {
+        for level in &sched.levels {
+            let mut idx = ctx.id;
+            while idx < level.len() {
+                let i = level[idx] as usize;
+                let ibase = i * nrhs;
+                let dj = vals[sched.diag[i]];
+                // SAFETY: as in the blocked lower solve.
+                for e in (sched.ptr[i]..sched.ptr[i + 1]).rev() {
+                    let jbase = sched.cols[e] as usize * nrhs;
+                    let uij = vals[sched.vidx[e]];
+                    for p in 0..nrhs {
+                        let xj = unsafe { *xp.0.add(jbase + p) };
+                        if xj != 0.0 {
+                            unsafe { *xp.0.add(ibase + p) -= uij * xj };
+                        }
+                    }
+                }
+                for p in 0..nrhs {
+                    unsafe { *xp.0.add(ibase + p) /= dj };
+                }
+                idx += ctx.threads;
+            }
+            if !ctx.sync() {
+                return;
+            }
+        }
+    });
+}
+
+/// Self-scheduling sync-free forward substitution (arXiv:1710.04985):
+/// workers claim rows in ascending order from a shared counter — a
+/// topological order for `L`, since row `i` only reads rows `< i` — and
+/// spin on per-row ready flags instead of a per-level barrier. Per-row
+/// term order matches the sequential solve, so the result is
+/// bit-identical at any thread count.
+pub fn lower_unit_solve_syncfree(
+    lu: &Csc,
+    sched: &RowSched,
+    pool: &WorkerPool,
+    flags: &mut ReadyFlags,
+    x: &mut [f64],
+) {
+    let n = lu.ncols();
+    assert_eq!(x.len(), n);
+    assert_eq!(sched.ptr.len(), n + 1);
+    let vals = lu.values();
+    let done = flags.prepare(n);
+    let next = AtomicUsize::new(0);
+    let xp = SharedPtr(x.as_mut_ptr());
+    pool.run(&|_ctx: &PoolCtx<'_>| loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            return;
+        }
+        // SAFETY: row i is exclusively owned by its claimant; every entry
+        // read belongs to a row with a strictly smaller claim index, and
+        // the acquire spin on its ready flag publishes its final value.
+        let mut acc = unsafe { *xp.0.add(i) };
+        for e in sched.ptr[i]..sched.ptr[i + 1] {
+            let j = sched.cols[e] as usize;
+            while done[j].load(Ordering::Acquire) == 0 {
+                std::hint::spin_loop();
+            }
+            let xj = unsafe { *xp.0.add(j) };
+            if xj != 0.0 {
+                acc -= vals[sched.vidx[e]] * xj;
+            }
+        }
+        unsafe { *xp.0.add(i) = acc };
+        done[i].store(1, Ordering::Release);
+    });
+}
+
+/// Self-scheduling sync-free backward substitution: rows are claimed in
+/// descending order (`n-1-k`), the topological order for `U`, where row
+/// `i` only reads rows `> i`. Bit-identical to [`upper_solve`].
+pub fn upper_solve_syncfree(
+    lu: &Csc,
+    sched: &RowSched,
+    pool: &WorkerPool,
+    flags: &mut ReadyFlags,
+    x: &mut [f64],
+) {
+    let n = lu.ncols();
+    assert_eq!(x.len(), n);
+    assert_eq!(sched.ptr.len(), n + 1);
+    assert_eq!(sched.diag.len(), n, "upper schedule required");
+    let vals = lu.values();
+    let done = flags.prepare(n);
+    let next = AtomicUsize::new(0);
+    let xp = SharedPtr(x.as_mut_ptr());
+    pool.run(&|_ctx: &PoolCtx<'_>| loop {
+        let k = next.fetch_add(1, Ordering::Relaxed);
+        if k >= n {
+            return;
+        }
+        let i = n - 1 - k;
+        // SAFETY: as in the sync-free lower solve.
+        let mut acc = unsafe { *xp.0.add(i) };
+        for e in (sched.ptr[i]..sched.ptr[i + 1]).rev() {
+            let j = sched.cols[e] as usize;
+            while done[j].load(Ordering::Acquire) == 0 {
+                std::hint::spin_loop();
+            }
+            let xj = unsafe { *xp.0.add(j) };
+            if xj != 0.0 {
+                acc -= vals[sched.vidx[e]] * xj;
+            }
+        }
+        unsafe { *xp.0.add(i) = acc / vals[sched.diag[i]] };
+        done[i].store(1, Ordering::Release);
+    });
+}
+
+/// Blocked sync-free forward substitution: `nrhs` interleaved planes per
+/// claimed row, each plane bit-identical to the single-plane solves.
+pub fn lower_unit_solve_syncfree_block(
+    lu: &Csc,
+    sched: &RowSched,
+    pool: &WorkerPool,
+    flags: &mut ReadyFlags,
+    xb: &mut [f64],
+    nrhs: usize,
+) {
+    let n = lu.ncols();
+    assert_eq!(xb.len(), n * nrhs);
+    assert_eq!(sched.ptr.len(), n + 1);
+    let vals = lu.values();
+    let done = flags.prepare(n);
+    let next = AtomicUsize::new(0);
+    let xp = SharedPtr(xb.as_mut_ptr());
+    pool.run(&|_ctx: &PoolCtx<'_>| loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            return;
+        }
+        let ibase = i * nrhs;
+        // SAFETY: as in the single-plane sync-free solve; all planes of a
+        // row share its ready flag.
+        for e in sched.ptr[i]..sched.ptr[i + 1] {
+            let j = sched.cols[e] as usize;
+            while done[j].load(Ordering::Acquire) == 0 {
+                std::hint::spin_loop();
+            }
+            let jbase = j * nrhs;
+            let lij = vals[sched.vidx[e]];
+            for p in 0..nrhs {
+                let xj = unsafe { *xp.0.add(jbase + p) };
+                if xj != 0.0 {
+                    unsafe { *xp.0.add(ibase + p) -= lij * xj };
+                }
+            }
+        }
+        done[i].store(1, Ordering::Release);
+    });
+}
+
+/// Blocked sync-free backward substitution.
+pub fn upper_solve_syncfree_block(
+    lu: &Csc,
+    sched: &RowSched,
+    pool: &WorkerPool,
+    flags: &mut ReadyFlags,
+    xb: &mut [f64],
+    nrhs: usize,
+) {
+    let n = lu.ncols();
+    assert_eq!(xb.len(), n * nrhs);
+    assert_eq!(sched.ptr.len(), n + 1);
+    assert_eq!(sched.diag.len(), n, "upper schedule required");
+    let vals = lu.values();
+    let done = flags.prepare(n);
+    let next = AtomicUsize::new(0);
+    let xp = SharedPtr(xb.as_mut_ptr());
+    pool.run(&|_ctx: &PoolCtx<'_>| loop {
+        let k = next.fetch_add(1, Ordering::Relaxed);
+        if k >= n {
+            return;
+        }
+        let i = n - 1 - k;
+        let ibase = i * nrhs;
+        let dj = vals[sched.diag[i]];
+        // SAFETY: as in the single-plane sync-free solve.
+        for e in (sched.ptr[i]..sched.ptr[i + 1]).rev() {
+            let j = sched.cols[e] as usize;
+            while done[j].load(Ordering::Acquire) == 0 {
+                std::hint::spin_loop();
+            }
+            let jbase = j * nrhs;
+            let uij = vals[sched.vidx[e]];
+            for p in 0..nrhs {
+                let xj = unsafe { *xp.0.add(jbase + p) };
+                if xj != 0.0 {
+                    unsafe { *xp.0.add(ibase + p) -= uij * xj };
+                }
+            }
+        }
+        for p in 0..nrhs {
+            unsafe { *xp.0.add(ibase + p) /= dj };
+        }
+        done[i].store(1, Ordering::Release);
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -408,6 +809,133 @@ mod tests {
             std::mem::swap(&mut seq_lower, &mut seq);
             assert!(residual(&a, &seq_lower, &b) < 1e-10);
         }
+    }
+
+    #[test]
+    fn syncfree_trisolve_bit_identical_to_sequential_and_levelset() {
+        let mut rng = Rng::new(0x5F5F);
+        for trial in 0..6 {
+            let n = rng.range(40, 250);
+            let a = random_dd(n, n * 3, &mut rng);
+            let f = symbolic_fill(&a).unwrap();
+            let lu = leftlook::factor(&f).unwrap();
+            let sched = TriangularSchedule::build(&lu.lu);
+            let b: Vec<f64> = (0..n).map(|i| ((i * 29 + trial) % 19) as f64 - 9.0).collect();
+
+            let mut seq = b.clone();
+            super::lower_unit_solve(&lu.lu, &mut seq);
+            let seq_lower = seq.clone();
+            super::upper_solve(&lu.lu, &mut seq);
+
+            for threads in [1, 2, 4] {
+                let pool = WorkerPool::new(threads);
+                let mut flags = ReadyFlags::new();
+                let mut sf = b.clone();
+                lower_unit_solve_syncfree(&lu.lu, &sched.lower, &pool, &mut flags, &mut sf);
+                assert_eq!(sf, seq_lower, "trial {trial} threads {threads}: lower");
+                upper_solve_syncfree(&lu.lu, &sched.upper, &pool, &mut flags, &mut sf);
+                assert_eq!(sf, seq, "trial {trial} threads {threads}: upper");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_trisolves_match_looped_single_solves() {
+        let mut rng = Rng::new(0xB10C);
+        let n = 150;
+        let a = random_dd(n, n * 3, &mut rng);
+        let f = symbolic_fill(&a).unwrap();
+        let lu = leftlook::factor(&f).unwrap();
+        let sched = TriangularSchedule::build(&lu.lu);
+        for nrhs in [1usize, 3, 8] {
+            // looped reference: one full solve per plane
+            let planes: Vec<Vec<f64>> = (0..nrhs)
+                .map(|p| (0..n).map(|i| ((i * 7 + p * 13) % 23) as f64 - 11.0).collect())
+                .collect();
+            let mut refs = planes.clone();
+            for r in &mut refs {
+                super::lower_unit_solve(&lu.lu, r);
+                super::upper_solve(&lu.lu, r);
+            }
+            let interleave = |ps: &[Vec<f64>]| -> Vec<f64> {
+                let mut xb = vec![0.0; n * nrhs];
+                for (p, plane) in ps.iter().enumerate() {
+                    for i in 0..n {
+                        xb[i * nrhs + p] = plane[i];
+                    }
+                }
+                xb
+            };
+            let check = |xb: &[f64], what: &str| {
+                for (p, r) in refs.iter().enumerate() {
+                    for i in 0..n {
+                        assert_eq!(xb[i * nrhs + p], r[i], "{what}: nrhs {nrhs} plane {p} row {i}");
+                    }
+                }
+            };
+
+            let mut xb = interleave(&planes);
+            lower_unit_solve_block(&lu.lu, &mut xb, nrhs);
+            upper_solve_block(&lu.lu, &mut xb, nrhs);
+            check(&xb, "sequential block");
+
+            for threads in [1, 2, 4] {
+                let pool = WorkerPool::new(threads);
+                let mut xb = interleave(&planes);
+                lower_unit_solve_par_block(&lu.lu, &sched.lower, &pool, &mut xb, nrhs);
+                upper_solve_par_block(&lu.lu, &sched.upper, &pool, &mut xb, nrhs);
+                check(&xb, "level-set block");
+
+                let mut flags = ReadyFlags::new();
+                let mut xb = interleave(&planes);
+                lower_unit_solve_syncfree_block(
+                    &lu.lu,
+                    &sched.lower,
+                    &pool,
+                    &mut flags,
+                    &mut xb,
+                    nrhs,
+                );
+                upper_solve_syncfree_block(
+                    &lu.lu,
+                    &sched.upper,
+                    &pool,
+                    &mut flags,
+                    &mut xb,
+                    nrhs,
+                );
+                check(&xb, "sync-free block");
+            }
+        }
+    }
+
+    #[test]
+    fn variant_choice_follows_level_stats() {
+        // wide, shallow: dense-ish random matrix → level-set
+        let mut rng = Rng::new(0xA11A);
+        let a = random_dd(200, 600, &mut rng);
+        let f = symbolic_fill(&a).unwrap();
+        let lu = leftlook::factor(&f).unwrap();
+        let sched = TriangularSchedule::build(&lu.lu);
+        if sched.parallel_worthwhile() {
+            assert_ne!(sched.choose_variant(), TrisolveVariant::Sequential);
+        } else {
+            assert_eq!(sched.choose_variant(), TrisolveVariant::Sequential);
+        }
+
+        // a chain (bidiagonal) levelizes to width 1 → sequential
+        use crate::sparse::Coo;
+        let n = 64;
+        let mut coo = Coo::new(n, n);
+        for i in 0..n {
+            coo.push(i, i, 2.0);
+            if i + 1 < n {
+                coo.push(i + 1, i, -1.0);
+            }
+        }
+        let chain = coo.to_csc();
+        let sched = TriangularSchedule::build(&chain);
+        assert_eq!(sched.choose_variant(), TrisolveVariant::Sequential);
     }
 
     #[test]

@@ -382,6 +382,10 @@ struct PlanInner {
     /// the transient schedule built to answer it is dropped, not parked in
     /// every cached solver.
     trisolve_worthwhile: OnceLock<bool>,
+    /// Cached per-pattern trisolve variant choice (see
+    /// [`TriangularSchedule::choose_variant`]). Pattern-only, so one
+    /// verdict serves every solve against this plan.
+    trisolve_variant: OnceLock<crate::numeric::trisolve::TrisolveVariant>,
 }
 
 /// The mode-annotated factorization schedule — see the module docs.
@@ -651,6 +655,7 @@ impl FactorPlan {
                 schedule_builds: AtomicUsize::new(0),
                 trisolve: OnceLock::new(),
                 trisolve_worthwhile: OnceLock::new(),
+                trisolve_variant: OnceLock::new(),
             }),
         }
     }
@@ -787,6 +792,32 @@ impl FactorPlan {
                 let _ = self.inner.trisolve.set(ts);
             }
             worthwhile
+        })
+    }
+
+    /// The trisolve execution variant for this pattern, chosen once from
+    /// the level-width statistics (see
+    /// [`TriangularSchedule::choose_variant`]): `Sequential` when the
+    /// parallel walks are not worthwhile, `SyncFree` for deep narrow
+    /// level structures where barrier overhead dominates, `LevelSet`
+    /// otherwise. Probing forces the schedule build; the schedule is
+    /// retained only for non-sequential verdicts (mirroring
+    /// [`FactorPlan::parallel_trisolve`]'s retention rule).
+    pub fn trisolve_variant(
+        &self,
+        filled: &crate::sparse::Csc,
+    ) -> crate::numeric::trisolve::TrisolveVariant {
+        use crate::numeric::trisolve::TrisolveVariant;
+        *self.inner.trisolve_variant.get_or_init(|| {
+            if let Some(ts) = self.inner.trisolve.get() {
+                return ts.choose_variant();
+            }
+            let ts = TriangularSchedule::build(filled);
+            let variant = ts.choose_variant();
+            if variant != TrisolveVariant::Sequential {
+                let _ = self.inner.trisolve.set(ts);
+            }
+            variant
         })
     }
 

@@ -59,7 +59,7 @@
 //! factor`/`glu3 bench`, and the `schedule` block of `BENCH_numeric.json`.
 
 use crate::gpusim::exec::simulate_level;
-use crate::numeric::PivotMonitor;
+use crate::numeric::{PivotMonitor, ValuePlanes};
 use crate::plan::{ColumnWork, FactorPlan, KernelMode, ScatterMap};
 
 use super::{LaunchSchedule, PlannedLaunch, LEVEL_SIZES};
@@ -204,6 +204,32 @@ pub trait DeviceExecutor: std::fmt::Debug + Send {
         vals: &mut [f64],
         mon: &mut PivotMonitor,
     ) -> anyhow::Result<ExecReport>;
+
+    /// Execute a lowered schedule against a whole batch of value planes.
+    /// The default implementation loops [`DeviceExecutor::execute`] over
+    /// the planes through a scratch buffer (correct for any backend — the
+    /// PJRT ladder inherits it); backends that can amortize the launch
+    /// walk override it ([`VirtualDevice`] interprets each launch once
+    /// with the plane loop innermost). The returned report describes one
+    /// schedule walk; a batching override accounts the *total* per-plane
+    /// trip counts in `div_elems`/`mac_elems`, while the looped default
+    /// returns the last plane's report.
+    fn execute_planes(
+        &mut self,
+        sched: &LaunchSchedule,
+        planes: &mut ValuePlanes,
+        mon: &mut PivotMonitor,
+    ) -> anyhow::Result<ExecReport> {
+        let mut scratch = vec![0.0; planes.nnz()];
+        let mut last = None;
+        for p in 0..planes.planes() {
+            planes.copy_plane(p, &mut scratch);
+            let rep = self.execute(sched, &mut scratch, mon)?;
+            planes.set_plane(p, &scratch);
+            last = Some(rep);
+        }
+        last.ok_or_else(|| anyhow::anyhow!("empty plane batch"))
+    }
 }
 
 /// Construct the executor for a backend choice. `ExecBackend::Pjrt` needs
@@ -502,6 +528,85 @@ impl VirtualState {
         }
         Ok((div_elems, mac_elems))
     }
+
+    /// Batched divide phase: per plane the pivot check and L normalization
+    /// of [`VirtualState::divide_column`], plane dimension innermost over
+    /// the interleaved layout (`vals[idx * b + p]`).
+    fn divide_column_planes(
+        &self,
+        j: usize,
+        vals: &mut [f64],
+        b: usize,
+        mon: &mut PivotMonitor,
+    ) -> anyhow::Result<usize> {
+        let d = self.diag_idx[j] as usize;
+        let ll = self.l_len[j] as usize;
+        for p in 0..b {
+            let pivot = vals[d * b + p];
+            if pivot == 0.0 || !pivot.is_finite() {
+                return Err(crate::numeric::singular_pivot(j));
+            }
+            mon.observe(pivot);
+        }
+        for idx in d + 1..=d + ll {
+            for p in 0..b {
+                vals[idx * b + p] /= vals[d * b + p];
+            }
+        }
+        Ok(ll)
+    }
+
+    /// Batched launch interpretation: one walk of the level's columns
+    /// serves every plane — the uploaded index buffers are read once per
+    /// element, the inner loop runs over the contiguous plane dimension.
+    /// Per plane the operation order is exactly [`VirtualState::run_launch`]'s,
+    /// so each plane's values are bit-identical to a single-plane execute.
+    /// Trip counts are totals across planes (the zero-multiplier skip is
+    /// per plane, as in the single-plane kernel's early-out).
+    fn run_launch_planes(
+        &self,
+        level: usize,
+        vals: &mut [f64],
+        b: usize,
+        mon: &mut PivotMonitor,
+    ) -> anyhow::Result<(u64, u64)> {
+        let (mut div_elems, mut mac_elems) = (0u64, 0u64);
+        for &j in &self.plan.levels().levels[level] {
+            let j = j as usize;
+            let ll = self.divide_column_planes(j, vals, b, mon)?;
+            div_elems += (ll * b) as u64;
+            let ls = self.diag_idx[j] as usize + 1;
+            for t in self.task_ptr[j] as usize..self.task_ptr[j + 1] as usize {
+                let mbase = self.mult_idx[t] as usize * b;
+                let mut live = 0u64;
+                for p in 0..b {
+                    if vals[mbase + p] != 0.0 {
+                        live += 1;
+                    }
+                }
+                if live == 0 {
+                    continue;
+                }
+                let off = self.dst_off[t] as usize;
+                for i in 0..ll {
+                    let lbase = (ls + i) * b;
+                    let dbase = self.dst[off + i] as usize * b;
+                    for p in 0..b {
+                        // The multiplier element is never a destination of
+                        // its own task (destinations sit strictly below
+                        // the pivot row), so the per-plane re-read sees
+                        // one stable value for the whole task.
+                        let mult = vals[mbase + p];
+                        if mult != 0.0 {
+                            vals[dbase + p] -= vals[lbase + p] * mult;
+                        }
+                    }
+                }
+                mac_elems += live * ll as u64;
+            }
+        }
+        Ok((div_elems, mac_elems))
+    }
 }
 
 impl DeviceExecutor for VirtualDevice {
@@ -529,6 +634,30 @@ impl DeviceExecutor for VirtualDevice {
         let mut per_launch = Vec::with_capacity(sched.launches.len());
         for launch in &sched.launches {
             let (div_elems, mac_elems) = st.run_launch(launch.level, vals, mon)?;
+            per_launch.push(st.launch_row(launch, div_elems, mac_elems));
+        }
+        Ok(ExecReport {
+            backend: self.name(),
+            per_launch,
+        })
+    }
+
+    fn execute_planes(
+        &mut self,
+        sched: &LaunchSchedule,
+        planes: &mut ValuePlanes,
+        mon: &mut PivotMonitor,
+    ) -> anyhow::Result<ExecReport> {
+        let st = self
+            .state
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no pattern uploaded to the virtual device"))?;
+        check_schedule(&st.plan, sched, planes.nnz(), st.nnz)?;
+        let b = planes.planes();
+        let vals = planes.data_mut();
+        let mut per_launch = Vec::with_capacity(sched.launches.len());
+        for launch in &sched.launches {
+            let (div_elems, mac_elems) = st.run_launch_planes(launch.level, vals, b, mon)?;
             per_launch.push(st.launch_row(launch, div_elems, mac_elems));
         }
         Ok(ExecReport {
@@ -714,6 +843,55 @@ mod tests {
             *v *= 1.5;
         }
         dev.execute(&sched, lu2.values_mut(), &mut PivotMonitor::new()).unwrap();
+    }
+
+    #[test]
+    fn batched_execute_planes_is_bit_identical_to_looped_execute() {
+        let (sym, plan) = setup();
+        let sched = plan.launch_schedule().clone();
+        let mut dev = VirtualDevice::new();
+        dev.upload_pattern(&plan, plan.scatter(&sym.filled)).unwrap();
+
+        for b in [1usize, 4, 16] {
+            let mut planes = ValuePlanes::new(b, sym.filled.nnz());
+            let mut looped = Vec::with_capacity(b);
+            for p in 0..b {
+                let mut lu = sym.filled.clone();
+                for v in lu.values_mut() {
+                    *v *= 1.0 + 0.01 * p as f64;
+                }
+                planes.set_plane(p, lu.values());
+                dev.execute(&sched, lu.values_mut(), &mut PivotMonitor::new()).unwrap();
+                looped.push(lu);
+            }
+            let rep = dev
+                .execute_planes(&sched, &mut planes, &mut PivotMonitor::new())
+                .unwrap();
+            assert_eq!(rep.backend, "virtual");
+            assert_eq!(rep.per_launch.len(), plan.num_levels());
+            for (p, lu) in looped.iter().enumerate() {
+                assert_eq!(
+                    planes.plane(p),
+                    lu.values(),
+                    "plane {p} of batch {b} must be bit-identical to its looped run"
+                );
+            }
+        }
+
+        // a singular plane in the middle of the batch surfaces the typed error
+        let mut planes = ValuePlanes::new(3, sym.filled.nnz());
+        planes.set_plane(0, sym.filled.values());
+        planes.set_plane(2, sym.filled.values());
+        let err = dev
+            .execute_planes(&sched, &mut planes, &mut PivotMonitor::new())
+            .unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<crate::numeric::GluError>(),
+                Some(crate::numeric::GluError::NumericallySingular { .. })
+            ),
+            "{err}"
+        );
     }
 
     #[test]

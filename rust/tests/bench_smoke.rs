@@ -7,7 +7,8 @@
 use std::sync::Mutex;
 
 use glu3::bench_support::numeric::{
-    refactor_loop, run, spawn_vs_pool, symbolic_report, validate_json_schema, BenchSpec,
+    batched_report, refactor_loop, run, spawn_vs_pool, symbolic_report, validate_json_schema,
+    BenchSpec,
 };
 
 /// The tests in this binary all measure wall-clock while spawning thread
@@ -143,6 +144,31 @@ fn bench_smoke_report_covers_all_engines_and_validates() {
         rs.residual
     );
 
+    // the v8 batched block: one looped/batched pair per batch size for
+    // both the value-plane refactor and the blocked multi-RHS solve, plus
+    // the trisolve-variant histogram the solvers reported
+    let bt = &report.batched;
+    assert_eq!(bt.threads, *spec.thread_counts.iter().max().unwrap());
+    assert!(!bt.batch_sizes.is_empty(), "batched sweep must run");
+    assert_eq!(bt.looped_refactor_ms.len(), bt.batch_sizes.len());
+    assert_eq!(bt.batched_refactor_ms.len(), bt.batch_sizes.len());
+    assert_eq!(bt.looped_solve_ms.len(), bt.batch_sizes.len());
+    assert_eq!(bt.batched_solve_ms.len(), bt.batch_sizes.len());
+    for v in bt
+        .looped_refactor_ms
+        .iter()
+        .chain(&bt.batched_refactor_ms)
+        .chain(&bt.looped_solve_ms)
+        .chain(&bt.batched_solve_ms)
+    {
+        assert!(v.is_finite() && *v > 0.0, "batched timing {v}");
+    }
+    assert_eq!(bt.variant_labels.len(), bt.variant_counts.len());
+    assert!(
+        !bt.variant_labels.is_empty(),
+        "at least one trisolve variant must be recorded"
+    );
+
     let json = report.to_json();
     validate_json_schema(&json).expect("well-formed report");
     assert!(json.contains("\"plan\""), "plan block must be emitted");
@@ -152,6 +178,8 @@ fn bench_smoke_report_covers_all_engines_and_validates() {
     assert!(json.contains("\"robustness\""), "v5 block must be emitted");
     assert!(json.contains("\"symbolic\""), "v6 block must be emitted");
     assert!(json.contains("\"rescue\""), "v7 block must be emitted");
+    assert!(json.contains("\"batched\""), "v8 block must be emitted");
+    assert!(json.contains("\"trisolve_variants\""));
 
     // and the file artifact round-trips
     let path = std::env::temp_dir().join("BENCH_numeric_smoke_test.json");
@@ -235,4 +263,35 @@ fn symbolic_fast_paths_hold_on_acceptance_fixture() {
         sy.speedup_incremental()
     );
     assert_eq!(sy.recomputed_columns, 1);
+}
+
+/// The v8 acceptance bar: on the 100×100 AMD-ordered grid at 4 threads,
+/// refactoring a batch of 16 value planes through one schedule walk runs
+/// ≥ 1.3× faster than 16 looped single-plane refactors — same pattern,
+/// same plan, same pool; the gap is the amortized launch sequence and the
+/// per-task gather/scatter paid once instead of B times.
+#[test]
+fn batched_refactor_beats_looped_on_acceptance_fixture() {
+    let _serial = BENCH_LOCK.lock().unwrap();
+    let spec = BenchSpec::acceptance();
+    let bt = batched_report(&spec).expect("batched report");
+    assert_eq!(bt.threads, 4);
+    assert_eq!(bt.max_batch(), 16, "sweep must reach B=16");
+    assert!(
+        bt.refactor_speedup(16) >= 1.3,
+        "batched refactor must beat the looped baseline ≥ 1.3x at B=16: \
+         looped {:.2} ms vs batched {:.2} ms ({:.2}x)",
+        bt.looped_refactor_ms.last().unwrap(),
+        bt.batched_refactor_ms.last().unwrap(),
+        bt.refactor_speedup(16)
+    );
+    // the blocked multi-RHS solve must at minimum not lose to the loop
+    assert!(
+        bt.solve_speedup(16) >= 1.0,
+        "blocked solve_many must not lose to looped solves at B=16: \
+         looped {:.2} ms vs blocked {:.2} ms ({:.2}x)",
+        bt.looped_solve_ms.last().unwrap(),
+        bt.batched_solve_ms.last().unwrap(),
+        bt.solve_speedup(16)
+    );
 }

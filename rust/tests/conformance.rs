@@ -17,6 +17,12 @@
 //! random diagonally dominant} × {1, 2, 4} threads, and also asserts the
 //! per-level mode histogram is identical across all three paths.
 //!
+//! A fourth, batched row covers the value-plane kernels: the
+//! `VirtualDevice`'s one-walk [`DeviceExecutor::execute_planes`] and
+//! `parrl`'s [`glu3::numeric::parrl::refactor_planes`] against per-plane
+//! looped execution on the same fixtures (bit-identical for the
+//! executor and 1-thread parrl, ≤ 1e-12 at 2/4 threads).
+//!
 //! Tier layout: see `rust/tests/README.md`.
 
 use std::collections::BTreeMap;
@@ -211,6 +217,94 @@ fn three_way_matrix_executor_vs_parrl_vs_simulator() {
         glu3::numeric::trisolve::lower_unit_solve(&exec_lu, &mut x);
         glu3::numeric::trisolve::upper_solve(&exec_lu, &mut x);
         assert!(residual(&fx.a, &x, &b) < 1e-7, "{}", fx.name);
+    }
+}
+
+/// The batched row of the matrix: on every fixture, stamp `B` scaled
+/// value planes of the filled pattern and factor them (a) plane-by-plane
+/// through `VirtualDevice::execute` (the reference), (b) in one
+/// `execute_planes` schedule walk, and (c) through `parrl`'s batched
+/// `refactor_planes` at {1, 2, 4} threads. The one-walk executor must be
+/// bit-identical to its own looped execution; parrl follows the usual
+/// thread-count contract.
+#[test]
+fn batched_planes_matrix_executor_vs_parrl() {
+    use glu3::numeric::ValuePlanes;
+
+    const B: usize = 4;
+    for fx in fixtures() {
+        let f = symbolic_fill(&fx.a).unwrap();
+        let lv = levelize(&det3::detect(&f.filled));
+        let plan = FactorPlan::from_levels(&f, lv, &fx.policy, &fx.device);
+        let nnz = f.filled.nnz();
+
+        // Reference: per-plane looped execution on the VirtualDevice.
+        let mut dev = VirtualDevice::new();
+        dev.upload_pattern(&plan, plan.scatter(&f.filled)).unwrap();
+        let mut looped = Vec::with_capacity(B);
+        for p in 0..B {
+            let mut lu = f.filled.clone();
+            for v in lu.values_mut() {
+                *v *= 1.0 + 0.05 * (p as f64 + 1.0);
+            }
+            dev.execute(plan.launch_schedule(), lu.values_mut(), &mut PivotMonitor::new())
+                .unwrap();
+            looped.push(lu);
+        }
+
+        // One batched schedule walk over the same planes.
+        let mut planes = ValuePlanes::new(B, nnz);
+        for p in 0..B {
+            let mut vals = f.filled.values().to_vec();
+            for v in &mut vals {
+                *v *= 1.0 + 0.05 * (p as f64 + 1.0);
+            }
+            planes.set_plane(p, &vals);
+        }
+        dev.execute_planes(plan.launch_schedule(), &mut planes, &mut PivotMonitor::new())
+            .unwrap();
+        for p in 0..B {
+            assert_eq!(
+                planes.plane(p).as_slice(),
+                looped[p].values(),
+                "{}: batched executor plane {p} must be bit-identical",
+                fx.name
+            );
+        }
+
+        // parrl's batched kernel across thread counts.
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let mut pplanes = ValuePlanes::new(B, nnz);
+            for p in 0..B {
+                let mut vals = f.filled.values().to_vec();
+                for v in &mut vals {
+                    *v *= 1.0 + 0.05 * (p as f64 + 1.0);
+                }
+                pplanes.set_plane(p, &vals);
+            }
+            parrl::refactor_planes(&f.filled, &mut pplanes, &plan, &pool, &mut PivotMonitor::new())
+                .unwrap();
+            for p in 0..B {
+                let plane = pplanes.plane(p);
+                for (i, (x, y)) in plane.iter().zip(looped[p].values()).enumerate() {
+                    if threads == 1 {
+                        assert!(
+                            x == y,
+                            "{} threads 1 plane {p} entry {i}: parrl {x} vs executor {y} \
+                             must be bit-identical",
+                            fx.name
+                        );
+                    } else {
+                        assert!(
+                            (x - y).abs() <= 1e-12 * (1.0 + y.abs()),
+                            "{} threads {threads} plane {p} entry {i}: parrl {x} vs {y}",
+                            fx.name
+                        );
+                    }
+                }
+            }
+        }
     }
 }
 

@@ -699,3 +699,160 @@ fn factor_delta_matches_cold_factor() {
     assert_eq!(st.detect_ms, 0.0);
     assert_eq!((st.symbolic_ms - st.fillin_ms).abs(), 0.0);
 }
+
+// ---------------------------------------------------------------------------
+// Batched value-plane refactor and blocked multi-RHS trisolve tiers
+// ---------------------------------------------------------------------------
+
+/// `k` independent tridiagonal chains of length `m`, block-diagonal: under
+/// the natural order the triangular row schedules have exactly `m` levels
+/// of width `k` — a dial for forcing each trisolve variant.
+fn chains(k: usize, m: usize) -> Csc {
+    let n = k * m;
+    let mut coo = Coo::new(n, n);
+    for c in 0..k {
+        for i in 0..m {
+            let r = c * m + i;
+            coo.push(r, r, 4.0);
+            if i + 1 < m {
+                coo.push(r + 1, r, -1.0);
+                coo.push(r, r + 1, -1.0);
+            }
+        }
+    }
+    coo.to_csc()
+}
+
+/// Batched `refactor_batch` ≡ `B` looped `refactor`s across every engine
+/// with a batched kernel (plus the looped-fallback simulator), thread
+/// counts {1, 2, 4}, and batch sizes {1, 4, 16}: bit-identical where the
+/// kernel is deterministic (one worker thread, the schedule executor,
+/// the fallback), ≤ 1e-12 relative under CAS-racing multi-thread parrl.
+#[test]
+fn batched_refactor_matches_looped_refactors() {
+    use glu3::glu::{ExecBackend, NumericEngine};
+
+    let a = gen::grid2d(20, 20, 11);
+    let mut engines = vec![
+        (NumericEngine::SimulatedGpu, true), // no batched kernel: loops
+        (
+            NumericEngine::Schedule {
+                backend: ExecBackend::Virtual,
+            },
+            true, // plane-inner interpreter, ascending columns: exact
+        ),
+    ];
+    for threads in [1usize, 2, 4] {
+        engines.push((
+            NumericEngine::ParallelRightLooking { threads },
+            threads == 1,
+        ));
+    }
+    for (engine, exact) in engines {
+        for bsz in [1usize, 4, 16] {
+            let mats: Vec<Csc> = (0..bsz)
+                .map(|p| {
+                    let mut m = a.clone();
+                    for v in m.values_mut() {
+                        *v *= 1.0 + 0.05 * (p as f64 + 1.0);
+                    }
+                    m
+                })
+                .collect();
+            let refs: Vec<&Csc> = mats.iter().collect();
+            let opts = GluOptions {
+                engine: engine.clone(),
+                ..Default::default()
+            };
+            let mut batched = GluSolver::factor(&a, &opts).unwrap();
+            let planes = batched.refactor_batch(&refs).unwrap();
+            assert_eq!(planes.planes(), bsz);
+
+            let mut looped = GluSolver::factor(&a, &opts).unwrap();
+            for (p, m) in mats.iter().enumerate() {
+                looped.refactor(m).unwrap();
+                let plane = planes.plane(p);
+                let want = looped.factors().lu.values();
+                if exact {
+                    assert_eq!(
+                        plane.as_slice(),
+                        want,
+                        "{engine:?} B={bsz} plane {p} must be bit-identical"
+                    );
+                } else {
+                    for (x, y) in plane.iter().zip(want) {
+                        assert!(
+                            (x - y).abs() <= 1e-12 * (1.0 + y.abs()),
+                            "{engine:?} B={bsz} plane {p}: {x} vs {y}"
+                        );
+                    }
+                }
+            }
+            // The batch installs its last plane as the current factors.
+            assert_eq!(planes.plane(bsz - 1), batched.factors().lu.values());
+            // Run accounting matches the looped path exactly.
+            assert_eq!(batched.stats().numeric_runs, looped.stats().numeric_runs);
+            assert_eq!(batched.stats().symbolic_runs, 1);
+            assert_eq!(batched.stats().plan_builds, 1);
+        }
+    }
+}
+
+/// The blocked multi-RHS solve agrees bit-for-bit with the sequential
+/// engine across thread counts and batch sizes on patterns chosen to
+/// force each trisolve variant: deep-and-wide chains (sync-free),
+/// shallow-and-wide chains (level-set), a single narrow chain
+/// (sequential). The variant actually run is pinned via
+/// `GluStats::trisolve_variant`.
+#[test]
+fn solve_variants_agree_and_cover_all_three() {
+    use glu3::glu::NumericEngine;
+    use glu3::order::FillOrdering;
+
+    let cases = vec![
+        ("deep-wide", chains(16, 64), "sync-free"), // 64 levels ≥ 48, width 16
+        ("shallow-wide", chains(24, 24), "level-set"), // 24 levels, width 24
+        ("narrow", tridiag(120), "sequential"),     // width 1: not worthwhile
+    ];
+    for (name, a, expect) in cases {
+        let n = a.nrows();
+        let seq_opts = GluOptions {
+            ordering: FillOrdering::Natural,
+            scale: false,
+            engine: NumericEngine::LeftLookingCpu,
+            ..Default::default()
+        };
+        let mut seq = GluSolver::factor(&a, &seq_opts).unwrap();
+        for threads in [1usize, 2, 4] {
+            let opts = GluOptions {
+                ordering: FillOrdering::Natural,
+                scale: false,
+                engine: NumericEngine::ParallelCpu { threads },
+                ..Default::default()
+            };
+            let mut par = GluSolver::factor(&a, &opts).unwrap();
+            for bsz in [1usize, 4, 16] {
+                let rhs: Vec<Vec<f64>> = (0..bsz)
+                    .map(|k| {
+                        (0..n)
+                            .map(|i| ((i * 13 + k * 7) % 17) as f64 - 8.0)
+                            .collect()
+                    })
+                    .collect();
+                let xs = seq.solve_many(&rhs).unwrap();
+                let xp = par.solve_many(&rhs).unwrap();
+                assert_eq!(xs, xp, "{name} @{threads}t B={bsz}");
+                // the blocked walk replays the single-RHS op order exactly
+                for (b, x) in rhs.iter().zip(&xp) {
+                    assert_eq!(&par.solve(b).unwrap(), x, "{name} blocked vs single");
+                }
+            }
+            let got = par.stats().trisolve_variant;
+            if threads == 1 {
+                assert_eq!(got, "sequential", "{name}: 1-thread pool stays sequential");
+            } else {
+                assert_eq!(got, expect, "{name} @{threads}t picked the wrong variant");
+            }
+        }
+    }
+}

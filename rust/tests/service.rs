@@ -379,4 +379,16 @@ fn coalescing_amortizes_identical_stamps() {
     assert!(st.coalesced >= 4, "identical stamps must ride shared checkouts");
     assert!(st.numeric_runs < 12, "coalescing must amortize refactors");
     assert_eq!(st.symbolic_runs, 1, "one warm symbolic run serves everything");
+    // A coalesced group issues exactly one blocked trisolve walk for the
+    // whole batch, so walks = groups, not members: every coalesced member
+    // rode a walk it did not pay for.
+    assert!(
+        st.batched_solve_walks >= 1,
+        "the group solve must be counted"
+    );
+    assert_eq!(
+        st.batched_solve_walks + st.coalesced,
+        st.completed,
+        "completed = one walk per group + the members that rode along"
+    );
 }
